@@ -1,0 +1,64 @@
+//! Fig 6 reproduction: Needle-in-a-Haystack heatmap (context length x
+//! needle depth), dense vs HATA, on the trained model.
+//!
+//!     cargo run --release --example needle_haystack
+
+use hata::bench::eval::task_accuracy;
+use hata::bench::report::{fmt, Table};
+use hata::bench::tasks::TaskKind;
+use hata::config::manifest::Manifest;
+use hata::config::{preset, Method, ServeConfig};
+use hata::kvcache::MethodAux;
+use hata::model::{weights::Weights, Model};
+use hata::util::rng::Rng;
+
+fn load(serve: &ServeConfig) -> (Model, bool) {
+    if let Ok(m) = Manifest::load("artifacts") {
+        if let Ok(arts) = m.model("hata-mha") {
+            let mut w = Weights::load(&arts.weights, &arts.config).expect("weights");
+            if let Some(hw) = arts.hash_weights_for(arts.config.rbit) {
+                w.load_hash(hw, &arts.config).expect("hash");
+                let aux = MethodAux::build(&arts.config, serve, None, 7);
+                return (Model::new(arts.config.clone(), w, aux), true);
+            }
+        }
+    }
+    let cfg = preset("hata-mha").unwrap();
+    let mut rng = Rng::new(0);
+    let w = Weights::random(&cfg, &mut rng);
+    (Model::new(cfg, w, MethodAux::default()), false)
+}
+
+fn main() {
+    let samples: usize =
+        std::env::var("HATA_NIAH_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let ctxs = [128usize, 256, 512, 1024];
+    let depths = [0.1f64, 0.3, 0.5, 0.7, 0.9];
+    for method in [Method::Dense, Method::Hata] {
+        let serve = ServeConfig {
+            method,
+            budget: if method == Method::Dense { 0 } else { 48 },
+            ..Default::default()
+        };
+        let (model, trained) = load(&serve);
+        let mut t = Table::new(
+            &format!(
+                "Fig 6: NIAH accuracy heatmap, method={} (trained={trained})",
+                method.name()
+            ),
+            &["ctx\\depth", "0.1", "0.3", "0.5", "0.7", "0.9"],
+        );
+        for &ctx in &ctxs {
+            let mut row = vec![ctx.to_string()];
+            for &d in &depths {
+                let acc =
+                    task_accuracy(&model, &serve, TaskKind::Ns, ctx, samples, 17, Some(d));
+                row.push(fmt(100.0 * acc));
+            }
+            t.row(row);
+            eprintln!("[niah] {} ctx={ctx} done", method.name());
+        }
+        println!("{}", t.render());
+        t.write_csv("bench_results", &format!("fig6_{}", method.name())).unwrap();
+    }
+}

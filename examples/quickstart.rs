@@ -1,0 +1,64 @@
+//! Quickstart: load the trained model from artifacts (or random weights if
+//! artifacts are not built yet), run one retrieval prompt under dense and
+//! HATA attention, and print both continuations.
+//!
+//!     cargo run --release --example quickstart
+
+use hata::bench::tasks::{make_task, Corpus, TaskKind};
+use hata::config::manifest::Manifest;
+use hata::config::{preset, Method, ServeConfig};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{make_selector, sel_ref, tokenizer, weights::Weights, DecodeScratch, Model, SeqState};
+use hata::util::rng::Rng;
+
+fn load(serve: &ServeConfig) -> (Model, &'static str) {
+    if let Ok(m) = Manifest::load("artifacts") {
+        if let Ok(arts) = m.model("hata-mha") {
+            let mut w = Weights::load(&arts.weights, &arts.config).expect("weights");
+            if let Some(hw) = arts.hash_weights_for(arts.config.rbit) {
+                w.load_hash(hw, &arts.config).expect("hash weights");
+                let aux = MethodAux::build(&arts.config, serve, None, 7);
+                return (Model::new(arts.config.clone(), w, aux), "trained artifacts");
+            }
+        }
+    }
+    let cfg = preset("hata-mha").unwrap();
+    let mut rng = Rng::new(0);
+    let w = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, serve, None, 7);
+    (Model::new(cfg, w, aux), "random weights (run `make artifacts`)")
+}
+
+fn main() {
+    let corpus = Corpus::new(0);
+    let mut rng = Rng::new(11);
+    let (prompt, answer) = make_task(TaskKind::Ns, &corpus, &mut rng, 384, Some(0.3));
+    println!("expected answer: {answer}\n");
+    for method in [Method::Dense, Method::Hata] {
+        let serve = ServeConfig {
+            method,
+            budget: if method == Method::Dense { 0 } else { 48 },
+            ..Default::default()
+        };
+        let (model, src) = load(&serve);
+        let selector = make_selector(&serve);
+        let mut cache = SeqKvCache::new(&model.cfg, &serve);
+        let mut state = SeqState::new(&model.cfg);
+        let mut scratch = DecodeScratch::new(&model.cfg);
+        let out = model.generate(
+            &tokenizer::encode(&prompt),
+            answer.len(),
+            &serve,
+            sel_ref(&selector),
+            &mut cache,
+            &mut state,
+            &mut scratch,
+        );
+        println!(
+            "{:>6} ({src}): {:?}  {}",
+            method.name(),
+            tokenizer::decode(&out),
+            if tokenizer::decode(&out) == answer { "✓" } else { "✗" }
+        );
+    }
+}

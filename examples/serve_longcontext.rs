@@ -1,0 +1,102 @@
+//! END-TO-END DRIVER (DESIGN.md §6): batched serving of long-context
+//! retrieval requests through the full coordinator stack — router →
+//! continuous-batching engine → HATA attention → KV/code caches — with
+//! latency/throughput/accuracy reporting. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve_longcontext
+//!
+//! Env: HATA_SERVE_CTX (default 768), HATA_SERVE_N (default 8 requests).
+
+use std::sync::Arc;
+
+use hata::bench::report::{fmt, Table};
+use hata::bench::tasks::{make_task, Corpus, TaskKind};
+use hata::config::manifest::Manifest;
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::request::Request;
+use hata::coordinator::router::{Policy, Router};
+use hata::kvcache::MethodAux;
+use hata::model::{tokenizer, weights::Weights, Model};
+use hata::util::rng::Rng;
+use hata::util::stats::Summary;
+
+fn load(serve: &ServeConfig) -> (Arc<Model>, bool) {
+    if let Ok(m) = Manifest::load("artifacts") {
+        if let Ok(arts) = m.model("hata-mha") {
+            let mut w = Weights::load(&arts.weights, &arts.config).expect("weights");
+            if let Some(hw) = arts.hash_weights_for(arts.config.rbit) {
+                w.load_hash(hw, &arts.config).expect("hash");
+                let aux = MethodAux::build(&arts.config, serve, None, 7);
+                return (Arc::new(Model::new(arts.config.clone(), w, aux)), true);
+            }
+        }
+    }
+    let cfg = preset("hata-mha").unwrap();
+    let mut rng = Rng::new(0);
+    let w = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, serve, None, 7);
+    (Arc::new(Model::new(cfg, w, aux)), false)
+}
+
+fn main() {
+    let ctx: usize =
+        std::env::var("HATA_SERVE_CTX").ok().and_then(|v| v.parse().ok()).unwrap_or(768);
+    let n: usize = std::env::var("HATA_SERVE_N").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let budget = ((ctx as f64) * 0.0625).max(16.0) as usize;
+    let kinds = [TaskKind::Ns, TaskKind::Nmk, TaskKind::Vt, TaskKind::Qa];
+    let corpus = Corpus::new(0);
+    let mut table = Table::new(
+        &format!("serve_longcontext: {n} requests, ctx={ctx}, budget={budget}"),
+        &["method", "wall_s", "tok_s", "ttft_p50_ms", "ttft_p99_ms", "accuracy_pct", "trained"],
+    );
+    for method in [Method::Dense, Method::Hata, Method::Quest, Method::Loki] {
+        let serve = ServeConfig {
+            method,
+            budget: if method == Method::Dense { 0 } else { budget },
+            max_batch: 4,
+            prefill_chunk: 2048,
+            ..Default::default()
+        };
+        let (model, trained) = load(&serve);
+        let mut router = Router::new(Arc::clone(&model), serve.clone(), 1, Policy::LeastLoaded);
+        let mut rng = Rng::new(5);
+        let mut answers = std::collections::BTreeMap::new();
+        let t0 = std::time::Instant::now();
+        for id in 0..n as u64 {
+            let kind = kinds[id as usize % kinds.len()];
+            let (prompt, ans) = make_task(kind, &corpus, &mut rng, ctx, None);
+            answers.insert(id, ans.clone());
+            router.submit(Request {
+                id,
+                prompt: tokenizer::encode(&prompt),
+                max_new_tokens: ans.len(),
+                stop_token: None,
+                arrival: 0.0,
+            });
+        }
+        let rs = router.drain();
+        let wall = t0.elapsed().as_secs_f64();
+        let gen: usize = rs.iter().map(|r| r.tokens.len()).sum();
+        let mut ttft = Summary::new();
+        let mut hits = 0usize;
+        for r in &rs {
+            ttft.add(r.ttft * 1e3);
+            if tokenizer::decode(&r.tokens) == answers[&r.id] {
+                hits += 1;
+            }
+        }
+        table.row(vec![
+            method.name().to_string(),
+            fmt(wall),
+            fmt(gen as f64 / wall),
+            fmt(ttft.p50()),
+            fmt(ttft.p99()),
+            fmt(100.0 * hits as f64 / n as f64),
+            trained.to_string(),
+        ]);
+        eprintln!("[serve] {} done in {:.1}s", method.name(), wall);
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "serve_longcontext").unwrap();
+}

@@ -1,0 +1,364 @@
+"""AOT export: lower the L2 model to HLO *text* + export weights/goldens.
+
+This is the only bridge between the Python build path and the Rust request
+path.  Interchange is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``artifacts/`` (all consumed by rust/src/runtime):
+
+  <model>.weights.npz        trained LM parameters (train_model.py)
+  <model>.hash_r<r>.npz      trained hash weights  (train_hash.py)
+  <model>.prefill.b<B>.hlo.txt
+  <model>.decode_dense.b<B>.hlo.txt
+  <model>.decode_hata.b<B>.k<K>.hlo.txt
+  <model>.goldens.npz        parity vectors for Rust tests
+  manifest.json              index of everything above + param ordering
+
+Static-shape strategy: caches are padded to a bucket length B with a
+``cur_len`` scalar; invalid positions are masked out of both the dense
+softmax and the Hamming top-k (score -1 < the valid minimum of 0).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .kernels import ref
+from .kernels.hash_encode import hash_encode
+from .kernels.hamming import hamming_score
+from .model import CONFIGS, ModelConfig, generate, prefill, rms_norm, rope, swiglu
+from .train_model import load_params
+
+WEIGHT_ORDER_GLOBAL = ["embed", "final_norm", "lm_head"]
+WEIGHT_ORDER_LAYER = [
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+]
+
+
+def param_order(cfg: ModelConfig) -> list[str]:
+    """Canonical flat weight ordering shared with the Rust runtime."""
+    names = list(WEIGHT_ORDER_GLOBAL)
+    for i in range(cfg.n_layers):
+        names += [f"layers.{i}.{w}" for w in WEIGHT_ORDER_LAYER]
+    return names
+
+
+def flat_weights(params, cfg: ModelConfig) -> list[jax.Array]:
+    out = []
+    for name in param_order(cfg):
+        if name.startswith("layers."):
+            _, i, w = name.split(".")
+            out.append(params["layers"][int(i)][w])
+        else:
+            out.append(params[name])
+    return out
+
+
+def unflat_weights(ws: list[jax.Array], cfg: ModelConfig):
+    params = {"layers": [dict() for _ in range(cfg.n_layers)]}
+    for name, w in zip(param_order(cfg), ws):
+        if name.startswith("layers."):
+            _, i, k = name.split(".")
+            params["layers"][int(i)][k] = w
+        else:
+            params[name] = w
+    return params
+
+
+# ----------------------------------------------------- bucketed step graphs
+
+
+def decode_step_bucketed(
+    cfg: ModelConfig, bucket: int, budget: int,
+    ws: list[jax.Array], hash_w: jax.Array,
+    token: jax.Array, cur_len: jax.Array,
+    k_cache: jax.Array, v_cache: jax.Array, code_cache: jax.Array,
+):
+    """One decode step over fixed-size caches (budget=0 -> dense).
+
+    caches: k/v [L, KV, B, dh], code [L, KV, B, words]; the new token's
+    K/V/code are written at row ``cur_len``; rows > cur_len are masked.
+    Returns (logits, k_cache, v_cache, code_cache).
+    """
+    params = unflat_weights(ws, cfg)
+    B = bucket
+    positions = jnp.arange(B)
+    x = params["embed"][token]
+    scale = cfg.head_dim ** -0.5
+    for li, layer in enumerate(params["layers"]):
+        h = rms_norm(x, layer["attn_norm"])
+        pos = cur_len[None]
+        q = (h[None, :] @ layer["wq"]).reshape(1, cfg.n_heads, cfg.head_dim)
+        k = (h[None, :] @ layer["wk"]).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h[None, :] @ layer["wv"]).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)[0]   # [H, dh]
+        k = rope(k, pos, cfg.rope_theta)[0]   # [KV, dh]
+        v = v[0]
+        # write new K/V/code at row cur_len (paper Alg. 3 l.3-9)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, :, None, :], (li, 0, cur_len, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, :, None, :], (li, 0, cur_len, 0)
+        )
+        kc = jnp.stack(
+            [
+                hash_encode(k[kv : kv + 1], hash_w[li, kv])[0]
+                for kv in range(cfg.n_kv_heads)
+            ]
+        )  # [KV, words]
+        code_cache = jax.lax.dynamic_update_slice(
+            code_cache, kc[None, :, None, :].astype(jnp.uint32),
+            (li, 0, cur_len, 0),
+        )
+        valid = positions <= cur_len  # [B]
+        outs = []
+        for kv in range(cfg.n_kv_heads):
+            qs = q[kv * cfg.group : (kv + 1) * cfg.group]   # [g, dh]
+            kc_full = k_cache[li, kv]                        # [B, dh]
+            vc_full = v_cache[li, kv]
+            use_dense = budget == 0 or li < cfg.dense_layers
+            if use_dense:
+                logits = (qs @ kc_full.T) * scale            # [g, B]
+                logits = jnp.where(valid[None, :], logits, -jnp.inf)
+                p = jax.nn.softmax(logits, axis=-1)
+                outs.append(p @ vc_full)
+            else:
+                qcode = hash_encode(qs, hash_w[li, kv])      # [g, words]
+                sc = hamming_score(qcode, code_cache[li, kv], cfg.rbit)
+                agg = ref.gqa_aggregate(sc, cfg.group)[0]    # [B]
+                agg = jnp.where(valid, agg, -1)
+                # NOT jax.lax.top_k: it lowers to sort(..., largest=true),
+                # an attribute xla_extension 0.5.1's HLO-text parser
+                # rejects; argsort lowers to a plain comparator sort.
+                idx = jnp.argsort(-agg)[:budget]             # [K]
+                ks = jnp.take(kc_full, idx, axis=0)          # [K, dh]
+                vs = jnp.take(vc_full, idx, axis=0)
+                ok = jnp.take(valid, idx)                    # [K]
+                logits = (qs @ ks.T) * scale
+                logits = jnp.where(ok[None, :], logits, -jnp.inf)
+                p = jax.nn.softmax(logits, axis=-1)
+                outs.append(p @ vs)
+        attn = jnp.concatenate(outs, axis=0)                 # [H, dh]
+        x = x + attn.reshape(-1) @ layer["wo"]
+        h = rms_norm(x, layer["mlp_norm"])
+        x = x + swiglu(h, layer)
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    return logits, k_cache, v_cache, code_cache
+
+
+def prefill_bucketed(
+    cfg: ModelConfig, bucket: int,
+    ws: list[jax.Array], hash_w: jax.Array,
+    tokens: jax.Array, length: jax.Array,
+):
+    """Padded prefill: tokens [B] (garbage past `length`), returns
+    (last_logits, k_cache, v_cache, code_cache) with caches [L, KV, B, dh]."""
+    params = unflat_weights(ws, cfg)
+    B = bucket
+    pos = jnp.arange(B)
+    x = params["embed"][tokens]
+    row_valid = pos[:, None] >= pos[None, :]          # causal
+    col_valid = (pos[None, :] < length)               # padding
+    mask = row_valid & col_valid
+    scale = cfg.head_dim ** -0.5
+    ks, vs, codes = [], [], []
+    for layer in params["layers"]:
+        h = rms_norm(x, layer["attn_norm"])
+        q = (h @ layer["wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        outs = []
+        for hh in range(cfg.n_heads):
+            kv = hh // cfg.group
+            logits = (q[:, hh, :] @ k[:, kv, :].T) * scale  # [B, B]
+            logits = jnp.where(mask, logits, -jnp.inf)
+            p = jax.nn.softmax(logits, axis=-1)
+            outs.append(p @ v[:, kv, :])
+        attn = jnp.stack(outs, axis=1).reshape(B, -1)
+        x = x + attn @ layer["wo"]
+        h = rms_norm(x, layer["mlp_norm"])
+        x = x + swiglu(h, layer)
+        ks.append(jnp.transpose(k, (1, 0, 2)))
+        vs.append(jnp.transpose(v, (1, 0, 2)))
+        codes.append(
+            jnp.stack(
+                [
+                    hash_encode(k[:, kvh, :], hash_w[len(ks) - 1, kvh])
+                    for kvh in range(cfg.n_kv_heads)
+                ]
+            )
+        )
+    x = rms_norm(x, params["final_norm"])
+    last = jnp.take(x, length - 1, axis=0)
+    logits = last @ params["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs), jnp.stack(codes)
+
+
+# ----------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(cfg: ModelConfig, bucket: int, rbit: int):
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    L, KV, dh, w = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, rbit // 32
+    sd = jax.ShapeDtypeStruct
+    hash_spec = sd((L, KV, dh, rbit), f32)
+    token = sd((), i32)
+    cur_len = sd((), i32)
+    kc = sd((L, KV, bucket, dh), f32)
+    vc = sd((L, KV, bucket, dh), f32)
+    cc = sd((L, KV, bucket, w), u32)
+    return hash_spec, token, cur_len, kc, vc, cc
+
+
+def lower_decode(cfg, params, bucket, budget, rbit):
+    ws = flat_weights(params, cfg)
+    w_specs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in ws]
+    hash_spec, token, cur_len, kc, vc, cc = _specs(cfg, bucket, rbit)
+
+    def fn(*args):
+        ws_in = list(args[: len(w_specs)])
+        hw, tok, cl, k, v, c = args[len(w_specs):]
+        return decode_step_bucketed(cfg, bucket, budget, ws_in, hw, tok, cl, k, v, c)
+
+    lowered = jax.jit(fn).lower(*w_specs, hash_spec, token, cur_len, kc, vc, cc)
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg, params, bucket, rbit):
+    ws = flat_weights(params, cfg)
+    w_specs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in ws]
+    hash_spec, _, _, _, _, _ = _specs(cfg, bucket, rbit)
+    tokens = jax.ShapeDtypeStruct((bucket,), jnp.int32)
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(*args):
+        ws_in = list(args[: len(w_specs)])
+        hw, toks, ln = args[len(w_specs):]
+        return prefill_bucketed(cfg, bucket, ws_in, hw, toks, ln)
+
+    lowered = jax.jit(fn).lower(*w_specs, hash_spec, tokens, length)
+    return to_hlo_text(lowered)
+
+
+# ------------------------------------------------------------------ goldens
+
+
+def make_goldens(cfg: ModelConfig, params, hash_w, seed: int = 0):
+    """Cross-language parity vectors consumed by rust/tests/."""
+    rng = np.random.default_rng(seed)
+    g = {}
+    # kernel-level goldens
+    x = rng.normal(size=(9, cfg.head_dim)).astype(np.float32)
+    g["hash_in"] = x
+    g["hash_w0"] = np.asarray(hash_w[0, 0])
+    g["hash_codes"] = np.asarray(ref.hash_encode(jnp.asarray(x), hash_w[0, 0])).view(np.int32)
+    qc = g["hash_codes"][:2].view(np.uint32)
+    kc = g["hash_codes"][2:].view(np.uint32)
+    g["hamming_scores"] = np.asarray(
+        ref.hamming_score(jnp.asarray(qc), jnp.asarray(kc), cfg.rbit)
+    ).astype(np.int32)
+    # model-level goldens: prefill logits + greedy continuations
+    corpus = data.MarkovCorpus(seed=0)
+    prompt, ans = data.make_task("ns", corpus, rng, 192)
+    tokens = jnp.asarray(data.encode(prompt))
+    g["prompt_tokens"] = np.asarray(tokens).astype(np.int32)
+    logits, caches = prefill(params, hash_w, cfg, tokens)
+    g["prefill_logits"] = np.asarray(logits)
+    g["prefill_kcache"] = np.asarray(caches["k"])      # [L, KV, s, dh]
+    g["prefill_codecache"] = np.asarray(caches["kcode"]).view(np.int32)
+    gen_dense = generate(params, hash_w, cfg, tokens, 6, budget=0)
+    gen_hata = generate(params, hash_w, cfg, tokens, 6, budget=48)
+    g["gen_dense"] = np.asarray(gen_dense).astype(np.int32)
+    g["gen_hata"] = np.asarray(gen_hata).astype(np.int32)
+    g["task_answer"] = data.encode(ans)
+    return g
+
+
+# --------------------------------------------------------------------- main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="hata-mha,hata-gqa")
+    ap.add_argument("--buckets", default="256,1024")
+    ap.add_argument("--budget", type=int, default=64)
+    ap.add_argument("--skip-hlo", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    manifest = {"models": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        params = load_params(f"{args.out}/{cfg.name}.weights.npz", cfg)
+        hash_path = f"{args.out}/{cfg.name}.hash_r{cfg.rbit}.npz"
+        hash_w = jnp.asarray(np.load(hash_path)["hash_w"])
+        entry = {
+            "config": {
+                "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+                "ffn_hidden": cfg.ffn_hidden, "rope_theta": cfg.rope_theta,
+                "rbit": cfg.rbit, "dense_layers": cfg.dense_layers,
+            },
+            "weights": f"{cfg.name}.weights.npz",
+            "hash_weights": {str(cfg.rbit): f"{cfg.name}.hash_r{cfg.rbit}.npz"},
+            "param_order": param_order(cfg),
+            "hlo": [],
+        }
+        # extra rbit variants if train_hash exported them
+        for rbit in (32, 64, 256):
+            p = f"{args.out}/{cfg.name}.hash_r{rbit}.npz"
+            if os.path.exists(p):
+                entry["hash_weights"][str(rbit)] = os.path.basename(p)
+        print(f"[aot:{cfg.name}] goldens", flush=True)
+        g = make_goldens(cfg, params, hash_w)
+        np.savez(f"{args.out}/{cfg.name}.goldens.npz", **g)
+        if not args.skip_hlo:
+            for bucket in buckets:
+                print(f"[aot:{cfg.name}] lowering bucket={bucket}", flush=True)
+                hlo = lower_prefill(cfg, params, bucket, cfg.rbit)
+                path = f"{cfg.name}.prefill.b{bucket}.hlo.txt"
+                open(f"{args.out}/{path}", "w").write(hlo)
+                entry["hlo"].append({"kind": "prefill", "bucket": bucket,
+                                     "path": path})
+                hlo = lower_decode(cfg, params, bucket, 0, cfg.rbit)
+                path = f"{cfg.name}.decode_dense.b{bucket}.hlo.txt"
+                open(f"{args.out}/{path}", "w").write(hlo)
+                entry["hlo"].append({"kind": "decode_dense", "bucket": bucket,
+                                     "path": path})
+                hlo = lower_decode(cfg, params, bucket, args.budget, cfg.rbit)
+                path = f"{cfg.name}.decode_hata.b{bucket}.k{args.budget}.hlo.txt"
+                open(f"{args.out}/{path}", "w").write(hlo)
+                entry["hlo"].append({"kind": "decode_hata", "bucket": bucket,
+                                     "budget": args.budget, "path": path})
+        manifest["models"][cfg.name] = entry
+    with open(f"{args.out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for HATA + pure-jnp reference oracles.
+
+Public surface:
+  hash_encode.hash_encode          fused projection+sign+bitpack
+  hamming.hamming_score            XOR+popcount match scores
+  sparse_attention.sparse_attention_{simple,fused}
+  ref.*                            oracles used by pytest and Rust goldens
+"""
+from . import ref  # noqa: F401
+from .hash_encode import hash_encode  # noqa: F401
+from .hamming import hamming_score  # noqa: F401
+from .sparse_attention import (  # noqa: F401
+    sparse_attention_fused,
+    sparse_attention_simple,
+)

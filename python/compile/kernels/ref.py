@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracles for the HATA Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package is
+pytest-compared against the function of the same name here, and the Rust
+native engine is compared against goldens generated from these functions.
+
+Bit-packing convention (shared with Rust, little-endian words):
+  hash bit ``b`` of a token lives in word ``b // 32`` at bit position
+  ``b % 32``.  Two consecutive u32 words reinterpret as one u64 word on a
+  little-endian host, which is exactly how the Rust engine consumes them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def hash_encode(x: jax.Array, w_h: jax.Array) -> jax.Array:
+    """Encode vectors into packed binary hash codes (paper Alg. 2).
+
+    Args:
+      x:   [s, d] float vectors (queries or keys).
+      w_h: [d, rbit] trained hash projection.
+
+    Returns:
+      [s, rbit // 32] uint32 packed codes. Bit = 1 iff (x @ w_h) >= 0.
+    """
+    s, _ = x.shape
+    rbit = w_h.shape[1]
+    assert rbit % WORD_BITS == 0, "rbit must be a multiple of 32"
+    y = x.astype(jnp.float32) @ w_h.astype(jnp.float32)
+    bits = (y >= 0).astype(jnp.uint32)  # [s, rbit]
+    bits = bits.reshape(s, rbit // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def hamming_score(q_codes: jax.Array, k_codes: jax.Array, rbit: int) -> jax.Array:
+    """Hash similarity score = number of MATCHING bits (paper Alg. 3 l.11).
+
+    Higher is more similar; equals ``rbit - hamming_distance``.
+
+    Args:
+      q_codes: [h, rbit // 32] uint32 query codes.
+      k_codes: [s, rbit // 32] uint32 cached key codes.
+
+    Returns:
+      [h, s] int32 match counts.
+    """
+    x = jnp.bitwise_xor(q_codes[:, None, :], k_codes[None, :, :])
+    mismatch = jnp.sum(jax.lax.population_count(x), axis=-1, dtype=jnp.int32)
+    return rbit - mismatch
+
+
+def gqa_aggregate(scores: jax.Array, group: int) -> jax.Array:
+    """Sum scores over query heads sharing one KV head (paper Sec 3.2).
+
+    Args:
+      scores: [h, s] per-query-head scores.
+      group:  query heads per KV head (h % group == 0).
+
+    Returns:
+      [h // group, s] aggregated scores.
+    """
+    h, s = scores.shape
+    assert h % group == 0
+    return scores.reshape(h // group, group, s).sum(axis=1)
+
+
+def topk_indices(scores: jax.Array, k: int) -> jax.Array:
+    """Indices of the k highest scores, per row. [..., s] -> [..., k]."""
+    _, idx = jax.lax.top_k(scores, k)
+    return idx
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Single-token dense attention: q [h, dh], k/v [s, dh] per KV head.
+
+    For MHA call per head with matching shapes; scale = dh ** -0.5.
+    """
+    dh = q.shape[-1]
+    logits = (q @ k.T) * (dh ** -0.5)  # [h, s]
+    p = jax.nn.softmax(logits, axis=-1)
+    return p @ v  # [h, dh]
+
+
+def sparse_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """Top-k sparse attention (paper Alg. 3 l.14-17), gather-then-attend.
+
+    Args:
+      q:   [h, dh] query heads sharing this KV head.
+      k:   [s, dh] full key cache.
+      v:   [s, dh] full value cache.
+      idx: [n] selected token positions (any order, no duplicates).
+
+    Returns:
+      [h, dh] attention output.
+    """
+    ks = jnp.take(k, idx, axis=0)
+    vs = jnp.take(v, idx, axis=0)
+    return dense_attention(q, ks, vs)
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal prefill attention for one head: q/k/v [s, dh] -> [s, dh]."""
+    s, dh = q.shape
+    logits = (q @ k.T) * (dh ** -0.5)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    return jax.nn.softmax(logits, axis=-1) @ v

@@ -1,0 +1,179 @@
+"""L1 Pallas kernel: top-k sparse attention with fused gather
+(paper Sec. 4, "Fuse gather with FlashAttention").
+
+The paper's problem: a separate ``Gather`` materializes the selected K/V
+rows in HBM before FlashAttention re-reads them — double traffic.  Their fix
+drives the FlashAttention K/V block loads directly by the top-k index list.
+
+Two variants are provided, mirroring the paper's Fig. 9 'Simple' vs
+'+FusedAttn' ablation (the Rust engine has the same pair on the request
+path):
+
+* ``sparse_attention_simple`` — gather with ``jnp.take`` (its own HBM
+  round-trip), then a tiled flash-decode Pallas kernel over the gathered
+  rows.
+* ``sparse_attention_fused``  — one ``pallas_call``: the index list rides
+  into the kernel and K/V rows are pulled tile-by-tile inside the online-
+  softmax loop; no gathered copy is ever materialized outside the kernel.
+
+Real-TPU note: the fused variant's tile loads would be expressed with a
+``PrefetchScalarGridSpec`` whose index_map reads the top-k list, making the
+HBM->VMEM DMA itself the gather (the TPU analog of the paper's fused CUDA
+loads).  Under ``interpret=True`` the same kernel body executes with jnp
+semantics on CPU, which is what we test.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_TILE_N = 128
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, out_ref, *, tile_n: int):
+    """Online-softmax attention of q (h, dh) over k/v (n, dh), tiled."""
+    q = q_ref[...].astype(jnp.float32)
+    h, dh = q.shape
+    n = k_ref.shape[0]
+    scale = dh ** -0.5
+    n_tiles = n // tile_n
+
+    def body(t, carry):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k_ref[...], t * tile_n, tile_n)
+        vs = jax.lax.dynamic_slice_in_dim(v_ref[...], t * tile_n, tile_n)
+        s = jnp.dot(q, ks.astype(jnp.float32).T) * scale       # (h, tn)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, vs.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((h,), dtype=jnp.float32)
+    acc0 = jnp.zeros((h, dh), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    out_ref[...] = acc / l[:, None]
+
+
+def _fused_kernel(idx_ref, q_ref, k_ref, v_ref, out_ref, *, tile_n: int):
+    """Fused gather + online-softmax: K/V rows pulled by index per tile."""
+    q = q_ref[...].astype(jnp.float32)
+    h, dh = q.shape
+    n = idx_ref.shape[0]
+    scale = dh ** -0.5
+    n_tiles = n // tile_n
+
+    def body(t, carry):
+        m, l, acc = carry
+        ids = jax.lax.dynamic_slice_in_dim(idx_ref[...], t * tile_n, tile_n)
+        # The gather IS the load: on TPU this is the scalar-prefetch DMA.
+        ks = jnp.take(k_ref[...], ids, axis=0).astype(jnp.float32)
+        vs = jnp.take(v_ref[...], ids, axis=0).astype(jnp.float32)
+        s = jnp.dot(q, ks.T) * scale
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, vs)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((h,), dtype=jnp.float32)
+    acc0 = jnp.zeros((h, dh), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    out_ref[...] = acc / l[:, None]
+
+
+def _pad_to_tile(n: int, tile: int) -> int:
+    return (n + tile - 1) // tile * tile
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def sparse_attention_simple(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    idx: jax.Array,
+    *,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Gather-then-attend ('Simple' in Fig. 9). q [h,dh], k/v [s,dh], idx [n]."""
+    h, dh = q.shape
+    n = idx.shape[0]
+    # Tile must divide n exactly: padded K rows would still receive softmax
+    # weight (a zero K row has logit 0, not -inf), so instead of padding we
+    # shrink the tile to the largest divisor of n.
+    tn = _largest_divisor_tile(n, tile_n)
+    n_pad = n
+    ks = jnp.take(k, idx, axis=0)
+    vs = jnp.take(v, idx, axis=0)
+    out = pl.pallas_call(
+        functools.partial(_flash_decode_kernel, tile_n=tn),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((h, dh), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, dh), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, dh), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        interpret=interpret,
+    )(q, ks, vs)
+    return out
+
+
+def _largest_divisor_tile(n: int, max_tile: int) -> int:
+    """Largest t <= max_tile with n % t == 0 (>=1)."""
+    t = min(max_tile, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def sparse_attention_fused(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    idx: jax.Array,
+    *,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused gather + FlashAttention ('+FusedAttn' in Fig. 9).
+
+    Args:
+      q:   [h, dh] query heads sharing this KV head.
+      k:   [s, dh] full key cache (never copied).
+      v:   [s, dh] full value cache.
+      idx: [n] selected positions; n need not divide tile_n.
+
+    Returns:
+      [h, dh] float32 attention output.
+    """
+    h, dh = q.shape
+    s = k.shape[0]
+    n = idx.shape[0]
+    tn = _largest_divisor_tile(n, tile_n)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, tile_n=tn),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((h, dh), lambda i: (0, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, dh), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        interpret=interpret,
+    )(idx, q, k, v)
+    return out

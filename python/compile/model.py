@@ -1,0 +1,329 @@
+"""L2: JAX transformer with HATA top-k attention (build-time Python).
+
+The model family mirrors Llama-style blocks (RMSNorm -> attention with RoPE
+-> RMSNorm -> SwiGLU), with MHA or GQA head layouts, scaled to train on one
+CPU core (see DESIGN.md §4).  Two decode paths are defined:
+
+* ``decode_step`` with ``budget == 0`` — vanilla full attention over the KV
+  cache.
+* ``decode_step`` with ``budget > 0``  — paper Alg. 3: hash-encode q/k (L1
+  kernel), Hamming scores vs the key-code cache, GQA aggregation, top-k,
+  fused sparse attention (L1 kernel).
+
+Both are pure functions over explicit cache arrays so ``aot.py`` can lower
+them to static-shape HLO (bucketed max_len) for the Rust PJRT runtime.
+
+Hash weights are per (layer, kv_head): query heads sharing a KV head share
+its W_H so that one key-code cache serves the whole group (paper Sec 3.2
+trains per attention head for MHA; for GQA a single code cache per KV head
+is the only layout consistent with Alg. 1, and score aggregation over the
+group recovers the per-query-head signal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.hash_encode import hash_encode
+from .kernels.hamming import hamming_score
+from .kernels.sparse_attention import sparse_attention_fused
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters. `name` keys the artifact manifest."""
+
+    name: str = "hata-mha"
+    vocab: int = 128
+    d_model: int = 128
+    n_layers: int = 3
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 16
+    ffn_hidden: int = 256
+    rope_theta: float = 10000.0
+    rbit: int = 128
+    # first `dense_layers` layers always run full attention (paper Sec 5.1
+    # follows Quest: the first two of 32 layers are outliers; scaled here).
+    dense_layers: int = 1
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def code_words(self) -> int:
+        return self.rbit // 32
+
+
+# Model zoo: tiny trained models. Scale mirrors for perf sweeps live on the
+# Rust side (rust/src/config) since they are never trained.
+CONFIGS = {
+    "hata-mha": ModelConfig(name="hata-mha", n_kv_heads=8),
+    "hata-gqa": ModelConfig(name="hata-gqa", n_kv_heads=2),
+}
+
+
+# ----------------------------------------------------------------- params
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Xavier-ish init; layout mirrors rust/src/model/weights.rs."""
+
+    def dense(key, fan_in, fan_out):
+        scale = math.sqrt(2.0 / (fan_in + fan_out))
+        return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.n_layers))
+    p: Params = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": dense(next(keys), cfg.d_model, cfg.vocab),
+        "layers": [],
+    }
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    for _ in range(cfg.n_layers):
+        p["layers"].append(
+            {
+                "attn_norm": jnp.ones((cfg.d_model,)),
+                "wq": dense(next(keys), cfg.d_model, qd),
+                "wk": dense(next(keys), cfg.d_model, kvd),
+                "wv": dense(next(keys), cfg.d_model, kvd),
+                "wo": dense(next(keys), qd, cfg.d_model),
+                "mlp_norm": jnp.ones((cfg.d_model,)),
+                "w_gate": dense(next(keys), cfg.d_model, cfg.ffn_hidden),
+                "w_up": dense(next(keys), cfg.d_model, cfg.ffn_hidden),
+                "w_down": dense(next(keys), cfg.ffn_hidden, cfg.d_model),
+            }
+        )
+    return p
+
+
+def init_hash_params(cfg: ModelConfig, key: jax.Array, rbit: int | None = None) -> jax.Array:
+    """Random-projection init for W_H [L, n_kv, head_dim, rbit]."""
+    shape = (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, rbit or cfg.rbit)
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(cfg.head_dim)
+
+
+# ------------------------------------------------------------------ layers
+
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [s, h, dh]; positions: [s]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [s, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = cos[:, None, :], sin[:, None, :]  # broadcast over heads
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x: jax.Array, layer: Params) -> jax.Array:
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def _qkv(x: jax.Array, layer: Params, cfg: ModelConfig, positions: jax.Array):
+    s = x.shape[0]
+    q = (x @ layer["wq"]).reshape(s, cfg.n_heads, cfg.head_dim)
+    k = (x @ layer["wk"]).reshape(s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ layer["wv"]).reshape(s, cfg.n_kv_heads, cfg.head_dim)
+    return rope(q, positions, cfg.rope_theta), rope(k, positions, cfg.rope_theta), v
+
+
+# ------------------------------------------------------------- full forward
+
+
+def forward_train(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Causal LM forward for training: tokens [b, s] -> logits [b, s, vocab]."""
+
+    def one(seq):
+        s = seq.shape[0]
+        pos = jnp.arange(s)
+        x = params["embed"][seq]
+        for layer in params["layers"]:
+            h = rms_norm(x, layer["attn_norm"])
+            q, k, v = _qkv(h, layer, cfg, pos)
+            kr = jnp.repeat(k, cfg.group, axis=1)
+            vr = jnp.repeat(v, cfg.group, axis=1)
+            outs = jax.vmap(ref.prefill_attention, in_axes=(1, 1, 1), out_axes=1)(
+                q, kr, vr
+            )
+            x = x + outs.reshape(s, -1) @ layer["wo"]
+            h = rms_norm(x, layer["mlp_norm"])
+            x = x + swiglu(h, layer)
+        x = rms_norm(x, params["final_norm"])
+        return x @ params["lm_head"]
+
+    return jax.vmap(one)(tokens)
+
+
+# -------------------------------------------------------------- prefill/decode
+
+
+def prefill(
+    params: Params,
+    hash_w: jax.Array,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Paper Alg. 1: full attention + fill KV cache AND key-code cache.
+
+    tokens: [s] -> (logits_last [vocab], caches)
+    caches: k/v [L, n_kv, s, dh], kcode [L, n_kv, s, words]
+    """
+    s = tokens.shape[0]
+    pos = jnp.arange(s)
+    x = params["embed"][tokens]
+    ks, vs, codes = [], [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rms_norm(x, layer["attn_norm"])
+        q, k, v = _qkv(h, layer, cfg, pos)
+        kr = jnp.repeat(k, cfg.group, axis=1)
+        vr = jnp.repeat(v, cfg.group, axis=1)
+        outs = jax.vmap(ref.prefill_attention, in_axes=(1, 1, 1), out_axes=1)(
+            q, kr, vr
+        )
+        x = x + outs.reshape(s, -1) @ layer["wo"]
+        h = rms_norm(x, layer["mlp_norm"])
+        x = x + swiglu(h, layer)
+        ks.append(jnp.transpose(k, (1, 0, 2)))  # [n_kv, s, dh]
+        vs.append(jnp.transpose(v, (1, 0, 2)))
+        codes.append(
+            jnp.stack(
+                [
+                    hash_encode(k[:, kv, :], hash_w[li, kv], interpret=interpret)
+                    for kv in range(cfg.n_kv_heads)
+                ]
+            )
+        )  # [n_kv, s, words]
+    x = rms_norm(x, params["final_norm"])
+    logits = x[-1] @ params["lm_head"]
+    caches = {"k": jnp.stack(ks), "v": jnp.stack(vs), "kcode": jnp.stack(codes)}
+    return logits, caches
+
+
+def _decode_attn_dense(q, k_cache, v_cache, cfg):
+    """q [h, dh]; caches [n_kv, s, dh] -> [h, dh]."""
+    outs = []
+    for kv in range(cfg.n_kv_heads):
+        qs = q[kv * cfg.group : (kv + 1) * cfg.group]
+        outs.append(ref.dense_attention(qs, k_cache[kv], v_cache[kv]))
+    return jnp.concatenate(outs, axis=0)
+
+
+def _decode_attn_hata(
+    q, k_cache, v_cache, code_cache, hash_w_layer, cfg, budget, interpret
+):
+    """Paper Alg. 3 steps 2-3: Hamming score, GQA-aggregate, top-k, sparse."""
+    outs = []
+    for kv in range(cfg.n_kv_heads):
+        qs = q[kv * cfg.group : (kv + 1) * cfg.group]  # [g, dh]
+        qc = hash_encode(qs, hash_w_layer[kv], interpret=interpret)
+        scores = hamming_score(qc, code_cache[kv], cfg.rbit, interpret=interpret)
+        agg = ref.gqa_aggregate(scores, cfg.group)[0]  # [s]
+        idx = ref.topk_indices(agg, budget)
+        outs.append(
+            sparse_attention_fused(
+                qs, k_cache[kv], v_cache[kv], idx, interpret=interpret
+            )
+        )
+    return jnp.concatenate(outs, axis=0)
+
+
+def decode_step(
+    params: Params,
+    hash_w: jax.Array,
+    cfg: ModelConfig,
+    token: jax.Array,
+    position: jax.Array,
+    caches: dict[str, jax.Array],
+    *,
+    budget: int = 0,
+    interpret: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One decode step (paper Alg. 3). ``budget == 0`` -> dense attention.
+
+    Returns (logits [vocab], caches grown by one token).
+    """
+    x = params["embed"][token]
+    new_k, new_v, new_c = [], [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rms_norm(x, layer["attn_norm"])
+        pos = position[None]
+        q = (h[None, :] @ layer["wq"]).reshape(1, cfg.n_heads, cfg.head_dim)
+        k = (h[None, :] @ layer["wk"]).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h[None, :] @ layer["wv"]).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)[0]  # [h, dh]
+        k = rope(k, pos, cfg.rope_theta)[0]  # [n_kv, dh]
+        v = v[0]
+        k_cache = jnp.concatenate([caches["k"][li], k[:, None, :]], axis=1)
+        v_cache = jnp.concatenate([caches["v"][li], v[:, None, :]], axis=1)
+        kc = jnp.stack(
+            [
+                hash_encode(k[kv : kv + 1], hash_w[li, kv], interpret=interpret)[0]
+                for kv in range(cfg.n_kv_heads)
+            ]
+        )
+        code_cache = jnp.concatenate([caches["kcode"][li], kc[:, None, :]], axis=1)
+        new_k.append(k_cache)
+        new_v.append(v_cache)
+        new_c.append(code_cache)
+        s_now = int(k_cache.shape[1])
+        use_dense = budget == 0 or li < cfg.dense_layers or budget >= s_now
+        if use_dense:
+            attn = _decode_attn_dense(q, k_cache, v_cache, cfg)
+        else:
+            attn = _decode_attn_hata(
+                q, k_cache, v_cache, code_cache, hash_w[li], cfg, budget, interpret
+            )
+        x = x + attn.reshape(-1) @ layer["wo"]
+        h = rms_norm(x, layer["mlp_norm"])
+        x = x + swiglu(h, layer)
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    caches = {"k": jnp.stack(new_k), "v": jnp.stack(new_v), "kcode": jnp.stack(new_c)}
+    return logits, caches
+
+
+def generate(
+    params: Params,
+    hash_w: jax.Array,
+    cfg: ModelConfig,
+    prompt: jax.Array,
+    n_new: int,
+    *,
+    budget: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Greedy generation used by python-side evals and golden files."""
+    logits, caches = prefill(params, hash_w, cfg, prompt, interpret=interpret)
+    out = []
+    tok = jnp.argmax(logits)
+    pos = prompt.shape[0]
+    for _ in range(n_new):
+        out.append(tok)
+        logits, caches = decode_step(
+            params, hash_w, cfg, tok, jnp.asarray(pos), caches,
+            budget=budget, interpret=interpret,
+        )
+        tok = jnp.argmax(logits)
+        pos += 1
+    return jnp.stack(out)

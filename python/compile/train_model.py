@@ -1,0 +1,159 @@
+"""Train the tiny LMs on the synthetic corpus + retrieval-task mixture.
+
+Build-time only.  Own AdamW (no optax in the image).  Checkpoints are
+saved as .npz with flat dotted keys ("layers.0.wq", ...) — the layout the
+Rust weight loader (rust/src/model/weights.rs) and aot.py both consume.
+
+Usage:  python -m compile.train_model --config hata-mha --steps 320 \
+            --out ../artifacts/
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import CONFIGS, ModelConfig, forward_train, init_params
+
+SEQ = 384
+BATCH = 8
+
+
+# ------------------------------------------------------------------ AdamW
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mh, vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------------------------------------------- loss
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, mask):
+    """Weighted next-token cross-entropy. tokens [b, s+1], mask [b, s]."""
+    logits = forward_train(params, cfg, tokens[:, :-1])  # [b, s, vocab]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.sum(mask)
+
+
+# ---------------------------------------------------------------- flatten
+
+
+def flatten_params(params) -> dict[str, np.ndarray]:
+    flat = {}
+    for k, v in params.items():
+        if k == "layers":
+            for i, layer in enumerate(v):
+                for lk, lv in layer.items():
+                    flat[f"layers.{i}.{lk}"] = np.asarray(lv)
+        else:
+            flat[k] = np.asarray(v)
+    return flat
+
+
+def unflatten_params(flat: dict[str, np.ndarray], cfg: ModelConfig):
+    params = {"layers": [dict() for _ in range(cfg.n_layers)]}
+    for k, v in flat.items():
+        if k.startswith("layers."):
+            _, i, name = k.split(".")
+            params["layers"][int(i)][name] = jnp.asarray(v)
+        else:
+            params[k] = jnp.asarray(v)
+    return params
+
+
+def load_params(path: str, cfg: ModelConfig):
+    return unflatten_params(dict(np.load(path)), cfg)
+
+
+# ------------------------------------------------------------------ train
+
+
+def train(cfg: ModelConfig, steps: int, seed: int = 0, log_every: int = 20,
+          lr: float = 3e-3):
+    corpus = data.MarkovCorpus(seed=0)
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, mask, lr_now):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, mask)
+        params, opt = adamw_update(params, grads, opt, lr_now)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        tokens, mask = data.training_batch(corpus, rng, BATCH, SEQ)
+        warm = min(1.0, (i + 1) / 30)
+        decay = 0.5 * (1 + np.cos(np.pi * i / steps))
+        lr_now = jnp.asarray(lr * warm * (0.1 + 0.9 * decay), jnp.float32)
+        params, opt, loss = step(params, opt, jnp.asarray(tokens),
+                                 jnp.asarray(mask), lr_now)
+        history.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[{cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return params, history
+
+
+def eval_recall_accuracy(params, cfg: ModelConfig, n: int = 20, ctx: int = 256,
+                         seed: int = 1) -> float:
+    """Greedy answer-exact-match on held-out single-needle tasks (dense)."""
+    from .model import generate, init_hash_params
+
+    corpus = data.MarkovCorpus(seed=0)
+    rng = np.random.default_rng(seed)
+    hash_w = init_hash_params(cfg, jax.random.PRNGKey(0))
+    hits = 0
+    for _ in range(n):
+        prompt, ans = data.make_task("ns", corpus, rng, ctx)
+        out = generate(params, hash_w, cfg, jnp.asarray(data.encode(prompt)),
+                       len(ans), budget=0)
+        hits += int(data.decode(np.asarray(out)) == ans)
+    return hits / n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="hata-mha", choices=sorted(CONFIGS))
+    ap.add_argument("--steps", type=int, default=320)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--eval", action="store_true")
+    args = ap.parse_args()
+    cfg = CONFIGS[args.config]
+    params, history = train(cfg, args.steps, seed=args.seed)
+    out = f"{args.out}/{cfg.name}.weights.npz"
+    np.savez(out, **flatten_params(params))
+    np.save(f"{args.out}/{cfg.name}.losscurve.npy", np.asarray(history))
+    print(f"saved {out}")
+    if args.eval:
+        acc = eval_recall_accuracy(params, cfg)
+        print(f"[{cfg.name}] needle-recall accuracy (dense, ctx=256): {acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Task-grammar tests for the synthetic suite (shared contract with
+rust/src/bench/tasks.rs)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return data.MarkovCorpus(seed=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kind=st.sampled_from(data.TASK_KINDS),
+    ctx=st.integers(120, 800),
+    seed=st.integers(0, 10_000),
+)
+def test_task_invariants(kind, ctx, seed):
+    corpus = data.MarkovCorpus(seed=0)
+    rng = np.random.default_rng(seed)
+    prompt, ans = data.make_task(kind, corpus, rng, ctx)
+    assert len(prompt) == ctx
+    assert prompt.isascii()
+    assert ans.endswith(";")
+    # query suffix is "?<key>=" (fwe uses the literal 3-char key "fwe")
+    assert prompt[-1] == "="
+    assert "?" in prompt[-6:]
+
+
+def test_ns_answer_recoverable(corpus):
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        prompt, ans = data.make_task("ns", corpus, rng, 300)
+        key = prompt[-data.KEY_LEN - 1 : -1]
+        assert f"&{key}={ans}" in prompt
+
+
+def test_vt_chain_consistent(corpus):
+    rng = np.random.default_rng(2)
+    prompt, ans = data.make_task("vt", corpus, rng, 300)
+    k1 = ans[:-1]
+    # alias target k1 must itself be bound
+    assert f"&{k1}=" in prompt
+
+
+def test_encode_decode_roundtrip():
+    s = "&ab=CD;?ab="
+    assert data.decode(data.encode(s)) == s
+    assert data.encode(s).dtype == np.int32
+    assert data.encode(s).max() < data.VOCAB
+
+
+def test_training_batch_shapes_and_mask(corpus):
+    rng = np.random.default_rng(3)
+    xs, mask = data.training_batch(corpus, rng, batch=4, seq=128)
+    assert xs.shape == (4, 129)
+    assert mask.shape == (4, 128)
+    assert mask.min() >= 0.0 and mask.max() <= 1.0
+    # at least one row upweights answers
+    assert (mask == 1.0).any()
+
+
+def test_recall_sequence_answer_positions(corpus):
+    rng = np.random.default_rng(4)
+    text, answers = data.recall_sequence(corpus, rng, 256)
+    assert len(text) == 256
+    for a in answers:
+        # each answer position is an uppercase value char or ';'
+        assert text[a].isupper() or text[a] == ";", (a, text[a - 4 : a + 2])
+
+
+def test_markov_corpus_deterministic():
+    a = data.MarkovCorpus(seed=5)
+    b = data.MarkovCorpus(seed=5)
+    r1 = np.random.default_rng(1)
+    r2 = np.random.default_rng(1)
+    assert a.text(r1, 100) == b.text(r2, 100)

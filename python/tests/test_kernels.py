@@ -1,0 +1,247 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    hash_encode,
+    hamming_score,
+    ref,
+    sparse_attention_fused,
+    sparse_attention_simple,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=dtype)
+
+
+# ---------------------------------------------------------------- hash encode
+class TestHashEncode:
+    @settings(**SETTINGS)
+    @given(
+        s=st.integers(1, 513),
+        d=st.sampled_from([16, 32, 64, 128]),
+        words=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+        tile=st.sampled_from([8, 64, 256]),
+    )
+    def test_matches_ref(self, s, d, words, seed, tile):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (s, d))
+        w = _rand(rng, (d, 32 * words))
+        got = hash_encode(x, w, tile_s=tile)
+        want = ref.hash_encode(x, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_bf16_input(self, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (65, 32), dtype=jnp.bfloat16)
+        w = _rand(rng, (32, 64))
+        got = hash_encode(x, w)
+        want = ref.hash_encode(x.astype(jnp.float32), w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bit_order_known_vector(self):
+        # One-hot projections let us place each bit deliberately.
+        d, rbit = 4, 32
+        w = np.zeros((d, rbit), dtype=np.float32)
+        w[0, 0] = 1.0   # bit 0 set iff x[0] >= 0
+        w[1, 5] = 1.0   # bit 5 set iff x[1] >= 0
+        w[2, 31] = -1.0  # bit 31 set iff x[2] < 0 (sign flip)
+        x = np.array([[1.0, 1.0, 1.0, 0.0]], dtype=np.float32)
+        code = np.asarray(hash_encode(jnp.asarray(x), jnp.asarray(w)))[0, 0]
+        # zero-columns of W produce y == 0 -> bit set (>= 0 convention)
+        zero_cols = [b for b in range(rbit) if b not in (0, 5, 31)]
+        expect = (1 << 0) | (1 << 5) | sum(1 << b for b in zero_cols)
+        assert code == expect
+
+    def test_sign_convention_zero_is_positive(self):
+        x = jnp.zeros((3, 8), dtype=jnp.float32)
+        w = jnp.ones((8, 32), dtype=jnp.float32)
+        code = np.asarray(hash_encode(x, w))
+        assert (code == np.uint32(0xFFFFFFFF)).all()
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(7)
+        x, w = _rand(rng, (50, 16)), _rand(rng, (16, 64))
+        a = np.asarray(hash_encode(x, w))
+        b = np.asarray(hash_encode(x, w))
+        np.testing.assert_array_equal(a, b)
+
+    def test_rejects_bad_rbit(self):
+        x = jnp.zeros((2, 8))
+        w = jnp.zeros((8, 33))
+        with pytest.raises(AssertionError):
+            hash_encode(x, w)
+
+
+# ------------------------------------------------------------------- hamming
+class TestHammingScore:
+    @settings(**SETTINGS)
+    @given(
+        h=st.integers(1, 16),
+        s=st.integers(1, 700),
+        words=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 2**31 - 1),
+        tile=st.sampled_from([16, 128, 1024]),
+    )
+    def test_matches_ref(self, h, s, words, seed, tile):
+        rng = np.random.default_rng(seed)
+        rbit = 32 * words
+        qc = jnp.asarray(rng.integers(0, 2**32, size=(h, words), dtype=np.uint32))
+        kc = jnp.asarray(rng.integers(0, 2**32, size=(s, words), dtype=np.uint32))
+        got = hamming_score(qc, kc, rbit, tile_k=tile)
+        want = ref.hamming_score(qc, kc, rbit)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_identical_codes_score_rbit(self):
+        c = jnp.asarray(np.arange(12, dtype=np.uint32).reshape(3, 4))
+        s = np.asarray(hamming_score(c, c, 128))
+        assert (np.diag(s) == 128).all()
+
+    def test_complement_scores_zero(self):
+        rng = np.random.default_rng(3)
+        qc = rng.integers(0, 2**32, size=(2, 4), dtype=np.uint32)
+        kc = ~qc
+        s = np.asarray(hamming_score(jnp.asarray(qc), jnp.asarray(kc), 128))
+        assert (np.diag(s) == 0).all()
+
+    def test_score_range(self):
+        rng = np.random.default_rng(5)
+        qc = jnp.asarray(rng.integers(0, 2**32, size=(4, 2), dtype=np.uint32))
+        kc = jnp.asarray(rng.integers(0, 2**32, size=(99, 2), dtype=np.uint32))
+        s = np.asarray(hamming_score(qc, kc, 64))
+        assert s.min() >= 0 and s.max() <= 64
+
+    def test_symmetry(self):
+        """score(a,b) == score(b,a) elementwise-transposed."""
+        rng = np.random.default_rng(9)
+        a = jnp.asarray(rng.integers(0, 2**32, size=(5, 4), dtype=np.uint32))
+        b = jnp.asarray(rng.integers(0, 2**32, size=(7, 4), dtype=np.uint32))
+        s_ab = np.asarray(hamming_score(a, b, 128))
+        s_ba = np.asarray(hamming_score(b, a, 128))
+        np.testing.assert_array_equal(s_ab, s_ba.T)
+
+
+# ---------------------------------------------------------- sparse attention
+class TestSparseAttention:
+    @settings(**SETTINGS)
+    @given(
+        h=st.integers(1, 8),
+        dh=st.sampled_from([16, 32, 64]),
+        s=st.integers(8, 600),
+        seed=st.integers(0, 2**31 - 1),
+        frac=st.floats(0.05, 1.0),
+        tile=st.sampled_from([16, 64, 128]),
+    )
+    def test_fused_matches_ref(self, h, dh, s, seed, frac, tile):
+        rng = np.random.default_rng(seed)
+        n = max(1, int(s * frac))
+        q = _rand(rng, (h, dh))
+        k = _rand(rng, (s, dh))
+        v = _rand(rng, (s, dh))
+        idx = jnp.asarray(rng.choice(s, size=n, replace=False))
+        got = sparse_attention_fused(q, k, v, idx, tile_n=tile)
+        want = ref.sparse_attention(q, k, v, idx)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        h=st.integers(1, 8),
+        s=st.integers(8, 400),
+        seed=st.integers(0, 2**31 - 1),
+        tile=st.sampled_from([8, 32, 128]),
+    )
+    def test_simple_matches_ref(self, h, s, seed, tile):
+        rng = np.random.default_rng(seed)
+        dh = 32
+        n = max(1, s // 3)
+        q = _rand(rng, (h, dh))
+        k = _rand(rng, (s, dh))
+        v = _rand(rng, (s, dh))
+        idx = jnp.asarray(rng.choice(s, size=n, replace=False))
+        got = sparse_attention_simple(q, k, v, idx, tile_n=tile)
+        want = ref.sparse_attention(q, k, v, idx)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_full_index_set_equals_dense(self):
+        rng = np.random.default_rng(11)
+        q, k, v = _rand(rng, (4, 32)), _rand(rng, (128, 32)), _rand(rng, (128, 32))
+        idx = jnp.arange(128)
+        got = sparse_attention_fused(q, k, v, idx)
+        want = ref.dense_attention(q, k, v)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_single_selected_token(self):
+        """k=1 sparse attention returns exactly that value row."""
+        rng = np.random.default_rng(13)
+        q, k, v = _rand(rng, (2, 16)), _rand(rng, (64, 16)), _rand(rng, (64, 16))
+        idx = jnp.asarray([17])
+        got = np.asarray(sparse_attention_fused(q, k, v, idx))
+        want = np.broadcast_to(np.asarray(v)[17], (2, 16))
+        assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_permutation_invariance(self):
+        """Attention over a set of tokens is order-independent."""
+        rng = np.random.default_rng(17)
+        q, k, v = _rand(rng, (4, 32)), _rand(rng, (256, 32)), _rand(rng, (256, 32))
+        idx = rng.choice(256, size=48, replace=False)
+        a = np.asarray(sparse_attention_fused(q, k, v, jnp.asarray(idx)))
+        b = np.asarray(sparse_attention_fused(q, k, v, jnp.asarray(idx[::-1].copy())))
+        assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_large_logits_stable(self):
+        """Online softmax must not overflow with large-magnitude scores."""
+        rng = np.random.default_rng(19)
+        q = _rand(rng, (2, 32), scale=30.0)
+        k = _rand(rng, (128, 32), scale=30.0)
+        v = _rand(rng, (128, 32))
+        idx = jnp.asarray(rng.choice(128, size=32, replace=False))
+        got = np.asarray(sparse_attention_fused(q, k, v, idx))
+        assert np.isfinite(got).all()
+        want = np.asarray(ref.sparse_attention(q, k, v, idx))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- end-to-end
+class TestHataSelectionPipeline:
+    """Glue the three kernels: encode -> score -> topk -> sparse attention."""
+
+    def test_pipeline_recall_beats_random(self):
+        """Trained-free sanity: even a RANDOM hash preserves enough relative
+        order on clustered data that recall@k beats uniform chance."""
+        rng = np.random.default_rng(23)
+        d, rbit, s, k = 64, 128, 512, 64
+        w = jnp.asarray(rng.normal(size=(d, rbit)), dtype=jnp.float32)
+        key_dirs = rng.normal(size=(s, d))
+        keys = jnp.asarray(key_dirs, dtype=jnp.float32)
+        q = keys[37:38] + 0.1 * jnp.asarray(rng.normal(size=(1, d)), dtype=jnp.float32)
+        true_scores = (q @ keys.T)[0]
+        true_top = set(np.argsort(-np.asarray(true_scores))[:k].tolist())
+        qc = hash_encode(q, w)
+        kc = hash_encode(keys, w)
+        sc = hamming_score(qc, kc, rbit)
+        hash_top = set(np.argsort(-np.asarray(sc)[0])[:k].tolist())
+        recall = len(true_top & hash_top) / k
+        assert recall > 3 * (k / s), f"recall {recall} not above chance"
+
+    def test_gqa_aggregation_shapes(self):
+        rng = np.random.default_rng(29)
+        scores = jnp.asarray(rng.integers(0, 128, size=(8, 100)), dtype=jnp.int32)
+        agg = ref.gqa_aggregate(scores, group=4)
+        assert agg.shape == (2, 100)
+        np.testing.assert_array_equal(
+            np.asarray(agg[0]), np.asarray(scores[:4].sum(axis=0))
+        )

@@ -1,0 +1,118 @@
+"""L2 model tests: shapes, dense/prefill/decode consistency, bucketed
+static graphs vs the dynamic model, HATA decode correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.aot import (
+    decode_step_bucketed,
+    flat_weights,
+    param_order,
+    prefill_bucketed,
+    unflat_weights,
+)
+from compile.model import (
+    CONFIGS,
+    decode_step,
+    forward_train,
+    generate,
+    init_hash_params,
+    init_params,
+    prefill,
+)
+
+
+@pytest.fixture(scope="module", params=["hata-mha", "hata-gqa"])
+def setup(request):
+    cfg = CONFIGS[request.param]
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    hash_w = init_hash_params(cfg, key)
+    return cfg, params, hash_w
+
+
+def test_forward_train_shapes(setup):
+    cfg, params, _ = setup
+    tokens = jnp.zeros((2, 17), dtype=jnp.int32)
+    logits = forward_train(params, cfg, tokens)
+    assert logits.shape == (2, 17, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_prefill_cache_shapes(setup):
+    cfg, params, hash_w = setup
+    toks = jnp.arange(23) % cfg.vocab
+    logits, caches = prefill(params, hash_w, cfg, toks)
+    assert logits.shape == (cfg.vocab,)
+    assert caches["k"].shape == (cfg.n_layers, cfg.n_kv_heads, 23, cfg.head_dim)
+    assert caches["kcode"].shape == (cfg.n_layers, cfg.n_kv_heads, 23, cfg.rbit // 32)
+
+
+def test_prefill_matches_forward_train(setup):
+    """Last-position logits of prefill == forward_train at that position."""
+    cfg, params, hash_w = setup
+    toks = (jnp.arange(19) * 7 + 3) % cfg.vocab
+    logits, _ = prefill(params, hash_w, cfg, toks)
+    full = forward_train(params, cfg, toks[None, :])[0, -1]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_step_matches_prefill(setup):
+    """Decoding token t+1 after prefill(0..t) == prefill(0..t+1)."""
+    cfg, params, hash_w = setup
+    toks = (jnp.arange(16) * 5 + 2) % cfg.vocab
+    _, caches = prefill(params, hash_w, cfg, toks[:-1])
+    logits_step, _ = decode_step(
+        params, hash_w, cfg, toks[-1], jnp.asarray(15), caches, budget=0
+    )
+    logits_full, _ = prefill(params, hash_w, cfg, toks)
+    np.testing.assert_allclose(
+        np.asarray(logits_step), np.asarray(logits_full), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_hata_budget_full_equals_dense(setup):
+    """budget >= s falls back to dense: identical logits."""
+    cfg, params, hash_w = setup
+    toks = (jnp.arange(12) * 3 + 1) % cfg.vocab
+    _, caches = prefill(params, hash_w, cfg, toks)
+    d, _ = decode_step(params, hash_w, cfg, jnp.asarray(5), jnp.asarray(12), caches, budget=0)
+    h, _ = decode_step(params, hash_w, cfg, jnp.asarray(5), jnp.asarray(12), caches, budget=999)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(h), rtol=1e-5, atol=1e-5)
+
+
+def test_bucketed_graphs_match_dynamic(setup):
+    cfg, params, hash_w = setup
+    ws = flat_weights(params, cfg)
+    assert len(ws) == len(param_order(cfg))
+    toks = (jnp.arange(20) * 11 + 4) % cfg.vocab
+    B = 32
+    logits, caches = prefill(params, hash_w, cfg, toks)
+    padded = jnp.zeros(B, jnp.int32).at[:20].set(toks)
+    bl, kc, vc, cc = prefill_bucketed(cfg, B, ws, hash_w, padded, jnp.asarray(20))
+    np.testing.assert_allclose(np.asarray(bl), np.asarray(logits), rtol=2e-4, atol=2e-4)
+    # one hata decode step
+    tok = jnp.argmax(logits).astype(jnp.int32)
+    want, _ = decode_step(params, hash_w, cfg, tok, jnp.asarray(20), caches, budget=8)
+    got, *_ = decode_step_bucketed(cfg, B, 8, ws, hash_w, tok, jnp.asarray(20), kc, vc, cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_unflat_roundtrip(setup):
+    cfg, params, _ = setup
+    back = unflat_weights(flat_weights(params, cfg), cfg)
+    np.testing.assert_array_equal(np.asarray(back["embed"]), np.asarray(params["embed"]))
+    np.testing.assert_array_equal(
+        np.asarray(back["layers"][1]["wq"]), np.asarray(params["layers"][1]["wq"])
+    )
+
+
+def test_generate_deterministic(setup):
+    cfg, params, hash_w = setup
+    prompt = jnp.asarray(data.encode("&ab=CD; filler text ?ab="))
+    a = generate(params, hash_w, cfg, prompt, 4, budget=8)
+    b = generate(params, hash_w, cfg, prompt, 4, budget=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,108 @@
+//! Fig 1 reproduction: the accuracy-vs-decoding-speed scatter.
+//!
+//! Per method: (x) decode tokens/s through the engine at a long context,
+//! (y) task accuracy on the synthetic suite (trained model if artifacts
+//! exist, else selection recall on random weights as the y-axis).
+
+use std::sync::Arc;
+
+use hata::bench::eval::{fidelity, task_accuracy};
+use hata::bench::report::{fmt, Table};
+use hata::bench::tasks::{make_task, Corpus, TaskKind};
+use hata::config::manifest::Manifest;
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::Request;
+use hata::kvcache::MethodAux;
+use hata::model::{tokenizer, weights::Weights, Model};
+use hata::util::rng::Rng;
+
+fn load(serve: &ServeConfig) -> (Model, bool) {
+    if let Ok(m) = Manifest::load("artifacts") {
+        if let Ok(arts) = m.model("hata-mha") {
+            if let Ok(mut w) = Weights::load(&arts.weights, &arts.config) {
+                if let Some(hw) = arts.hash_weights_for(arts.config.rbit) {
+                    if w.load_hash(hw, &arts.config).is_ok() {
+                        let aux = MethodAux::build(&arts.config, serve, None, 7);
+                        return (Model::new(arts.config.clone(), w, aux), true);
+                    }
+                }
+            }
+        }
+    }
+    let cfg = preset("hata-mha").unwrap();
+    let mut rng = Rng::new(0);
+    let w = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, serve, None, 7);
+    (Model::new(cfg, w, aux), false)
+}
+
+fn main() {
+    let ctx = 768;
+    let budget = 32;
+    let samples: usize =
+        std::env::var("HATA_FIG1_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(6);
+    let corpus = Corpus::new(0);
+    let mut table = Table::new(
+        &format!("Fig 1 proxy: accuracy vs decode speed (ctx={ctx}, budget={budget})"),
+        &["method", "tok_s", "accuracy_pct", "recall", "trained"],
+    );
+    for method in [
+        Method::Dense,
+        Method::Loki,
+        Method::Quest,
+        Method::MagicPig,
+        Method::StreamingLlm,
+        Method::Hata,
+    ] {
+        let serve = ServeConfig {
+            method,
+            budget: if method == Method::Dense { 0 } else { budget },
+            max_batch: 2,
+            prefill_chunk: 4096,
+            ..Default::default()
+        };
+        let (model, trained) = load(&serve);
+        // speed: decode throughput over 2 requests
+        let model = Arc::new(model);
+        let mut engine = Engine::new(Arc::clone(&model), serve.clone());
+        let mut rng = Rng::new(4);
+        for id in 0..2u64 {
+            let (prompt, _) = make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
+            engine.submit(Request {
+                id,
+                prompt: tokenizer::encode(&prompt),
+                max_new_tokens: 24,
+                stop_token: None,
+                arrival: 0.0,
+            });
+        }
+        let t0 = std::time::Instant::now();
+        let rs = engine.run_to_completion();
+        let total = t0.elapsed().as_secs_f64();
+        let ttft = rs.iter().map(|r| r.ttft).fold(0.0, f64::max);
+        let gen: usize = rs.iter().map(|r| r.tokens.len()).sum();
+        let tok_s = gen as f64 / (total - ttft).max(1e-9);
+        // accuracy (trained) / recall (any)
+        let acc = if trained {
+            task_accuracy(&model, &serve, TaskKind::Ns, ctx, samples, 1, None)
+        } else {
+            f64::NAN
+        };
+        let rec = if method == Method::Dense {
+            1.0
+        } else {
+            fidelity(&model, &serve, ctx.min(512), 2, 3).recall
+        };
+        table.row(vec![
+            method.name().to_string(),
+            fmt(tok_s),
+            fmt(100.0 * acc),
+            fmt(rec),
+            trained.to_string(),
+        ]);
+        eprintln!("[fig1] {} done", method.name());
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig1").unwrap();
+}

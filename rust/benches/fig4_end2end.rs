@@ -1,0 +1,78 @@
+//! Fig 4 reproduction: end-to-end inference time (prefill + decode bars)
+//! per method, through the full serving engine.
+//!
+//! Paper: Llama2/Llama3.1, 1.56% token selection; dense vs Loki vs Quest
+//! vs HATA. Here: the trained tiny models (or random weights when
+//! artifacts are absent) with scaled contexts; the bar *shape* — similar
+//! prefill, decode ordered dense > loki > quest/hata — is the target.
+
+use std::sync::Arc;
+
+use hata::bench::report::{fmt, Table};
+use hata::bench::tasks::{make_task, Corpus, TaskKind};
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::Request;
+use hata::kvcache::MethodAux;
+use hata::model::{tokenizer, weights::Weights, Model};
+use hata::util::rng::Rng;
+
+fn main() {
+    let ctx: usize =
+        std::env::var("HATA_FIG4_CTX").ok().and_then(|v| v.parse().ok()).unwrap_or(1024);
+    let decode_len = 32;
+    let n_requests = 2;
+    let budget = ((ctx as f64) * 0.0156).max(16.0) as usize;
+    let mut table = Table::new(
+        &format!("Fig 4 proxy: end-to-end time (ctx={ctx}, decode={decode_len}, budget={budget})"),
+        &["method", "prefill_s", "decode_s", "total_s", "decode_tok_s", "speedup_vs_dense"],
+    );
+    let corpus = Corpus::new(0);
+    let mut dense_decode = None;
+    for method in [Method::Dense, Method::Loki, Method::Quest, Method::Hata] {
+        let serve = ServeConfig {
+            method,
+            budget: if method == Method::Dense { 0 } else { budget },
+            max_batch: n_requests,
+            prefill_chunk: 4096,
+            ..Default::default()
+        };
+        let cfg = preset("hata-mha").unwrap();
+        let mut rng = Rng::new(0);
+        let weights = Weights::random(&cfg, &mut rng);
+        let aux = MethodAux::build(&cfg, &serve, None, 1);
+        let model = Arc::new(Model::new(cfg, weights, aux));
+        let mut engine = Engine::new(model, serve);
+        let mut rng = Rng::new(9);
+        for id in 0..n_requests {
+            let (prompt, _) = make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
+            engine.submit(Request {
+                id: id as u64,
+                prompt: tokenizer::encode(&prompt),
+                max_new_tokens: decode_len,
+                stop_token: None,
+                arrival: 0.0,
+            });
+        }
+        // prefill phase: run until every sequence produced its 1st token
+        let t0 = std::time::Instant::now();
+        let responses = engine.run_to_completion();
+        let total = t0.elapsed().as_secs_f64();
+        let ttft_max = responses.iter().map(|r| r.ttft).fold(0.0, f64::max);
+        let decode_s = total - ttft_max;
+        let gen: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let tok_s = gen as f64 / decode_s.max(1e-9);
+        let base = *dense_decode.get_or_insert(decode_s);
+        table.row(vec![
+            method.name().to_string(),
+            fmt(ttft_max),
+            fmt(decode_s),
+            fmt(total),
+            fmt(tok_s),
+            fmt(base / decode_s),
+        ]);
+        eprintln!("[fig4] {} done", method.name());
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig4").unwrap();
+}

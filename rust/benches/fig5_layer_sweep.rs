@@ -1,0 +1,100 @@
+//! Fig 5 reproduction: single-transformer-layer decode latency across
+//! batch sizes and context lengths, per method.
+//!
+//! Paper setup: Llama2 (MHA) b=1 x {32K..256K} and b={1..8} x 32K; Llama3.1
+//! (GQA). Unit = one decode step of one attention layer (one KV head;
+//! heads scale linearly). We measure CPU wall time AND report the modeled
+//! bandwidth-bound speedup (simulator/hbm.rs) that translates the shape to
+//! GPU-class hardware.
+
+use hata::attention::compute::{dense_attention, sparse_attention_fused};
+use hata::attention::methods::{ExactTopK, HataSelector, LokiSelector, QuestSelector};
+use hata::attention::{MethodState, Scratch, Selector};
+use hata::bench::harness::{bench, LayerFixture};
+use hata::bench::report::{fmt, Table};
+use hata::config::{preset, Method, ServeConfig};
+use hata::simulator::hbm::modeled_speedup;
+
+fn step_sparse(
+    f: &LayerFixture,
+    sel: &dyn Selector,
+    budget: usize,
+    sc: &mut Scratch,
+    out: &mut [f32],
+) {
+    let inp = f.inputs();
+    let mut st = MethodState::default();
+    sel.select(&inp, &mut st, budget, sc);
+    let idx = std::mem::take(&mut sc.indices);
+    sparse_attention_fused(&inp, &idx, &mut sc.probs, out);
+    sc.indices = idx;
+}
+
+fn main() {
+    let iters: usize =
+        std::env::var("HATA_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    // head_dim 128 mirrors the paper models (Fig 5's unit is per-head
+    // memory traffic).
+    let dh = 128;
+    let mut table = Table::new(
+        "Fig 5 proxy: single-layer decode latency (one KV head, dh=128)",
+        &[
+            "config",
+            "ctx",
+            "budget",
+            "dense_ms",
+            "topk_ms",
+            "loki_ms",
+            "quest_ms",
+            "hata_ms",
+            "hata_speedup_meas",
+            "hata_speedup_model",
+        ],
+    );
+    let sweeps: &[(&str, usize, &[usize])] = &[
+        ("mha-b1", 1, &[8_192, 32_768, 131_072, 262_144]),
+        ("gqa-g4", 4, &[8_192, 32_768, 131_072]),
+    ];
+    for &(label, group, ctxs) in sweeps {
+        for &s in ctxs {
+            let budget = ((s as f64) * 0.0156) as usize;
+            let f = LayerFixture::new(s, dh, group, 128, 42);
+            let mut sc = Scratch::default();
+            let mut out = vec![0.0f32; group * dh];
+            let dense = bench("dense", 1, iters, || {
+                dense_attention(&f.inputs(), &mut sc.probs, &mut out);
+            });
+            let topk = bench("topk", 1, iters, || {
+                step_sparse(&f, &ExactTopK, budget, &mut sc, &mut out);
+            });
+            let loki = bench("loki", 1, iters, || {
+                step_sparse(&f, &LokiSelector, budget, &mut sc, &mut out);
+            });
+            let quest = bench("quest", 1, iters, || {
+                step_sparse(&f, &QuestSelector, budget, &mut sc, &mut out);
+            });
+            let hata = bench("hata", 1, iters, || {
+                step_sparse(&f, &HataSelector, budget, &mut sc, &mut out);
+            });
+            let cfg = preset(if group == 1 { "mirror-llama2-7b" } else { "mirror-llama31-8b" })
+                .unwrap();
+            let serve = ServeConfig { method: Method::Hata, ..Default::default() };
+            let modeled = modeled_speedup(&cfg, &serve, s, budget);
+            table.row(vec![
+                label.to_string(),
+                s.to_string(),
+                budget.to_string(),
+                fmt(dense.mean_s * 1e3),
+                fmt(topk.mean_s * 1e3),
+                fmt(loki.mean_s * 1e3),
+                fmt(quest.mean_s * 1e3),
+                fmt(hata.mean_s * 1e3),
+                fmt(dense.mean_s / hata.mean_s),
+                fmt(modeled),
+            ]);
+            eprintln!("[fig5] {label} ctx={s} done");
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig5").unwrap();
+}

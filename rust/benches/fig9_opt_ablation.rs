@@ -1,0 +1,70 @@
+//! Fig 9 reproduction: the hardware-optimization ablation.
+//!
+//! Paper: Simple -> +Score (hamming operator) -> +FusedAttn (gather fused
+//! into FlashAttention) -> +Encode (fused hash encoding), Llama2 attention
+//! at 128K ctx, 1.56% budget. CPU analogs (DESIGN.md §3):
+//!   Simple     = scalar-popcount scoring + separate gather + unfused encode
+//!   +Score     = packed-u64 POPCNT scoring
+//!   +FusedAttn = gather folded into the attention pass
+//!   +Encode    = fused projection+sign+bitpack
+
+use hata::attention::compute::{sparse_attention_fused, sparse_attention_gather};
+use hata::attention::hamming::{scores_scalar, scores_word};
+use hata::attention::hashenc::{encode_fused_blocked, encode_unfused};
+use hata::attention::topk::topk_counting;
+use hata::bench::harness::{bench, LayerFixture};
+use hata::bench::report::{fmt, Table};
+
+fn main() {
+    let iters: usize =
+        std::env::var("HATA_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let s = 131_072;
+    let dh = 128;
+    let rbit = 128;
+    let budget = (s as f64 * 0.0156) as usize;
+    let f = LayerFixture::new(s, dh, 1, rbit, 7);
+    let mut iscores: Vec<i32> = Vec::new();
+    let mut idx: Vec<u32> = Vec::new();
+    let (mut kb, mut vb, mut probs) = (Vec::new(), Vec::new(), Vec::new());
+    let mut out = vec![0.0f32; dh];
+    let mut qc: Vec<u64> = Vec::new();
+
+    let variants: &[(&str, bool, bool, bool)] = &[
+        ("Simple", false, false, false),
+        ("+Score", false, true, false),
+        ("+Score+FusedAttn", false, true, true),
+        ("+Score+FusedAttn+Encode (HATA)", true, true, true),
+    ];
+    let mut table = Table::new(
+        &format!("Fig 9 proxy: optimization ablation (ctx={s}, budget={budget}, dh={dh})"),
+        &["variant", "ms/step", "speedup_vs_simple"],
+    );
+    let mut base = None;
+    for &(name, enc, score, attn) in variants {
+        let r = bench(name, 1, iters, || {
+            qc.clear();
+            if enc {
+                encode_fused_blocked(&f.q, &f.hash_w, rbit, &mut qc);
+            } else {
+                encode_unfused(&f.q, &f.hash_w, rbit, &mut qc);
+            }
+            if score {
+                scores_word(&qc, &f.codes, rbit, &mut iscores);
+            } else {
+                scores_scalar(&qc, &f.codes, rbit, &mut iscores);
+            }
+            topk_counting(&iscores, rbit as i32, budget, &mut idx);
+            let inp = f.inputs();
+            if attn {
+                sparse_attention_fused(&inp, &idx, &mut probs, &mut out);
+            } else {
+                sparse_attention_gather(&inp, &idx, &mut kb, &mut vb, &mut probs, &mut out);
+            }
+        });
+        let b = *base.get_or_insert(r.mean_s);
+        table.row(vec![name.to_string(), fmt(r.mean_s * 1e3), fmt(b / r.mean_s)]);
+        eprintln!("[fig9] {name} done");
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig9").unwrap();
+}

@@ -1,0 +1,83 @@
+//! Microbenchmarks of the HATA hot-path primitives — the §Perf working
+//! set (EXPERIMENTS.md §Perf records before/after from this bench).
+
+use hata::attention::hamming::{scores_group, scores_scalar, scores_word};
+use hata::attention::hashenc::{encode_fused, encode_fused_blocked, encode_unfused};
+use hata::attention::topk::{topk_counting, topk_heap, topk_quickselect};
+use hata::bench::harness::bench;
+use hata::bench::report::{fmt, Table};
+use hata::util::rng::Rng;
+
+fn main() {
+    let iters: usize =
+        std::env::var("HATA_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let s = 1 << 18; // 262144 tokens
+    let rbit = 128;
+    let words = rbit / 64;
+    let dh = 128;
+    let mut rng = Rng::new(0);
+    let codes: Vec<u64> = (0..s * words).map(|_| rng.next_u64()).collect();
+    let q: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    let q4: Vec<u64> = (0..4 * words).map(|_| rng.next_u64()).collect();
+    let x = rng.normal_vec(dh);
+    let w = rng.normal_vec(dh * rbit);
+    let fscores: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+    let budget = (s as f64 * 0.0156) as usize;
+
+    let mut table = Table::new(
+        &format!("microbench (s={s}, rbit={rbit}, dh={dh}, k={budget})"),
+        &["primitive", "ms", "GB/s or Melem/s"],
+    );
+    let mut iscores = Vec::new();
+    let bytes = (s * words * 8) as f64;
+
+    let r = bench("hamming scalar", 1, iters.min(2), || {
+        scores_scalar(&q, &codes, rbit, &mut iscores);
+    });
+    table.row(vec!["hamming_scalar".into(), fmt(r.mean_s * 1e3), fmt(bytes / r.mean_s / 1e9)]);
+
+    let r = bench("hamming word", 2, iters, || {
+        scores_word(&q, &codes, rbit, &mut iscores);
+    });
+    table.row(vec!["hamming_word".into(), fmt(r.mean_s * 1e3), fmt(bytes / r.mean_s / 1e9)]);
+
+    let r = bench("hamming group4", 2, iters, || {
+        scores_group(&q4, 4, &codes, rbit, &mut iscores);
+    });
+    table.row(vec!["hamming_group4".into(), fmt(r.mean_s * 1e3), fmt(bytes / r.mean_s / 1e9)]);
+
+    let mut out = Vec::new();
+    let r = bench("encode unfused", 2, iters, || {
+        out.clear();
+        encode_unfused(&x, &w, rbit, &mut out);
+    });
+    table.row(vec!["encode_unfused".into(), fmt(r.mean_s * 1e3), "-".into()]);
+    let r = bench("encode fused", 2, iters, || {
+        out.clear();
+        encode_fused(&x, &w, rbit, &mut out);
+    });
+    table.row(vec!["encode_fused".into(), fmt(r.mean_s * 1e3), "-".into()]);
+    let r = bench("encode fused blocked", 2, iters, || {
+        out.clear();
+        encode_fused_blocked(&x, &w, rbit, &mut out);
+    });
+    table.row(vec!["encode_fused_blocked".into(), fmt(r.mean_s * 1e3), "-".into()]);
+
+    let mut idx = Vec::new();
+    scores_word(&q, &codes, rbit, &mut iscores);
+    let r = bench("topk heap (f32)", 2, iters, || {
+        topk_heap(&fscores, budget, &mut idx);
+    });
+    table.row(vec!["topk_heap".into(), fmt(r.mean_s * 1e3), fmt(s as f64 / r.mean_s / 1e6)]);
+    let r = bench("topk quickselect (f32)", 2, iters, || {
+        topk_quickselect(&fscores, budget, &mut idx);
+    });
+    table.row(vec!["topk_quickselect".into(), fmt(r.mean_s * 1e3), fmt(s as f64 / r.mean_s / 1e6)]);
+    let r = bench("topk counting (i32 hamming)", 2, iters, || {
+        topk_counting(&iscores, rbit as i32, budget, &mut idx);
+    });
+    table.row(vec!["topk_counting".into(), fmt(r.mean_s * 1e3), fmt(s as f64 / r.mean_s / 1e6)]);
+
+    println!("{}", table.render());
+    table.write_csv("bench_results", "microbench").unwrap();
+}

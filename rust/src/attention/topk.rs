@@ -1,0 +1,241 @@
+//! Partial top-k selection over score vectors.
+//!
+//! Two algorithms, both returning indices of the k largest scores:
+//! * [`topk_heap`] — O(s log k) min-heap; good for k << s.
+//! * [`topk_quickselect`] — expected O(s) in-place partition; the hot-path
+//!   default after the §Perf pass.
+//!
+//! Ties broken toward lower indices (stable across both algorithms so the
+//! accuracy evals are implementation-independent).
+
+/// Min-heap over (score, index) keyed by score then reverse index.
+pub fn topk_heap(scores: &[f32], k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    let k = k.min(scores.len());
+    if k == 0 {
+        return;
+    }
+    // (score, Reverse(index)) ordering via tuple compare on (f32 bits)
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    #[derive(PartialEq)]
+    struct Entry(f32, u32);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            // smaller score = "greater" for min-heap via Reverse below;
+            // among equal scores prefer KEEPING lower index, so a higher
+            // index compares as smaller.
+            self.0
+                .partial_cmp(&o.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(o.1.cmp(&self.1))
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Reverse(Entry(s, i as u32)));
+        } else if let Some(Reverse(min)) = heap.peek() {
+            if s > min.0 {
+                heap.pop();
+                heap.push(Reverse(Entry(s, i as u32)));
+            }
+        }
+    }
+    out.extend(heap.into_iter().map(|Reverse(e)| e.1));
+    out.sort_unstable();
+}
+
+/// Expected-linear selection: partition a (score, index) working buffer.
+pub fn topk_quickselect(scores: &[f32], k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    let n = scores.len();
+    let k = k.min(n);
+    if k == 0 {
+        return;
+    }
+    if k == n {
+        out.extend(0..n as u32);
+        return;
+    }
+    // Work on index permutation; compare by (score desc, index asc).
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let better = |a: u32, b: u32| -> bool {
+        let (sa, sb) = (scores[a as usize], scores[b as usize]);
+        sa > sb || (sa == sb && a < b)
+    };
+    let (mut lo, mut hi) = (0usize, n);
+    let mut target = k;
+    // invariant: the final top-k occupy idx[..k] when lo >= target
+    let mut seed = 0x9E3779B97F4A7C15u64;
+    while hi - lo > 1 {
+        // median-of-3-ish pivot using a cheap LCG to dodge adversarial order
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let p = lo + (seed >> 33) as usize % (hi - lo);
+        idx.swap(lo, p);
+        let pivot = idx[lo];
+        let mut store = lo + 1;
+        for i in lo + 1..hi {
+            if better(idx[i], pivot) {
+                idx.swap(i, store);
+                store += 1;
+            }
+        }
+        idx.swap(lo, store - 1);
+        let pivot_rank = store - 1;
+        if pivot_rank == target || pivot_rank + 1 == target {
+            if pivot_rank + 1 <= target {
+                break;
+            }
+            hi = pivot_rank;
+        } else if pivot_rank > target {
+            hi = pivot_rank;
+        } else {
+            lo = store;
+        }
+        let _ = &mut target;
+        if lo >= target {
+            break;
+        }
+    }
+    out.extend_from_slice(&idx[..k]);
+    out.sort_unstable();
+}
+
+/// Integer-score variant used by the Hamming path (scores in [0, rbit]):
+/// counting-select in O(s + rbit), no comparisons at all.
+pub fn topk_counting(scores: &[i32], max_score: i32, k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    let n = scores.len();
+    let k = k.min(n);
+    if k == 0 {
+        return;
+    }
+    let m = (max_score + 1) as usize;
+    let mut hist = vec![0u32; m];
+    for &s in scores {
+        hist[s.clamp(0, max_score) as usize] += 1;
+    }
+    // find threshold t: count of scores > t is < k, >= t is >= k
+    let mut remaining = k;
+    let mut thr = 0i32;
+    let mut take_at_thr = 0u32;
+    for s in (0..m).rev() {
+        let c = hist[s];
+        if (c as usize) >= remaining {
+            thr = s as i32;
+            take_at_thr = remaining as u32;
+            break;
+        }
+        remaining -= c as usize;
+    }
+    let mut at_thr = 0u32;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > thr {
+            out.push(i as u32);
+        } else if s == thr && at_thr < take_at_thr {
+            out.push(i as u32);
+            at_thr += 1;
+        }
+        if out.len() == k {
+            // keep scanning only if we could still replace nothing — we
+            // can stop: all remaining are <= thr and thr quota is filled.
+            break;
+        }
+    }
+    out.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pt::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn reference_topk(scores: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k.min(scores.len()));
+        idx.sort_unstable();
+        idx
+    }
+
+    #[test]
+    fn heap_matches_reference() {
+        check(200, |rng: &mut Rng| {
+            let n = 1 + rng.below(200);
+            let k = rng.below(n + 4);
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below(50) as f32) - 25.0).collect();
+            let mut out = Vec::new();
+            topk_heap(&scores, k, &mut out);
+            prop_assert(out == reference_topk(&scores, k), "heap != reference")
+        });
+    }
+
+    #[test]
+    fn quickselect_selects_same_score_set() {
+        check(200, |rng: &mut Rng| {
+            let n = 1 + rng.below(300);
+            let k = rng.below(n + 1);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut out = Vec::new();
+            topk_quickselect(&scores, k, &mut out);
+            let want = reference_topk(&scores, k);
+            prop_assert(out.len() == want.len(), "wrong k")?;
+            // same multiset of scores (ties may pick different indices)
+            let mut a: Vec<f32> = out.iter().map(|&i| scores[i as usize]).collect();
+            let mut b: Vec<f32> = want.iter().map(|&i| scores[i as usize]).collect();
+            a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            prop_assert(a == b, "score multiset differs")
+        });
+    }
+
+    #[test]
+    fn counting_matches_reference_on_ints() {
+        check(200, |rng: &mut Rng| {
+            let n = 1 + rng.below(300);
+            let k = rng.below(n + 1);
+            let scores: Vec<i32> = (0..n).map(|_| rng.below(129) as i32).collect();
+            let fscores: Vec<f32> = scores.iter().map(|&s| s as f32).collect();
+            let mut out = Vec::new();
+            topk_counting(&scores, 128, k, &mut out);
+            let want = reference_topk(&fscores, k);
+            prop_assert(out == want, "counting != reference")
+        });
+    }
+
+    #[test]
+    fn k_zero_and_k_full() {
+        let scores = [3.0, 1.0, 2.0];
+        let mut out = Vec::new();
+        topk_heap(&scores, 0, &mut out);
+        assert!(out.is_empty());
+        topk_quickselect(&scores, 3, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+        topk_heap(&scores, 10, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn all_equal_scores_prefer_low_indices() {
+        let scores = [5.0; 10];
+        let mut out = Vec::new();
+        topk_heap(&scores, 3, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+        let mut out2 = Vec::new();
+        topk_counting(&[7; 10], 128, 3, &mut out2);
+        assert_eq!(out2, vec![0, 1, 2]);
+    }
+}

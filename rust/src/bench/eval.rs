@@ -1,0 +1,207 @@
+//! Accuracy + fidelity evaluation of every attention method over the
+//! synthetic task suite — the machinery behind the Table 1/2/6-10 proxies
+//! and Figures 6/7/8.
+
+use crate::config::{Method, ServeConfig};
+use crate::kvcache::SeqKvCache;
+use crate::model::{make_selector, sel_ref, tokenizer, DecodeScratch, Model, SeqState};
+use crate::util::rng::Rng;
+
+use super::tasks::{make_task, Corpus, TaskKind};
+
+/// Exact-match accuracy of one method on one task kind.
+#[allow(clippy::too_many_arguments)]
+pub fn task_accuracy(
+    model: &Model,
+    serve: &ServeConfig,
+    kind: TaskKind,
+    ctx: usize,
+    n_samples: usize,
+    seed: u64,
+    depth: Option<f64>,
+) -> f64 {
+    let corpus = Corpus::new(0);
+    let mut rng = Rng::new(seed);
+    let selector = make_selector(serve);
+    let mut hits = 0usize;
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    for _ in 0..n_samples {
+        let (prompt, answer) = make_task(kind, &corpus, &mut rng, ctx, depth);
+        let toks = tokenizer::encode(&prompt);
+        let mut cache = SeqKvCache::new(&model.cfg, serve);
+        let mut state = SeqState::new(&model.cfg);
+        let out = model.generate(
+            &toks,
+            answer.len(),
+            serve,
+            sel_ref(&selector),
+            &mut cache,
+            &mut state,
+            &mut scratch,
+        );
+        if tokenizer::decode(&out) == answer {
+            hits += 1;
+        }
+    }
+    hits as f64 / n_samples as f64
+}
+
+/// Fidelity metrics of a selection method against exact attention, on
+/// real Q/K states harvested from the trained model over task prompts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fidelity {
+    /// fraction of the true top-k keys the method selected
+    pub recall: f64,
+    /// mean relative L2 error of the sparse attention output vs dense
+    pub output_err: f64,
+}
+
+/// Measure selection recall + attention-output error at one decode
+/// position per sample (the final query token of a task prompt).
+pub fn fidelity(
+    model: &Model,
+    serve: &ServeConfig,
+    ctx: usize,
+    n_samples: usize,
+    seed: u64,
+) -> Fidelity {
+    use crate::attention::compute::{dense_attention, exact_group_scores, sparse_attention_fused};
+    use crate::attention::topk::topk_quickselect;
+    use crate::attention::{AttnInputs, MethodState, Scratch};
+
+    let corpus = Corpus::new(0);
+    let mut rng = Rng::new(seed);
+    let selector = make_selector(serve);
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    let mut recall_sum = 0.0;
+    let mut err_sum = 0.0;
+    let mut count = 0usize;
+    let cfg = &model.cfg;
+    for i in 0..n_samples {
+        let (prompt, _) = make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
+        let toks = tokenizer::encode(&prompt);
+        let mut cache = SeqKvCache::new(cfg, serve);
+        let mut state = SeqState::new(cfg);
+        // prefill everything but the final token; then run one step to
+        // have fresh q against the full cache
+        model.prefill(&toks[..toks.len() - 1], &mut cache, &mut state, serve, &mut scratch);
+        let pos = toks.len() - 1;
+        let dense_serve = ServeConfig { budget: 0, ..serve.clone() };
+        model.decode_step(
+            toks[pos],
+            pos,
+            &mut cache,
+            &mut state,
+            &dense_serve,
+            None,
+            &mut scratch,
+        );
+        // fidelity on the LAST layer's heads (most selective, per paper)
+        let li = cfg.n_layers - 1;
+        for kv in 0..cfg.n_kv_heads {
+            let group = cfg.group();
+            // reconstruct the step's queries: scratch.q holds last layer
+            let inp = AttnInputs {
+                q: &scratch.q[kv * group * cfg.head_dim..(kv + 1) * group * cfg.head_dim],
+                group,
+                dh: cfg.head_dim,
+                k: cache.k_slice(li, kv),
+                v: cache.v_slice(li, kv),
+                codes: cache.codes_slice(li, kv),
+                words: cfg.rbit / 64,
+                rbit: cfg.rbit,
+                s: cache.len(),
+                pos: cache.len() - 1,
+                side: cache.side(li, kv, model.weights.hash_head(li, kv), &model.aux),
+            };
+            let budget = serve.budget.min(inp.s);
+            let mut sel_scratch = Scratch::default();
+            // truth: exact aggregated scores top-k
+            let mut truth = Vec::new();
+            exact_group_scores(&inp, &mut sel_scratch.scores);
+            topk_quickselect(&sel_scratch.scores, budget, &mut truth);
+            // method selection
+            let mut st = MethodState::default();
+            // H2O/SnapKV need engine-maintained state: reuse actual state
+            let st_ref = &mut state.per_head[li * cfg.n_kv_heads + kv];
+            let indices: Vec<u32> = if let Some(sel) = selector.as_deref() {
+                sel.select(&inp, if matches!(serve.method, Method::H2o | Method::SnapKv) { st_ref } else { &mut st }, budget, &mut sel_scratch);
+                sel_scratch.indices.clone()
+            } else {
+                (0..inp.s as u32).collect()
+            };
+            let tset: std::collections::BTreeSet<u32> = truth.iter().copied().collect();
+            let hit = indices.iter().filter(|i| tset.contains(i)).count();
+            recall_sum += hit as f64 / budget.max(1) as f64;
+            // output error
+            let mut dense_out = vec![0.0f32; group * cfg.head_dim];
+            let mut sparse_out = vec![0.0f32; group * cfg.head_dim];
+            let mut probs = Vec::new();
+            dense_attention(&inp, &mut probs, &mut dense_out);
+            sparse_attention_fused(&inp, &indices, &mut probs, &mut sparse_out);
+            let num: f32 = dense_out
+                .iter()
+                .zip(&sparse_out)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let den: f32 = dense_out.iter().map(|a| a * a).sum();
+            err_sum += (num / den.max(1e-12)).sqrt() as f64;
+            count += 1;
+        }
+        let _ = i;
+    }
+    Fidelity { recall: recall_sum / count as f64, output_err: err_sum / count as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::kvcache::MethodAux;
+    use crate::model::weights::Weights;
+
+    fn model() -> Model {
+        let cfg = preset("hata-mha").unwrap();
+        let mut rng = Rng::new(0);
+        let weights = Weights::random(&cfg, &mut rng);
+        Model::new(cfg, weights, MethodAux::default())
+    }
+
+    #[test]
+    fn exact_topk_fidelity_is_perfect() {
+        let m = model();
+        let serve = ServeConfig { method: Method::ExactTopK, budget: 24, ..Default::default() };
+        let f = fidelity(&m, &serve, 128, 2, 1);
+        assert!(f.recall > 0.999, "recall {}", f.recall);
+        assert!(f.output_err < 0.5, "err {}", f.output_err);
+    }
+
+    #[test]
+    fn dense_fidelity_recall_full() {
+        let m = model();
+        let serve = ServeConfig { method: Method::Dense, budget: 24, ..Default::default() };
+        let f = fidelity(&m, &serve, 96, 2, 1);
+        // dense "selects" everything -> recall 1, error 0
+        assert!(f.recall >= 1.0);
+        assert!(f.output_err < 1e-5);
+    }
+
+    #[test]
+    fn hata_random_hash_beats_nothing_sanity() {
+        // untrained random hash on a random model: recall should still be
+        // far above the random-selection baseline budget/s
+        let m = model();
+        let serve = ServeConfig { method: Method::Hata, budget: 16, ..Default::default() };
+        let f = fidelity(&m, &serve, 160, 3, 2);
+        assert!(f.recall > 16.0 / 160.0, "recall {}", f.recall);
+    }
+
+    #[test]
+    fn task_accuracy_runs_on_untrained_model() {
+        // untrained model: accuracy ~0, but the pipeline must not panic
+        let m = model();
+        let serve = ServeConfig { method: Method::Hata, budget: 16, ..Default::default() };
+        let acc = task_accuracy(&m, &serve, TaskKind::Ns, 96, 2, 3, None);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,172 @@
+//! Bench harness (criterion is unavailable offline — see DESIGN.md §2):
+//! warmup + timed iterations + summary, plus the decode-layer micro
+//! fixture shared by the Fig 5 / Fig 9 benches.
+
+use crate::attention::{AttnInputs, Side};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::timer::time_iters;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+}
+
+/// Run a closure with warmup and report stats.
+pub fn bench(name: &str, warmup: usize, iters: usize, f: impl FnMut()) -> BenchResult {
+    let samples = time_iters(warmup, iters, f);
+    let mut s = Summary::new();
+    for &x in &samples {
+        s.add(x);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean(),
+        p50_s: s.p50(),
+        min_s: s.min(),
+    }
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} {:>10.3} ms/iter (p50 {:>10.3}, min {:>10.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Synthetic single-(layer, kv-head) decode fixture: random K/V/codes at a
+/// given context length — the unit under test in Fig 5 and Fig 9.
+pub struct LayerFixture {
+    pub dh: usize,
+    pub group: usize,
+    pub rbit: usize,
+    pub s: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub codes: Vec<u64>,
+    pub hash_w: Vec<f32>,
+    pub quest_min: Vec<f32>,
+    pub quest_max: Vec<f32>,
+    pub quest_block: usize,
+    pub loki_kproj: Vec<f32>,
+    pub loki_pca: Vec<f32>,
+    pub loki_channels: usize,
+}
+
+impl LayerFixture {
+    pub fn new(s: usize, dh: usize, group: usize, rbit: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let k = rng.normal_vec(s * dh);
+        let v = rng.normal_vec(s * dh);
+        let q = rng.normal_vec(group * dh);
+        let hash_w: Vec<f32> = rng.normal_vec(dh * rbit);
+        let codes = crate::attention::hashenc::encode_rows(&k, dh, &hash_w, rbit);
+        // quest blocks
+        let quest_block = 16;
+        let nb = s.div_ceil(quest_block);
+        let mut quest_min = vec![f32::INFINITY; nb * dh];
+        let mut quest_max = vec![f32::NEG_INFINITY; nb * dh];
+        for t in 0..s {
+            let b = t / quest_block;
+            for i in 0..dh {
+                quest_min[b * dh + i] = quest_min[b * dh + i].min(k[t * dh + i]);
+                quest_max[b * dh + i] = quest_max[b * dh + i].max(k[t * dh + i]);
+            }
+        }
+        // loki: identity projection over first quarter channels
+        let loki_channels = (dh / 4).max(1);
+        let mut loki_pca = vec![0.0f32; dh * loki_channels];
+        for c in 0..loki_channels {
+            loki_pca[c * loki_channels + c] = 1.0;
+        }
+        let mut loki_kproj = Vec::with_capacity(s * loki_channels);
+        for t in 0..s {
+            for c in 0..loki_channels {
+                loki_kproj.push(k[t * dh + c]);
+            }
+        }
+        LayerFixture {
+            dh,
+            group,
+            rbit,
+            s,
+            q,
+            k,
+            v,
+            codes,
+            hash_w,
+            quest_min,
+            quest_max,
+            quest_block,
+            loki_kproj,
+            loki_pca,
+            loki_channels,
+        }
+    }
+
+    pub fn inputs(&self) -> AttnInputs<'_> {
+        AttnInputs {
+            q: &self.q,
+            group: self.group,
+            dh: self.dh,
+            k: &self.k,
+            v: &self.v,
+            codes: &self.codes,
+            words: self.rbit / 64,
+            rbit: self.rbit,
+            s: self.s,
+            pos: self.s - 1,
+            side: Side {
+                hash_w: &self.hash_w,
+                quest_min: &self.quest_min,
+                quest_max: &self.quest_max,
+                quest_block: self.quest_block,
+                loki_kproj: &self.loki_kproj,
+                loki_pca: &self.loki_pca,
+                loki_channels: self.loki_channels,
+                mp_sigs: &[],
+                mp_planes: &[],
+                mp_k: 0,
+                mp_l: 0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s * 1.5 + 1e-9);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn fixture_shapes_consistent() {
+        let f = LayerFixture::new(500, 16, 4, 128, 0);
+        assert_eq!(f.k.len(), 500 * 16);
+        assert_eq!(f.codes.len(), 500 * 2);
+        let inp = f.inputs();
+        assert_eq!(inp.s, 500);
+        assert_eq!(inp.side.quest_min.len(), 500usize.div_ceil(16) * 16);
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark + evaluation harness: workload generators that mirror
+//! `python/compile/data.py`, accuracy evaluation over the task suite
+//! (Tables 1/2/6-10 proxies, Figs 6-8), fidelity metrics (top-k recall,
+//! attention-output error), and table/CSV emitters.
+
+pub mod eval;
+pub mod harness;
+pub mod report;
+pub mod tasks;

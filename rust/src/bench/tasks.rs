@@ -1,0 +1,277 @@
+//! RULER-style synthetic long-context tasks — Rust mirror of
+//! `python/compile/data.py` (same byte grammar; golden-pinned by
+//! rust/tests/parity.rs against `<model>.goldens.npz`).
+//!
+//! Grammar: needle `&<k>=<v>;` (k: 2 lowercase, v: 2 uppercase), query
+//! `?<k>=` with expected continuation `<v>;`, variable-tracking alias
+//! `&<k2>=<k1>;`, filler from a seeded word chain.
+
+use crate::util::rng::Rng;
+
+pub const KEY_LEN: usize = 2;
+pub const VAL_LEN: usize = 2;
+
+/// Task kinds mirroring RULER's categories (DESIGN.md §6, Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// single needle (NS1-3 collapse to depth-parameterized NS)
+    Ns,
+    /// multi-key: 4 needles, query one
+    Nmk,
+    /// multi-value: same key announced twice (first binding wins)
+    Nmv,
+    /// multi-query (we score the first query)
+    Nmq,
+    /// variable tracking: alias chain
+    Vt,
+    /// frequent-word: thrice-repeated binding
+    Fwe,
+    /// QA-style single fact
+    Qa,
+}
+
+impl TaskKind {
+    pub fn all() -> &'static [TaskKind] {
+        &[
+            TaskKind::Ns,
+            TaskKind::Nmk,
+            TaskKind::Nmv,
+            TaskKind::Nmq,
+            TaskKind::Vt,
+            TaskKind::Fwe,
+            TaskKind::Qa,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Ns => "NS",
+            TaskKind::Nmk => "NMK",
+            TaskKind::Nmv => "NMV",
+            TaskKind::Nmq => "NMQ",
+            TaskKind::Vt => "VT",
+            TaskKind::Fwe => "FWE",
+            TaskKind::Qa => "QA",
+        }
+    }
+}
+
+/// Seeded filler-text source (word chain over lowercase words).
+pub struct Corpus {
+    words: Vec<String>,
+    next: Vec<[usize; 8]>,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n_words = 512;
+        let words: Vec<String> = (0..n_words)
+            .map(|_| {
+                let len = 2 + rng.below(6);
+                (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+            })
+            .collect();
+        let next = (0..n_words)
+            .map(|_| {
+                let mut row = [0usize; 8];
+                for r in row.iter_mut() {
+                    *r = rng.below(n_words);
+                }
+                row
+            })
+            .collect();
+        Corpus { words, next }
+    }
+
+    pub fn text(&self, rng: &mut Rng, n_chars: usize) -> String {
+        let mut out = String::with_capacity(n_chars + 8);
+        let mut w = rng.below(self.words.len());
+        while out.len() < n_chars {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(&self.words[w]);
+            w = self.next[w][rng.below(8)];
+        }
+        out.truncate(n_chars);
+        out
+    }
+}
+
+fn key(rng: &mut Rng) -> String {
+    (0..KEY_LEN).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+fn val(rng: &mut Rng) -> String {
+    (0..VAL_LEN).map(|_| (b'A' + rng.below(26) as u8) as char).collect()
+}
+
+fn distinct_keys(rng: &mut Rng, n: usize) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    while out.len() < n {
+        let k = key(rng);
+        if !out.contains(&k) {
+            out.push(k);
+        }
+    }
+    out
+}
+
+/// Place needles at fractional depths in filler; returns (prompt, answer).
+fn assemble(
+    corpus: &Corpus,
+    rng: &mut Rng,
+    ctx: usize,
+    needles: &[String],
+    depths: &[f64],
+    query: &str,
+    answer: &str,
+) -> (String, String) {
+    let needle_len: usize = needles.iter().map(|s| s.len()).sum();
+    let filler = ctx
+        .checked_sub(needle_len + query.len())
+        .expect("context too small for task");
+    let text = corpus.text(rng, filler);
+    let mut offs: Vec<usize> = depths.iter().map(|d| (d * filler as f64) as usize).collect();
+    offs.sort_unstable();
+    let mut prompt = String::with_capacity(ctx);
+    let mut prev = 0;
+    for (off, ndl) in offs.iter().zip(needles) {
+        prompt.push_str(&text[prev..*off]);
+        prompt.push_str(ndl);
+        prev = *off;
+    }
+    prompt.push_str(&text[prev..]);
+    prompt.push_str(query);
+    (prompt, answer.to_string())
+}
+
+/// Generate one (prompt, expected_continuation). `depth` in [0,1] or None
+/// for random.
+pub fn make_task(
+    kind: TaskKind,
+    corpus: &Corpus,
+    rng: &mut Rng,
+    ctx: usize,
+    depth: Option<f64>,
+) -> (String, String) {
+    let d = depth.unwrap_or_else(|| 0.05 + 0.9 * rng.f64());
+    match kind {
+        TaskKind::Ns | TaskKind::Qa => {
+            let (k, v) = (key(rng), val(rng));
+            assemble(corpus, rng, ctx, &[format!("&{k}={v};")], &[d], &format!("?{k}="), &format!("{v};"))
+        }
+        TaskKind::Nmk => {
+            let keys = distinct_keys(rng, 4);
+            let vals: Vec<String> = (0..4).map(|_| val(rng)).collect();
+            let needles: Vec<String> =
+                keys.iter().zip(&vals).map(|(k, v)| format!("&{k}={v};")).collect();
+            let mut depths: Vec<f64> = (0..4).map(|_| 0.05 + 0.9 * rng.f64()).collect();
+            depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pick = rng.below(4);
+            assemble(corpus, rng, ctx, &needles, &depths, &format!("?{}=", keys[pick]), &format!("{};", vals[pick]))
+        }
+        TaskKind::Nmv => {
+            let k = key(rng);
+            let (v1, v2) = (val(rng), val(rng));
+            let needles = vec![format!("&{k}={v1};"), format!("&{k}+{v2};")];
+            let mut depths = vec![0.05 + 0.9 * rng.f64(), 0.05 + 0.9 * rng.f64()];
+            depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assemble(corpus, rng, ctx, &needles, &depths, &format!("?{k}="), &format!("{v1};"))
+        }
+        TaskKind::Nmq => {
+            let keys = distinct_keys(rng, 3);
+            let vals: Vec<String> = (0..3).map(|_| val(rng)).collect();
+            let needles: Vec<String> =
+                keys.iter().zip(&vals).map(|(k, v)| format!("&{k}={v};")).collect();
+            let mut depths: Vec<f64> = (0..3).map(|_| 0.05 + 0.9 * rng.f64()).collect();
+            depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q0 = rng.below(3);
+            assemble(corpus, rng, ctx, &needles, &depths, &format!("?{}=", keys[q0]), &format!("{};", vals[q0]))
+        }
+        TaskKind::Vt => {
+            let keys = distinct_keys(rng, 2);
+            let (k1, k2) = (&keys[0], &keys[1]);
+            let v = val(rng);
+            let needles = vec![format!("&{k1}={v};"), format!("&{k2}={k1};")];
+            let mut depths = vec![0.05 + 0.9 * rng.f64(), 0.05 + 0.9 * rng.f64()];
+            depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assemble(corpus, rng, ctx, &needles, &depths, &format!("?{k2}="), &format!("{k1};"))
+        }
+        TaskKind::Fwe => {
+            let hot = val(rng);
+            let needles = vec![format!("&fwe={hot};"); 3];
+            let mut depths = vec![
+                0.05 + 0.9 * rng.f64(),
+                0.05 + 0.9 * rng.f64(),
+                0.05 + 0.9 * rng.f64(),
+            ];
+            depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assemble(corpus, rng, ctx, &needles, &depths, "?fwe=", &format!("{hot};"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_has_exact_context_length() {
+        let corpus = Corpus::new(0);
+        let mut rng = Rng::new(1);
+        for &kind in TaskKind::all() {
+            let (prompt, ans) = make_task(kind, &corpus, &mut rng, 300, None);
+            assert_eq!(prompt.len(), 300, "{kind:?}");
+            assert_eq!(ans.len(), VAL_LEN + 1, "{kind:?}");
+            assert!(prompt.is_ascii());
+        }
+    }
+
+    #[test]
+    fn needle_present_and_answer_consistent() {
+        let corpus = Corpus::new(0);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let (prompt, ans) = make_task(TaskKind::Ns, &corpus, &mut rng, 256, Some(0.5));
+            // query "?kk=" is the suffix; the needle "&kk=VV;" must exist
+            let k = &prompt[prompt.len() - KEY_LEN - 1..prompt.len() - 1];
+            let needle = format!("&{k}={}", ans);
+            assert!(prompt.contains(&needle), "prompt lacks {needle:?}");
+        }
+    }
+
+    #[test]
+    fn depth_controls_position() {
+        let corpus = Corpus::new(0);
+        let mut rng = Rng::new(3);
+        let (early, _) = make_task(TaskKind::Ns, &corpus, &mut rng, 400, Some(0.05));
+        let (late, _) = make_task(TaskKind::Ns, &corpus, &mut rng, 400, Some(0.9));
+        let pos_early = early.find('&').unwrap();
+        let pos_late = late.find('&').unwrap();
+        assert!(pos_early < 60, "{pos_early}");
+        assert!(pos_late > 300, "{pos_late}");
+    }
+
+    #[test]
+    fn vt_answer_is_intermediate_key() {
+        let corpus = Corpus::new(0);
+        let mut rng = Rng::new(4);
+        let (prompt, ans) = make_task(TaskKind::Vt, &corpus, &mut rng, 300, None);
+        // answer must be a lowercase key + ';'
+        assert!(ans[..KEY_LEN].bytes().all(|b| b.is_ascii_lowercase()));
+        assert!(prompt.contains(&format!("&{}=", &ans[..KEY_LEN])));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let corpus = Corpus::new(7);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        assert_eq!(
+            make_task(TaskKind::Nmk, &corpus, &mut a, 350, None),
+            make_task(TaskKind::Nmk, &corpus, &mut b, 350, None)
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python -m compile.aot` and the
+//! Rust runtime. Parses `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::ModelConfig;
+use crate::util::json::Json;
+
+/// One lowered HLO graph and the static shape it was compiled for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HloEntry {
+    pub kind: String,
+    pub bucket: usize,
+    /// top-k budget compiled into decode_hata graphs (0 otherwise).
+    pub budget: usize,
+    pub path: PathBuf,
+}
+
+/// Everything exported for one model.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub weights: PathBuf,
+    /// rbit -> hash-weights npz path.
+    pub hash_weights: Vec<(usize, PathBuf)>,
+    pub param_order: Vec<String>,
+    pub hlo: Vec<HloEntry>,
+}
+
+impl ModelArtifacts {
+    pub fn hash_weights_for(&self, rbit: usize) -> Option<&PathBuf> {
+        self.hash_weights.iter().find(|(r, _)| *r == rbit).map(|(_, p)| p)
+    }
+
+    /// Smallest bucket >= needed length for a given graph kind.
+    pub fn pick_bucket(&self, kind: &str, needed: usize) -> Option<&HloEntry> {
+        self.hlo
+            .iter()
+            .filter(|e| e.kind == kind && e.bucket >= needed)
+            .min_by_key(|e| e.bucket)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub models: Vec<ModelArtifacts>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let models_obj = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .context("manifest missing models")?;
+        let mut models = Vec::new();
+        for (_, entry) in models_obj {
+            let config = ModelConfig::from_json(
+                entry.get("config").context("model missing config")?,
+            )?;
+            let weights = root.join(
+                entry
+                    .get("weights")
+                    .and_then(|v| v.as_str())
+                    .context("model missing weights")?,
+            );
+            let mut hash_weights = Vec::new();
+            if let Some(hw) = entry.get("hash_weights").and_then(|v| v.as_obj()) {
+                for (rbit, p) in hw {
+                    hash_weights.push((
+                        rbit.parse::<usize>().context("bad rbit key")?,
+                        root.join(p.as_str().context("bad hash path")?),
+                    ));
+                }
+            }
+            hash_weights.sort_by_key(|(r, _)| *r);
+            let param_order = entry
+                .get("param_order")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let mut hlo = Vec::new();
+            if let Some(arr) = entry.get("hlo").and_then(|v| v.as_arr()) {
+                for e in arr {
+                    hlo.push(HloEntry {
+                        kind: e
+                            .get("kind")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        bucket: e.get("bucket").and_then(|v| v.as_usize()).unwrap_or(0),
+                        budget: e.get("budget").and_then(|v| v.as_usize()).unwrap_or(0),
+                        path: root.join(
+                            e.get("path").and_then(|v| v.as_str()).unwrap_or(""),
+                        ),
+                    });
+                }
+            }
+            models.push(ModelArtifacts { config, weights, hash_weights, param_order, hlo });
+        }
+        Ok(Manifest { models, root })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .iter()
+            .find(|m| m.config.name == name)
+            .with_context(|| format!("manifest has no model {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "models": {
+            "m1": {
+              "config": {"name":"m1","vocab":128,"d_model":128,"n_layers":3,
+                         "n_heads":8,"n_kv_heads":2,"head_dim":16,
+                         "ffn_hidden":256,"rope_theta":10000.0,"rbit":128,
+                         "dense_layers":1},
+              "weights": "m1.weights.npz",
+              "hash_weights": {"128": "m1.hash_r128.npz", "64": "m1.hash_r64.npz"},
+              "param_order": ["embed","final_norm"],
+              "hlo": [
+                {"kind":"prefill","bucket":256,"path":"m1.prefill.b256.hlo.txt"},
+                {"kind":"decode_hata","bucket":256,"budget":64,"path":"d.hlo.txt"},
+                {"kind":"decode_hata","bucket":1024,"budget":64,"path":"d2.hlo.txt"}
+              ]
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_picks_buckets() {
+        let dir = std::env::temp_dir().join(format!("hata_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("m1").unwrap();
+        assert_eq!(model.config.n_kv_heads, 2);
+        assert_eq!(model.hash_weights.len(), 2);
+        assert!(model.hash_weights_for(64).is_some());
+        assert!(model.hash_weights_for(999).is_none());
+        let e = model.pick_bucket("decode_hata", 300).unwrap();
+        assert_eq!(e.bucket, 1024);
+        let e = model.pick_bucket("decode_hata", 10).unwrap();
+        assert_eq!(e.bucket, 256);
+        assert!(model.pick_bucket("decode_hata", 5000).is_none());
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,324 @@
+//! Typed configuration: model shapes, serving parameters, attention-method
+//! selection, and the artifact manifest written by `python -m compile.aot`.
+
+pub mod manifest;
+
+use crate::util::json::Json;
+
+/// Transformer shape parameters (mirror of python/compile/model.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub rope_theta: f32,
+    pub rbit: usize,
+    /// First N layers always run dense attention (paper Sec 5.1).
+    pub dense_layers: usize,
+}
+
+impl ModelConfig {
+    /// Query heads per KV head.
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Packed u32 words per hash code.
+    pub fn code_words(&self) -> usize {
+        self.rbit / 32
+    }
+
+    /// Bytes of K+V cache per token (f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
+    }
+
+    /// Bytes of packed key-code cache per token.
+    pub fn code_bytes_per_token(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.code_words() * 4
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        let get = |k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("config missing field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unnamed")
+                .to_string(),
+            vocab: get("vocab")? as usize,
+            d_model: get("d_model")? as usize,
+            n_layers: get("n_layers")? as usize,
+            n_heads: get("n_heads")? as usize,
+            n_kv_heads: get("n_kv_heads")? as usize,
+            head_dim: get("head_dim")? as usize,
+            ffn_hidden: get("ffn_hidden")? as usize,
+            rope_theta: get("rope_theta")? as f32,
+            rbit: get("rbit")? as usize,
+            dense_layers: get("dense_layers")? as usize,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("head_dim", Json::num(self.head_dim as f64)),
+            ("ffn_hidden", Json::num(self.ffn_hidden as f64)),
+            ("rope_theta", Json::num(self.rope_theta as f64)),
+            ("rbit", Json::num(self.rbit as f64)),
+            ("dense_layers", Json::num(self.dense_layers as f64)),
+        ])
+    }
+}
+
+/// Trained tiny-model presets (match python CONFIGS) and untrained
+/// scale mirrors of the paper's evaluation models (perf sweeps only —
+/// attention-layer shapes are what matters for memory traffic).
+pub fn preset(name: &str) -> Option<ModelConfig> {
+    let base = ModelConfig {
+        name: name.to_string(),
+        vocab: 128,
+        d_model: 128,
+        n_layers: 3,
+        n_heads: 8,
+        n_kv_heads: 8,
+        head_dim: 16,
+        ffn_hidden: 256,
+        rope_theta: 10000.0,
+        rbit: 128,
+        dense_layers: 1,
+    };
+    match name {
+        "hata-mha" => Some(base),
+        "hata-gqa" => Some(ModelConfig { n_kv_heads: 2, ..base }),
+        // Paper Table 4 mirrors: true head counts / head_dim, layer count
+        // scaled down 8x (memory traffic per layer is the unit of Fig 5).
+        // Mirrors use dense_layers = 0: the paper's dense-first-two-of-32
+        // layers is an accuracy measure; with 8x fewer layers it would
+        // distort the perf ratios the mirrors exist for.
+        "mirror-llama2-7b" => Some(ModelConfig {
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 4,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            ffn_hidden: 11008,
+            dense_layers: 0,
+            ..base
+        }),
+        "mirror-llama31-8b" => Some(ModelConfig {
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 4,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_hidden: 14336,
+            dense_layers: 0,
+            ..base
+        }),
+        "mirror-qwen25-14b" => Some(ModelConfig {
+            vocab: 32000,
+            d_model: 5120,
+            n_layers: 6,
+            n_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_hidden: 13824,
+            dense_layers: 0,
+            ..base
+        }),
+        "mirror-qwen25-32b" => Some(ModelConfig {
+            vocab: 32000,
+            d_model: 5120,
+            n_layers: 8,
+            n_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_hidden: 27392,
+            dense_layers: 0,
+            ..base
+        }),
+        _ => None,
+    }
+}
+
+/// Which attention/selection method the engine uses per request batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Full attention over the whole KV cache.
+    Dense,
+    /// Oracle: exact qk scores, then top-k (upper bound for all methods).
+    ExactTopK,
+    /// The paper: trained-hash Hamming scores, then top-k.
+    Hata,
+    /// Loki-style low-rank (first `channels` PCA dims of q/k).
+    Loki,
+    /// Quest-style block min/max upper-bound scores, block granularity.
+    Quest,
+    /// MagicPIG-style LSH sampling (random projections, K*L bits).
+    MagicPig,
+    /// StreamingLLM: attention sinks + recent window (compression).
+    StreamingLlm,
+    /// H2O: cumulative-attention heavy hitters + recent (compression).
+    H2o,
+    /// SnapKV: observation-window selected + recent (compression).
+    SnapKv,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dense" => Method::Dense,
+            "topk" | "exact-topk" | "exact" => Method::ExactTopK,
+            "hata" => Method::Hata,
+            "loki" => Method::Loki,
+            "quest" => Method::Quest,
+            "magicpig" | "mp" => Method::MagicPig,
+            "streamingllm" | "sl" => Method::StreamingLlm,
+            "h2o" => Method::H2o,
+            "snapkv" | "s-kv" => Method::SnapKv,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::ExactTopK => "topk",
+            Method::Hata => "hata",
+            Method::Loki => "loki",
+            Method::Quest => "quest",
+            Method::MagicPig => "magicpig",
+            Method::StreamingLlm => "streamingllm",
+            Method::H2o => "h2o",
+            Method::SnapKv => "snapkv",
+        }
+    }
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Dense,
+            Method::ExactTopK,
+            Method::Hata,
+            Method::Loki,
+            Method::Quest,
+            Method::MagicPig,
+            Method::StreamingLlm,
+            Method::H2o,
+            Method::SnapKv,
+        ]
+    }
+}
+
+/// Serving engine parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub method: Method,
+    /// Sparse token budget per decode step (0 = method default / dense).
+    pub budget: usize,
+    /// Max sequences decoded together per step.
+    pub max_batch: usize,
+    /// Max tokens a prefill chunk may process per scheduler step.
+    pub prefill_chunk: usize,
+    /// KV pool capacity in tokens (across sequences).
+    pub kv_capacity: usize,
+    /// Loki channels (low-rank dims) when method == Loki.
+    pub loki_channels: usize,
+    /// Quest block size when method == Quest.
+    pub quest_block: usize,
+    /// MagicPIG (K, L) table parameters.
+    pub magicpig_k: usize,
+    pub magicpig_l: usize,
+    /// StreamingLLM sink count.
+    pub sinks: usize,
+    /// SnapKV observation window.
+    pub snapkv_window: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        // Paper Table 5 settings, scaled where noted in DESIGN.md.
+        ServeConfig {
+            method: Method::Hata,
+            budget: 64,
+            max_batch: 8,
+            prefill_chunk: 512,
+            kv_capacity: 1 << 20,
+            loki_channels: 4, // paper: 32 of 128 dims; here 4 of 16 (same 25%)
+            quest_block: 16,  // paper: 32; scaled to our shorter contexts
+            magicpig_k: 10,
+            magicpig_l: 150,
+            sinks: 4,
+            snapkv_window: 16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_roundtrips_json() {
+        let c = preset("hata-gqa").unwrap();
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn group_and_words() {
+        let c = preset("hata-gqa").unwrap();
+        assert_eq!(c.group(), 4);
+        assert_eq!(c.code_words(), 4);
+        let m = preset("hata-mha").unwrap();
+        assert_eq!(m.group(), 1);
+    }
+
+    #[test]
+    fn kv_bytes_accounting() {
+        let c = preset("hata-mha").unwrap();
+        // 2 (K+V) * 3 layers * 8 kv heads * 16 dims * 4 bytes
+        assert_eq!(c.kv_bytes_per_token(), 2 * 3 * 8 * 16 * 4);
+        assert_eq!(c.code_bytes_per_token(), 3 * 8 * 4 * 4);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(*m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(Method::parse("MP"), Some(Method::MagicPig));
+    }
+
+    #[test]
+    fn unknown_preset_none() {
+        assert!(preset("gpt5").is_none());
+    }
+
+    #[test]
+    fn mirror_models_have_paper_head_layout() {
+        let l2 = preset("mirror-llama2-7b").unwrap();
+        assert_eq!((l2.n_heads, l2.n_kv_heads, l2.head_dim), (32, 32, 128));
+        let l31 = preset("mirror-llama31-8b").unwrap();
+        assert_eq!((l31.n_heads, l31.n_kv_heads), (32, 8));
+        assert_eq!(l31.group(), 4);
+    }
+}

@@ -1,0 +1,311 @@
+//! The serving engine: continuous-batching step loop over the native
+//! model. One engine = one worker; the [`super::router`] shards requests
+//! across engines.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::kvcache::pool::KvPool;
+use crate::kvcache::SeqKvCache;
+use crate::model::{make_selector, sel_ref, DecodeScratch, Model, SeqState};
+use crate::tensor::ops::argmax;
+
+use super::metrics::Metrics;
+use super::request::{FinishReason, Request, Response};
+use super::scheduler::{Scheduler, SeqTicket};
+
+struct LiveSeq {
+    req: Request,
+    cache: SeqKvCache,
+    state: SeqState,
+    out: Vec<u32>,
+    next_token: Option<u32>,
+    first_token_at: Option<f64>,
+}
+
+/// Single-worker serving engine.
+pub struct Engine {
+    pub model: std::sync::Arc<Model>,
+    pub serve: ServeConfig,
+    selector: Option<Box<dyn crate::attention::Selector + Send + Sync>>,
+    scheduler: Scheduler,
+    pool: KvPool,
+    seqs: HashMap<u64, LiveSeq>,
+    scratch: DecodeScratch,
+    pub metrics: Metrics,
+    clock: Instant,
+    responses: Vec<Response>,
+}
+
+impl Engine {
+    pub fn new(model: std::sync::Arc<Model>, serve: ServeConfig) -> Self {
+        let selector = make_selector(&serve);
+        Engine {
+            scheduler: Scheduler::new(&serve),
+            pool: KvPool::new(serve.kv_capacity),
+            seqs: HashMap::new(),
+            scratch: DecodeScratch::new(&model.cfg),
+            metrics: Metrics::new(),
+            clock: Instant::now(),
+            responses: Vec::new(),
+            selector,
+            model,
+            serve,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.elapsed().as_secs_f64()
+    }
+
+    pub fn submit(&mut self, mut req: Request) {
+        req.arrival = self.now();
+        self.scheduler.submit(SeqTicket {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            prefilled: 0,
+            generated: 0,
+            max_new: req.max_new_tokens,
+        });
+        self.seqs.insert(
+            req.id,
+            LiveSeq {
+                cache: SeqKvCache::new(&self.model.cfg, &self.serve),
+                state: SeqState::new(&self.model.cfg),
+                out: Vec::new(),
+                next_token: None,
+                first_token_at: None,
+                req,
+            },
+        );
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.scheduler.queue_len() > 0 || self.scheduler.live_len() > 0
+    }
+
+    pub fn take_responses(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.responses)
+    }
+
+    /// One engine step: decode every running sequence once, advance one
+    /// prefill chunk, admit from the queue. Returns tokens decoded.
+    pub fn step(&mut self) -> usize {
+        let t0 = Instant::now();
+        let plan = self.scheduler.plan(&mut self.pool);
+        // ---- prefill chunks (token-by-token through the shared step path)
+        for (id, range) in &plan.prefill {
+            let seq = self.seqs.get_mut(id).expect("live seq");
+            let tokens: Vec<u32> = seq.req.prompt[range.clone()].to_vec();
+            let whole_prompt = range.end == seq.req.prompt.len();
+            if range.start == 0 && whole_prompt {
+                // single-chunk prompt: use prefill (captures SnapKV state)
+                self.model.prefill(
+                    &seq.req.prompt,
+                    &mut seq.cache,
+                    &mut seq.state,
+                    &self.serve,
+                    &mut self.scratch,
+                );
+            } else {
+                let dense = ServeConfig { budget: 0, ..self.serve.clone() };
+                for (i, &tok) in tokens.iter().enumerate() {
+                    self.model.decode_step(
+                        tok,
+                        range.start + i,
+                        &mut seq.cache,
+                        &mut seq.state,
+                        &dense,
+                        None,
+                        &mut self.scratch,
+                    );
+                }
+            }
+            self.scheduler.on_prefilled(*id, range.len());
+            if whole_prompt {
+                seq.next_token = Some(argmax(&self.scratch.logits) as u32);
+            }
+        }
+        // degenerate max_new_tokens == 0: complete right after prefill
+        let zero_new: Vec<u64> = plan
+            .prefill
+            .iter()
+            .filter(|(id, r)| {
+                r.end == self.seqs[id].req.prompt.len() && self.seqs[id].req.max_new_tokens == 0
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in zero_new {
+            self.finish(id, FinishReason::MaxTokens);
+        }
+        // ---- decode one token per running sequence
+        let mut decoded = 0;
+        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        for id in &plan.decode {
+            let seq = self.seqs.get_mut(id).expect("live seq");
+            let tok = seq.next_token.expect("prefill completed");
+            seq.out.push(tok);
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(self.clock.elapsed().as_secs_f64());
+                self.metrics.on_first_token(seq.first_token_at.unwrap() - seq.req.arrival);
+            }
+            if seq.req.stop_token == Some(tok) {
+                finished.push((*id, FinishReason::StopToken));
+                continue;
+            }
+            let pos = seq.req.prompt.len() + seq.out.len() - 1;
+            self.model.decode_step(
+                tok,
+                pos,
+                &mut seq.cache,
+                &mut seq.state,
+                &self.serve,
+                sel_ref(&self.selector),
+                &mut self.scratch,
+            );
+            seq.next_token = Some(argmax(&self.scratch.logits) as u32);
+            self.scheduler.on_decoded(*id);
+            decoded += 1;
+            if seq.out.len() >= seq.req.max_new_tokens {
+                finished.push((*id, FinishReason::MaxTokens));
+            }
+        }
+        for (id, reason) in finished {
+            self.finish(id, reason);
+        }
+        self.metrics.on_step(t0.elapsed().as_secs_f64(), decoded);
+        decoded
+    }
+
+    fn finish(&mut self, id: u64, reason: FinishReason) {
+        self.scheduler.finish(id, &mut self.pool);
+        if let Some(seq) = self.seqs.remove(&id) {
+            let now = self.now();
+            self.metrics.on_complete(now - seq.req.arrival, seq.req.prompt.len());
+            self.responses.push(Response {
+                id,
+                prompt_len: seq.req.prompt.len(),
+                tokens: seq.out,
+                reason,
+                ttft: seq.first_token_at.unwrap_or(now) - seq.req.arrival,
+                total_time: now - seq.req.arrival,
+            });
+        }
+    }
+
+    /// Drive until every submitted request completes; returns responses.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut guard = 0u64;
+        while self.has_work() {
+            self.step();
+            guard += 1;
+            assert!(guard < 10_000_000, "engine livelock");
+        }
+        self.take_responses()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, Method};
+    use crate::kvcache::MethodAux;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn engine(method: Method, max_batch: usize) -> Engine {
+        let cfg = preset("hata-gqa").unwrap();
+        let serve = ServeConfig { method, budget: 16, max_batch, prefill_chunk: 64, ..Default::default() };
+        let mut rng = Rng::new(0);
+        let weights = Weights::random(&cfg, &mut rng);
+        let aux = MethodAux::build(&cfg, &serve, None, 1);
+        Engine::new(std::sync::Arc::new(Model::new(cfg, weights, aux)), serve)
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt_len).map(|i| 32 + (i as u32 % 64)).collect(),
+            max_new_tokens: max_new,
+            stop_token: None,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(Method::Hata, 4);
+        e.submit(req(1, 40, 5));
+        let rs = e.run_to_completion();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].tokens.len(), 5);
+        assert_eq!(rs[0].reason, FinishReason::MaxTokens);
+        assert!(rs[0].ttft >= 0.0);
+        assert!(rs[0].total_time >= rs[0].ttft);
+    }
+
+    #[test]
+    fn batch_of_requests_all_complete() {
+        let mut e = engine(Method::Hata, 3);
+        for i in 0..6 {
+            e.submit(req(i, 30 + (i as usize) * 7, 4));
+        }
+        let rs = e.run_to_completion();
+        assert_eq!(rs.len(), 6);
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        assert!(rs.iter().all(|r| r.tokens.len() == 4));
+        assert_eq!(e.metrics.completed, 6);
+    }
+
+    #[test]
+    fn stop_token_halts_generation() {
+        let mut e = engine(Method::Dense, 2);
+        // find what the model generates first, then use it as stop token
+        e.submit(req(7, 20, 3));
+        let first = e.run_to_completion()[0].tokens[0];
+        let mut e2 = engine(Method::Dense, 2);
+        let mut r = req(8, 20, 10);
+        r.stop_token = Some(first);
+        e2.submit(r);
+        let rs = e2.run_to_completion();
+        assert_eq!(rs[0].reason, FinishReason::StopToken);
+        assert_eq!(rs[0].tokens.len(), 1); // the stop token itself
+    }
+
+    #[test]
+    fn chunked_prefill_same_output_as_whole() {
+        // prompt longer than prefill_chunk exercises the chunked path;
+        // outputs must match a single-chunk engine (dense method).
+        let cfg = preset("hata-gqa").unwrap();
+        let mk = |chunk: usize| {
+            let serve = ServeConfig {
+                method: Method::Dense,
+                budget: 0,
+                max_batch: 1,
+                prefill_chunk: chunk,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(3);
+            let weights = Weights::random(&cfg, &mut rng);
+            let aux = MethodAux::default();
+            Engine::new(std::sync::Arc::new(Model::new(cfg.clone(), weights, aux)), serve)
+        };
+        let mut small = mk(16);
+        let mut big = mk(4096);
+        small.submit(req(1, 100, 4));
+        big.submit(req(1, 100, 4));
+        assert_eq!(small.run_to_completion()[0].tokens, big.run_to_completion()[0].tokens);
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let mut e = engine(Method::Hata, 2);
+        e.submit(req(1, 25, 3));
+        e.run_to_completion();
+        assert!(e.metrics.generated_tokens >= 2);
+        assert!(e.metrics.step_latency.count() > 0);
+    }
+}

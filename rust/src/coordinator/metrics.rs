@@ -1,0 +1,82 @@
+//! Serving metrics: TTFT / per-token latency histograms and throughput.
+
+use crate::util::stats::{LatencyHistogram, Summary};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub ttft: LatencyHistogram,
+    pub step_latency: LatencyHistogram,
+    pub per_request: Summary,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub completed: u64,
+    pub preempted: u64,
+    started_at: Option<std::time::Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { started_at: Some(std::time::Instant::now()), ..Default::default() }
+    }
+
+    pub fn on_step(&mut self, seconds: f64, decoded: usize) {
+        self.step_latency.record(seconds);
+        self.generated_tokens += decoded as u64;
+    }
+
+    pub fn on_first_token(&mut self, ttft: f64) {
+        self.ttft.record(ttft);
+    }
+
+    pub fn on_complete(&mut self, total_time: f64, prompt_len: usize) {
+        self.completed += 1;
+        self.prompt_tokens += prompt_len as u64;
+        self.per_request.add(total_time);
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started_at.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Generated tokens per wall-clock second.
+    pub fn decode_throughput(&self) -> f64 {
+        let e = self.elapsed();
+        if e > 0.0 {
+            self.generated_tokens as f64 / e
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} gen_tokens={} prompt_tokens={} tput={:.1} tok/s \
+             step p50={:.3}ms p99={:.3}ms ttft p50={:.1}ms",
+            self.completed,
+            self.generated_tokens,
+            self.prompt_tokens,
+            self.decode_throughput(),
+            self.step_latency.quantile(0.5) * 1e3,
+            self.step_latency.quantile(0.99) * 1e3,
+            self.ttft.quantile(0.5) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.on_step(0.001, 4);
+        m.on_step(0.002, 4);
+        m.on_first_token(0.5);
+        m.on_complete(1.0, 32);
+        assert_eq!(m.generated_tokens, 8);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.prompt_tokens, 32);
+        assert!(m.report().contains("completed=1"));
+    }
+}

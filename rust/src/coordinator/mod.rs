@@ -1,0 +1,15 @@
+//! L3 serving coordinator: the vLLM-router-shaped layer that owns request
+//! lifecycle, continuous batching, the prefill/decode scheduler, KV
+//! admission, and metrics. Python never appears on this path.
+//!
+//! * [`request`]  — request/response types and lifecycle states
+//! * [`scheduler`]— admission + prefill-chunk/decode interleaving policy
+//! * [`engine`]   — the step loop driving the native model
+//! * [`router`]   — multi-worker front door (round-robin / least-loaded)
+//! * [`metrics`]  — latency histograms, throughput counters
+
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;

@@ -1,0 +1,90 @@
+//! Request lifecycle types.
+
+/// A generation request as submitted by a client.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// stop generation at this token (e.g. b'\n') if Some
+    pub stop_token: Option<u32>,
+    /// submission timestamp (engine clock, seconds)
+    pub arrival: f64,
+}
+
+/// Where a request is in its life.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// waiting for admission (KV pool or batch slots full)
+    Queued,
+    /// prompt tokens being prefilled (chunked)
+    Prefilling,
+    /// decoding one token per engine step
+    Decoding,
+    /// done (completed, stopped, or cancelled)
+    Finished(FinishReason),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    Cancelled,
+    /// evicted under memory pressure and not retried
+    Preempted,
+}
+
+/// Completed response with timing milestones.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub reason: FinishReason,
+    /// seconds from arrival to first generated token
+    pub ttft: f64,
+    /// seconds from arrival to completion
+    pub total_time: f64,
+    pub prompt_len: usize,
+}
+
+impl Response {
+    /// Decode throughput in tokens/second (excludes prefill time).
+    pub fn decode_tps(&self) -> f64 {
+        let decode_time = self.total_time - self.ttft;
+        if decode_time <= 0.0 || self.tokens.len() <= 1 {
+            return f64::NAN;
+        }
+        (self.tokens.len() - 1) as f64 / decode_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_tps_math() {
+        let r = Response {
+            id: 1,
+            tokens: vec![1; 11],
+            reason: FinishReason::MaxTokens,
+            ttft: 1.0,
+            total_time: 2.0,
+            prompt_len: 4,
+        };
+        assert!((r.decode_tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_tps_is_nan() {
+        let r = Response {
+            id: 1,
+            tokens: vec![1],
+            reason: FinishReason::StopToken,
+            ttft: 1.0,
+            total_time: 1.0,
+            prompt_len: 4,
+        };
+        assert!(r.decode_tps().is_nan());
+    }
+}

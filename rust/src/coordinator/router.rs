@@ -1,0 +1,206 @@
+//! Multi-worker router: the front door that shards requests across
+//! engine worker threads (vllm-project/router shape, scaled to one node).
+//!
+//! Each worker thread owns an [`super::engine::Engine`]; the router picks
+//! a worker per request (round-robin or least-loaded by outstanding
+//! count), forwards over an mpsc channel, and funnels responses back.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::config::ServeConfig;
+use crate::model::Model;
+
+use super::engine::Engine;
+use super::request::{Request, Response};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+enum Msg {
+    Req(Request),
+    Drain,
+}
+
+/// Router owning N worker threads.
+pub struct Router {
+    txs: Vec<Sender<Msg>>,
+    resp_rx: Receiver<Response>,
+    outstanding: Vec<Arc<AtomicUsize>>,
+    next: usize,
+    policy: Policy,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    in_flight: usize,
+}
+
+impl Router {
+    pub fn new(model: Arc<Model>, serve: ServeConfig, n_workers: usize, policy: Policy) -> Self {
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let mut txs = Vec::new();
+        let mut outstanding = Vec::new();
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let (tx, rx) = channel::<Msg>();
+            let load = Arc::new(AtomicUsize::new(0));
+            let resp_tx = resp_tx.clone();
+            let model = Arc::clone(&model);
+            let serve = serve.clone();
+            let load2 = Arc::clone(&load);
+            workers.push(std::thread::spawn(move || {
+                let mut engine = Engine::new(model, serve);
+                loop {
+                    // ingest every pending message without blocking while
+                    // the engine has work; block when idle
+                    let msg = if engine.has_work() {
+                        match rx.try_recv() {
+                            Ok(m) => Some(m),
+                            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+                        }
+                    } else {
+                        match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => break,
+                        }
+                    };
+                    match msg {
+                        Some(Msg::Req(r)) => engine.submit(r),
+                        Some(Msg::Drain) | None => {}
+                    }
+                    if engine.has_work() {
+                        engine.step();
+                        for r in engine.take_responses() {
+                            load2.fetch_sub(1, Ordering::SeqCst);
+                            let _ = resp_tx.send(r);
+                        }
+                    }
+                }
+            }));
+            txs.push(tx);
+            outstanding.push(load);
+        }
+        Router { txs, resp_rx, outstanding, next: 0, policy, workers, in_flight: 0 }
+    }
+
+    fn pick(&mut self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.next % self.txs.len();
+                self.next += 1;
+                i
+            }
+            Policy::LeastLoaded => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, l)| l.load(Ordering::SeqCst))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        let i = self.pick();
+        self.outstanding[i].fetch_add(1, Ordering::SeqCst);
+        self.in_flight += 1;
+        self.txs[i].send(Msg::Req(req)).expect("worker alive");
+    }
+
+    /// Block until all in-flight requests respond; returns them.
+    pub fn drain(&mut self) -> Vec<Response> {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Drain);
+        }
+        let mut out = Vec::with_capacity(self.in_flight);
+        while out.len() < self.in_flight {
+            out.push(self.resp_rx.recv().expect("worker alive"));
+        }
+        self.in_flight = 0;
+        out
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.txs.clear(); // closes channels; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, Method};
+    use crate::kvcache::MethodAux;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn model() -> Arc<Model> {
+        let cfg = preset("hata-gqa").unwrap();
+        let mut rng = Rng::new(0);
+        let weights = Weights::random(&cfg, &mut rng);
+        Arc::new(Model::new(cfg, weights, MethodAux::default()))
+    }
+
+    fn serve() -> ServeConfig {
+        ServeConfig { method: Method::Hata, budget: 16, max_batch: 2, ..Default::default() }
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: (0..30).map(|i| 32 + (i % 64)).collect(),
+            max_new_tokens: 3,
+            stop_token: None,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn routes_and_drains_all_requests() {
+        let mut router = Router::new(model(), serve(), 2, Policy::RoundRobin);
+        for i in 0..8 {
+            router.submit(req(i));
+        }
+        let rs = router.drain();
+        assert_eq!(rs.len(), 8);
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn least_loaded_policy_works() {
+        let mut router = Router::new(model(), serve(), 3, Policy::LeastLoaded);
+        for i in 0..9 {
+            router.submit(req(i));
+        }
+        let rs = router.drain();
+        assert_eq!(rs.len(), 9);
+    }
+
+    #[test]
+    fn single_worker_router() {
+        let mut router = Router::new(model(), serve(), 1, Policy::RoundRobin);
+        router.submit(req(1));
+        let rs = router.drain();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let router = Router::new(model(), serve(), 2, Policy::RoundRobin);
+        drop(router); // must not hang
+    }
+}

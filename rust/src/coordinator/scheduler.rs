@@ -1,0 +1,232 @@
+//! Prefill/decode scheduler with continuous batching.
+//!
+//! Policy (decode-first, chunked prefill — the shape Orca/vLLM converged
+//! on and the one the paper's serving experiments assume):
+//!   1. all Decoding sequences advance one token per engine step;
+//!   2. leftover step budget (`prefill_chunk` tokens) goes to the oldest
+//!      Prefilling sequence, admitted only while the KV pool has room;
+//!   3. Queued requests are admitted FCFS when a batch slot + KV pages
+//!      are available.
+
+use std::collections::VecDeque;
+
+use crate::config::ServeConfig;
+use crate::kvcache::pool::KvPool;
+
+/// Scheduler's view of one live sequence.
+#[derive(Clone, Debug)]
+pub struct SeqTicket {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub prefilled: usize,
+    pub generated: usize,
+    pub max_new: usize,
+}
+
+impl SeqTicket {
+    pub fn is_prefill_done(&self) -> bool {
+        self.prefilled >= self.prompt_len
+    }
+}
+
+/// One engine step's work order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepPlan {
+    /// sequence ids that decode one token this step
+    pub decode: Vec<u64>,
+    /// (sequence id, token range) prefill chunks this step
+    pub prefill: Vec<(u64, std::ops::Range<usize>)>,
+    /// requests admitted from the queue this step
+    pub admitted: Vec<u64>,
+}
+
+/// FCFS admission + decode-first step planning.
+pub struct Scheduler {
+    queue: VecDeque<SeqTicket>,
+    live: Vec<SeqTicket>,
+    max_batch: usize,
+    prefill_chunk: usize,
+}
+
+impl Scheduler {
+    pub fn new(serve: &ServeConfig) -> Self {
+        Scheduler {
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            max_batch: serve.max_batch,
+            prefill_chunk: serve.prefill_chunk,
+        }
+    }
+
+    pub fn submit(&mut self, ticket: SeqTicket) {
+        self.queue.push_back(ticket);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn ticket(&self, id: u64) -> Option<&SeqTicket> {
+        self.live.iter().find(|t| t.id == id)
+    }
+
+    /// Record `n` generated tokens for `id` (engine callback).
+    pub fn on_decoded(&mut self, id: u64) {
+        if let Some(t) = self.live.iter_mut().find(|t| t.id == id) {
+            t.generated += 1;
+        }
+    }
+
+    pub fn on_prefilled(&mut self, id: u64, n: usize) {
+        if let Some(t) = self.live.iter_mut().find(|t| t.id == id) {
+            t.prefilled += n;
+        }
+    }
+
+    /// Remove a finished sequence and free its pool pages.
+    pub fn finish(&mut self, id: u64, pool: &mut KvPool) {
+        self.live.retain(|t| t.id != id);
+        let _ = pool.release(id);
+    }
+
+    /// Plan the next engine step.
+    pub fn plan(&mut self, pool: &mut KvPool) -> StepPlan {
+        let mut plan = StepPlan::default();
+        // 1. admit while there is room
+        while self.live.len() < self.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            // need at least the prompt in pages to admit
+            if !pool.can_grow(front.id, front.prompt_len + 1) {
+                break;
+            }
+            let t = self.queue.pop_front().unwrap();
+            plan.admitted.push(t.id);
+            self.live.push(t);
+        }
+        // 2. all fully-prefilled, unfinished sequences decode
+        for t in &self.live {
+            if t.is_prefill_done() && t.generated < t.max_new {
+                plan.decode.push(t.id);
+            }
+        }
+        // reserve one token per decoding sequence
+        for &id in &plan.decode {
+            let _ = pool.grow(id, 1);
+        }
+        // 3. chunked prefill for the oldest incomplete prefill
+        let mut chunk_left = self.prefill_chunk;
+        for t in self.live.iter() {
+            if chunk_left == 0 {
+                break;
+            }
+            if !t.is_prefill_done() {
+                let take = chunk_left.min(t.prompt_len - t.prefilled);
+                if pool.grow(t.id, take).is_ok() {
+                    plan.prefill.push((t.id, t.prefilled..t.prefilled + take));
+                    chunk_left -= take;
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::kvcache::pool::PAGE_TOKENS;
+
+    fn mk(id: u64, prompt: usize, max_new: usize) -> SeqTicket {
+        SeqTicket { id, prompt_len: prompt, prefilled: 0, generated: 0, max_new }
+    }
+
+    fn scheduler(max_batch: usize, chunk: usize) -> Scheduler {
+        Scheduler::new(&ServeConfig {
+            max_batch,
+            prefill_chunk: chunk,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn admits_fcfs_until_batch_full() {
+        let mut s = scheduler(2, 128);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        for i in 0..4 {
+            s.submit(mk(i, 10, 5));
+        }
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.admitted, vec![0, 1]);
+        assert_eq!(s.queue_len(), 2);
+        assert_eq!(s.live_len(), 2);
+    }
+
+    #[test]
+    fn chunked_prefill_progresses_then_decodes() {
+        let mut s = scheduler(4, 64);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 150, 3));
+        let p1 = s.plan(&mut pool);
+        assert_eq!(p1.prefill, vec![(1, 0..64)]);
+        s.on_prefilled(1, 64);
+        let p2 = s.plan(&mut pool);
+        assert_eq!(p2.prefill, vec![(1, 64..128)]);
+        s.on_prefilled(1, 64);
+        let p3 = s.plan(&mut pool);
+        assert_eq!(p3.prefill, vec![(1, 128..150)]);
+        s.on_prefilled(1, 22);
+        let p4 = s.plan(&mut pool);
+        assert!(p4.prefill.is_empty());
+        assert_eq!(p4.decode, vec![1]);
+    }
+
+    #[test]
+    fn decode_first_over_new_prefills() {
+        let mut s = scheduler(4, 32);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 10, 5));
+        let _ = s.plan(&mut pool); // admit + prefill chunk
+        s.on_prefilled(1, 10);
+        s.submit(mk(2, 40, 5));
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.decode, vec![1]);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].0, 2);
+    }
+
+    #[test]
+    fn admission_blocked_by_pool_pressure() {
+        let mut s = scheduler(8, 128);
+        // tiny pool: 2 pages
+        let mut pool = KvPool::new(2 * PAGE_TOKENS);
+        s.submit(mk(1, PAGE_TOKENS, 4));
+        s.submit(mk(2, 4 * PAGE_TOKENS, 4)); // cannot ever fit
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn finish_releases_and_stops_decoding() {
+        let mut s = scheduler(2, 64);
+        let mut pool = KvPool::new(10 * PAGE_TOKENS);
+        s.submit(mk(1, 8, 2));
+        let _ = s.plan(&mut pool);
+        s.on_prefilled(1, 8);
+        let p = s.plan(&mut pool);
+        assert_eq!(p.decode, vec![1]);
+        s.on_decoded(1);
+        s.on_decoded(1);
+        // generated == max_new -> no more decode
+        let p = s.plan(&mut pool);
+        assert!(p.decode.is_empty());
+        s.finish(1, &mut pool);
+        assert_eq!(s.live_len(), 0);
+        assert_eq!(pool.active_seqs(), 0);
+    }
+}

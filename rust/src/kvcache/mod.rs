@@ -1,0 +1,308 @@
+//! KV-cache management: per-sequence caches with the paper's extra
+//! hash-code cache (Alg. 1 l.4-5), method side-structures maintained on
+//! append, a page-accounting pool for admission control, and the
+//! HATA-off tiered/offloaded variant.
+
+pub mod offload;
+pub mod pool;
+
+use crate::attention::Side;
+use crate::config::{Method, ModelConfig, ServeConfig};
+use crate::util::rng::Rng;
+
+/// All cached state for one sequence: K/V per (layer, kv-head), the packed
+/// key-code cache, and per-method side structures.
+///
+/// Layout: per (layer, kv) contiguous row-major token arrays, so the
+/// per-head decode hot loop walks sequential memory.
+pub struct SeqKvCache {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub dh: usize,
+    pub words: usize,
+    len: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    codes: Vec<Vec<u64>>,
+    // Quest block summaries
+    quest_block: usize,
+    quest_min: Vec<Vec<f32>>,
+    quest_max: Vec<Vec<f32>>,
+    // Loki projected keys
+    loki_channels: usize,
+    loki_kproj: Vec<Vec<f32>>,
+    // MagicPIG signatures
+    mp_k: usize,
+    mp_l: usize,
+    mp_sigs: Vec<Vec<u16>>,
+}
+
+impl SeqKvCache {
+    pub fn new(cfg: &ModelConfig, serve: &ServeConfig) -> Self {
+        let heads = cfg.n_layers * cfg.n_kv_heads;
+        let enable_quest = serve.method == Method::Quest;
+        let enable_loki = serve.method == Method::Loki;
+        let enable_mp = serve.method == Method::MagicPig;
+        SeqKvCache {
+            n_layers: cfg.n_layers,
+            n_kv: cfg.n_kv_heads,
+            dh: cfg.head_dim,
+            words: cfg.rbit / 64,
+            len: 0,
+            k: vec![Vec::new(); heads],
+            v: vec![Vec::new(); heads],
+            codes: vec![Vec::new(); heads],
+            quest_block: if enable_quest { serve.quest_block } else { 0 },
+            quest_min: vec![Vec::new(); if enable_quest { heads } else { 0 }],
+            quest_max: vec![Vec::new(); if enable_quest { heads } else { 0 }],
+            loki_channels: if enable_loki { serve.loki_channels } else { 0 },
+            loki_kproj: vec![Vec::new(); if enable_loki { heads } else { 0 }],
+            mp_k: if enable_mp { serve.magicpig_k } else { 0 },
+            mp_l: if enable_mp { serve.magicpig_l } else { 0 },
+            mp_sigs: vec![Vec::new(); if enable_mp { heads } else { 0 }],
+        }
+    }
+
+    #[inline]
+    pub fn head_index(&self, layer: usize, kv: usize) -> usize {
+        layer * self.n_kv + kv
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one token's K/V for a given (layer, kv) head, maintaining
+    /// the code cache and any enabled side structures.
+    /// `hash_w` is the trained [dh, rbit] matrix for this head; `aux`
+    /// carries the per-model method constants (Loki PCA, MagicPIG planes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn append(
+        &mut self,
+        layer: usize,
+        kv: usize,
+        krow: &[f32],
+        vrow: &[f32],
+        hash_w: &[f32],
+        rbit: usize,
+        aux: &MethodAux,
+    ) {
+        let h = self.head_index(layer, kv);
+        debug_assert_eq!(krow.len(), self.dh);
+        self.k[h].extend_from_slice(krow);
+        self.v[h].extend_from_slice(vrow);
+        if !hash_w.is_empty() {
+            crate::attention::hashenc::encode_fused_blocked(krow, hash_w, rbit, &mut self.codes[h]);
+        }
+        if self.quest_block > 0 {
+            let t = self.k[h].len() / self.dh - 1;
+            if t % self.quest_block == 0 {
+                self.quest_min[h].extend_from_slice(krow);
+                self.quest_max[h].extend_from_slice(krow);
+            } else {
+                let nb = self.quest_min[h].len() / self.dh;
+                let bmin = &mut self.quest_min[h][(nb - 1) * self.dh..];
+                let bmax = &mut self.quest_max[h][(nb - 1) * self.dh..];
+                for i in 0..self.dh {
+                    bmin[i] = bmin[i].min(krow[i]);
+                    bmax[i] = bmax[i].max(krow[i]);
+                }
+            }
+        }
+        if self.loki_channels > 0 {
+            let pca = &aux.loki_pca[h];
+            let r = self.loki_channels;
+            for c in 0..r {
+                let mut acc = 0.0;
+                for i in 0..self.dh {
+                    acc += krow[i] * pca[i * r + c];
+                }
+                self.loki_kproj[h].push(acc);
+            }
+        }
+        if self.mp_l > 0 {
+            let planes = &aux.mp_planes[h];
+            for table in 0..self.mp_l {
+                let mut sig = 0u16;
+                for bit in 0..self.mp_k {
+                    let p = &planes[(table * self.mp_k + bit) * self.dh..][..self.dh];
+                    sig |= ((crate::tensor::ops::dot(krow, p) >= 0.0) as u16) << bit;
+                }
+                self.mp_sigs[h].push(sig);
+            }
+        }
+        // bump global length once per full token (after the last head)
+        if h == self.n_layers * self.n_kv - 1 {
+            self.len += 1;
+        }
+    }
+
+    pub fn k_slice(&self, layer: usize, kv: usize) -> &[f32] {
+        &self.k[self.head_index(layer, kv)]
+    }
+
+    pub fn v_slice(&self, layer: usize, kv: usize) -> &[f32] {
+        &self.v[self.head_index(layer, kv)]
+    }
+
+    pub fn codes_slice(&self, layer: usize, kv: usize) -> &[u64] {
+        &self.codes[self.head_index(layer, kv)]
+    }
+
+    /// Borrow the method side structures for one head.
+    pub fn side<'a>(&'a self, layer: usize, kv: usize, hash_w: &'a [f32], aux: &'a MethodAux) -> Side<'a> {
+        let h = self.head_index(layer, kv);
+        Side {
+            hash_w,
+            quest_min: self.quest_min.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            quest_max: self.quest_max.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            quest_block: self.quest_block,
+            loki_kproj: self.loki_kproj.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            loki_pca: aux.loki_pca.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            loki_channels: self.loki_channels,
+            mp_sigs: self.mp_sigs.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            mp_planes: aux.mp_planes.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            mp_k: self.mp_k,
+            mp_l: self.mp_l,
+        }
+    }
+
+    /// Total bytes held (K + V + codes + side structures).
+    pub fn bytes(&self) -> usize {
+        let f = |vs: &[Vec<f32>]| vs.iter().map(|v| v.len() * 4).sum::<usize>();
+        let c: usize = self.codes.iter().map(|v| v.len() * 8).sum();
+        let s: usize = self.mp_sigs.iter().map(|v| v.len() * 2).sum();
+        f(&self.k) + f(&self.v) + c + f(&self.quest_min) + f(&self.quest_max) + f(&self.loki_kproj) + s
+    }
+}
+
+/// Per-model constants the side structures need (shared across sequences):
+/// Loki PCA matrices and MagicPIG hyperplanes, per (layer, kv) head.
+#[derive(Default)]
+pub struct MethodAux {
+    pub loki_pca: Vec<Vec<f32>>,
+    pub mp_planes: Vec<Vec<f32>>,
+}
+
+impl MethodAux {
+    /// Build for the configured method. Loki PCA comes from artifacts when
+    /// available (trained); `identity_fallback` uses the raw first channels
+    /// (equivalent to SparQ-style truncation) when no PCA export exists.
+    pub fn build(cfg: &ModelConfig, serve: &ServeConfig, pca: Option<Vec<Vec<f32>>>, seed: u64) -> Self {
+        let heads = cfg.n_layers * cfg.n_kv_heads;
+        let mut aux = MethodAux::default();
+        if serve.method == Method::Loki {
+            aux.loki_pca = pca.unwrap_or_else(|| {
+                let r = serve.loki_channels;
+                let mut id = vec![0.0f32; cfg.head_dim * r];
+                for c in 0..r.min(cfg.head_dim) {
+                    id[c * r + c] = 1.0;
+                }
+                vec![id; heads]
+            });
+        }
+        if serve.method == Method::MagicPig {
+            let mut rng = Rng::new(seed);
+            aux.mp_planes = (0..heads)
+                .map(|_| rng.normal_vec(serve.magicpig_l * serve.magicpig_k * cfg.head_dim))
+                .collect();
+        }
+        aux
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn cfg_serve(method: Method) -> (ModelConfig, ServeConfig) {
+        let cfg = preset("hata-gqa").unwrap();
+        let serve = ServeConfig { method, ..Default::default() };
+        (cfg, serve)
+    }
+
+    fn append_token(cache: &mut SeqKvCache, cfg: &ModelConfig, aux: &MethodAux, hash_w: &[f32], val: f32) {
+        let krow = vec![val; cfg.head_dim];
+        let vrow = vec![-val; cfg.head_dim];
+        for layer in 0..cfg.n_layers {
+            for kv in 0..cfg.n_kv_heads {
+                cache.append(layer, kv, &krow, &vrow, hash_w, cfg.rbit, aux);
+            }
+        }
+    }
+
+    #[test]
+    fn append_grows_all_heads_and_len() {
+        let (cfg, serve) = cfg_serve(Method::Hata);
+        let aux = MethodAux::default();
+        let hash_w = vec![0.5; cfg.head_dim * cfg.rbit];
+        let mut cache = SeqKvCache::new(&cfg, &serve);
+        for t in 0..5 {
+            append_token(&mut cache, &cfg, &aux, &hash_w, t as f32);
+        }
+        assert_eq!(cache.len(), 5);
+        assert_eq!(cache.k_slice(2, 1).len(), 5 * cfg.head_dim);
+        assert_eq!(cache.codes_slice(0, 0).len(), 5 * cfg.rbit / 64);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn quest_block_minmax_maintained() {
+        let (cfg, serve) = cfg_serve(Method::Quest);
+        let aux = MethodAux::build(&cfg, &serve, None, 0);
+        let mut cache = SeqKvCache::new(&cfg, &serve);
+        let block = serve.quest_block;
+        // two blocks: values 0..block have max block-1
+        for t in 0..(2 * block) {
+            append_token(&mut cache, &cfg, &aux, &[], t as f32);
+        }
+        let side = cache.side(0, 0, &[], &aux);
+        assert_eq!(side.quest_min.len(), 2 * cfg.head_dim);
+        assert_eq!(side.quest_min[0], 0.0);
+        assert_eq!(side.quest_max[0], (block - 1) as f32);
+        assert_eq!(side.quest_min[cfg.head_dim], block as f32);
+        assert_eq!(side.quest_max[cfg.head_dim], (2 * block - 1) as f32);
+    }
+
+    #[test]
+    fn loki_identity_fallback_projects_first_channels() {
+        let (cfg, serve) = cfg_serve(Method::Loki);
+        let aux = MethodAux::build(&cfg, &serve, None, 0);
+        let mut cache = SeqKvCache::new(&cfg, &serve);
+        append_token(&mut cache, &cfg, &aux, &[], 3.0);
+        let side = cache.side(1, 0, &[], &aux);
+        assert_eq!(side.loki_kproj.len(), serve.loki_channels);
+        // identity fallback keeps the raw first channels
+        assert!(side.loki_kproj.iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn magicpig_signatures_deterministic() {
+        let (cfg, serve) = cfg_serve(Method::MagicPig);
+        let aux = MethodAux::build(&cfg, &serve, None, 7);
+        let aux2 = MethodAux::build(&cfg, &serve, None, 7);
+        let mut c1 = SeqKvCache::new(&cfg, &serve);
+        let mut c2 = SeqKvCache::new(&cfg, &serve);
+        append_token(&mut c1, &cfg, &aux, &[], 1.5);
+        append_token(&mut c2, &cfg, &aux2, &[], 1.5);
+        assert_eq!(c1.side(0, 0, &[], &aux).mp_sigs, c2.side(0, 0, &[], &aux2).mp_sigs);
+        assert_eq!(c1.side(0, 0, &[], &aux).mp_sigs.len(), serve.magicpig_l);
+    }
+
+    #[test]
+    fn disabled_side_structures_stay_empty() {
+        let (cfg, serve) = cfg_serve(Method::Dense);
+        let aux = MethodAux::default();
+        let mut cache = SeqKvCache::new(&cfg, &serve);
+        append_token(&mut cache, &cfg, &aux, &[], 1.0);
+        let side = cache.side(0, 0, &[], &aux);
+        assert!(side.quest_min.is_empty());
+        assert!(side.loki_kproj.is_empty());
+        assert!(side.mp_sigs.is_empty());
+    }
+}

@@ -1,0 +1,170 @@
+//! HATA-off: KV-cache offloading with top-k prefetch (paper Sec 5.3,
+//! Table 3), plus a MagicPIG-style CPU-scoring comparator.
+//!
+//! Tiering: the full K/V cache lives in the HOST tier; only the compact
+//! key-code cache (rbit/8 bytes per token per head) stays DEVICE-resident.
+//! A decode step scores codes on-device, top-k selects, then fetches just
+//! the selected rows over the modeled PCIe link — overlapping the fetch of
+//! layer L+1 with the attention compute of layer L (InfiniGen-style
+//! prefetching, which the paper credits for HATA-off's decode speedup).
+//!
+//! MagicPIG's design instead keeps scoring on the CPU with ~1500-bit LSH
+//! signatures: no row fetch, but (a) 12x larger signature traffic and (b)
+//! attention compute at CPU rates. Both cost models are exercised by
+//! `benches/table3_offload.rs`.
+
+use crate::config::ModelConfig;
+use crate::simulator::pcie::{PcieModel, TransferLedger};
+
+/// Device-side compute rates used for the modeled comparison; the GPU rate
+/// reflects the paper's 149.7 TFLOPS card on bandwidth-bound attention
+/// (2 TB/s HBM), the CPU rate a 48-thread host (~100 GB/s, ~2 TFLOPS).
+#[derive(Clone, Copy, Debug)]
+pub struct OffloadRates {
+    pub dev_bw: f64,
+    pub host_bw: f64,
+    pub pcie: PcieModel,
+}
+
+impl OffloadRates {
+    pub fn paper_testbed() -> Self {
+        OffloadRates { dev_bw: 2.0e12, host_bw: 100.0e9, pcie: PcieModel::gen4_x16() }
+    }
+}
+
+/// Accounting result for a whole request (prefill + N decode steps).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffloadReport {
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub ledger: TransferLedger,
+}
+
+impl OffloadReport {
+    pub fn total(&self) -> f64 {
+        self.prefill_seconds + self.decode_seconds
+    }
+}
+
+fn kv_bytes_per_token(cfg: &ModelConfig) -> usize {
+    cfg.kv_bytes_per_token()
+}
+
+/// HATA-off cost model: prefill computes on device and streams K/V out to
+/// host; decode scores device-resident codes, fetches top-k rows/layer
+/// with cross-layer prefetch overlap.
+pub fn hata_off(cfg: &ModelConfig, rates: &OffloadRates, prefill_len: usize, decode_len: usize, budget: usize) -> OffloadReport {
+    let mut rep = OffloadReport::default();
+    let kv_tok = kv_bytes_per_token(cfg);
+    // ---- prefill: attention compute (bandwidth model, causal ~ s^2/2
+    // traffic capped by flash tiling to ~2 passes) + KV offload stream
+    let kv_total = prefill_len * kv_tok;
+    let attn_passes = 2.0; // flash-style: read K,V once per q tile wave
+    let compute = attn_passes * kv_total as f64 / rates.dev_bw
+        + code_bytes(cfg, prefill_len) as f64 / rates.dev_bw;
+    let mut ledger = TransferLedger::default();
+    ledger.add(&rates.pcie, kv_total);
+    // offload stream overlaps prefill compute
+    rep.prefill_seconds = TransferLedger::overlapped(compute, ledger.seconds);
+    // ---- decode: per step, per layer: score codes on device, fetch 2*k
+    // rows, attend on device; fetches overlap the previous layer's attend.
+    // Host-side packing (InfiniGen-style): the 48-thread host packs the
+    // selected rows into a contiguous staging buffer (read+write at host
+    // bandwidth), then ONE DMA per layer ships it — per-row DMA latency
+    // would otherwise dominate and no real implementation pays it.
+    let per_head_rows = budget.min(prefill_len);
+    for step in 0..decode_len {
+        let s = prefill_len + step;
+        let score = code_bytes(cfg, s) as f64 / rates.dev_bw;
+        let row_bytes = 2 * per_head_rows * cfg.head_dim * 4 * cfg.n_kv_heads;
+        let mut step_s = 0.0f64;
+        for _layer in 0..cfg.n_layers {
+            let pack = 2.0 * row_bytes as f64 / rates.host_bw;
+            let mut l = TransferLedger::default();
+            l.add(&rates.pcie, row_bytes);
+            ledger.add(&rates.pcie, row_bytes);
+            let attend = row_bytes as f64 / rates.dev_bw;
+            // prefetch overlap: next layer's pack+DMA hides behind the
+            // current layer's attend; the slower of the two paces a layer.
+            step_s += attend.max(pack + l.seconds);
+        }
+        rep.decode_seconds += score + step_s;
+    }
+    rep.ledger = ledger;
+    rep
+}
+
+/// MagicPIG-style cost model: prefill additionally builds ~1500-bit LSH
+/// signatures and ships K/V to host; decode scores signatures and computes
+/// attention on the CPU (sampled tokens), shipping only the query and the
+/// attention output across PCIe.
+pub fn magicpig_off(cfg: &ModelConfig, rates: &OffloadRates, prefill_len: usize, decode_len: usize, budget: usize) -> OffloadReport {
+    let mut rep = OffloadReport::default();
+    let kv_tok = kv_bytes_per_token(cfg);
+    let sig_bytes_per_tok = 1500 / 8 * cfg.n_layers * cfg.n_kv_heads; // paper Sec 5.3
+    // prefill: device attention + signature build (memory-bound on device,
+    // 1500 projections of 128-d vectors per head-token) + KV offload
+    let kv_total = prefill_len * kv_tok;
+    let sig_flops = 2.0 * (prefill_len * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * 1500) as f64;
+    let sig_time = sig_flops / (rates.dev_bw * 10.0) // ~10 flop/byte arithmetic intensity
+        + (prefill_len * sig_bytes_per_tok) as f64 / rates.dev_bw;
+    let compute = 2.0 * kv_total as f64 / rates.dev_bw + sig_time;
+    let mut ledger = TransferLedger::default();
+    ledger.add(&rates.pcie, kv_total + prefill_len * sig_bytes_per_tok);
+    rep.prefill_seconds = TransferLedger::overlapped(compute, ledger.seconds);
+    // decode: CPU scores signatures over s tokens + CPU attention on k rows
+    let per_head_rows = budget.min(prefill_len);
+    for step in 0..decode_len {
+        let s = prefill_len + step;
+        let score = (s * sig_bytes_per_tok) as f64 / rates.host_bw;
+        let attend = (2 * per_head_rows * cfg.head_dim * 4 * cfg.n_kv_heads * cfg.n_layers) as f64
+            / rates.host_bw;
+        // query down + output up, tiny
+        ledger.add(&rates.pcie, 2 * cfg.d_model * 4 * cfg.n_layers);
+        rep.decode_seconds += score + attend + 2.0 * rates.pcie.latency * cfg.n_layers as f64;
+    }
+    rep.ledger = ledger;
+    rep
+}
+
+fn code_bytes(cfg: &ModelConfig, tokens: usize) -> usize {
+    tokens * cfg.code_bytes_per_token()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn hata_off_beats_magicpig_shape() {
+        // Table 3 shape: HATA-off faster in both phases on the
+        // Llama2-mirror at 36K prefill / 500 decode.
+        let cfg = preset("mirror-llama2-7b").unwrap();
+        let rates = OffloadRates::paper_testbed();
+        let budget = (36_000.0 * 0.0156) as usize;
+        let h = hata_off(&cfg, &rates, 36_000, 500, budget);
+        let m = magicpig_off(&cfg, &rates, 36_000, 500, budget);
+        assert!(h.prefill_seconds < m.prefill_seconds, "prefill {} vs {}", h.prefill_seconds, m.prefill_seconds);
+        assert!(h.decode_seconds < m.decode_seconds, "decode {} vs {}", h.decode_seconds, m.decode_seconds);
+        assert!(h.total() < m.total());
+    }
+
+    #[test]
+    fn decode_cost_grows_with_len() {
+        let cfg = preset("mirror-llama31-8b").unwrap();
+        let rates = OffloadRates::paper_testbed();
+        let a = hata_off(&cfg, &rates, 10_000, 100, 256).decode_seconds;
+        let b = hata_off(&cfg, &rates, 10_000, 200, 256).decode_seconds;
+        assert!(b > 1.9 * a);
+    }
+
+    #[test]
+    fn ledger_counts_offloaded_bytes() {
+        let cfg = preset("hata-mha").unwrap();
+        let rates = OffloadRates::paper_testbed();
+        let rep = hata_off(&cfg, &rates, 1000, 10, 64);
+        // at least the full prefill KV must have crossed the link
+        assert!(rep.ledger.bytes >= (1000 * cfg.kv_bytes_per_token()) as u64);
+    }
+}

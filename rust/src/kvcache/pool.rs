@@ -1,0 +1,130 @@
+//! Page-accounting KV pool: vLLM-style admission bookkeeping.
+//!
+//! Physical storage lives in [`super::SeqKvCache`] vectors; this pool
+//! tracks page ownership so the scheduler can admit/deny prefills and
+//! detect memory pressure exactly the way a paged allocator would.
+
+use std::collections::BTreeMap;
+
+pub const PAGE_TOKENS: usize = 64;
+
+#[derive(Debug, thiserror::Error)]
+pub enum PoolError {
+    #[error("kv pool exhausted: need {need} pages, free {free}")]
+    Exhausted { need: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(u64),
+}
+
+/// Token-capacity bookkeeping per sequence.
+#[derive(Debug)]
+pub struct KvPool {
+    capacity_pages: usize,
+    free_pages: usize,
+    seqs: BTreeMap<u64, SeqAlloc>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct SeqAlloc {
+    pages: usize,
+    tokens: usize,
+}
+
+impl KvPool {
+    pub fn new(capacity_tokens: usize) -> Self {
+        let pages = capacity_tokens / PAGE_TOKENS;
+        KvPool { capacity_pages: pages, free_pages: pages, seqs: BTreeMap::new() }
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_pages * PAGE_TOKENS
+    }
+
+    pub fn free_tokens(&self) -> usize {
+        self.free_pages * PAGE_TOKENS
+    }
+
+    pub fn utilization(&self) -> f64 {
+        1.0 - self.free_pages as f64 / self.capacity_pages.max(1) as f64
+    }
+
+    /// Can `tokens` more tokens be appended to `seq` without exhaustion?
+    pub fn can_grow(&self, seq: u64, tokens: usize) -> bool {
+        let cur = self.seqs.get(&seq).cloned().unwrap_or_default();
+        let need_pages = (cur.tokens + tokens).div_ceil(PAGE_TOKENS);
+        need_pages.saturating_sub(cur.pages) <= self.free_pages
+    }
+
+    /// Reserve pages for `tokens` appended tokens of `seq`.
+    pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<(), PoolError> {
+        let cur = self.seqs.entry(seq).or_default();
+        let need_pages = (cur.tokens + tokens).div_ceil(PAGE_TOKENS);
+        let extra = need_pages.saturating_sub(cur.pages);
+        if extra > self.free_pages {
+            return Err(PoolError::Exhausted { need: extra, free: self.free_pages });
+        }
+        self.free_pages -= extra;
+        cur.pages = need_pages;
+        cur.tokens += tokens;
+        Ok(())
+    }
+
+    /// Release everything held by `seq` (on completion or preemption).
+    pub fn release(&mut self, seq: u64) -> Result<(), PoolError> {
+        let alloc = self.seqs.remove(&seq).ok_or(PoolError::UnknownSeq(seq))?;
+        self.free_pages += alloc.pages;
+        Ok(())
+    }
+
+    pub fn seq_tokens(&self, seq: u64) -> usize {
+        self.seqs.get(&seq).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_release_roundtrip() {
+        let mut pool = KvPool::new(10 * PAGE_TOKENS);
+        pool.grow(1, 100).unwrap();
+        assert_eq!(pool.seq_tokens(1), 100);
+        assert_eq!(pool.free_tokens(), (10 - 2) * PAGE_TOKENS);
+        pool.grow(1, 28).unwrap(); // fits in the 2nd page
+        assert_eq!(pool.free_tokens(), (10 - 2) * PAGE_TOKENS);
+        pool.grow(1, 1).unwrap(); // 129 tokens -> 3rd page
+        assert_eq!(pool.free_tokens(), (10 - 3) * PAGE_TOKENS);
+        pool.release(1).unwrap();
+        assert_eq!(pool.free_tokens(), 10 * PAGE_TOKENS);
+        assert_eq!(pool.active_seqs(), 0);
+    }
+
+    #[test]
+    fn exhaustion_detected() {
+        let mut pool = KvPool::new(2 * PAGE_TOKENS);
+        assert!(pool.can_grow(1, 2 * PAGE_TOKENS));
+        assert!(!pool.can_grow(1, 2 * PAGE_TOKENS + 1));
+        pool.grow(1, 2 * PAGE_TOKENS).unwrap();
+        let err = pool.grow(2, 1).unwrap_err();
+        assert!(matches!(err, PoolError::Exhausted { .. }));
+    }
+
+    #[test]
+    fn release_unknown_errors() {
+        let mut pool = KvPool::new(PAGE_TOKENS);
+        assert!(matches!(pool.release(9), Err(PoolError::UnknownSeq(9))));
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut pool = KvPool::new(4 * PAGE_TOKENS);
+        assert_eq!(pool.utilization(), 0.0);
+        pool.grow(1, 2 * PAGE_TOKENS).unwrap();
+        assert!((pool.utilization() - 0.5).abs() < 1e-9);
+    }
+}

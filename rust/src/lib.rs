@@ -1,0 +1,28 @@
+//! # HATA — Hash-Aware Top-k Attention
+//!
+//! Rust + JAX + Pallas reproduction of *"HATA: Trainable and
+//! Hardware-Efficient Hash-Aware Top-k Attention for Scalable Large Model
+//! Inference"* (ACL Findings 2025).
+//!
+//! This crate is Layer 3 of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): hash encoding,
+//!   Hamming scoring, fused gather + sparse attention. Build-time only.
+//! * **L2** — JAX model (`python/compile/model.py`): transformer fwd with
+//!   the HATA decode step, AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: the serving coordinator (router, continuous
+//!   batcher, prefill/decode scheduler, KV-cache + hash-code cache
+//!   manager), the native CPU inference engine, every baseline top-k /
+//!   compression method the paper compares against, and the PJRT runtime
+//!   that loads the AOT artifacts. Python is never on the request path.
+
+pub mod util;
+pub mod config;
+pub mod tensor;
+pub mod model;
+pub mod attention;
+pub mod kvcache;
+pub mod coordinator;
+pub mod runtime;
+pub mod simulator;
+pub mod bench;

@@ -1,0 +1,416 @@
+//! `hata` CLI — leader entrypoint for the serving coordinator and the
+//! table/figure regeneration commands (DESIGN.md §6).
+//!
+//! Subcommands:
+//!   serve     run the continuous-batching engine over a synthetic load
+//!   generate  one-shot generation from a prompt
+//!   eval      regenerate accuracy tables/figures (--table N | --fig N)
+//!   pjrt      run the AOT HLO artifacts through the PJRT runtime
+//!   info      print model/artifact inventory
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use hata::bench::eval::{fidelity, task_accuracy};
+use hata::bench::report::{fmt, Table};
+use hata::bench::tasks::TaskKind;
+use hata::config::manifest::Manifest;
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::request::Request;
+use hata::coordinator::router::{Policy, Router};
+use hata::kvcache::MethodAux;
+use hata::model::{tokenizer, weights::Weights, Model};
+use hata::util::cli::Args;
+use hata::util::rng::Rng;
+
+const FLAGS: &[&str] = &[
+    "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
+    "requests", "workers", "max-new", "prompt", "artifacts", "rbit",
+    "verbose!", "random-weights!", "out",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, FLAGS, true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("verbose") {
+        hata::util::logger::set_level(hata::util::logger::Level::Debug);
+    }
+    let r = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("pjrt") => cmd_pjrt(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
+  --model NAME      model preset or manifest entry (default hata-mha)
+  --method M        dense|topk|hata|loki|quest|magicpig|streamingllm|h2o|snapkv
+  --budget K        sparse token budget (default 64)
+  --ctx N           task context length (default 512)
+  --samples N       samples per cell (default 10)
+  --table N         regenerate table 1|2|6|7|8|10
+  --fig N           regenerate figure 6|7|8
+  --requests N      serve: number of synthetic requests
+  --workers N       serve: router workers
+  --random-weights  use random weights instead of artifacts (smoke mode)
+  --artifacts DIR   artifact directory (default artifacts)";
+
+/// Load a model: trained artifacts when available, random otherwise.
+fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
+    let name = args.str("model", "hata-mha");
+    let dir = args.str("artifacts", "artifacts");
+    let rbit = args.usize("rbit", 128)?;
+    if !args.flag("random-weights") {
+        if let Ok(manifest) = Manifest::load(&dir) {
+            if let Ok(arts) = manifest.model(&name) {
+                let mut cfg = arts.config.clone();
+                cfg.rbit = rbit;
+                let mut weights = Weights::load(&arts.weights, &cfg)?;
+                if let Some(hw) = arts.hash_weights_for(rbit) {
+                    weights.load_hash(hw, &cfg)?;
+                } else if serve.method == Method::Hata {
+                    bail!("no trained hash weights for rbit={rbit}");
+                }
+                let aux = MethodAux::build(&cfg, serve, None, 7);
+                return Ok(Model::new(cfg, weights, aux));
+            }
+        }
+        eprintln!("note: artifacts not found; falling back to random weights");
+    }
+    let cfg = preset(&name).with_context(|| format!("unknown preset {name}"))?;
+    let mut rng = Rng::new(0);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, serve, None, 7);
+    Ok(Model::new(cfg, weights, aux))
+}
+
+fn serve_config(args: &Args) -> Result<ServeConfig> {
+    let method = Method::parse(&args.str("method", "hata")).context("bad --method")?;
+    Ok(ServeConfig { method, budget: args.usize("budget", 64)?, ..Default::default() })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let serve = serve_config(args)?;
+    let model = load_model(args, &serve)?;
+    let prompt = args.str("prompt", "&qt=VK; the quick brown fox ?qt=");
+    let max_new = args.usize("max-new", 8)?;
+    let selector = hata::model::make_selector(&serve);
+    let mut cache = hata::kvcache::SeqKvCache::new(&model.cfg, &serve);
+    let mut state = hata::model::SeqState::new(&model.cfg);
+    let mut scratch = hata::model::DecodeScratch::new(&model.cfg);
+    let out = model.generate(
+        &tokenizer::encode(&prompt),
+        max_new,
+        &serve,
+        hata::model::sel_ref(&selector),
+        &mut cache,
+        &mut state,
+        &mut scratch,
+    );
+    println!("prompt: {prompt}");
+    println!("output: {}", tokenizer::decode(&out));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let serve = serve_config(args)?;
+    let model = Arc::new(load_model(args, &serve)?);
+    let n_requests = args.usize("requests", 16)?;
+    let workers = args.usize("workers", 1)?;
+    let ctx = args.usize("ctx", 256)?;
+    let max_new = args.usize("max-new", 8)?;
+    let corpus = hata::bench::tasks::Corpus::new(0);
+    let mut rng = Rng::new(args.u64("seed", 0)?);
+    let mut router = Router::new(Arc::clone(&model), serve.clone(), workers, Policy::LeastLoaded);
+    let t0 = std::time::Instant::now();
+    for id in 0..n_requests {
+        let (prompt, _) =
+            hata::bench::tasks::make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
+        router.submit(Request {
+            id: id as u64,
+            prompt: tokenizer::encode(&prompt),
+            max_new_tokens: max_new,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let responses = router.drain();
+    let wall = t0.elapsed().as_secs_f64();
+    let gen: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "served {} requests ({} tokens generated) in {:.2}s -> {:.1} tok/s, method={}, budget={}",
+        responses.len(),
+        gen,
+        wall,
+        gen as f64 / wall,
+        serve.method.name(),
+        serve.budget
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str("artifacts", "artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            for model in &m.models {
+                println!("model {}: {:?}", model.config.name, model.config);
+                for (rbit, p) in &model.hash_weights {
+                    println!("  hash rbit={rbit}: {}", p.display());
+                }
+                for e in &model.hlo {
+                    println!("  hlo {} bucket={} budget={}", e.kind, e.bucket, e.budget);
+                }
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); presets: hata-mha hata-gqa mirror-*"),
+    }
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let dir = args.str("artifacts", "artifacts");
+    let name = args.str("model", "hata-mha");
+    let manifest = Manifest::load(&dir)?;
+    let arts = manifest.model(&name)?;
+    let ctx = args.usize("ctx", 192)?;
+    let max_new = args.usize("max-new", 6)?;
+    let budget = args.usize("budget", 64)?;
+    let pm = hata::runtime::PjrtModel::load(arts, ctx + max_new)?;
+    let corpus = hata::bench::tasks::Corpus::new(0);
+    let mut rng = Rng::new(1);
+    let (prompt, ans) =
+        hata::bench::tasks::make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
+    let toks = tokenizer::encode(&prompt);
+    let dense = pm.generate(&toks, max_new, 0)?;
+    let hata_out = pm.generate(&toks, max_new, budget)?;
+    println!("task answer : {ans}");
+    println!("pjrt dense  : {}", tokenizer::decode(&dense));
+    println!("pjrt hata   : {}", tokenizer::decode(&hata_out));
+    Ok(())
+}
+
+// ---------------------------------------------------------------- eval
+
+/// Method columns shared by the table proxies (paper Tables 1/2).
+fn table_methods() -> Vec<(Method, bool)> {
+    vec![
+        (Method::Dense, false),
+        (Method::Loki, true),
+        (Method::Quest, true),
+        (Method::MagicPig, true),
+        (Method::StreamingLlm, true),
+        (Method::H2o, true),
+        (Method::SnapKv, true),
+        (Method::Hata, true),
+    ]
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let table = args.usize("table", 0)?;
+    let fig = args.usize("fig", 0)?;
+    let samples = args.usize("samples", 10)?;
+    let seed = args.u64("seed", 0)?;
+    let out_dir = args.str("out", "bench_results");
+    match (table, fig) {
+        (1, _) | (2, _) | (6, _) | (7, _) | (8, _) | (10, _) => {
+            eval_accuracy_table(args, table, samples, seed, &out_dir)
+        }
+        (_, 6) => eval_fig6(args, samples.max(1), seed, &out_dir),
+        (_, 7) => eval_budget_ablation(args, samples, seed, &out_dir),
+        (_, 8) => eval_rbit_ablation(args, samples, seed, &out_dir),
+        _ => bail!("pass --table 1|2|6|7|8|10 or --fig 6|7|8"),
+    }
+}
+
+fn eval_accuracy_table(
+    args: &Args,
+    table: usize,
+    samples: usize,
+    seed: u64,
+    out: &str,
+) -> Result<()> {
+    // table -> (model, ctx, budget, kinds); see DESIGN.md §6
+    let (default_model, ctx, budget, kinds): (&str, usize, usize, Vec<TaskKind>) = match table {
+        1 | 6 | 8 => (
+            "hata-mha",
+            512,
+            64,
+            vec![TaskKind::Qa, TaskKind::Ns, TaskKind::Fwe, TaskKind::Vt],
+        ),
+        2 | 10 => ("hata-mha", 1024, 32, TaskKind::all().to_vec()),
+        7 => ("hata-gqa", 512, 64, vec![TaskKind::Ns, TaskKind::Nmk, TaskKind::Qa]),
+        _ => bail!("unknown table {table}"),
+    };
+    let model_name = args.str("model", default_model);
+    let ctx = args.usize("ctx", ctx)?;
+    let budget = args.usize("budget", budget)?;
+    let mut header = vec!["Method".to_string()];
+    header.extend(kinds.iter().map(|k| k.name().to_string()));
+    header.push("AVG".into());
+    header.push("recall@k".into());
+    header.push("out_err".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!(
+            "Table {table} proxy: accuracy on synthetic suite (model={model_name}, ctx={ctx}, budget={budget})"
+        ),
+        &header_refs,
+    );
+    let methods: Vec<(Method, bool)> = if table == 7 {
+        vec![(Method::Dense, false), (Method::ExactTopK, true), (Method::Hata, true)]
+    } else {
+        table_methods()
+    };
+    for (method, uses_budget) in methods {
+        let serve = ServeConfig {
+            method,
+            budget: if uses_budget { budget } else { 0 },
+            ..Default::default()
+        };
+        let model = load_model_named(args, &model_name, &serve)?;
+        let mut row = vec![method.name().to_string()];
+        let mut sum = 0.0;
+        for &kind in &kinds {
+            let acc = task_accuracy(&model, &serve, kind, ctx, samples, seed, None);
+            sum += acc;
+            row.push(fmt(100.0 * acc));
+        }
+        row.push(fmt(100.0 * sum / kinds.len() as f64));
+        if method != Method::Dense {
+            let f = fidelity(&model, &serve, ctx.min(512), 3.min(samples), seed + 1);
+            row.push(fmt(f.recall));
+            row.push(fmt(f.output_err));
+        } else {
+            row.push("-".into());
+            row.push("-".into());
+        }
+        t.row(row);
+        eprintln!("[eval] {} done", method.name());
+    }
+    t.write_csv(out, &format!("table{table}"))?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn load_model_named(args: &Args, name: &str, serve: &ServeConfig) -> Result<Model> {
+    let mut argv = vec!["--model".to_string(), name.to_string()];
+    if args.flag("random-weights") {
+        argv.push("--random-weights".into());
+    }
+    argv.push("--artifacts".into());
+    argv.push(args.str("artifacts", "artifacts"));
+    let sub = Args::parse(&argv, FLAGS, false).unwrap();
+    load_model(&sub, serve)
+}
+
+fn eval_fig6(args: &Args, samples: usize, seed: u64, out: &str) -> Result<()> {
+    // Needle-in-a-haystack heatmap: ctx x depth for dense and hata.
+    let ctxs = args.usize_list("ctx", &[128, 256, 512, 1024])?;
+    let depths = [0.1, 0.3, 0.5, 0.7, 0.9];
+    for method in [Method::Dense, Method::Hata] {
+        let serve = ServeConfig {
+            method,
+            budget: if method == Method::Dense { 0 } else { 48 },
+            ..Default::default()
+        };
+        let model = load_model(args, &serve)?;
+        let mut t = Table::new(
+            &format!("Fig 6 proxy: NIAH accuracy, method={}", method.name()),
+            &["ctx", "d=0.1", "d=0.3", "d=0.5", "d=0.7", "d=0.9"],
+        );
+        for &ctx in &ctxs {
+            let mut row = vec![ctx.to_string()];
+            for &d in &depths {
+                let acc =
+                    task_accuracy(&model, &serve, TaskKind::Ns, ctx, samples, seed, Some(d));
+                row.push(fmt(100.0 * acc));
+            }
+            t.row(row);
+        }
+        println!("{}", t.render());
+        t.write_csv(out, &format!("fig6_{}", method.name()))?;
+    }
+    Ok(())
+}
+
+fn eval_budget_ablation(args: &Args, samples: usize, seed: u64, out: &str) -> Result<()> {
+    let ctx = args.usize("ctx", 512)?;
+    let budgets = args.usize_list("budget", &[8, 16, 32, 64, 128])?;
+    let mut t = Table::new(
+        &format!("Fig 7 proxy: token-budget ablation (ctx={ctx})"),
+        &["budget", "hata", "quest", "loki", "recall_hata"],
+    );
+    for &b in &budgets {
+        let mut row = vec![b.to_string()];
+        for method in [Method::Hata, Method::Quest, Method::Loki] {
+            let serve = ServeConfig { method, budget: b, ..Default::default() };
+            let model = load_model(args, &serve)?;
+            let acc = task_accuracy(&model, &serve, TaskKind::Ns, ctx, samples, seed, None);
+            row.push(fmt(100.0 * acc));
+        }
+        let serve = ServeConfig { method: Method::Hata, budget: b, ..Default::default() };
+        let model = load_model(args, &serve)?;
+        let f = fidelity(&model, &serve, ctx, 3.min(samples), seed + 1);
+        row.push(fmt(f.recall));
+        t.row(row);
+        eprintln!("[eval] budget={b} done");
+    }
+    t.write_csv(out, "fig7")?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn eval_rbit_ablation(args: &Args, samples: usize, seed: u64, out: &str) -> Result<()> {
+    let ctx = args.usize("ctx", 512)?;
+    let rbits = args.usize_list("rbit", &[64, 128, 256])?;
+    let budget = args.usize("budget", 48)?;
+    let mut t = Table::new(
+        &format!("Fig 8 proxy: hash-bit ablation (ctx={ctx}, budget={budget})"),
+        &["rbit", "NS acc", "recall@k", "out_err"],
+    );
+    for &rbit in &rbits {
+        let serve = ServeConfig { method: Method::Hata, budget, ..Default::default() };
+        let mut argv = vec!["--rbit".to_string(), rbit.to_string()];
+        if args.flag("random-weights") {
+            argv.push("--random-weights".into());
+        }
+        argv.push("--artifacts".into());
+        argv.push(args.str("artifacts", "artifacts"));
+        argv.push("--model".into());
+        argv.push(args.str("model", "hata-mha"));
+        let sub = Args::parse(&argv, FLAGS, false).unwrap();
+        let model = match load_model(&sub, &serve) {
+            Ok(m) => m,
+            Err(e) => {
+                println!("rbit={rbit}: skipped ({e})");
+                continue;
+            }
+        };
+        let acc = task_accuracy(&model, &serve, TaskKind::Ns, ctx, samples, seed, None);
+        let f = fidelity(&model, &serve, ctx, 3.min(samples), seed + 1);
+        t.row(vec![rbit.to_string(), fmt(100.0 * acc), fmt(f.recall), fmt(f.output_err)]);
+        eprintln!("[eval] rbit={rbit} done");
+    }
+    t.write_csv(out, "fig8")?;
+    println!("{}", t.render());
+    Ok(())
+}

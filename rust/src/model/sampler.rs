@@ -1,0 +1,64 @@
+//! Token sampling: greedy and temperature (seeded).
+
+use crate::tensor::ops::argmax;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampler {
+    Greedy,
+    Temperature(f32),
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::Temperature(t) => {
+                let t = t.max(1e-3);
+                let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f32> = logits.iter().map(|&l| ((l - max) / t).exp()).collect();
+                let total: f32 = weights.iter().sum();
+                let mut r = rng.f32() * total;
+                for (i, &w) in weights.iter().enumerate() {
+                    if r < w {
+                        return i as u32;
+                    }
+                    r -= w;
+                }
+                (weights.len() - 1) as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 2.0, -1.0];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(0);
+        let logits = [0.0, 5.0, 1.0];
+        for _ in 0..50 {
+            assert_eq!(Sampler::Temperature(0.01).sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(7);
+        let logits = [1.0, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[Sampler::Temperature(1.0).sample(&logits, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,33 @@
+//! Byte-level tokenizer: token id == ASCII byte (vocab 128), matching
+//! `python/compile/data.py` `encode`/`decode`.
+
+/// Encode text to token ids (non-ASCII replaced with '?').
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| if b < 128 { b as u32 } else { b'?' as u32 }).collect()
+}
+
+/// Decode token ids to text (ids masked to 7 bits).
+pub fn decode(ids: &[u32]) -> String {
+    ids.iter().map(|&i| ((i & 0x7F) as u8) as char).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "&ab=CD;?ab=";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn non_ascii_replaced() {
+        assert_eq!(decode(&encode("é")), "??"); // 2 utf-8 bytes
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        assert!(encode("hello WORLD 123 &=?;").iter().all(|&i| i < 128));
+    }
+}

@@ -1,0 +1,201 @@
+//! Weight loading: the `.npz` checkpoints trained by
+//! `python -m compile.train_model` / `train_hash`, in the flat dotted-key
+//! layout both sides share (aot.py `param_order`).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::io::TensorStore;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One transformer block's parameters.
+pub struct LayerWeights {
+    pub attn_norm: Tensor,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub mlp_norm: Tensor,
+    pub w_gate: Tensor,
+    pub w_up: Tensor,
+    pub w_down: Tensor,
+}
+
+/// Full model parameters + trained hash weights.
+pub struct Weights {
+    pub embed: Tensor,
+    pub final_norm: Tensor,
+    pub lm_head: Tensor,
+    pub layers: Vec<LayerWeights>,
+    /// Per (layer, kv-head) hash projection, each [head_dim * rbit]
+    /// row-major. Empty when no hash weights were loaded.
+    pub hash: Vec<Vec<f32>>,
+    hash_rbit: usize,
+}
+
+impl Weights {
+    /// Load LM weights from an .npz checkpoint.
+    pub fn load(path: &std::path::Path, cfg: &ModelConfig) -> Result<Weights> {
+        let store = TensorStore::load(path)?;
+        let get = |name: &str| -> Result<Tensor> { Ok(store.f32(name)?.clone()) };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: get(&format!("layers.{i}.attn_norm"))?,
+                wq: get(&format!("layers.{i}.wq"))?,
+                wk: get(&format!("layers.{i}.wk"))?,
+                wv: get(&format!("layers.{i}.wv"))?,
+                wo: get(&format!("layers.{i}.wo"))?,
+                mlp_norm: get(&format!("layers.{i}.mlp_norm"))?,
+                w_gate: get(&format!("layers.{i}.w_gate"))?,
+                w_up: get(&format!("layers.{i}.w_up"))?,
+                w_down: get(&format!("layers.{i}.w_down"))?,
+            });
+        }
+        let w = Weights {
+            embed: get("embed")?,
+            final_norm: get("final_norm")?,
+            lm_head: get("lm_head")?,
+            layers,
+            hash: Vec::new(),
+            hash_rbit: 0,
+        };
+        w.validate(cfg)?;
+        Ok(w)
+    }
+
+    /// Load trained hash weights ([L, KV, dh, rbit] npz, key "hash_w").
+    pub fn load_hash(&mut self, path: &std::path::Path, cfg: &ModelConfig) -> Result<()> {
+        let store = TensorStore::load(path)?;
+        let t = store.f32("hash_w")?;
+        let shape = t.shape();
+        ensure!(
+            shape.len() == 4
+                && shape[0] == cfg.n_layers
+                && shape[1] == cfg.n_kv_heads
+                && shape[2] == cfg.head_dim,
+            "hash_w shape {shape:?} does not match config"
+        );
+        let rbit = shape[3];
+        let per = cfg.head_dim * rbit;
+        self.hash = (0..cfg.n_layers * cfg.n_kv_heads)
+            .map(|h| t.data()[h * per..(h + 1) * per].to_vec())
+            .collect();
+        self.hash_rbit = rbit;
+        Ok(())
+    }
+
+    /// Hash projection for one head ([dh * rbit] row-major), empty slice
+    /// when hashes are not loaded (dense-only serving).
+    pub fn hash_head(&self, layer: usize, kv: usize) -> &[f32] {
+        if self.hash.is_empty() {
+            &[]
+        } else {
+            &self.hash[layer * (self.hash.len() / self.layers.len()) + kv]
+        }
+    }
+
+    pub fn hash_rbit(&self) -> usize {
+        self.hash_rbit
+    }
+
+    fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        ensure!(self.embed.shape() == [cfg.vocab, cfg.d_model], "embed shape");
+        ensure!(
+            self.lm_head.shape() == [cfg.d_model, cfg.vocab],
+            "lm_head shape {:?}",
+            self.lm_head.shape()
+        );
+        for (i, l) in self.layers.iter().enumerate() {
+            ensure!(
+                l.wq.shape() == [cfg.d_model, cfg.n_heads * cfg.head_dim],
+                "layer {i} wq shape"
+            );
+            ensure!(
+                l.wk.shape() == [cfg.d_model, cfg.n_kv_heads * cfg.head_dim],
+                "layer {i} wk shape"
+            );
+            ensure!(
+                l.w_down.shape() == [cfg.ffn_hidden, cfg.d_model],
+                "layer {i} w_down shape"
+            );
+        }
+        Ok(())
+    }
+
+    /// Random weights for tests and synthetic perf sweeps (never trained).
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Weights {
+        let t = |rng: &mut Rng, shape: Vec<usize>, scale: f32| {
+            let n = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal() * scale).collect())
+        };
+        let qd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.n_kv_heads * cfg.head_dim;
+        let s = 1.0 / (cfg.d_model as f32).sqrt();
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+                wq: t(rng, vec![cfg.d_model, qd], s),
+                wk: t(rng, vec![cfg.d_model, kvd], s),
+                wv: t(rng, vec![cfg.d_model, kvd], s),
+                wo: t(rng, vec![qd, cfg.d_model], s),
+                mlp_norm: Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+                w_gate: t(rng, vec![cfg.d_model, cfg.ffn_hidden], s),
+                w_up: t(rng, vec![cfg.d_model, cfg.ffn_hidden], s),
+                w_down: t(rng, vec![cfg.ffn_hidden, cfg.d_model], s),
+            })
+            .collect();
+        let hash = (0..cfg.n_layers * cfg.n_kv_heads)
+            .map(|_| {
+                let scale = 1.0 / (cfg.head_dim as f32).sqrt();
+                (0..cfg.head_dim * cfg.rbit).map(|_| rng.normal() * scale).collect()
+            })
+            .collect();
+        Weights {
+            embed: t(rng, vec![cfg.vocab, cfg.d_model], 0.02),
+            final_norm: Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+            lm_head: t(rng, vec![cfg.d_model, cfg.vocab], s),
+            layers,
+            hash,
+            hash_rbit: cfg.rbit,
+        }
+    }
+
+    /// Load everything from an artifact manifest entry.
+    pub fn from_artifacts(
+        arts: &crate::config::manifest::ModelArtifacts,
+        rbit: usize,
+    ) -> Result<Weights> {
+        let mut w = Weights::load(&arts.weights, &arts.config)?;
+        let hw = arts
+            .hash_weights_for(rbit)
+            .with_context(|| format!("no hash weights for rbit {rbit}"))?;
+        w.load_hash(hw, &arts.config)?;
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn random_weights_validate() {
+        let cfg = preset("hata-gqa").unwrap();
+        let mut rng = Rng::new(0);
+        let w = Weights::random(&cfg, &mut rng);
+        assert!(w.validate(&cfg).is_ok());
+        assert_eq!(w.hash.len(), cfg.n_layers * cfg.n_kv_heads);
+        assert_eq!(w.hash_head(1, 0).len(), cfg.head_dim * cfg.rbit);
+    }
+
+    #[test]
+    fn hash_head_indexing_distinct() {
+        let cfg = preset("hata-mha").unwrap();
+        let mut rng = Rng::new(1);
+        let w = Weights::random(&cfg, &mut rng);
+        assert_ne!(w.hash_head(0, 0), w.hash_head(1, 3));
+    }
+}

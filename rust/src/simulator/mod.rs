@@ -1,0 +1,7 @@
+//! Cost models: memory-traffic accounting (the quantity the paper's
+//! speedups are made of), a PCIe transfer model for the offloading
+//! experiments (Table 3), and TPU roofline estimates for the L1 kernels.
+
+pub mod hbm;
+pub mod pcie;
+pub mod roofline;

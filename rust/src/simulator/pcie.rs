@@ -1,0 +1,105 @@
+//! PCIe transfer cost model (Table 3 substrate).
+//!
+//! The paper's offloading testbed: PCIe 4.0 x16 (~32 GB/s peak, ~25 GB/s
+//! effective) with 48 CPU threads. We model transfer time as
+//! `latency + bytes / bandwidth` with a configurable effective bandwidth,
+//! and expose an accumulating ledger so benches can report modeled
+//! transfer seconds alongside measured compute seconds (DESIGN.md §4).
+
+/// One direction of a PCIe link.
+#[derive(Clone, Copy, Debug)]
+pub struct PcieModel {
+    /// effective bandwidth, bytes/second
+    pub bandwidth: f64,
+    /// per-transfer latency, seconds (DMA setup + doorbell)
+    pub latency: f64,
+}
+
+impl PcieModel {
+    /// PCIe 4.0 x16 effective numbers (25 GB/s, 10 us setup).
+    pub fn gen4_x16() -> Self {
+        PcieModel { bandwidth: 25.0e9, latency: 10e-6 }
+    }
+
+    /// Seconds to move `bytes` in one DMA.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Seconds to move `bytes` split into `n` scattered row reads
+    /// (gathers of non-contiguous KV rows pay per-row overhead, amortized
+    /// 8x by batching descriptors).
+    pub fn gather_time(&self, bytes: usize, rows: usize) -> f64 {
+        let batches = rows.div_ceil(8);
+        self.latency * batches as f64 + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Accumulates modeled transfer time + bytes for a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferLedger {
+    pub bytes: u64,
+    pub seconds: f64,
+    pub transfers: u64,
+}
+
+impl TransferLedger {
+    pub fn add(&mut self, model: &PcieModel, bytes: usize) {
+        self.bytes += bytes as u64;
+        self.seconds += model.transfer_time(bytes);
+        self.transfers += 1;
+    }
+
+    pub fn add_gather(&mut self, model: &PcieModel, bytes: usize, rows: usize) {
+        self.bytes += bytes as u64;
+        self.seconds += model.gather_time(bytes, rows);
+        self.transfers += 1;
+    }
+
+    /// Overlap compute and transfer: wall time of a step that computes
+    /// for `compute_s` while this ledger's last transfer streams.
+    pub fn overlapped(compute_s: f64, transfer_s: f64) -> f64 {
+        compute_s.max(transfer_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let m = PcieModel::gen4_x16();
+        let t = m.transfer_time(25_000_000_000usize);
+        assert!((t - 1.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let m = PcieModel::gen4_x16();
+        assert!(m.transfer_time(64) < 11e-6);
+        assert!(m.transfer_time(64) >= 10e-6);
+    }
+
+    #[test]
+    fn gather_pays_per_batch_latency() {
+        let m = PcieModel::gen4_x16();
+        let contiguous = m.transfer_time(1 << 20);
+        let scattered = m.gather_time(1 << 20, 1024);
+        assert!(scattered > contiguous);
+        // 1024 rows -> 128 descriptor batches
+        assert!((scattered - contiguous - 127.0 * m.latency).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let m = PcieModel::gen4_x16();
+        let mut l = TransferLedger::default();
+        l.add(&m, 1000);
+        l.add_gather(&m, 2000, 16);
+        assert_eq!(l.bytes, 3000);
+        assert_eq!(l.transfers, 2);
+        assert!(l.seconds > 0.0);
+        assert_eq!(TransferLedger::overlapped(2.0, 1.0), 2.0);
+    }
+}

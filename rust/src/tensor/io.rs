@@ -1,0 +1,115 @@
+//! `.npz` checkpoint loading via the `xla` crate's npy reader.
+//!
+//! The Python build path saves everything as f32 or i32 (the xla 0.5.1
+//! npy reader has no unsigned-32 descr); packed hash codes travel as i32
+//! bit patterns and are reinterpreted on this side.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::FromRawBytes;
+
+use super::Tensor;
+
+/// A named array loaded from an .npz: f32 or i32 payload.
+#[derive(Clone, Debug)]
+pub enum Array {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Array {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Array::F32(t) => t.shape(),
+            Array::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Array::F32(t) => Ok(t),
+            Array::I32 { .. } => bail!("array is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Array::I32 { data, .. } => Ok(data),
+            Array::F32(_) => bail!("array is f32, expected i32"),
+        }
+    }
+
+    /// Reinterpret an i32 payload as packed u32 hash-code words.
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        Ok(self.as_i32()?.iter().map(|&x| x as u32).collect())
+    }
+}
+
+/// All arrays of one .npz file, by name.
+#[derive(Debug, Default)]
+pub struct TensorStore {
+    arrays: BTreeMap<String, Array>,
+}
+
+impl TensorStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let lits = xla::Literal::read_npz(path, &())
+            .with_context(|| format!("reading npz {}", path.display()))?;
+        let mut arrays = BTreeMap::new();
+        for (name, lit) in lits {
+            let shape: Vec<usize> = lit
+                .array_shape()
+                .context("npz entry has no array shape")?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            let arr = match lit.ty()? {
+                xla::ElementType::F32 => {
+                    Array::F32(Tensor::new(shape, lit.to_vec::<f32>()?))
+                }
+                xla::ElementType::S32 => Array::I32 { shape, data: lit.to_vec::<i32>()? },
+                xla::ElementType::F64 => {
+                    let v: Vec<f64> = lit.to_vec()?;
+                    Array::F32(Tensor::new(shape, v.into_iter().map(|x| x as f32).collect()))
+                }
+                xla::ElementType::S64 => {
+                    let v: Vec<i64> = lit.to_vec()?;
+                    Array::I32 { shape, data: v.into_iter().map(|x| x as i32).collect() }
+                }
+                other => bail!("unsupported npz dtype {other:?} for {name}"),
+            };
+            arrays.insert(name, arr);
+        }
+        Ok(TensorStore { arrays })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Array> {
+        self.arrays
+            .get(name)
+            .with_context(|| format!("npz missing array {name:?}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&[i32]> {
+        self.get(name)?.as_i32()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.arrays.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrays.is_empty()
+    }
+}

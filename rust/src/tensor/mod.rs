@@ -1,0 +1,116 @@
+//! Dense f32 tensors + the numeric primitives the native engine uses.
+//!
+//! The serving hot path works on raw `&[f32]` slices with explicit dims
+//! (no shape bookkeeping per decode step); `Tensor` carries shapes for
+//! weight storage, goldens and tests. `io` loads `.npz` checkpoints via
+//! the `xla` crate's npy reader.
+
+pub mod io;
+pub mod ops;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Flatten leading dims: view as [rows, cols] where cols = last dim.
+    pub fn as_matrix(&self) -> (usize, usize, &[f32]) {
+        let cols = *self.shape.last().expect("scalar tensor");
+        (self.data.len() / cols, cols, &self.data)
+    }
+
+    /// Strict reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    pub fn index4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        let s = &self.shape;
+        assert_eq!(s.len(), 4);
+        self.data[((a * s[1] + b) * s[2] + c) * s[3] + d]
+    }
+
+    /// Contiguous slice `[b, c, :]` of a 4-D tensor at index [a, b, c, :].
+    pub fn slice4(&self, a: usize, b: usize, c: usize) -> &[f32] {
+        let s = &self.shape;
+        assert_eq!(s.len(), 4);
+        let off = ((a * s[1] + b) * s[2] + c) * s[3];
+        &self.data[off..off + s[3]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn slice4_addresses_correctly() {
+        let data: Vec<f32> = (0..2 * 3 * 4 * 5).map(|x| x as f32).collect();
+        let t = Tensor::new(vec![2, 3, 4, 5], data);
+        assert_eq!(t.slice4(1, 2, 3)[0], t.index4(1, 2, 3, 0));
+        assert_eq!(t.slice4(0, 0, 0), &[0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+}

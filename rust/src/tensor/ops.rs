@@ -1,0 +1,202 @@
+//! Numeric primitives shared by the native transformer and baselines.
+//!
+//! These run on raw slices so the decode loop allocates nothing; see
+//! EXPERIMENTS.md §Perf for the optimization history.
+
+/// y += A[row] dot products: `y[j] = sum_i x[i] * a[i, j]` for A [n, m].
+/// (vector–matrix product, the decode-time projection shape x @ W).
+pub fn vecmat(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+    let n = x.len();
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(y.len(), m);
+    y.fill(0.0);
+    // row-major A: accumulate row-by-row, which is sequential in memory.
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a[i * m..(i + 1) * m];
+        for (yj, &aij) in y.iter_mut().zip(row) {
+            *yj += xi * aij;
+        }
+    }
+}
+
+/// C = A @ B for row-major A [n, k], B [k, m] -> C [n, m] (ikj order).
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(c.len(), n * m);
+    c.fill(0.0);
+    for i in 0..n {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * m..(p + 1) * m];
+            let crow = &mut c[i * m..(i + 1) * m];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+/// dot(a, b) with 4-way unrolling (autovectorizes well).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (x, y) = (&a[i * 4..i * 4 + 4], &b[i * 4..i * 4 + 4]);
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMSNorm: y = x / rms(x) * g.
+pub fn rms_norm(x: &[f32], g: &[f32], y: &mut [f32], eps: f32) {
+    let n = x.len() as f32;
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / n;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((yi, &xi), &gi) in y.iter_mut().zip(x).zip(g) {
+        *yi = xi * inv * gi;
+    }
+}
+
+/// Rotary position embedding, matching python/compile/model.py `rope`:
+/// pairs (x[i], x[i + half]) rotated by angle pos * theta^(-i/half).
+pub fn rope_inplace(x: &mut [f32], pos: usize, theta: f32) {
+    let dh = x.len();
+    let half = dh / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * cos - b * sin;
+        x[i + half] = a * sin + b * cos;
+    }
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// argmax over a slice (first max wins).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecmat_matches_naive() {
+        let x = [1.0, 2.0, 3.0];
+        let a = [1.0, 0.0, 0.0, 1.0, 2.0, 0.0]; // [3, 2]
+        let mut y = [0.0; 2];
+        vecmat(&x, &a, 2, &mut y);
+        assert_eq!(y, [1.0 + 6.0, 2.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = [1.0, 2.0, 3.0, 4.0]; // [2,2]
+        let eye = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &eye, 2, 2, 2, &mut c);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let a: Vec<f32> = (0..13).map(|x| x as f32).collect();
+        let b: Vec<f32> = (0..13).map(|x| (x * 2) as f32).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1000.0, 1001.0, 999.0];
+        softmax(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn rms_norm_unit_gain() {
+        let x = [3.0, 4.0];
+        let g = [1.0, 1.0];
+        let mut y = [0.0; 2];
+        rms_norm(&x, &g, &mut y, 0.0);
+        let rms = ((9.0 + 16.0) / 2.0f32).sqrt();
+        assert!((y[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((y[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_pos0_is_identity() {
+        let mut x = vec![0.5, -1.0, 2.0, 3.0];
+        let orig = x.clone();
+        rope_inplace(&mut x, 0, 10000.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope_inplace(&mut x, 17, 10000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

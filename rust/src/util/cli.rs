@@ -1,0 +1,179 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Unknown flags are an error, which catches typos in
+//! bench scripts early.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{0}: cannot parse {1:?}")]
+    BadValue(String, String),
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `spec` lists known flag names; names ending in
+    /// `!` are boolean (take no value).
+    pub fn parse(argv: &[String], spec: &[&str], with_subcommand: bool) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        out.known = spec.iter().map(|s| s.trim_end_matches('!').to_string()).collect();
+        let boolset: Vec<&str> = spec
+            .iter()
+            .filter(|s| s.ends_with('!'))
+            .map(|s| s.trim_end_matches('!'))
+            .collect();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (key, inline) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                if !out.known.contains(&key) {
+                    return Err(CliError::Unknown(key));
+                }
+                if boolset.contains(&key.as_str()) {
+                    out.flags.insert(key, inline.unwrap_or_else(|| "true".into()));
+                } else if let Some(v) = inline {
+                    out.flags.insert(key, v);
+                } else if let Some(v) = it.next() {
+                    out.flags.insert(key, v.clone());
+                } else {
+                    return Err(CliError::MissingValue(key));
+                }
+            } else if with_subcommand && out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list of usize, e.g. `--lens 1024,2048`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(key.to_string(), v.clone()))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = Args::parse(
+            &argv(&["serve", "--model", "hata-mha", "--verbose", "file.txt"]),
+            &["model", "verbose!"],
+            true,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.str("model", ""), "hata-mha");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv(&["--k=32"]), &["k"], false).unwrap();
+        assert_eq!(a.usize("k", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            Args::parse(&argv(&["--nope"]), &["k"], false),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&argv(&["--k"]), &["k"], false),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv(&["--lens", "1,2,3"]), &["lens"], false).unwrap();
+        assert_eq!(a.usize_list("lens", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.usize_list("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&[]), &["x"], false).unwrap();
+        assert_eq!(a.usize("x", 7).unwrap(), 7);
+        assert_eq!(a.f64("x", 0.5).unwrap(), 0.5);
+        assert!(!a.flag("x"));
+    }
+}

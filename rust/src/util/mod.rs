@@ -1,0 +1,15 @@
+//! From-scratch substrates.
+//!
+//! The build image ships no crates.io index beyond the vendored set used by
+//! the `xla` crate (see DESIGN.md §2), so the usual ecosystem pieces —
+//! serde, clap, rand, criterion, rayon — are reimplemented here at the
+//! scale this project needs. Each submodule carries its own unit tests.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pt;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,50 @@
+//! Scoped wall-clock timing helpers used across benches and the engine.
+
+use std::time::Instant;
+
+/// Measure one closure, returning (result, seconds).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure and return per-iteration seconds (after warmup runs).
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// A black-box sink preventing the optimizer from deleting bench bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_result_and_positive_duration() {
+        let (v, secs) = time(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let mut n = 0;
+        let ts = time_iters(2, 5, || n += 1);
+        assert_eq!(ts.len(), 5);
+        assert_eq!(n, 7);
+    }
+}

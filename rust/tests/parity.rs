@@ -1,0 +1,202 @@
+//! Cross-language parity: Rust native engine vs JAX goldens, and the PJRT
+//! runtime vs both. Gated on `artifacts/` (skips cleanly before
+//! `make artifacts`).
+
+use hata::config::manifest::Manifest;
+use hata::config::{Method, ServeConfig};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{make_selector, sel_ref, weights::Weights, DecodeScratch, Model, SeqState};
+use hata::tensor::io::TensorStore;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts").ok()
+}
+
+fn load_model(name: &str, serve: &ServeConfig) -> Option<(Model, TensorStore)> {
+    let m = manifest()?;
+    let arts = m.model(name).ok()?;
+    let mut w = Weights::load(&arts.weights, &arts.config).ok()?;
+    w.load_hash(arts.hash_weights_for(arts.config.rbit)?, &arts.config).ok()?;
+    let goldens = TensorStore::load(m.root.join(format!("{name}.goldens.npz"))).ok()?;
+    let aux = MethodAux::build(&arts.config, serve, None, 7);
+    Some((Model::new(arts.config.clone(), w, aux), goldens))
+}
+
+/// Hash-encode bit-parity: Rust packed u64 words vs Python uint32 pairs.
+#[test]
+fn hash_codes_match_python() {
+    let serve = ServeConfig::default();
+    let Some((model, g)) = load_model("hata-mha", &serve) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let x = g.f32("hash_in").unwrap();
+    let w = g.f32("hash_w0").unwrap();
+    let want_u32 = g.get("hash_codes").unwrap().as_u32().unwrap();
+    let rbit = w.shape()[1];
+    let rows = x.shape()[0];
+    let mut got = Vec::new();
+    for r in 0..rows {
+        hata::attention::hashenc::encode_fused_blocked(x.row(r), w.data(), rbit, &mut got);
+    }
+    // little-endian: two u32 words per u64
+    let words32 = rbit / 32;
+    for r in 0..rows {
+        for wd in 0..rbit / 64 {
+            let lo = want_u32[r * words32 + 2 * wd] as u64;
+            let hi = want_u32[r * words32 + 2 * wd + 1] as u64;
+            assert_eq!(got[r * (rbit / 64) + wd], lo | (hi << 32), "row {r} word {wd}");
+        }
+    }
+    let _ = model;
+}
+
+/// Hamming scores equal the Python oracle's.
+#[test]
+fn hamming_scores_match_python() {
+    let serve = ServeConfig::default();
+    let Some((_, g)) = load_model("hata-mha", &serve) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let codes_u32 = g.get("hash_codes").unwrap().as_u32().unwrap();
+    let want = g.i32("hamming_scores").unwrap();
+    let rbit = 128;
+    let w64 = rbit / 64;
+    let to_u64 = |row: &[u32]| -> Vec<u64> {
+        (0..w64).map(|i| row[2 * i] as u64 | ((row[2 * i + 1] as u64) << 32)).collect()
+    };
+    let words32 = rbit / 32;
+    let rows: Vec<Vec<u64>> =
+        (0..codes_u32.len() / words32).map(|r| to_u64(&codes_u32[r * words32..(r + 1) * words32])).collect();
+    let qn = 2; // goldens: first 2 rows are queries
+    let kn = rows.len() - qn;
+    let mut kflat = Vec::new();
+    for k in &rows[qn..] {
+        kflat.extend_from_slice(k);
+    }
+    let mut out = Vec::new();
+    for (qi, q) in rows[..qn].iter().enumerate() {
+        hata::attention::hamming::scores_word(q, &kflat, rbit, &mut out);
+        for ki in 0..kn {
+            assert_eq!(out[ki], want[qi * kn + ki], "q{qi} k{ki}");
+        }
+    }
+}
+
+/// Native Rust prefill reproduces the JAX prefill: last-token logits,
+/// K cache and code cache.
+#[test]
+fn native_prefill_matches_jax() {
+    let serve = ServeConfig { method: Method::Hata, budget: 48, ..Default::default() };
+    let Some((model, g)) = load_model("hata-mha", &serve) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let prompt: Vec<u32> = g.i32("prompt_tokens").unwrap().iter().map(|&t| t as u32).collect();
+    let want_logits = g.f32("prefill_logits").unwrap();
+    let want_k = g.f32("prefill_kcache").unwrap(); // [L, KV, s, dh]
+    let want_codes = g.get("prefill_codecache").unwrap().as_u32().unwrap();
+    let mut cache = SeqKvCache::new(&model.cfg, &serve);
+    let mut state = SeqState::new(&model.cfg);
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    model.prefill(&prompt, &mut cache, &mut state, &serve, &mut scratch);
+    // logits
+    let max_err = scratch
+        .logits
+        .iter()
+        .zip(want_logits.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 2e-3, "prefill logits max err {max_err}");
+    // K cache rows
+    let (dh, s) = (model.cfg.head_dim, prompt.len());
+    for li in 0..model.cfg.n_layers {
+        for kv in 0..model.cfg.n_kv_heads {
+            let got = cache.k_slice(li, kv);
+            for t in (0..s).step_by(37) {
+                let want_row = want_k.slice4(li, kv, t);
+                for i in 0..dh {
+                    assert!(
+                        (got[t * dh + i] - want_row[i]).abs() < 2e-3,
+                        "kcache l{li} kv{kv} t{t}"
+                    );
+                }
+            }
+            // code cache: compare packed bits (u32 pairs vs u64)
+            let words32 = model.cfg.rbit / 32;
+            let gotc = cache.codes_slice(li, kv);
+            for t in (0..s).step_by(53) {
+                let base = ((li * model.cfg.n_kv_heads + kv) * s + t) * words32;
+                for wd in 0..model.cfg.rbit / 64 {
+                    let lo = want_codes[base + 2 * wd] as u64;
+                    let hi = want_codes[base + 2 * wd + 1] as u64;
+                    let want = lo | (hi << 32);
+                    let got = gotc[t * (model.cfg.rbit / 64) + wd];
+                    let diff = (want ^ got).count_ones();
+                    // borderline sign(0^-) flips tolerated on <=2 bits
+                    assert!(diff <= 2, "codecache l{li} kv{kv} t{t}: {diff} bits differ");
+                }
+            }
+        }
+    }
+}
+
+/// Greedy generations (dense and HATA) match JAX end-to-end.
+#[test]
+fn native_generation_matches_jax() {
+    for (budget, key) in [(0usize, "gen_dense"), (48, "gen_hata")] {
+        let serve = ServeConfig {
+            method: if budget == 0 { Method::Dense } else { Method::Hata },
+            budget,
+            ..Default::default()
+        };
+        let Some((model, g)) = load_model("hata-mha", &serve) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let prompt: Vec<u32> =
+            g.i32("prompt_tokens").unwrap().iter().map(|&t| t as u32).collect();
+        let want: Vec<u32> = g.i32(key).unwrap().iter().map(|&t| t as u32).collect();
+        let selector = make_selector(&serve);
+        let mut cache = SeqKvCache::new(&model.cfg, &serve);
+        let mut state = SeqState::new(&model.cfg);
+        let mut scratch = DecodeScratch::new(&model.cfg);
+        let out = model.generate(
+            &prompt,
+            want.len(),
+            &serve,
+            sel_ref(&selector),
+            &mut cache,
+            &mut state,
+            &mut scratch,
+        );
+        assert_eq!(out, want, "budget {budget}");
+    }
+}
+
+/// PJRT runtime executes the AOT graphs and agrees with the native engine.
+#[test]
+fn pjrt_generation_matches_native_and_jax() {
+    let serve = ServeConfig { method: Method::Hata, budget: 64, ..Default::default() };
+    let Some((_, g)) = load_model("hata-mha", &serve) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = manifest().unwrap();
+    let arts = m.model("hata-mha").unwrap();
+    let prompt: Vec<u32> = g.i32("prompt_tokens").unwrap().iter().map(|&t| t as u32).collect();
+    let want_dense: Vec<u32> = g.i32("gen_dense").unwrap().iter().map(|&t| t as u32).collect();
+    let pm = match hata::runtime::PjrtModel::load(arts, prompt.len() + want_dense.len()) {
+        Ok(pm) => pm,
+        Err(e) => {
+            eprintln!("skipping: no usable PJRT artifacts ({e})");
+            return;
+        }
+    };
+    let dense = pm.generate(&prompt, want_dense.len(), 0).unwrap();
+    assert_eq!(dense, want_dense, "pjrt dense vs jax golden");
+    // HATA decode graph compiled with budget fixed by aot.py (64)
+    let hata_out = pm.generate(&prompt, want_dense.len(), pm.hata_budget).unwrap();
+    assert_eq!(hata_out.len(), want_dense.len());
+}
