@@ -5,6 +5,10 @@
 //! vs HATA. Here: the trained tiny models (or random weights when
 //! artifacts are absent) with scaled contexts; the bar *shape* — similar
 //! prefill, decode ordered dense > loki > quest/hata — is the target.
+//!
+//! A second table sweeps the engine's `--threads` knob (batched parallel
+//! decode) at batch >= 4, emitting decode tokens/s per thread count so
+//! the threadpool fan-out's scaling lands in the BENCH trajectory.
 
 use std::sync::Arc;
 
@@ -17,6 +21,48 @@ use hata::kvcache::MethodAux;
 use hata::model::{tokenizer, weights::Weights, Model};
 use hata::util::rng::Rng;
 
+struct RunStats {
+    prefill_s: f64,
+    decode_s: f64,
+    total_s: f64,
+    decode_tok_s: f64,
+}
+
+/// Build a fresh engine, serve `n_requests` synthetic NS tasks, return
+/// the timing split (prefill ~= max TTFT, decode = remainder).
+fn run_once(serve: ServeConfig, ctx: usize, decode_len: usize, n_requests: usize) -> RunStats {
+    let corpus = Corpus::new(0);
+    let cfg = preset("hata-mha").unwrap();
+    let mut rng = Rng::new(0);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let model = Arc::new(Model::new(cfg, weights, aux));
+    let mut engine = Engine::new(model, serve);
+    let mut rng = Rng::new(9);
+    for id in 0..n_requests {
+        let (prompt, _) = make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
+        engine.submit(Request {
+            id: id as u64,
+            prompt: tokenizer::encode(&prompt),
+            max_new_tokens: decode_len,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let responses = engine.run_to_completion();
+    let total_s = t0.elapsed().as_secs_f64();
+    let ttft_max = responses.iter().map(|r| r.ttft).fold(0.0, f64::max);
+    let decode_s = total_s - ttft_max;
+    let gen: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    RunStats {
+        prefill_s: ttft_max,
+        decode_s,
+        total_s,
+        decode_tok_s: gen as f64 / decode_s.max(1e-9),
+    }
+}
+
 fn main() {
     let ctx: usize =
         std::env::var("HATA_FIG4_CTX").ok().and_then(|v| v.parse().ok()).unwrap_or(1024);
@@ -27,7 +73,6 @@ fn main() {
         &format!("Fig 4 proxy: end-to-end time (ctx={ctx}, decode={decode_len}, budget={budget})"),
         &["method", "prefill_s", "decode_s", "total_s", "decode_tok_s", "speedup_vs_dense"],
     );
-    let corpus = Corpus::new(0);
     let mut dense_decode = None;
     for method in [Method::Dense, Method::Loki, Method::Quest, Method::Hata] {
         let serve = ServeConfig {
@@ -37,42 +82,48 @@ fn main() {
             prefill_chunk: 4096,
             ..Default::default()
         };
-        let cfg = preset("hata-mha").unwrap();
-        let mut rng = Rng::new(0);
-        let weights = Weights::random(&cfg, &mut rng);
-        let aux = MethodAux::build(&cfg, &serve, None, 1);
-        let model = Arc::new(Model::new(cfg, weights, aux));
-        let mut engine = Engine::new(model, serve);
-        let mut rng = Rng::new(9);
-        for id in 0..n_requests {
-            let (prompt, _) = make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
-            engine.submit(Request {
-                id: id as u64,
-                prompt: tokenizer::encode(&prompt),
-                max_new_tokens: decode_len,
-                stop_token: None,
-                arrival: 0.0,
-            });
-        }
-        // prefill phase: run until every sequence produced its 1st token
-        let t0 = std::time::Instant::now();
-        let responses = engine.run_to_completion();
-        let total = t0.elapsed().as_secs_f64();
-        let ttft_max = responses.iter().map(|r| r.ttft).fold(0.0, f64::max);
-        let decode_s = total - ttft_max;
-        let gen: usize = responses.iter().map(|r| r.tokens.len()).sum();
-        let tok_s = gen as f64 / decode_s.max(1e-9);
-        let base = *dense_decode.get_or_insert(decode_s);
+        let r = run_once(serve, ctx, decode_len, n_requests);
+        let base = *dense_decode.get_or_insert(r.decode_s);
         table.row(vec![
             method.name().to_string(),
-            fmt(ttft_max),
-            fmt(decode_s),
-            fmt(total),
-            fmt(tok_s),
-            fmt(base / decode_s),
+            fmt(r.prefill_s),
+            fmt(r.decode_s),
+            fmt(r.total_s),
+            fmt(r.decode_tok_s),
+            fmt(base / r.decode_s),
         ]);
         eprintln!("[fig4] {} done", method.name());
     }
     println!("{}", table.render());
     table.write_csv("bench_results", "fig4").unwrap();
+
+    // ---- thread sweep: batched parallel decode scaling at batch >= 4
+    let sweep_batch = 4;
+    let thread_counts = [1usize, 2, 4, 8];
+    let mut tsweep = Table::new(
+        &format!(
+            "Fig 4 thread sweep: decode tokens/s (ctx={ctx}, batch={sweep_batch}, \
+             decode={decode_len}, budget={budget})"
+        ),
+        &["method", "threads=1", "threads=2", "threads=4", "threads=8"],
+    );
+    for method in [Method::Dense, Method::Hata] {
+        let mut row = vec![method.name().to_string()];
+        for &threads in &thread_counts {
+            let serve = ServeConfig {
+                method,
+                budget: if method == Method::Dense { 0 } else { budget },
+                max_batch: sweep_batch,
+                prefill_chunk: 4096,
+                threads,
+                ..Default::default()
+            };
+            let r = run_once(serve, ctx, decode_len, sweep_batch);
+            row.push(fmt(r.decode_tok_s));
+            eprintln!("[fig4] threads sweep {} t={} done", method.name(), threads);
+        }
+        tsweep.row(row);
+    }
+    println!("{}", tsweep.render());
+    tsweep.write_csv("bench_results", "fig4_threads").unwrap();
 }

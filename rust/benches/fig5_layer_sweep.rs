@@ -14,6 +14,7 @@ use hata::bench::harness::{bench, LayerFixture};
 use hata::bench::report::{fmt, Table};
 use hata::config::{preset, Method, ServeConfig};
 use hata::simulator::hbm::modeled_speedup;
+use hata::util::threadpool::ThreadPool;
 
 fn step_sparse(
     f: &LayerFixture,
@@ -97,4 +98,33 @@ fn main() {
     }
     println!("{}", table.render());
     table.write_csv("bench_results", "fig5").unwrap();
+
+    // ---- threadpool fan-out: a batch of per-(sequence, head) HATA
+    // select+attend items scattered across pool workers, the same work
+    // unit the engine's batched decode path fans out per layer.
+    let b = 4;
+    let s = 32_768;
+    let budget = ((s as f64) * 0.0156) as usize;
+    let fixtures: Vec<LayerFixture> =
+        (0..b).map(|i| LayerFixture::new(s, dh, 1, 128, 100 + i as u64)).collect();
+    let mut outs: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; dh]).collect();
+    let mut t2 = Table::new(
+        &format!("Fig 5 thread fan-out: batched HATA select+attend (b={b}, ctx={s}, one head each)"),
+        &["threads", "step_ms", "speedup_vs_1"],
+    );
+    let mut base = None;
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads);
+        let mut workers: Vec<Scratch> = (0..threads).map(|_| Scratch::default()).collect();
+        let r = bench("fanout", 1, iters, || {
+            pool.scatter(&mut outs, &mut workers, |i, out, ws| {
+                step_sparse(&fixtures[i], &HataSelector, budget, ws, out);
+            });
+        });
+        let base_s = *base.get_or_insert(r.mean_s);
+        t2.row(vec![threads.to_string(), fmt(r.mean_s * 1e3), fmt(base_s / r.mean_s)]);
+        eprintln!("[fig5] fanout threads={threads} done");
+    }
+    println!("{}", t2.render());
+    t2.write_csv("bench_results", "fig5_threads").unwrap();
 }

@@ -7,7 +7,11 @@
 //!   loops; selected rows are read exactly once, straight from the cache.
 //!
 //! All functions compute one KV head for `group` query heads (GQA) and
-//! write `group * dh` outputs.
+//! write `group * dh` outputs. They run on threadpool workers in the
+//! batched decode path: inputs are shared borrows, outputs and the
+//! `probs` scratch are exclusive to the caller's work item, and every
+//! scratch prefix that is read is overwritten first — so a reused
+//! worker arena can never leak state between items.
 
 use super::AttnInputs;
 use crate::tensor::ops::dot;

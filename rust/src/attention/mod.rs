@@ -11,6 +11,20 @@
 //! * [`compute`]  — dense + sparse attention, separate-gather vs fused
 //!   (the Fig. 9 'FusedAttn' ablation axis)
 //! * [`methods`]  — one [`Selector`] per paper baseline
+//!
+//! ## Scratch ownership in the batched decode path
+//!
+//! Selection buffers ([`Scratch`]) are *worker-thread arenas*: the engine
+//! keeps one per threadpool worker and lends it to whichever
+//! (sequence, kv-head) work item that worker picks up. Every routine that
+//! reads a scratch buffer fully overwrites the prefix it reads first
+//! (`clear()`/`resize()` + full write), so results never depend on which
+//! worker — or which previous item — last touched the arena; this is the
+//! invariant that makes `threads = N` byte-identical to `threads = 1`.
+//! Per-sequence state that must survive a step ([`MethodState`]) is owned
+//! by the sequence and handed to items as disjoint `&mut`, never shared.
+//! [`Selector`] implementations are required to be `Send + Sync`
+//! (stateless policy objects) so one instance can serve all workers.
 
 pub mod compute;
 pub mod hamming;
@@ -99,7 +113,12 @@ pub struct MethodState {
 }
 
 /// A token-selection policy for sparse attention.
-pub trait Selector {
+///
+/// `Send + Sync` is a supertrait: one selector instance is shared by all
+/// threadpool workers during a batched step, so implementations must be
+/// stateless policy objects (all per-sequence state lives in
+/// [`MethodState`], all transient buffers in the per-worker [`Scratch`]).
+pub trait Selector: Send + Sync {
     /// Write the selected token indices for this step into
     /// `scratch.indices` (any order, no duplicates, all `< inputs.s`).
     fn select(

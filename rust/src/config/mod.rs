@@ -249,6 +249,15 @@ pub struct ServeConfig {
     pub sinks: usize,
     /// SnapKV observation window.
     pub snapkv_window: usize,
+    /// Worker threads for the engine's batched decode/prefill fan-out
+    /// (1 = strictly serial; higher fans (sequence, kv-head) work items
+    /// across the threadpool).
+    pub threads: usize,
+    /// Softmax sampling temperature; 0 = greedy (argmax), the default so
+    /// serving stays deterministic.
+    pub temperature: f32,
+    /// Base seed for per-request sampling RNG streams.
+    pub seed: u64,
 }
 
 impl Default for ServeConfig {
@@ -266,6 +275,9 @@ impl Default for ServeConfig {
             magicpig_l: 150,
             sinks: 4,
             snapkv_window: 16,
+            threads: 1,
+            temperature: 0.0,
+            seed: 0,
         }
     }
 }

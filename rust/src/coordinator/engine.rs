@@ -1,19 +1,36 @@
 //! The serving engine: continuous-batching step loop over the native
-//! model. One engine = one worker; the [`super::router`] shards requests
-//! across engines.
+//! model. One engine = one worker process; the [`super::router`] shards
+//! requests across engines, and within an engine the step fans
+//! per-(sequence, kv-head) work across `serve.threads` pool workers.
+//!
+//! Scratch ownership per step: one [`DecodeScratch`] per batch slot
+//! (sequence activations + logits), one [`WorkerScratch`] per pool
+//! worker (selection buffers). The plan's decode/prefill batches are
+//! materialized into disjoint-`&mut` work items and handed to
+//! [`Model::decode_batch`] / [`Model::prefill_batch`].
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::ServeConfig;
 use crate::kvcache::pool::KvPool;
 use crate::kvcache::SeqKvCache;
-use crate::model::{make_selector, sel_ref, DecodeScratch, Model, SeqState};
-use crate::tensor::ops::argmax;
+use crate::model::sampler::Sampler;
+use crate::model::{
+    make_selector, sel_ref, DecodeItem, DecodeScratch, Model, PrefillItem, SeqState, WorkerScratch,
+};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, Response};
 use super::scheduler::{Scheduler, SeqTicket};
+
+/// Consecutive zero-progress steps before the engine declares a stall
+/// (stuck scheduler or unsatisfiable admission), surfaces it through
+/// metrics and preempts the stuck requests instead of spinning forever.
+const STALL_LIMIT: u64 = 64;
 
 struct LiveSeq {
     req: Request,
@@ -22,30 +39,62 @@ struct LiveSeq {
     out: Vec<u32>,
     next_token: Option<u32>,
     first_token_at: Option<f64>,
+    rng: Rng,
+}
+
+/// What one engine step accomplished (progress accounting for the
+/// stall detector and metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepOutcome {
+    /// tokens decoded (one per running sequence)
+    pub decoded: usize,
+    /// prompt tokens prefilled
+    pub prefilled: usize,
+    /// requests admitted from the queue
+    pub admitted: usize,
+}
+
+impl StepOutcome {
+    pub fn progress(&self) -> usize {
+        self.decoded + self.prefilled + self.admitted
+    }
 }
 
 /// Single-worker serving engine.
 pub struct Engine {
-    pub model: std::sync::Arc<Model>,
+    pub model: Arc<Model>,
     pub serve: ServeConfig,
     selector: Option<Box<dyn crate::attention::Selector + Send + Sync>>,
     scheduler: Scheduler,
     pool: KvPool,
     seqs: HashMap<u64, LiveSeq>,
-    scratch: DecodeScratch,
+    workers: ThreadPool,
+    worker_scratch: Vec<WorkerScratch>,
+    /// per-batch-slot activation buffers, grown on demand
+    seq_scratch: Vec<DecodeScratch>,
+    sampler: Sampler,
     pub metrics: Metrics,
     clock: Instant,
     responses: Vec<Response>,
 }
 
 impl Engine {
-    pub fn new(model: std::sync::Arc<Model>, serve: ServeConfig) -> Self {
+    pub fn new(model: Arc<Model>, serve: ServeConfig) -> Self {
         let selector = make_selector(&serve);
+        let threads = serve.threads.max(1);
+        let sampler = if serve.temperature > 0.0 {
+            Sampler::Temperature(serve.temperature)
+        } else {
+            Sampler::Greedy
+        };
         Engine {
             scheduler: Scheduler::new(&serve),
             pool: KvPool::new(serve.kv_capacity),
             seqs: HashMap::new(),
-            scratch: DecodeScratch::new(&model.cfg),
+            workers: ThreadPool::new(threads),
+            worker_scratch: (0..threads).map(|_| WorkerScratch::default()).collect(),
+            seq_scratch: Vec::new(),
+            sampler,
             metrics: Metrics::new(),
             clock: Instant::now(),
             responses: Vec::new(),
@@ -68,6 +117,9 @@ impl Engine {
             generated: 0,
             max_new: req.max_new_tokens,
         });
+        // per-request sampling stream: deterministic in (seed, id), so
+        // results are independent of thread count and arrival order
+        let rng = Rng::new(self.serve.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
         self.seqs.insert(
             req.id,
             LiveSeq {
@@ -76,6 +128,7 @@ impl Engine {
                 out: Vec::new(),
                 next_token: None,
                 first_token_at: None,
+                rng,
                 req,
             },
         );
@@ -89,93 +142,118 @@ impl Engine {
         std::mem::take(&mut self.responses)
     }
 
-    /// One engine step: decode every running sequence once, advance one
-    /// prefill chunk, admit from the queue. Returns tokens decoded.
-    pub fn step(&mut self) -> usize {
+    /// One engine step: decode every running sequence once (batched
+    /// across the threadpool), advance prefill chunks, admit from the
+    /// queue. Returns what got done.
+    pub fn step(&mut self) -> StepOutcome {
         let t0 = Instant::now();
+        let sampler = self.sampler;
         let plan = self.scheduler.plan(&mut self.pool);
-        // ---- prefill chunks (token-by-token through the shared step path)
-        for (id, range) in &plan.prefill {
-            let seq = self.seqs.get_mut(id).expect("live seq");
-            let tokens: Vec<u32> = seq.req.prompt[range.clone()].to_vec();
-            let whole_prompt = range.end == seq.req.prompt.len();
-            if range.start == 0 && whole_prompt {
-                // single-chunk prompt: use prefill (captures SnapKV state)
-                self.model.prefill(
-                    &seq.req.prompt,
-                    &mut seq.cache,
-                    &mut seq.state,
+        let mut outcome = StepOutcome { admitted: plan.admitted.len(), ..Default::default() };
+        let slots = plan.prefill.len().max(plan.decode.len());
+        while self.seq_scratch.len() < slots {
+            self.seq_scratch.push(DecodeScratch::new(&self.model.cfg));
+        }
+        // ---- batched prefill chunks
+        if !plan.prefill.is_empty() {
+            {
+                let mut by_id: HashMap<u64, &mut LiveSeq> =
+                    self.seqs.iter_mut().map(|(id, s)| (*id, s)).collect();
+                let mut items: Vec<PrefillItem> = Vec::with_capacity(plan.prefill.len());
+                for (w, scratch) in plan.prefill.iter().zip(self.seq_scratch.iter_mut()) {
+                    let seq = by_id.remove(&w.id).expect("live seq");
+                    let LiveSeq { req, cache, state, .. } = seq;
+                    items.push(PrefillItem {
+                        tokens: &req.prompt[w.range.clone()],
+                        start: w.range.start,
+                        whole: w.range.start == 0 && w.is_final,
+                        cache,
+                        state,
+                        scratch,
+                    });
+                }
+                self.model.prefill_batch(
+                    &mut items,
                     &self.serve,
-                    &mut self.scratch,
+                    &self.workers,
+                    &mut self.worker_scratch,
                 );
-            } else {
-                let dense = ServeConfig { budget: 0, ..self.serve.clone() };
-                for (i, &tok) in tokens.iter().enumerate() {
-                    self.model.decode_step(
-                        tok,
-                        range.start + i,
-                        &mut seq.cache,
-                        &mut seq.state,
-                        &dense,
-                        None,
-                        &mut self.scratch,
-                    );
+            }
+            for (slot, w) in plan.prefill.iter().enumerate() {
+                self.scheduler.on_prefilled(w.id, w.range.len());
+                outcome.prefilled += w.range.len();
+                if w.is_final {
+                    let logits = &self.seq_scratch[slot].logits;
+                    let seq = self.seqs.get_mut(&w.id).expect("live seq");
+                    seq.next_token = Some(sampler.sample(logits, &mut seq.rng));
                 }
             }
-            self.scheduler.on_prefilled(*id, range.len());
-            if whole_prompt {
-                seq.next_token = Some(argmax(&self.scratch.logits) as u32);
+            // degenerate max_new_tokens == 0: complete right after prefill
+            let zero_new: Vec<u64> = plan
+                .prefill
+                .iter()
+                .filter(|w| w.is_final && self.seqs[&w.id].req.max_new_tokens == 0)
+                .map(|w| w.id)
+                .collect();
+            for id in zero_new {
+                self.finish(id, FinishReason::MaxTokens);
             }
         }
-        // degenerate max_new_tokens == 0: complete right after prefill
-        let zero_new: Vec<u64> = plan
-            .prefill
-            .iter()
-            .filter(|(id, r)| {
-                r.end == self.seqs[id].req.prompt.len() && self.seqs[id].req.max_new_tokens == 0
-            })
-            .map(|(id, _)| *id)
-            .collect();
-        for id in zero_new {
-            self.finish(id, FinishReason::MaxTokens);
-        }
-        // ---- decode one token per running sequence
-        let mut decoded = 0;
+        // ---- batched decode: one token per running sequence
         let mut finished: Vec<(u64, FinishReason)> = Vec::new();
-        for id in &plan.decode {
-            let seq = self.seqs.get_mut(id).expect("live seq");
+        // commit the sampled token to each stream; stop-token sequences
+        // drop out of the batch before the model runs
+        let mut work: Vec<(u64, u32, usize)> = Vec::with_capacity(plan.decode.len());
+        for w in &plan.decode {
+            let seq = self.seqs.get_mut(&w.id).expect("live seq");
             let tok = seq.next_token.expect("prefill completed");
             seq.out.push(tok);
             if seq.first_token_at.is_none() {
-                seq.first_token_at = Some(self.clock.elapsed().as_secs_f64());
-                self.metrics.on_first_token(seq.first_token_at.unwrap() - seq.req.arrival);
+                let at = self.clock.elapsed().as_secs_f64();
+                seq.first_token_at = Some(at);
+                self.metrics.on_first_token(at - seq.req.arrival);
             }
             if seq.req.stop_token == Some(tok) {
-                finished.push((*id, FinishReason::StopToken));
+                finished.push((w.id, FinishReason::StopToken));
                 continue;
             }
-            let pos = seq.req.prompt.len() + seq.out.len() - 1;
-            self.model.decode_step(
-                tok,
-                pos,
-                &mut seq.cache,
-                &mut seq.state,
-                &self.serve,
-                sel_ref(&self.selector),
-                &mut self.scratch,
-            );
-            seq.next_token = Some(argmax(&self.scratch.logits) as u32);
-            self.scheduler.on_decoded(*id);
-            decoded += 1;
-            if seq.out.len() >= seq.req.max_new_tokens {
-                finished.push((*id, FinishReason::MaxTokens));
+            work.push((w.id, tok, w.pos));
+        }
+        if !work.is_empty() {
+            {
+                let mut by_id: HashMap<u64, &mut LiveSeq> =
+                    self.seqs.iter_mut().map(|(id, s)| (*id, s)).collect();
+                let mut items: Vec<DecodeItem> = Vec::with_capacity(work.len());
+                for ((id, tok, pos), scratch) in work.iter().zip(self.seq_scratch.iter_mut()) {
+                    let seq = by_id.remove(id).expect("live seq");
+                    let LiveSeq { cache, state, .. } = seq;
+                    items.push(DecodeItem { token: *tok, pos: *pos, cache, state, scratch });
+                }
+                self.model.decode_batch(
+                    &mut items,
+                    &self.serve,
+                    sel_ref(&self.selector),
+                    &self.workers,
+                    &mut self.worker_scratch,
+                );
+            }
+            for (slot, (id, _, _)) in work.iter().enumerate() {
+                let logits = &self.seq_scratch[slot].logits;
+                let seq = self.seqs.get_mut(id).expect("live seq");
+                seq.next_token = Some(sampler.sample(logits, &mut seq.rng));
+                let done = seq.out.len() >= seq.req.max_new_tokens;
+                self.scheduler.on_decoded(*id);
+                outcome.decoded += 1;
+                if done {
+                    finished.push((*id, FinishReason::MaxTokens));
+                }
             }
         }
         for (id, reason) in finished {
             self.finish(id, reason);
         }
-        self.metrics.on_step(t0.elapsed().as_secs_f64(), decoded);
-        decoded
+        self.metrics.on_step(t0.elapsed().as_secs_f64(), outcome.decoded);
+        outcome
     }
 
     fn finish(&mut self, id: u64, reason: FinishReason) {
@@ -194,13 +272,50 @@ impl Engine {
         }
     }
 
+    /// Preempt everything still queued or live and record the stall in
+    /// metrics — a stuck scheduler surfaces as a report, not a crash.
+    fn abort_stalled(&mut self) {
+        let stuck = self.scheduler.evict_all();
+        self.metrics.on_stall(stuck.len());
+        crate::util::logger::log(
+            crate::util::logger::Level::Warn,
+            "engine",
+            format_args!(
+                "stalled after {} zero-progress steps; preempting {} requests",
+                STALL_LIMIT,
+                stuck.len()
+            ),
+        );
+        for id in stuck {
+            let _ = self.pool.release(id);
+            if let Some(seq) = self.seqs.remove(&id) {
+                let now = self.now();
+                self.responses.push(Response {
+                    id,
+                    prompt_len: seq.req.prompt.len(),
+                    tokens: seq.out,
+                    reason: FinishReason::Preempted,
+                    ttft: seq.first_token_at.unwrap_or(now) - seq.req.arrival,
+                    total_time: now - seq.req.arrival,
+                });
+            }
+        }
+    }
+
     /// Drive until every submitted request completes; returns responses.
+    ///
+    /// If the engine stops making progress (e.g. a request that can never
+    /// be admitted under the KV pool), the stall is recorded in metrics
+    /// and the stuck requests come back as `FinishReason::Preempted`.
     pub fn run_to_completion(&mut self) -> Vec<Response> {
-        let mut guard = 0u64;
+        let mut idle = 0u64;
         while self.has_work() {
-            self.step();
-            guard += 1;
-            assert!(guard < 10_000_000, "engine livelock");
+            let outcome = self.step();
+            idle = if outcome.progress() == 0 { idle + 1 } else { 0 };
+            if idle >= STALL_LIMIT {
+                self.abort_stalled();
+                break;
+            }
         }
         self.take_responses()
     }
@@ -210,17 +325,26 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::config::{preset, Method};
+    use crate::kvcache::pool::PAGE_TOKENS;
     use crate::kvcache::MethodAux;
     use crate::model::weights::Weights;
-    use crate::util::rng::Rng;
 
-    fn engine(method: Method, max_batch: usize) -> Engine {
+    fn engine_with(serve: ServeConfig) -> Engine {
         let cfg = preset("hata-gqa").unwrap();
-        let serve = ServeConfig { method, budget: 16, max_batch, prefill_chunk: 64, ..Default::default() };
         let mut rng = Rng::new(0);
         let weights = Weights::random(&cfg, &mut rng);
         let aux = MethodAux::build(&cfg, &serve, None, 1);
-        Engine::new(std::sync::Arc::new(Model::new(cfg, weights, aux)), serve)
+        Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve)
+    }
+
+    fn engine(method: Method, max_batch: usize) -> Engine {
+        engine_with(ServeConfig {
+            method,
+            budget: 16,
+            max_batch,
+            prefill_chunk: 64,
+            ..Default::default()
+        })
     }
 
     fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
@@ -291,7 +415,7 @@ mod tests {
             let mut rng = Rng::new(3);
             let weights = Weights::random(&cfg, &mut rng);
             let aux = MethodAux::default();
-            Engine::new(std::sync::Arc::new(Model::new(cfg.clone(), weights, aux)), serve)
+            Engine::new(Arc::new(Model::new(cfg.clone(), weights, aux)), serve)
         };
         let mut small = mk(16);
         let mut big = mk(4096);
@@ -307,5 +431,65 @@ mod tests {
         e.run_to_completion();
         assert!(e.metrics.generated_tokens >= 2);
         assert!(e.metrics.step_latency.count() > 0);
+    }
+
+    #[test]
+    fn multithreaded_engine_matches_single_thread() {
+        let run = |threads: usize| {
+            let mut e = engine_with(ServeConfig {
+                method: Method::Hata,
+                budget: 16,
+                max_batch: 4,
+                prefill_chunk: 64,
+                threads,
+                ..Default::default()
+            });
+            for i in 0..5 {
+                e.submit(req(i, 30 + (i as usize) * 11, 4));
+            }
+            let mut rs: Vec<(u64, Vec<u32>)> =
+                e.run_to_completion().into_iter().map(|r| (r.id, r.tokens)).collect();
+            rs.sort_by_key(|(id, _)| *id);
+            rs
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn stalled_admission_preempts_instead_of_panicking() {
+        // a prompt that can never fit in the KV pool used to livelock
+        // run_to_completion (guarded only by a panic); it must now come
+        // back as a Preempted response with the stall recorded
+        let mut e = engine_with(ServeConfig {
+            method: Method::Dense,
+            budget: 0,
+            max_batch: 2,
+            kv_capacity: 2 * PAGE_TOKENS,
+            ..Default::default()
+        });
+        e.submit(req(1, 10 * PAGE_TOKENS, 4));
+        let rs = e.run_to_completion();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].reason, FinishReason::Preempted);
+        assert!(rs[0].tokens.is_empty());
+        assert_eq!(e.metrics.stalls, 1);
+        assert_eq!(e.metrics.preempted, 1);
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let run = || {
+            let mut e = engine_with(ServeConfig {
+                method: Method::Dense,
+                budget: 0,
+                max_batch: 2,
+                temperature: 0.8,
+                seed: 7,
+                ..Default::default()
+            });
+            e.submit(req(3, 24, 6));
+            e.run_to_completion()[0].tokens.clone()
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -11,6 +11,9 @@ pub struct Metrics {
     pub generated_tokens: u64,
     pub completed: u64,
     pub preempted: u64,
+    /// stall events: the engine detected zero progress for consecutive
+    /// steps and preempted the stuck work (see `Engine::run_to_completion`)
+    pub stalls: u64,
     started_at: Option<std::time::Instant>,
 }
 
@@ -34,6 +37,12 @@ impl Metrics {
         self.per_request.add(total_time);
     }
 
+    /// Record an engine stall that preempted `preempted` requests.
+    pub fn on_stall(&mut self, preempted: usize) {
+        self.stalls += 1;
+        self.preempted += preempted as u64;
+    }
+
     pub fn elapsed(&self) -> f64 {
         self.started_at.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
@@ -51,7 +60,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "completed={} gen_tokens={} prompt_tokens={} tput={:.1} tok/s \
-             step p50={:.3}ms p99={:.3}ms ttft p50={:.1}ms",
+             step p50={:.3}ms p99={:.3}ms ttft p50={:.1}ms stalls={} preempted={}",
             self.completed,
             self.generated_tokens,
             self.prompt_tokens,
@@ -59,6 +68,8 @@ impl Metrics {
             self.step_latency.quantile(0.5) * 1e3,
             self.step_latency.quantile(0.99) * 1e3,
             self.ttft.quantile(0.5) * 1e3,
+            self.stalls,
+            self.preempted,
         )
     }
 }

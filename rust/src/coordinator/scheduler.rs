@@ -7,6 +7,12 @@
 //!      Prefilling sequence, admitted only while the KV pool has room;
 //!   3. Queued requests are admitted FCFS when a batch slot + KV pages
 //!      are available.
+//!
+//! The plan is a *batch structure*, not id lists: each [`DecodeWork`]
+//! carries the absolute token position and each [`PrefillWork`] its chunk
+//! range + finality, so the engine can build the whole step's work items
+//! up front and fan them across the threadpool without re-deriving
+//! per-sequence state mid-step.
 
 use std::collections::VecDeque;
 
@@ -29,13 +35,30 @@ impl SeqTicket {
     }
 }
 
+/// One decode slot of a step batch: feed the sampled token at `pos`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeWork {
+    pub id: u64,
+    /// Absolute position of the token being fed (prompt_len + generated).
+    pub pos: usize,
+}
+
+/// One prefill chunk of a step batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrefillWork {
+    pub id: u64,
+    pub range: std::ops::Range<usize>,
+    /// This chunk completes the prompt (the sequence becomes decodable).
+    pub is_final: bool,
+}
+
 /// One engine step's work order.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StepPlan {
-    /// sequence ids that decode one token this step
-    pub decode: Vec<u64>,
-    /// (sequence id, token range) prefill chunks this step
-    pub prefill: Vec<(u64, std::ops::Range<usize>)>,
+    /// sequences that decode one token this step
+    pub decode: Vec<DecodeWork>,
+    /// prefill chunks this step
+    pub prefill: Vec<PrefillWork>,
     /// requests admitted from the queue this step
     pub admitted: Vec<u64>,
 }
@@ -93,6 +116,14 @@ impl Scheduler {
         let _ = pool.release(id);
     }
 
+    /// Drop every queued and live ticket (stall recovery); returns the
+    /// evicted ids so the engine can release pages and respond.
+    pub fn evict_all(&mut self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.queue.drain(..).map(|t| t.id).collect();
+        ids.extend(self.live.drain(..).map(|t| t.id));
+        ids
+    }
+
     /// Plan the next engine step.
     pub fn plan(&mut self, pool: &mut KvPool) -> StepPlan {
         let mut plan = StepPlan::default();
@@ -110,12 +141,12 @@ impl Scheduler {
         // 2. all fully-prefilled, unfinished sequences decode
         for t in &self.live {
             if t.is_prefill_done() && t.generated < t.max_new {
-                plan.decode.push(t.id);
+                plan.decode.push(DecodeWork { id: t.id, pos: t.prompt_len + t.generated });
             }
         }
         // reserve one token per decoding sequence
-        for &id in &plan.decode {
-            let _ = pool.grow(id, 1);
+        for w in &plan.decode {
+            let _ = pool.grow(w.id, 1);
         }
         // 3. chunked prefill for the oldest incomplete prefill
         let mut chunk_left = self.prefill_chunk;
@@ -126,7 +157,11 @@ impl Scheduler {
             if !t.is_prefill_done() {
                 let take = chunk_left.min(t.prompt_len - t.prefilled);
                 if pool.grow(t.id, take).is_ok() {
-                    plan.prefill.push((t.id, t.prefilled..t.prefilled + take));
+                    plan.prefill.push(PrefillWork {
+                        id: t.id,
+                        range: t.prefilled..t.prefilled + take,
+                        is_final: t.prefilled + take >= t.prompt_len,
+                    });
                     chunk_left -= take;
                 }
             }
@@ -153,6 +188,10 @@ mod tests {
         })
     }
 
+    fn pf(id: u64, range: std::ops::Range<usize>, is_final: bool) -> PrefillWork {
+        PrefillWork { id, range, is_final }
+    }
+
     #[test]
     fn admits_fcfs_until_batch_full() {
         let mut s = scheduler(2, 128);
@@ -172,17 +211,31 @@ mod tests {
         let mut pool = KvPool::new(100 * PAGE_TOKENS);
         s.submit(mk(1, 150, 3));
         let p1 = s.plan(&mut pool);
-        assert_eq!(p1.prefill, vec![(1, 0..64)]);
+        assert_eq!(p1.prefill, vec![pf(1, 0..64, false)]);
         s.on_prefilled(1, 64);
         let p2 = s.plan(&mut pool);
-        assert_eq!(p2.prefill, vec![(1, 64..128)]);
+        assert_eq!(p2.prefill, vec![pf(1, 64..128, false)]);
         s.on_prefilled(1, 64);
         let p3 = s.plan(&mut pool);
-        assert_eq!(p3.prefill, vec![(1, 128..150)]);
+        assert_eq!(p3.prefill, vec![pf(1, 128..150, true)]);
         s.on_prefilled(1, 22);
         let p4 = s.plan(&mut pool);
         assert!(p4.prefill.is_empty());
-        assert_eq!(p4.decode, vec![1]);
+        assert_eq!(p4.decode, vec![DecodeWork { id: 1, pos: 150 }]);
+    }
+
+    #[test]
+    fn decode_positions_advance_with_generation() {
+        let mut s = scheduler(4, 64);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 10, 5));
+        let _ = s.plan(&mut pool);
+        s.on_prefilled(1, 10);
+        let p = s.plan(&mut pool);
+        assert_eq!(p.decode, vec![DecodeWork { id: 1, pos: 10 }]);
+        s.on_decoded(1);
+        let p = s.plan(&mut pool);
+        assert_eq!(p.decode, vec![DecodeWork { id: 1, pos: 11 }]);
     }
 
     #[test]
@@ -194,9 +247,10 @@ mod tests {
         s.on_prefilled(1, 10);
         s.submit(mk(2, 40, 5));
         let plan = s.plan(&mut pool);
-        assert_eq!(plan.decode, vec![1]);
+        assert_eq!(plan.decode, vec![DecodeWork { id: 1, pos: 10 }]);
         assert_eq!(plan.prefill.len(), 1);
-        assert_eq!(plan.prefill[0].0, 2);
+        assert_eq!(plan.prefill[0].id, 2);
+        assert!(!plan.prefill[0].is_final);
     }
 
     #[test]
@@ -219,7 +273,7 @@ mod tests {
         let _ = s.plan(&mut pool);
         s.on_prefilled(1, 8);
         let p = s.plan(&mut pool);
-        assert_eq!(p.decode, vec![1]);
+        assert_eq!(p.decode, vec![DecodeWork { id: 1, pos: 8 }]);
         s.on_decoded(1);
         s.on_decoded(1);
         // generated == max_new -> no more decode
@@ -228,5 +282,19 @@ mod tests {
         s.finish(1, &mut pool);
         assert_eq!(s.live_len(), 0);
         assert_eq!(pool.active_seqs(), 0);
+    }
+
+    #[test]
+    fn evict_all_drains_queue_and_live() {
+        let mut s = scheduler(1, 64);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 8, 2));
+        s.submit(mk(2, 8, 2)); // stays queued (max_batch = 1)
+        let _ = s.plan(&mut pool);
+        let mut ids = s.evict_all();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(s.queue_len(), 0);
+        assert_eq!(s.live_len(), 0);
     }
 }

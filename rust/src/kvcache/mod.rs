@@ -2,6 +2,12 @@
 //! hash-code cache (Alg. 1 l.4-5), method side-structures maintained on
 //! append, a page-accounting pool for admission control, and the
 //! HATA-off tiered/offloaded variant.
+//!
+//! Storage is organised as one [`HeadCache`] region per (layer, kv-head),
+//! so the batched decode path can split-borrow disjoint regions
+//! ([`SeqKvCache::layer_heads_mut`]) and append to them from worker
+//! threads concurrently — the ownership story the engine/model/attention
+//! threadpool fan-out is built on.
 
 pub mod offload;
 pub mod pool;
@@ -10,31 +16,141 @@ use crate::attention::Side;
 use crate::config::{Method, ModelConfig, ServeConfig};
 use crate::util::rng::Rng;
 
+/// One (layer, kv-head) cache region: K/V rows, the packed key-code
+/// cache, and the per-method side structures maintained on append.
+/// Layout: contiguous row-major token arrays, so the per-head decode hot
+/// loop walks sequential memory.
+#[derive(Default)]
+pub struct HeadCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub codes: Vec<u64>,
+    // Quest block summaries
+    pub quest_min: Vec<f32>,
+    pub quest_max: Vec<f32>,
+    // Loki projected keys
+    pub loki_kproj: Vec<f32>,
+    // MagicPIG signatures
+    pub mp_sigs: Vec<u16>,
+}
+
+impl HeadCache {
+    fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len() + self.quest_min.len() + self.quest_max.len()
+            + self.loki_kproj.len())
+            * 4
+            + self.codes.len() * 8
+            + self.mp_sigs.len() * 2
+    }
+}
+
+/// Split-borrow view of one head region plus the shared config scalars:
+/// everything a worker thread needs to append a token's K/V/codes and
+/// serve reads for that head, disjoint from every other head's view.
+pub struct HeadMut<'a> {
+    /// absolute head index (layer * n_kv + kv) — keys the aux tables
+    pub head: usize,
+    dh: usize,
+    quest_block: usize,
+    loki_channels: usize,
+    mp_k: usize,
+    mp_l: usize,
+    pub hc: &'a mut HeadCache,
+}
+
+impl HeadMut<'_> {
+    /// Append one token's K/V for this head, maintaining the code cache
+    /// and any enabled side structures. `hash_w` is the trained
+    /// [dh, rbit] matrix for this head; `aux` carries the per-model
+    /// method constants (Loki PCA, MagicPIG planes).
+    pub fn append(
+        &mut self,
+        krow: &[f32],
+        vrow: &[f32],
+        hash_w: &[f32],
+        rbit: usize,
+        aux: &MethodAux,
+    ) {
+        debug_assert_eq!(krow.len(), self.dh);
+        let dh = self.dh;
+        let hc = &mut *self.hc;
+        hc.k.extend_from_slice(krow);
+        hc.v.extend_from_slice(vrow);
+        if !hash_w.is_empty() {
+            crate::attention::hashenc::encode_fused_blocked(krow, hash_w, rbit, &mut hc.codes);
+        }
+        if self.quest_block > 0 {
+            let t = hc.k.len() / dh - 1;
+            if t % self.quest_block == 0 {
+                hc.quest_min.extend_from_slice(krow);
+                hc.quest_max.extend_from_slice(krow);
+            } else {
+                let nb = hc.quest_min.len() / dh;
+                let bmin = &mut hc.quest_min[(nb - 1) * dh..];
+                for (m, &ki) in bmin.iter_mut().zip(krow) {
+                    *m = m.min(ki);
+                }
+                let bmax = &mut hc.quest_max[(nb - 1) * dh..];
+                for (m, &ki) in bmax.iter_mut().zip(krow) {
+                    *m = m.max(ki);
+                }
+            }
+        }
+        if self.loki_channels > 0 {
+            let pca = &aux.loki_pca[self.head];
+            let r = self.loki_channels;
+            for c in 0..r {
+                let mut acc = 0.0;
+                for (i, &ki) in krow.iter().enumerate() {
+                    acc += ki * pca[i * r + c];
+                }
+                hc.loki_kproj.push(acc);
+            }
+        }
+        if self.mp_l > 0 {
+            let planes = &aux.mp_planes[self.head];
+            for table in 0..self.mp_l {
+                let mut sig = 0u16;
+                for bit in 0..self.mp_k {
+                    let p = &planes[(table * self.mp_k + bit) * dh..][..dh];
+                    sig |= ((crate::tensor::ops::dot(krow, p) >= 0.0) as u16) << bit;
+                }
+                hc.mp_sigs.push(sig);
+            }
+        }
+    }
+
+    /// Borrow the method side structures of this head.
+    pub fn side<'b>(&'b self, hash_w: &'b [f32], aux: &'b MethodAux) -> Side<'b> {
+        Side {
+            hash_w,
+            quest_min: &self.hc.quest_min,
+            quest_max: &self.hc.quest_max,
+            quest_block: self.quest_block,
+            loki_kproj: &self.hc.loki_kproj,
+            loki_pca: aux.loki_pca.get(self.head).map(|v| v.as_slice()).unwrap_or(&[]),
+            loki_channels: self.loki_channels,
+            mp_sigs: &self.hc.mp_sigs,
+            mp_planes: aux.mp_planes.get(self.head).map(|v| v.as_slice()).unwrap_or(&[]),
+            mp_k: self.mp_k,
+            mp_l: self.mp_l,
+        }
+    }
+}
+
 /// All cached state for one sequence: K/V per (layer, kv-head), the packed
 /// key-code cache, and per-method side structures.
-///
-/// Layout: per (layer, kv) contiguous row-major token arrays, so the
-/// per-head decode hot loop walks sequential memory.
 pub struct SeqKvCache {
     pub n_layers: usize,
     pub n_kv: usize,
     pub dh: usize,
     pub words: usize,
     len: usize,
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    codes: Vec<Vec<u64>>,
-    // Quest block summaries
     quest_block: usize,
-    quest_min: Vec<Vec<f32>>,
-    quest_max: Vec<Vec<f32>>,
-    // Loki projected keys
     loki_channels: usize,
-    loki_kproj: Vec<Vec<f32>>,
-    // MagicPIG signatures
     mp_k: usize,
     mp_l: usize,
-    mp_sigs: Vec<Vec<u16>>,
+    heads: Vec<HeadCache>,
 }
 
 impl SeqKvCache {
@@ -49,17 +165,11 @@ impl SeqKvCache {
             dh: cfg.head_dim,
             words: cfg.rbit / 64,
             len: 0,
-            k: vec![Vec::new(); heads],
-            v: vec![Vec::new(); heads],
-            codes: vec![Vec::new(); heads],
             quest_block: if enable_quest { serve.quest_block } else { 0 },
-            quest_min: vec![Vec::new(); if enable_quest { heads } else { 0 }],
-            quest_max: vec![Vec::new(); if enable_quest { heads } else { 0 }],
             loki_channels: if enable_loki { serve.loki_channels } else { 0 },
-            loki_kproj: vec![Vec::new(); if enable_loki { heads } else { 0 }],
             mp_k: if enable_mp { serve.magicpig_k } else { 0 },
             mp_l: if enable_mp { serve.magicpig_l } else { 0 },
-            mp_sigs: vec![Vec::new(); if enable_mp { heads } else { 0 }],
+            heads: (0..heads).map(|_| HeadCache::default()).collect(),
         }
     }
 
@@ -76,10 +186,59 @@ impl SeqKvCache {
         self.len == 0
     }
 
+    fn head_view(&mut self, h: usize) -> HeadMut<'_> {
+        HeadMut {
+            head: h,
+            dh: self.dh,
+            quest_block: self.quest_block,
+            loki_channels: self.loki_channels,
+            mp_k: self.mp_k,
+            mp_l: self.mp_l,
+            hc: &mut self.heads[h],
+        }
+    }
+
+    /// Mutable view of one (layer, kv) head region.
+    pub fn head_mut(&mut self, layer: usize, kv: usize) -> HeadMut<'_> {
+        let h = self.head_index(layer, kv);
+        self.head_view(h)
+    }
+
+    /// Disjoint mutable views of every kv head in one layer — the split
+    /// borrow the batched decode path hands to worker threads.
+    pub fn layer_heads_mut(&mut self, layer: usize) -> Vec<HeadMut<'_>> {
+        let (dh, qb, lc, mk, ml, nkv) =
+            (self.dh, self.quest_block, self.loki_channels, self.mp_k, self.mp_l, self.n_kv);
+        let base = layer * nkv;
+        self.heads[base..base + nkv]
+            .iter_mut()
+            .enumerate()
+            .map(|(kv, hc)| HeadMut {
+                head: base + kv,
+                dh,
+                quest_block: qb,
+                loki_channels: lc,
+                mp_k: mk,
+                mp_l: ml,
+                hc,
+            })
+            .collect()
+    }
+
+    /// Record one fully-appended token (call once after all layers/heads
+    /// of a step appended through [`Self::head_mut`]/[`Self::layer_heads_mut`]).
+    pub fn advance_len(&mut self) {
+        self.len += 1;
+    }
+
     /// Append one token's K/V for a given (layer, kv) head, maintaining
-    /// the code cache and any enabled side structures.
-    /// `hash_w` is the trained [dh, rbit] matrix for this head; `aux`
-    /// carries the per-model method constants (Loki PCA, MagicPIG planes).
+    /// the code cache and any enabled side structures. The sequence
+    /// length bumps automatically when the last (layer, kv) head is
+    /// appended.
+    ///
+    /// Convenience wrapper over [`Self::head_mut`] + [`Self::advance_len`]
+    /// (the decode paths use those directly); do not mix the two
+    /// protocols on one cache or `len` double-counts.
     #[allow(clippy::too_many_arguments)]
     pub fn append(
         &mut self,
@@ -92,79 +251,38 @@ impl SeqKvCache {
         aux: &MethodAux,
     ) {
         let h = self.head_index(layer, kv);
-        debug_assert_eq!(krow.len(), self.dh);
-        self.k[h].extend_from_slice(krow);
-        self.v[h].extend_from_slice(vrow);
-        if !hash_w.is_empty() {
-            crate::attention::hashenc::encode_fused_blocked(krow, hash_w, rbit, &mut self.codes[h]);
-        }
-        if self.quest_block > 0 {
-            let t = self.k[h].len() / self.dh - 1;
-            if t % self.quest_block == 0 {
-                self.quest_min[h].extend_from_slice(krow);
-                self.quest_max[h].extend_from_slice(krow);
-            } else {
-                let nb = self.quest_min[h].len() / self.dh;
-                let bmin = &mut self.quest_min[h][(nb - 1) * self.dh..];
-                let bmax = &mut self.quest_max[h][(nb - 1) * self.dh..];
-                for i in 0..self.dh {
-                    bmin[i] = bmin[i].min(krow[i]);
-                    bmax[i] = bmax[i].max(krow[i]);
-                }
-            }
-        }
-        if self.loki_channels > 0 {
-            let pca = &aux.loki_pca[h];
-            let r = self.loki_channels;
-            for c in 0..r {
-                let mut acc = 0.0;
-                for i in 0..self.dh {
-                    acc += krow[i] * pca[i * r + c];
-                }
-                self.loki_kproj[h].push(acc);
-            }
-        }
-        if self.mp_l > 0 {
-            let planes = &aux.mp_planes[h];
-            for table in 0..self.mp_l {
-                let mut sig = 0u16;
-                for bit in 0..self.mp_k {
-                    let p = &planes[(table * self.mp_k + bit) * self.dh..][..self.dh];
-                    sig |= ((crate::tensor::ops::dot(krow, p) >= 0.0) as u16) << bit;
-                }
-                self.mp_sigs[h].push(sig);
-            }
-        }
-        // bump global length once per full token (after the last head)
-        if h == self.n_layers * self.n_kv - 1 {
+        let last = h == self.heads.len() - 1;
+        self.head_view(h).append(krow, vrow, hash_w, rbit, aux);
+        if last {
             self.len += 1;
         }
     }
 
     pub fn k_slice(&self, layer: usize, kv: usize) -> &[f32] {
-        &self.k[self.head_index(layer, kv)]
+        &self.heads[self.head_index(layer, kv)].k
     }
 
     pub fn v_slice(&self, layer: usize, kv: usize) -> &[f32] {
-        &self.v[self.head_index(layer, kv)]
+        &self.heads[self.head_index(layer, kv)].v
     }
 
     pub fn codes_slice(&self, layer: usize, kv: usize) -> &[u64] {
-        &self.codes[self.head_index(layer, kv)]
+        &self.heads[self.head_index(layer, kv)].codes
     }
 
     /// Borrow the method side structures for one head.
     pub fn side<'a>(&'a self, layer: usize, kv: usize, hash_w: &'a [f32], aux: &'a MethodAux) -> Side<'a> {
         let h = self.head_index(layer, kv);
+        let hc = &self.heads[h];
         Side {
             hash_w,
-            quest_min: self.quest_min.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
-            quest_max: self.quest_max.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            quest_min: &hc.quest_min,
+            quest_max: &hc.quest_max,
             quest_block: self.quest_block,
-            loki_kproj: self.loki_kproj.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            loki_kproj: &hc.loki_kproj,
             loki_pca: aux.loki_pca.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
             loki_channels: self.loki_channels,
-            mp_sigs: self.mp_sigs.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
+            mp_sigs: &hc.mp_sigs,
             mp_planes: aux.mp_planes.get(h).map(|v| v.as_slice()).unwrap_or(&[]),
             mp_k: self.mp_k,
             mp_l: self.mp_l,
@@ -173,10 +291,7 @@ impl SeqKvCache {
 
     /// Total bytes held (K + V + codes + side structures).
     pub fn bytes(&self) -> usize {
-        let f = |vs: &[Vec<f32>]| vs.iter().map(|v| v.len() * 4).sum::<usize>();
-        let c: usize = self.codes.iter().map(|v| v.len() * 8).sum();
-        let s: usize = self.mp_sigs.iter().map(|v| v.len() * 2).sum();
-        f(&self.k) + f(&self.v) + c + f(&self.quest_min) + f(&self.quest_max) + f(&self.loki_kproj) + s
+        self.heads.iter().map(|h| h.bytes()).sum()
     }
 }
 
@@ -304,5 +419,38 @@ mod tests {
         assert!(side.quest_min.is_empty());
         assert!(side.loki_kproj.is_empty());
         assert!(side.mp_sigs.is_empty());
+    }
+
+    #[test]
+    fn split_borrow_append_matches_serial_append() {
+        // appending through layer_heads_mut + advance_len must build the
+        // exact same cache as the serial append() path
+        let (cfg, serve) = cfg_serve(Method::Quest);
+        let aux = MethodAux::build(&cfg, &serve, None, 0);
+        let mut serial = SeqKvCache::new(&cfg, &serve);
+        let mut split = SeqKvCache::new(&cfg, &serve);
+        for t in 0..20 {
+            append_token(&mut serial, &cfg, &aux, &[], t as f32);
+            let krow = vec![t as f32; cfg.head_dim];
+            let vrow = vec![-(t as f32); cfg.head_dim];
+            for layer in 0..cfg.n_layers {
+                for mut head in split.layer_heads_mut(layer) {
+                    head.append(&krow, &vrow, &[], cfg.rbit, &aux);
+                }
+            }
+            split.advance_len();
+        }
+        assert_eq!(serial.len(), split.len());
+        for layer in 0..cfg.n_layers {
+            for kv in 0..cfg.n_kv_heads {
+                assert_eq!(serial.k_slice(layer, kv), split.k_slice(layer, kv));
+                assert_eq!(serial.v_slice(layer, kv), split.v_slice(layer, kv));
+                let a = serial.side(layer, kv, &[], &aux);
+                let b = split.side(layer, kv, &[], &aux);
+                assert_eq!(a.quest_min, b.quest_min);
+                assert_eq!(a.quest_max, b.quest_max);
+            }
+        }
+        assert_eq!(serial.bytes(), split.bytes());
     }
 }

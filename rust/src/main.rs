@@ -26,8 +26,8 @@ use hata::util::rng::Rng;
 
 const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
-    "requests", "workers", "max-new", "prompt", "artifacts", "rbit",
-    "verbose!", "random-weights!", "out",
+    "requests", "workers", "threads", "temperature", "max-new", "prompt",
+    "artifacts", "rbit", "verbose!", "random-weights!", "out",
 ];
 
 fn main() {
@@ -70,6 +70,8 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
   --fig N           regenerate figure 6|7|8
   --requests N      serve: number of synthetic requests
   --workers N       serve: router workers
+  --threads N       engine decode threadpool width (default 1 = serial)
+  --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
 
@@ -104,7 +106,14 @@ fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
 
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let method = Method::parse(&args.str("method", "hata")).context("bad --method")?;
-    Ok(ServeConfig { method, budget: args.usize("budget", 64)?, ..Default::default() })
+    Ok(ServeConfig {
+        method,
+        budget: args.usize("budget", 64)?,
+        threads: args.usize("threads", 1)?,
+        temperature: args.f64("temperature", 0.0)? as f32,
+        seed: args.u64("seed", 0)?,
+        ..Default::default()
+    })
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {

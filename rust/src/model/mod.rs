@@ -6,6 +6,25 @@
 //! [`DecodeScratch`]) and the attention stage is pluggable: any
 //! [`crate::attention::Selector`] can drive top-k sparse attention, which
 //! is exactly the paper's integration story.
+//!
+//! ## Batched parallel decode
+//!
+//! [`Model::decode_batch`] advances a whole scheduler batch one token in
+//! lock-step over layers. Within each layer the per-(sequence, kv-head)
+//! attention unit — hash encode + append, Hamming scoring, top-k select,
+//! sparse gather/attend — is an [`AttnWork`] item fanned across
+//! [`crate::util::threadpool::ThreadPool::scatter`]. Ownership:
+//!
+//! * weights/config ([`Model`]) — shared reads from every worker;
+//! * activations ([`DecodeScratch`]) — one per *sequence*, split-borrowed
+//!   per stage (`q`/`k`/`v` read, `attn` chunks written disjointly);
+//! * KV regions — disjoint per (layer, head) via
+//!   [`crate::kvcache::SeqKvCache::layer_heads_mut`];
+//! * selection buffers ([`WorkerScratch`]) — one per *worker thread*.
+//!
+//! The serial [`Model::decode_step`] runs the identical per-head routine
+//! ([`Model::decode_batch`] with one item degenerates to it), so
+//! `threads = N` is byte-identical to `threads = 1`.
 
 pub mod sampler;
 pub mod tokenizer;
@@ -15,11 +34,14 @@ use crate::attention::compute::{dense_attention, sparse_attention_fused, sparse_
 use crate::attention::methods::h2o_accumulate;
 use crate::attention::{AttnInputs, MethodState, Scratch, Selector};
 use crate::config::{Method, ModelConfig, ServeConfig};
-use crate::kvcache::{MethodAux, SeqKvCache};
+use crate::kvcache::{HeadMut, MethodAux, SeqKvCache};
 use crate::tensor::ops::{rms_norm, rope_inplace, silu, vecmat};
+use crate::util::threadpool::ThreadPool;
 use weights::Weights;
 
-/// Reusable decode-step buffers (per worker thread).
+/// Reusable per-sequence decode buffers: activations that must persist
+/// across the layer stack of one step, plus a built-in [`WorkerScratch`]
+/// equivalent (`sel`/`kgather`/`vgather`) for the serial path.
 pub struct DecodeScratch {
     x: Vec<f32>,
     h: Vec<f32>,
@@ -57,6 +79,17 @@ impl DecodeScratch {
     }
 }
 
+/// Per-worker-thread selection/gather buffers for the batched decode
+/// path. Per-sequence activations live in [`DecodeScratch`]; these arenas
+/// are lent to whichever work item the worker picks up, and every routine
+/// fully overwrites what it reads, so placement cannot affect results.
+#[derive(Default)]
+pub struct WorkerScratch {
+    pub sel: Scratch,
+    pub kgather: Vec<f32>,
+    pub vgather: Vec<f32>,
+}
+
 /// Per-sequence method state for all (layer, kv) heads.
 pub struct SeqState {
     pub per_head: Vec<MethodState>,
@@ -66,6 +99,45 @@ impl SeqState {
     pub fn new(cfg: &ModelConfig) -> Self {
         SeqState { per_head: vec![MethodState::default(); cfg.n_layers * cfg.n_kv_heads] }
     }
+}
+
+/// One sequence's slot in a batched decode step.
+pub struct DecodeItem<'a> {
+    /// token being fed (the previously sampled one)
+    pub token: u32,
+    /// absolute position of `token`
+    pub pos: usize,
+    pub cache: &'a mut SeqKvCache,
+    pub state: &'a mut SeqState,
+    pub scratch: &'a mut DecodeScratch,
+}
+
+/// One sequence's prefill chunk in a batched step.
+pub struct PrefillItem<'a> {
+    pub tokens: &'a [u32],
+    /// absolute position of `tokens[0]`
+    pub start: usize,
+    /// chunk covers the entire prompt: use [`Model::prefill`] (captures
+    /// SnapKV observation state); otherwise dense decode steps
+    pub whole: bool,
+    pub cache: &'a mut SeqKvCache,
+    pub state: &'a mut SeqState,
+    pub scratch: &'a mut DecodeScratch,
+}
+
+/// One (sequence, kv-head) attention work unit of a batched step: append
+/// the token's K/V row to this head's disjoint cache region, then
+/// select + attend into this head's slice of the sequence's `attn`.
+struct AttnWork<'a> {
+    head: HeadMut<'a>,
+    st: &'a mut MethodState,
+    q: &'a [f32],
+    krow: &'a [f32],
+    vrow: &'a [f32],
+    out: &'a mut [f32],
+    pos: usize,
+    layer: usize,
+    hash_w: &'a [f32],
 }
 
 /// Which sparse-attention compute variant the engine uses (Fig. 9
@@ -89,11 +161,126 @@ impl Model {
         Model { cfg, weights, aux, sparse_kernel: SparseKernel::Fused }
     }
 
+    /// Attention block input: rms-norm + q/k/v projections + RoPE, into
+    /// the sequence's scratch.
+    fn layer_qkv(&self, li: usize, pos: usize, sc: &mut DecodeScratch) {
+        let cfg = &self.cfg;
+        let lw = &self.weights.layers[li];
+        rms_norm(&sc.x, lw.attn_norm.data(), &mut sc.h, 1e-5);
+        vecmat(&sc.h, lw.wq.data(), cfg.n_heads * cfg.head_dim, &mut sc.q);
+        vecmat(&sc.h, lw.wk.data(), cfg.n_kv_heads * cfg.head_dim, &mut sc.k);
+        vecmat(&sc.h, lw.wv.data(), cfg.n_kv_heads * cfg.head_dim, &mut sc.v);
+        for hh in 0..cfg.n_heads {
+            let row = &mut sc.q[hh * cfg.head_dim..(hh + 1) * cfg.head_dim];
+            rope_inplace(row, pos, cfg.rope_theta);
+        }
+        for kv in 0..cfg.n_kv_heads {
+            let row = &mut sc.k[kv * cfg.head_dim..(kv + 1) * cfg.head_dim];
+            rope_inplace(row, pos, cfg.rope_theta);
+        }
+    }
+
+    /// Attention output projection + residual, then the MLP block.
+    fn layer_mlp(&self, li: usize, sc: &mut DecodeScratch) {
+        let cfg = &self.cfg;
+        let lw = &self.weights.layers[li];
+        vecmat(&sc.attn, lw.wo.data(), cfg.d_model, &mut sc.h);
+        for (x, &h) in sc.x.iter_mut().zip(&sc.h) {
+            *x += h;
+        }
+        rms_norm(&sc.x, lw.mlp_norm.data(), &mut sc.h, 1e-5);
+        vecmat(&sc.h, lw.w_gate.data(), cfg.ffn_hidden, &mut sc.gate);
+        vecmat(&sc.h, lw.w_up.data(), cfg.ffn_hidden, &mut sc.up);
+        for (g, &u) in sc.gate.iter_mut().zip(&sc.up) {
+            *g = silu(*g) * u;
+        }
+        vecmat(&sc.gate, lw.w_down.data(), cfg.d_model, &mut sc.mlp);
+        for (x, &m) in sc.x.iter_mut().zip(&sc.mlp) {
+            *x += m;
+        }
+    }
+
+    /// Final norm + LM head into `sc.logits`.
+    fn lm_head(&self, sc: &mut DecodeScratch) {
+        rms_norm(&sc.x, self.weights.final_norm.data(), &mut sc.h, 1e-5);
+        vecmat(&sc.h, self.weights.lm_head.data(), self.cfg.vocab, &mut sc.logits);
+    }
+
+    /// One (sequence, kv-head) attention unit (paper Alg. 3 l.3-12):
+    /// append K/V/codes to this head's region, then select + attend.
+    /// Runs identically on the engine thread (serial path, scratch =
+    /// the sequence's own buffers) and on threadpool workers (batched
+    /// path, scratch = the worker's arena).
+    #[allow(clippy::too_many_arguments)]
+    fn run_attn_work(
+        &self,
+        w: &mut AttnWork,
+        serve: &ServeConfig,
+        selector: Option<&dyn Selector>,
+        sel: &mut Scratch,
+        kgather: &mut Vec<f32>,
+        vgather: &mut Vec<f32>,
+    ) {
+        let cfg = &self.cfg;
+        w.head.append(w.krow, w.vrow, w.hash_w, cfg.rbit, &self.aux);
+        let s_now = w.pos + 1;
+        let inp = AttnInputs {
+            q: w.q,
+            group: cfg.group(),
+            dh: cfg.head_dim,
+            k: &w.head.hc.k,
+            v: &w.head.hc.v,
+            codes: &w.head.hc.codes,
+            words: cfg.rbit / 64,
+            rbit: cfg.rbit,
+            s: s_now,
+            pos: w.pos,
+            side: w.head.side(w.hash_w, &self.aux),
+        };
+        let use_dense = selector.is_none()
+            || w.layer < cfg.dense_layers
+            || serve.budget == 0
+            || serve.budget >= s_now;
+        if use_dense {
+            dense_attention(&inp, &mut sel.probs, &mut *w.out);
+            // H2O needs cumulative mass even during dense steps
+            if serve.method == Method::H2o {
+                w.st.h2o_cum.resize(s_now, 0.0);
+                for (t, &p) in sel.probs.iter().enumerate().take(s_now) {
+                    w.st.h2o_cum[t] += p;
+                }
+            }
+        } else {
+            let chooser = selector.unwrap();
+            chooser.select(&inp, &mut *w.st, serve.budget, &mut *sel);
+            // split borrows: take indices out, then compute
+            let indices = std::mem::take(&mut sel.indices);
+            match self.sparse_kernel {
+                SparseKernel::Fused => {
+                    sparse_attention_fused(&inp, &indices, &mut sel.probs, &mut *w.out)
+                }
+                SparseKernel::Gather => sparse_attention_gather(
+                    &inp,
+                    &indices,
+                    &mut *kgather,
+                    &mut *vgather,
+                    &mut sel.probs,
+                    &mut *w.out,
+                ),
+            }
+            if serve.method == Method::H2o {
+                h2o_accumulate(&mut *w.st, &indices, &sel.probs, s_now);
+            }
+            sel.indices = indices;
+        }
+    }
+
     /// One decode step (paper Alg. 3 embedded in the full block stack).
     ///
     /// Appends `token`'s K/V (and hash codes) to `cache`, runs the
     /// configured attention per (layer, kv-head), returns argmax-ready
     /// logits in `scratch.logits`.
+    #[allow(clippy::too_many_arguments)]
     pub fn decode_step(
         &self,
         token: u32,
@@ -105,109 +292,129 @@ impl Model {
         scratch: &mut DecodeScratch,
     ) {
         let cfg = &self.cfg;
-        let w = &self.weights;
-        scratch.x.copy_from_slice(w.embed.row(token as usize));
+        let group = cfg.group();
+        let dh = cfg.head_dim;
+        scratch.x.copy_from_slice(self.weights.embed.row(token as usize));
         for li in 0..cfg.n_layers {
-            let lw = &w.layers[li];
-            // ---- attention block
-            rms_norm(&scratch.x, lw.attn_norm.data(), &mut scratch.h, 1e-5);
-            vecmat(&scratch.h, lw.wq.data(), cfg.n_heads * cfg.head_dim, &mut scratch.q);
-            vecmat(&scratch.h, lw.wk.data(), cfg.n_kv_heads * cfg.head_dim, &mut scratch.k);
-            vecmat(&scratch.h, lw.wv.data(), cfg.n_kv_heads * cfg.head_dim, &mut scratch.v);
-            for hh in 0..cfg.n_heads {
-                rope_inplace(&mut scratch.q[hh * cfg.head_dim..(hh + 1) * cfg.head_dim], pos, cfg.rope_theta);
-            }
-            for kv in 0..cfg.n_kv_heads {
-                rope_inplace(&mut scratch.k[kv * cfg.head_dim..(kv + 1) * cfg.head_dim], pos, cfg.rope_theta);
-            }
-            // append K/V/codes (paper Alg. 3 l.3-9)
-            for kv in 0..cfg.n_kv_heads {
-                cache.append(
-                    li,
-                    kv,
-                    &scratch.k[kv * cfg.head_dim..(kv + 1) * cfg.head_dim],
-                    &scratch.v[kv * cfg.head_dim..(kv + 1) * cfg.head_dim],
-                    w.hash_head(li, kv),
-                    cfg.rbit,
-                    &self.aux,
-                );
-            }
-            let s_now = pos + 1;
-            // ---- per-KV-head attention
-            for kv in 0..cfg.n_kv_heads {
-                let group = cfg.group();
-                let inp = AttnInputs {
-                    q: &scratch.q[kv * group * cfg.head_dim..(kv + 1) * group * cfg.head_dim],
-                    group,
-                    dh: cfg.head_dim,
-                    k: cache.k_slice(li, kv),
-                    v: cache.v_slice(li, kv),
-                    codes: cache.codes_slice(li, kv),
-                    words: cfg.rbit / 64,
-                    rbit: cfg.rbit,
-                    s: s_now,
+            self.layer_qkv(li, pos, scratch);
+            let DecodeScratch { q, k, v, attn, sel, kgather, vgather, .. } = scratch;
+            for (kv, out) in attn.chunks_mut(group * dh).enumerate() {
+                let mut work = AttnWork {
+                    head: cache.head_mut(li, kv),
+                    st: &mut state.per_head[li * cfg.n_kv_heads + kv],
+                    q: &q[kv * group * dh..(kv + 1) * group * dh],
+                    krow: &k[kv * dh..(kv + 1) * dh],
+                    vrow: &v[kv * dh..(kv + 1) * dh],
+                    out,
                     pos,
-                    side: cache.side(li, kv, w.hash_head(li, kv), &self.aux),
+                    layer: li,
+                    hash_w: self.weights.hash_head(li, kv),
                 };
-                let out = &mut scratch.attn[kv * group * cfg.head_dim..(kv + 1) * group * cfg.head_dim];
-                let use_dense = selector.is_none()
-                    || li < cfg.dense_layers
-                    || serve.budget == 0
-                    || serve.budget >= s_now;
-                if use_dense {
-                    dense_attention(&inp, &mut scratch.sel.probs, out);
-                    // H2O needs cumulative mass even during dense steps
-                    if serve.method == Method::H2o {
-                        let st = &mut state.per_head[li * cfg.n_kv_heads + kv];
-                        st.h2o_cum.resize(s_now, 0.0);
-                        for (t, &p) in scratch.sel.probs.iter().enumerate().take(s_now) {
-                            st.h2o_cum[t] += p;
-                        }
-                    }
-                } else {
-                    let sel = selector.unwrap();
-                    let st = &mut state.per_head[li * cfg.n_kv_heads + kv];
-                    sel.select(&inp, st, serve.budget, &mut scratch.sel);
-                    // split borrows: take indices out, then compute
-                    let indices = std::mem::take(&mut scratch.sel.indices);
-                    match self.sparse_kernel {
-                        SparseKernel::Fused => {
-                            sparse_attention_fused(&inp, &indices, &mut scratch.sel.probs, out)
-                        }
-                        SparseKernel::Gather => sparse_attention_gather(
-                            &inp,
-                            &indices,
-                            &mut scratch.kgather,
-                            &mut scratch.vgather,
-                            &mut scratch.sel.probs,
-                            out,
-                        ),
-                    }
-                    if serve.method == Method::H2o {
-                        h2o_accumulate(st, &indices, &scratch.sel.probs, s_now);
-                    }
-                    scratch.sel.indices = indices;
+                let (kg, vg) = (&mut *kgather, &mut *vgather);
+                self.run_attn_work(&mut work, serve, selector, &mut *sel, kg, vg);
+            }
+            self.layer_mlp(li, scratch);
+        }
+        self.lm_head(scratch);
+        cache.advance_len();
+    }
+
+    /// Advance a whole batch one token: lock-step over layers, with the
+    /// per-(sequence, kv-head) attention units fanned across `pool` and
+    /// one [`WorkerScratch`] arena per worker. Leaves each sequence's
+    /// logits in its own `scratch.logits`.
+    ///
+    /// Byte-identical to running [`Model::decode_step`] per item: work
+    /// items only touch disjoint state, so neither thread count nor
+    /// placement can change any result.
+    pub fn decode_batch(
+        &self,
+        items: &mut [DecodeItem],
+        serve: &ServeConfig,
+        selector: Option<&dyn Selector>,
+        pool: &ThreadPool,
+        workers: &mut [WorkerScratch],
+    ) {
+        let cfg = &self.cfg;
+        let group = cfg.group();
+        let dh = cfg.head_dim;
+        for it in items.iter_mut() {
+            it.scratch.x.copy_from_slice(self.weights.embed.row(it.token as usize));
+        }
+        for li in 0..cfg.n_layers {
+            // stage 1: norm + q/k/v projections + RoPE, one item per sequence
+            pool.scatter(items, workers, |_, it, _| self.layer_qkv(li, it.pos, &mut *it.scratch));
+            // stage 2: per-(sequence, kv-head) attention work items.
+            // Built serially (cheap split-borrow bookkeeping), run on the
+            // pool — this is where the step spends its time.
+            let mut work: Vec<AttnWork> = Vec::with_capacity(items.len() * cfg.n_kv_heads);
+            for it in items.iter_mut() {
+                let pos = it.pos;
+                let DecodeScratch { q, k, v, attn, .. } = &mut *it.scratch;
+                let heads = it.cache.layer_heads_mut(li);
+                let states = &mut it.state.per_head[li * cfg.n_kv_heads..(li + 1) * cfg.n_kv_heads];
+                for (kv, ((head, st), out)) in heads
+                    .into_iter()
+                    .zip(states.iter_mut())
+                    .zip(attn.chunks_mut(group * dh))
+                    .enumerate()
+                {
+                    work.push(AttnWork {
+                        head,
+                        st,
+                        q: &q[kv * group * dh..(kv + 1) * group * dh],
+                        krow: &k[kv * dh..(kv + 1) * dh],
+                        vrow: &v[kv * dh..(kv + 1) * dh],
+                        out,
+                        pos,
+                        layer: li,
+                        hash_w: self.weights.hash_head(li, kv),
+                    });
                 }
             }
-            // wo projection + residual
-            vecmat(&scratch.attn, lw.wo.data(), cfg.d_model, &mut scratch.h);
-            for (x, &h) in scratch.x.iter_mut().zip(&scratch.h) {
-                *x += h;
-            }
-            // ---- MLP block
-            rms_norm(&scratch.x, lw.mlp_norm.data(), &mut scratch.h, 1e-5);
-            vecmat(&scratch.h, lw.w_gate.data(), cfg.ffn_hidden, &mut scratch.gate);
-            vecmat(&scratch.h, lw.w_up.data(), cfg.ffn_hidden, &mut scratch.up);
-            for (g, &u) in scratch.gate.iter_mut().zip(&scratch.up) {
-                *g = silu(*g) * u;
-            }
-            vecmat(&scratch.gate, lw.w_down.data(), cfg.d_model, &mut scratch.mlp);
-            for (x, &m) in scratch.x.iter_mut().zip(&scratch.mlp) {
-                *x += m;
-            }
+            pool.scatter(&mut work, workers, |_, w, ws| {
+                let (kg, vg) = (&mut ws.kgather, &mut ws.vgather);
+                self.run_attn_work(w, serve, selector, &mut ws.sel, kg, vg)
+            });
+            drop(work);
+            // stage 3: wo + residual + MLP, one item per sequence
+            pool.scatter(items, workers, |_, it, _| self.layer_mlp(li, &mut *it.scratch));
         }
-        rms_norm(&scratch.x, w.final_norm.data(), &mut scratch.h, 1e-5);
-        vecmat(&scratch.h, w.lm_head.data(), cfg.vocab, &mut scratch.logits);
+        pool.scatter(items, workers, |_, it, _| self.lm_head(&mut *it.scratch));
+        for it in items.iter_mut() {
+            it.cache.advance_len();
+        }
+    }
+
+    /// Batched prefill chunks: each chunk is token-serial (causal), but
+    /// chunks of different sequences are independent, so they fan across
+    /// the pool at sequence granularity.
+    pub fn prefill_batch(
+        &self,
+        items: &mut [PrefillItem],
+        serve: &ServeConfig,
+        pool: &ThreadPool,
+        workers: &mut [WorkerScratch],
+    ) {
+        let dense = ServeConfig { budget: 0, ..serve.clone() };
+        pool.scatter(items, workers, |_, it, _| {
+            if it.whole {
+                // single-chunk prompt: captures SnapKV state
+                self.prefill(it.tokens, &mut *it.cache, &mut *it.state, serve, &mut *it.scratch);
+            } else {
+                for (i, &tok) in it.tokens.iter().enumerate() {
+                    self.decode_step(
+                        tok,
+                        it.start + i,
+                        &mut *it.cache,
+                        &mut *it.state,
+                        &dense,
+                        None,
+                        &mut *it.scratch,
+                    );
+                }
+            }
+        });
     }
 
     /// Prefill `tokens` into `cache` with full attention (paper Alg. 1),
@@ -304,7 +511,10 @@ impl Model {
 
 /// Borrow an owned selector as the trait object the engine takes.
 pub fn sel_ref(sel: &Option<Box<dyn Selector + Send + Sync>>) -> Option<&dyn Selector> {
-    sel.as_deref().map(|s| s as &dyn Selector)
+    match sel {
+        Some(b) => Some(b.as_ref()),
+        None => None,
+    }
 }
 
 /// Build the [`Selector`] instance for a method (None = dense).
@@ -327,6 +537,7 @@ pub fn make_selector(serve: &ServeConfig) -> Option<Box<dyn Selector + Send + Sy
 mod tests {
     use super::*;
     use crate::config::preset;
+    use crate::tensor::ops::argmax;
     use crate::util::rng::Rng;
 
     fn tiny_model(method: Method) -> (Model, ServeConfig) {
@@ -345,7 +556,8 @@ mod tests {
         let mut state = SeqState::new(&model.cfg);
         let mut scratch = DecodeScratch::new(&model.cfg);
         for pos in 0..5 {
-            model.decode_step(7 + pos as u32, pos, &mut cache, &mut state, &serve, None, &mut scratch);
+            let tok = 7 + pos as u32;
+            model.decode_step(tok, pos, &mut cache, &mut state, &serve, None, &mut scratch);
         }
         assert_eq!(cache.len(), 5);
         assert!(scratch.logits.iter().all(|x| x.is_finite()));
@@ -380,7 +592,8 @@ mod tests {
             let mut state = SeqState::new(&model.cfg);
             let mut scratch = DecodeScratch::new(&model.cfg);
             let prompt: Vec<u32> = (32..96).collect();
-            let out = model.generate(&prompt, 3, &serve, sel_ref(&sel), &mut cache, &mut state, &mut scratch);
+            let out =
+                model.generate(&prompt, 3, &serve, sel_ref(&sel), &mut cache, &mut state, &mut scratch);
             assert_eq!(out.len(), 3, "method {method:?}");
             assert!(scratch.logits.iter().all(|x| x.is_finite()), "method {method:?}");
         }
@@ -415,5 +628,72 @@ mod tests {
             model.generate(&prompt, 5, &serve, sel_ref(&sel), &mut cache, &mut state, &mut scratch)
         };
         assert_eq!(gen(0), gen(1));
+    }
+
+    #[test]
+    fn decode_batch_matches_serial_generate() {
+        for method in [Method::Dense, Method::Hata, Method::Quest] {
+            let (model, serve) = tiny_model(method);
+            let sel = make_selector(&serve);
+            let prompts: Vec<Vec<u32>> =
+                vec![(32..72).collect(), (40..95).collect(), (50..76).collect()];
+            let n_new = 4;
+            // serial reference
+            let mut want = Vec::new();
+            for p in &prompts {
+                let mut cache = SeqKvCache::new(&model.cfg, &serve);
+                let mut state = SeqState::new(&model.cfg);
+                let mut scratch = DecodeScratch::new(&model.cfg);
+                want.push(model.generate(
+                    p,
+                    n_new,
+                    &serve,
+                    sel_ref(&sel),
+                    &mut cache,
+                    &mut state,
+                    &mut scratch,
+                ));
+            }
+            // batched path across a 3-worker pool
+            let pool = ThreadPool::new(3);
+            let mut workers: Vec<WorkerScratch> =
+                (0..3).map(|_| WorkerScratch::default()).collect();
+            let mut caches: Vec<SeqKvCache> =
+                prompts.iter().map(|_| SeqKvCache::new(&model.cfg, &serve)).collect();
+            let mut states: Vec<SeqState> =
+                prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+            let mut scratches: Vec<DecodeScratch> =
+                prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+            let mut next: Vec<u32> = Vec::with_capacity(prompts.len());
+            for (i, p) in prompts.iter().enumerate() {
+                model.prefill(p, &mut caches[i], &mut states[i], &serve, &mut scratches[i]);
+                next.push(argmax(&scratches[i].logits) as u32);
+            }
+            let mut got: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+            for step in 0..n_new {
+                for (i, &tok) in next.iter().enumerate() {
+                    got[i].push(tok);
+                }
+                let mut items: Vec<DecodeItem> = caches
+                    .iter_mut()
+                    .zip(states.iter_mut())
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                    .map(|(i, ((cache, state), scratch))| DecodeItem {
+                        token: next[i],
+                        pos: prompts[i].len() + step,
+                        cache,
+                        state,
+                        scratch,
+                    })
+                    .collect();
+                model.decode_batch(&mut items, &serve, sel_ref(&sel), &pool, &mut workers);
+                drop(items);
+                for (i, n) in next.iter_mut().enumerate() {
+                    *n = argmax(&scratches[i].logits) as u32;
+                }
+            }
+            assert_eq!(got, want, "method {method:?}");
+        }
     }
 }

@@ -6,186 +6,229 @@
 //! with no Python anywhere near the process. Static shapes come bucketed;
 //! [`PjrtModel::generate`] picks the smallest bucket that fits and masks
 //! the tail via the graph's `cur_len` scalar.
+//!
+//! The real implementation needs the `xla` bindings, which are not in the
+//! offline crate set; it compiles only under `RUSTFLAGS="--cfg pjrt"`
+//! (add the `xla` dependency locally when enabling it). Otherwise a stub
+//! [`PjrtModel`] keeps the CLI/test surface intact and reports the
+//! runtime as unavailable at load time.
 
-use std::path::Path;
+#[cfg(not(pjrt))]
+mod stub {
+    use anyhow::{bail, Result};
 
-use anyhow::{anyhow, bail, Context, Result};
+    use crate::config::manifest::ModelArtifacts;
 
-use crate::config::manifest::ModelArtifacts;
-use crate::config::ModelConfig;
-use crate::tensor::io::TensorStore;
-
-/// Thin wrapper over the PJRT CPU client.
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        Ok(PjrtRuntime { client: xla::PjRtClient::cpu().map_err(wrap)? })
+    /// Stub compiled without `--cfg pjrt`: same surface, fails at load.
+    pub struct PjrtModel {
+        pub bucket: usize,
+        pub hata_budget: usize,
     }
 
-    /// Load + compile one HLO text file.
-    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(wrap)
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).map_err(wrap).context("compiling HLO")
+    impl PjrtModel {
+        pub fn load(_arts: &ModelArtifacts, _needed: usize) -> Result<PjrtModel> {
+            bail!(
+                "PJRT runtime unavailable: built without `--cfg pjrt` \
+                 (xla bindings are not in the offline crate set)"
+            )
+        }
+
+        pub fn generate(&self, _prompt: &[u32], _n_new: usize, _budget: usize) -> Result<Vec<u32>> {
+            bail!("PJRT runtime unavailable: built without `--cfg pjrt`")
+        }
     }
 }
 
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
+#[cfg(not(pjrt))]
+pub use stub::PjrtModel;
 
-/// A generation-capable model running entirely on AOT artifacts.
-pub struct PjrtModel {
-    pub cfg: ModelConfig,
-    runtime: PjrtRuntime,
-    /// weight literals in aot.py param_order, then hash_w
-    weights: Vec<xla::Literal>,
-    hash_w: xla::Literal,
-    prefill: xla::PjRtLoadedExecutable,
-    decode_dense: xla::PjRtLoadedExecutable,
-    decode_hata: Option<xla::PjRtLoadedExecutable>,
-    pub bucket: usize,
-    pub hata_budget: usize,
-}
+#[cfg(pjrt)]
+mod pjrt_impl {
+    use std::path::Path;
 
-impl PjrtModel {
-    /// Load weights + graphs for one model from the manifest, choosing
-    /// the smallest bucket >= `needed` tokens.
-    pub fn load(arts: &ModelArtifacts, needed: usize) -> Result<PjrtModel> {
-        let runtime = PjrtRuntime::cpu()?;
-        let cfg = arts.config.clone();
-        let pre = arts
-            .pick_bucket("prefill", needed)
-            .with_context(|| format!("no prefill bucket >= {needed}"))?;
-        let bucket = pre.bucket;
-        let dd = arts
-            .hlo
-            .iter()
-            .find(|e| e.kind == "decode_dense" && e.bucket == bucket)
-            .context("no decode_dense for bucket")?;
-        let dh = arts.hlo.iter().find(|e| e.kind == "decode_hata" && e.bucket == bucket);
-        let store = TensorStore::load(&arts.weights)?;
-        let mut weights = Vec::new();
-        for name in &arts.param_order {
-            let t = store.f32(name)?;
-            weights.push(literal_f32(t.data(), t.shape())?);
-        }
-        let hash_path = arts
-            .hash_weights_for(cfg.rbit)
-            .with_context(|| format!("no hash weights rbit={}", cfg.rbit))?;
-        let hstore = TensorStore::load(hash_path)?;
-        let ht = hstore.f32("hash_w")?;
-        let hash_w = literal_f32(ht.data(), ht.shape())?;
-        Ok(PjrtModel {
-            prefill: runtime.load_hlo(&pre.path)?,
-            decode_dense: runtime.load_hlo(&dd.path)?,
-            decode_hata: dh.map(|e| runtime.load_hlo(&e.path)).transpose()?,
-            hata_budget: dh.map(|e| e.budget).unwrap_or(0),
-            cfg,
-            runtime,
-            weights,
-            hash_w,
-            bucket,
-        })
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use crate::config::manifest::ModelArtifacts;
+    use crate::config::ModelConfig;
+    use crate::tensor::io::TensorStore;
+
+    /// Thin wrapper over the PJRT CPU client.
+    pub struct PjrtRuntime {
+        pub client: xla::PjRtClient,
     }
 
-    /// Greedy generation. `budget > 0` uses the HATA decode graph.
-    pub fn generate(&self, prompt: &[u32], n_new: usize, budget: usize) -> Result<Vec<u32>> {
-        let cfg = &self.cfg;
-        if prompt.len() + n_new > self.bucket {
-            bail!("bucket {} too small for {} tokens", self.bucket, prompt.len() + n_new);
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            Ok(PjrtRuntime { client: xla::PjRtClient::cpu().map_err(wrap)? })
         }
-        if budget > 0 && self.decode_hata.is_none() {
-            bail!("no decode_hata graph in artifacts");
+
+        /// Load + compile one HLO text file.
+        pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(wrap)
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(wrap).context("compiling HLO")
         }
-        // ---- prefill
-        let mut toks_padded = vec![0i32; self.bucket];
-        for (i, &t) in prompt.iter().enumerate() {
-            toks_padded[i] = t as i32;
+    }
+
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow!("xla: {e}")
+    }
+
+    /// A generation-capable model running entirely on AOT artifacts.
+    pub struct PjrtModel {
+        pub cfg: ModelConfig,
+        runtime: PjrtRuntime,
+        /// weight literals in aot.py param_order, then hash_w
+        weights: Vec<xla::Literal>,
+        hash_w: xla::Literal,
+        prefill: xla::PjRtLoadedExecutable,
+        decode_dense: xla::PjRtLoadedExecutable,
+        decode_hata: Option<xla::PjRtLoadedExecutable>,
+        pub bucket: usize,
+        pub hata_budget: usize,
+    }
+
+    impl PjrtModel {
+        /// Load weights + graphs for one model from the manifest, choosing
+        /// the smallest bucket >= `needed` tokens.
+        pub fn load(arts: &ModelArtifacts, needed: usize) -> Result<PjrtModel> {
+            let runtime = PjrtRuntime::cpu()?;
+            let cfg = arts.config.clone();
+            let pre = arts
+                .pick_bucket("prefill", needed)
+                .with_context(|| format!("no prefill bucket >= {needed}"))?;
+            let bucket = pre.bucket;
+            let dd = arts
+                .hlo
+                .iter()
+                .find(|e| e.kind == "decode_dense" && e.bucket == bucket)
+                .context("no decode_dense for bucket")?;
+            let dh = arts.hlo.iter().find(|e| e.kind == "decode_hata" && e.bucket == bucket);
+            let store = TensorStore::load(&arts.weights)?;
+            let mut weights = Vec::new();
+            for name in &arts.param_order {
+                let t = store.f32(name)?;
+                weights.push(literal_f32(t.data(), t.shape())?);
+            }
+            let hash_path = arts
+                .hash_weights_for(cfg.rbit)
+                .with_context(|| format!("no hash weights rbit={}", cfg.rbit))?;
+            let hstore = TensorStore::load(hash_path)?;
+            let ht = hstore.f32("hash_w")?;
+            let hash_w = literal_f32(ht.data(), ht.shape())?;
+            Ok(PjrtModel {
+                prefill: runtime.load_hlo(&pre.path)?,
+                decode_dense: runtime.load_hlo(&dd.path)?,
+                decode_hata: dh.map(|e| runtime.load_hlo(&e.path)).transpose()?,
+                hata_budget: dh.map(|e| e.budget).unwrap_or(0),
+                cfg,
+                runtime,
+                weights,
+                hash_w,
+                bucket,
+            })
         }
-        let tokens_lit = xla::Literal::vec1(&toks_padded).reshape(&[self.bucket as i64]).map_err(wrap)?;
-        let len_lit = xla::Literal::scalar(prompt.len() as i32);
-        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
-        args.push(&self.hash_w);
-        args.push(&tokens_lit);
-        args.push(&len_lit);
-        let res = self.prefill.execute::<&xla::Literal>(&args).map_err(wrap)?;
-        let tuple = res[0][0].to_literal_sync().map_err(wrap)?;
-        let mut parts = tuple.to_tuple().map_err(wrap)?;
-        anyhow::ensure!(parts.len() == 4, "prefill returns 4 outputs");
-        let mut kc = parts.remove(1);
-        let mut vc = parts.remove(1);
-        let mut cc = parts.remove(1);
-        let logits = parts.remove(0);
-        let mut next = argmax_lit(&logits)?;
-        // prefill emits caches sized [L, KV, bucket, *] already
-        let mut out = Vec::with_capacity(n_new);
-        let _ = cfg;
-        // ---- decode loop
-        for step in 0..n_new {
-            out.push(next);
-            let pos = prompt.len() + step;
-            let tok_lit = xla::Literal::scalar(next as i32);
-            let pos_lit = xla::Literal::scalar(pos as i32);
-            let exe = if budget > 0 { self.decode_hata.as_ref().unwrap() } else { &self.decode_dense };
+
+        /// Greedy generation. `budget > 0` uses the HATA decode graph.
+        pub fn generate(&self, prompt: &[u32], n_new: usize, budget: usize) -> Result<Vec<u32>> {
+            let cfg = &self.cfg;
+            if prompt.len() + n_new > self.bucket {
+                bail!("bucket {} too small for {} tokens", self.bucket, prompt.len() + n_new);
+            }
+            if budget > 0 && self.decode_hata.is_none() {
+                bail!("no decode_hata graph in artifacts");
+            }
+            // ---- prefill
+            let mut toks_padded = vec![0i32; self.bucket];
+            for (i, &t) in prompt.iter().enumerate() {
+                toks_padded[i] = t as i32;
+            }
+            let tokens_lit =
+                xla::Literal::vec1(&toks_padded).reshape(&[self.bucket as i64]).map_err(wrap)?;
+            let len_lit = xla::Literal::scalar(prompt.len() as i32);
             let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
             args.push(&self.hash_w);
-            args.push(&tok_lit);
-            args.push(&pos_lit);
-            args.push(&kc);
-            args.push(&vc);
-            args.push(&cc);
-            let res = exe.execute::<&xla::Literal>(&args).map_err(wrap)?;
+            args.push(&tokens_lit);
+            args.push(&len_lit);
+            let res = self.prefill.execute::<&xla::Literal>(&args).map_err(wrap)?;
             let tuple = res[0][0].to_literal_sync().map_err(wrap)?;
             let mut parts = tuple.to_tuple().map_err(wrap)?;
-            anyhow::ensure!(parts.len() == 4, "decode returns 4 outputs");
+            anyhow::ensure!(parts.len() == 4, "prefill returns 4 outputs");
+            let mut kc = parts.remove(1);
+            let mut vc = parts.remove(1);
+            let mut cc = parts.remove(1);
             let logits = parts.remove(0);
-            kc = parts.remove(0);
-            vc = parts.remove(0);
-            cc = parts.remove(0);
-            next = argmax_lit(&logits)?;
+            let mut next = argmax_lit(&logits)?;
+            // prefill emits caches sized [L, KV, bucket, *] already
+            let mut out = Vec::with_capacity(n_new);
+            let _ = cfg;
+            // ---- decode loop
+            for step in 0..n_new {
+                out.push(next);
+                let pos = prompt.len() + step;
+                let tok_lit = xla::Literal::scalar(next as i32);
+                let pos_lit = xla::Literal::scalar(pos as i32);
+                let exe =
+                    if budget > 0 { self.decode_hata.as_ref().unwrap() } else { &self.decode_dense };
+                let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+                args.push(&self.hash_w);
+                args.push(&tok_lit);
+                args.push(&pos_lit);
+                args.push(&kc);
+                args.push(&vc);
+                args.push(&cc);
+                let res = exe.execute::<&xla::Literal>(&args).map_err(wrap)?;
+                let tuple = res[0][0].to_literal_sync().map_err(wrap)?;
+                let mut parts = tuple.to_tuple().map_err(wrap)?;
+                anyhow::ensure!(parts.len() == 4, "decode returns 4 outputs");
+                let logits = parts.remove(0);
+                kc = parts.remove(0);
+                vc = parts.remove(0);
+                cc = parts.remove(0);
+                next = argmax_lit(&logits)?;
+            }
+            Ok(out)
         }
-        Ok(out)
+    }
+
+    fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data).reshape(&dims).map_err(wrap)
+    }
+
+    fn argmax_lit(logits: &xla::Literal) -> Result<u32> {
+        let v: Vec<f32> = logits.to_vec().map_err(wrap)?;
+        Ok(crate::tensor::ops::argmax(&v) as u32)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn cpu_client_comes_up() {
+            let rt = PjrtRuntime::cpu().unwrap();
+            assert!(rt.client.device_count() >= 1);
+        }
+
+        #[test]
+        fn literal_roundtrip() {
+            let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+            let v: Vec<f32> = l.to_vec().unwrap();
+            assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+        }
+
+        #[test]
+        fn load_missing_hlo_errors() {
+            let rt = PjrtRuntime::cpu().unwrap();
+            assert!(rt.load_hlo(Path::new("/nonexistent.hlo.txt")).is_err());
+        }
     }
 }
 
-fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data).reshape(&dims).map_err(wrap)
-}
-
-fn argmax_lit(logits: &xla::Literal) -> Result<u32> {
-    let v: Vec<f32> = logits.to_vec().map_err(wrap)?;
-    Ok(crate::tensor::ops::argmax(&v) as u32)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn cpu_client_comes_up() {
-        let rt = PjrtRuntime::cpu().unwrap();
-        assert!(rt.client.device_count() >= 1);
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
-        let v: Vec<f32> = l.to_vec().unwrap();
-        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
-    }
-
-    #[test]
-    fn load_missing_hlo_errors() {
-        let rt = PjrtRuntime::cpu().unwrap();
-        assert!(rt.load_hlo(Path::new("/nonexistent.hlo.txt")).is_err());
-    }
-}
+#[cfg(pjrt)]
+pub use pjrt_impl::{PjrtModel, PjrtRuntime};

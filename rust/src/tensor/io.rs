@@ -1,14 +1,15 @@
-//! `.npz` checkpoint loading via the `xla` crate's npy reader.
+//! `.npz` checkpoint loading — a self-contained reader (zip central
+//! directory + NPY headers), no external crates.
 //!
-//! The Python build path saves everything as f32 or i32 (the xla 0.5.1
-//! npy reader has no unsigned-32 descr); packed hash codes travel as i32
-//! bit patterns and are reinterpreted on this side.
+//! The Python build path saves with `np.savez` (STORED zip entries, no
+//! compression), everything as f32 or i32; packed hash codes travel as
+//! i32 bit patterns and are reinterpreted on this side. 64-bit payloads
+//! (numpy's default int/float) are narrowed on load.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-use xla::FromRawBytes;
+use anyhow::{bail, ensure, Context, Result};
 
 use super::Tensor;
 
@@ -47,7 +48,191 @@ impl Array {
     }
 }
 
-/// All arrays of one .npz file, by name.
+// ---------------------------------------------------------------- zip
+
+fn rd_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// One stored zip member: (name, payload range into the archive bytes).
+fn zip_entries(bytes: &[u8]) -> Result<Vec<(String, std::ops::Range<usize>)>> {
+    const EOCD_SIG: u32 = 0x0605_4b50;
+    const CENTRAL_SIG: u32 = 0x0201_4b50;
+    const LOCAL_SIG: u32 = 0x0403_4b50;
+    ensure!(bytes.len() >= 22, "zip too small");
+    // EOCD: scan back over a possible trailing comment (<= 64 KiB)
+    let mut eocd = None;
+    let lo = bytes.len().saturating_sub(22 + 65_536);
+    for at in (lo..=bytes.len() - 22).rev() {
+        if rd_u32(bytes, at) == EOCD_SIG {
+            eocd = Some(at);
+            break;
+        }
+    }
+    let eocd = eocd.context("zip end-of-central-directory not found")?;
+    let count = rd_u16(bytes, eocd + 10) as usize;
+    let mut at = rd_u32(bytes, eocd + 16) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        ensure!(at + 46 <= bytes.len() && rd_u32(bytes, at) == CENTRAL_SIG, "bad central entry");
+        let method = rd_u16(bytes, at + 10);
+        let comp_size = rd_u32(bytes, at + 20) as usize;
+        let uncomp_size = rd_u32(bytes, at + 24) as usize;
+        let name_len = rd_u16(bytes, at + 28) as usize;
+        let extra_len = rd_u16(bytes, at + 30) as usize;
+        let comment_len = rd_u16(bytes, at + 32) as usize;
+        let local_off = rd_u32(bytes, at + 42) as usize;
+        ensure!(
+            comp_size != u32::MAX as usize && local_off != u32::MAX as usize,
+            "zip64 archives unsupported"
+        );
+        ensure!(
+            at + 46 + name_len + extra_len + comment_len <= bytes.len(),
+            "truncated central directory entry"
+        );
+        let name = std::str::from_utf8(&bytes[at + 46..at + 46 + name_len])
+            .context("non-utf8 zip member name")?
+            .to_string();
+        ensure!(
+            method == 0,
+            "zip member {name:?} is compressed (method {method}); np.savez writes stored entries"
+        );
+        ensure!(comp_size == uncomp_size, "stored zip member with mismatched sizes");
+        // local header gives the real data offset (its name/extra fields
+        // can differ in length from the central copy)
+        ensure!(
+            local_off + 30 <= bytes.len() && rd_u32(bytes, local_off) == LOCAL_SIG,
+            "bad local header for {name:?}"
+        );
+        let lname = rd_u16(bytes, local_off + 26) as usize;
+        let lextra = rd_u16(bytes, local_off + 28) as usize;
+        let data_at = local_off + 30 + lname + lextra;
+        ensure!(data_at + comp_size <= bytes.len(), "zip member {name:?} out of bounds");
+        out.push((name, data_at..data_at + comp_size));
+        at += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- npy
+
+/// Parse one .npy payload into an [`Array`].
+fn parse_npy(name: &str, b: &[u8]) -> Result<Array> {
+    ensure!(b.len() >= 10 && &b[..6] == b"\x93NUMPY", "{name}: not an npy payload");
+    let (major, _minor) = (b[6], b[7]);
+    let (header_len, header_at) = if major == 1 {
+        (rd_u16(b, 8) as usize, 10)
+    } else {
+        ensure!(b.len() >= 12, "{name}: truncated npy header");
+        (rd_u32(b, 8) as usize, 12)
+    };
+    ensure!(header_at + header_len <= b.len(), "{name}: truncated npy header");
+    let header = std::str::from_utf8(&b[header_at..header_at + header_len])
+        .with_context(|| format!("{name}: non-ascii npy header"))?;
+    let descr = dict_str(header, "descr").with_context(|| format!("{name}: npy descr"))?;
+    let fortran = dict_raw(header, "fortran_order")
+        .map(|v| v.starts_with("True"))
+        .unwrap_or(false);
+    ensure!(!fortran, "{name}: fortran_order arrays unsupported");
+    let shape = dict_shape(header).with_context(|| format!("{name}: npy shape"))?;
+    let n: usize = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .with_context(|| format!("{name}: npy shape overflows"))?;
+    let data = &b[header_at + header_len..];
+    let elem = |width: usize| -> Result<()> {
+        let need = n
+            .checked_mul(width)
+            .with_context(|| format!("{name}: npy size overflows"))?;
+        ensure!(data.len() >= need, "{name}: npy payload too short");
+        Ok(())
+    };
+    // accept native/little markers; the build path never writes big-endian
+    let d = descr.trim_start_matches(['<', '=', '|']);
+    Ok(match d {
+        "f4" => {
+            elem(4)?;
+            let v: Vec<f32> = data
+                .chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Array::F32(Tensor::new(shape, v))
+        }
+        "f8" => {
+            elem(8)?;
+            let v: Vec<f32> = data
+                .chunks_exact(8)
+                .take(n)
+                .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32)
+                .collect();
+            Array::F32(Tensor::new(shape, v))
+        }
+        "i4" | "u4" => {
+            elem(4)?;
+            let v: Vec<i32> = data
+                .chunks_exact(4)
+                .take(n)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Array::I32 { shape, data: v }
+        }
+        "i8" | "u8" => {
+            elem(8)?;
+            let v: Vec<i32> = data
+                .chunks_exact(8)
+                .take(n)
+                .map(|c| {
+                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as i32
+                })
+                .collect();
+            Array::I32 { shape, data: v }
+        }
+        other => bail!("{name}: unsupported npy dtype {other:?}"),
+    })
+}
+
+/// Extract a quoted string value from the npy header dict.
+fn dict_str(header: &str, key: &str) -> Option<String> {
+    let raw = dict_raw(header, key)?;
+    let raw = raw.trim_start();
+    let quote = raw.chars().next()?;
+    if quote != '\'' && quote != '"' {
+        return None;
+    }
+    let rest = &raw[1..];
+    Some(rest[..rest.find(quote)?].to_string())
+}
+
+/// Raw text following `'key':` in the npy header dict.
+fn dict_raw<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)?;
+    Some(header[at + pat.len()..].trim_start())
+}
+
+fn dict_shape(header: &str) -> Option<Vec<usize>> {
+    let raw = dict_raw(header, "shape")?;
+    let open = raw.find('(')?;
+    let close = raw.find(')')?;
+    let inner = &raw[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(part.parse().ok()?);
+    }
+    Some(shape)
+}
+
+/// All arrays of one .npz file, by name (the `.npy` member suffix is
+/// stripped).
 #[derive(Debug, Default)]
 pub struct TensorStore {
     arrays: BTreeMap<String, Array>,
@@ -56,33 +241,16 @@ pub struct TensorStore {
 impl TensorStore {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
-        let lits = xla::Literal::read_npz(path, &())
-            .with_context(|| format!("reading npz {}", path.display()))?;
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading npz {}", path.display()))?;
         let mut arrays = BTreeMap::new();
-        for (name, lit) in lits {
-            let shape: Vec<usize> = lit
-                .array_shape()
-                .context("npz entry has no array shape")?
-                .dims()
-                .iter()
-                .map(|&d| d as usize)
-                .collect();
-            let arr = match lit.ty()? {
-                xla::ElementType::F32 => {
-                    Array::F32(Tensor::new(shape, lit.to_vec::<f32>()?))
-                }
-                xla::ElementType::S32 => Array::I32 { shape, data: lit.to_vec::<i32>()? },
-                xla::ElementType::F64 => {
-                    let v: Vec<f64> = lit.to_vec()?;
-                    Array::F32(Tensor::new(shape, v.into_iter().map(|x| x as f32).collect()))
-                }
-                xla::ElementType::S64 => {
-                    let v: Vec<i64> = lit.to_vec()?;
-                    Array::I32 { shape, data: v.into_iter().map(|x| x as i32).collect() }
-                }
-                other => bail!("unsupported npz dtype {other:?} for {name}"),
-            };
-            arrays.insert(name, arr);
+        for (name, range) in
+            zip_entries(&bytes).with_context(|| format!("parsing npz {}", path.display()))?
+        {
+            let key = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+            let arr = parse_npy(&name, &bytes[range])
+                .with_context(|| format!("parsing npz {}", path.display()))?;
+            arrays.insert(key, arr);
         }
         Ok(TensorStore { arrays })
     }
@@ -111,5 +279,111 @@ impl TensorStore {
 
     pub fn is_empty(&self) -> bool {
         self.arrays.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal npy payload builder (v1 header, little-endian).
+    fn npy(descr: &str, shape: &[usize], payload: &[u8]) -> Vec<u8> {
+        let shape_txt = match shape.len() {
+            0 => "()".to_string(),
+            1 => format!("({},)", shape[0]),
+            _ => format!("({})", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")),
+        };
+        let header =
+            format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_txt}, }}\n");
+        let mut out = Vec::new();
+        out.extend_from_slice(b"\x93NUMPY\x01\x00");
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+
+    /// Minimal stored-entry zip builder (the shape np.savez writes).
+    fn zip(entries: &[(&str, Vec<u8>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut central = Vec::new();
+        for (name, data) in entries {
+            let offset = out.len() as u32;
+            out.extend_from_slice(&0x0403_4b50u32.to_le_bytes());
+            out.extend_from_slice(&20u16.to_le_bytes()); // version
+            out.extend_from_slice(&[0; 2]); // flags
+            out.extend_from_slice(&[0; 2]); // method: stored
+            out.extend_from_slice(&[0; 4]); // time+date
+            out.extend_from_slice(&[0; 4]); // crc (unchecked)
+            out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(&[0; 2]); // extra len
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(data);
+            central.extend_from_slice(&0x0201_4b50u32.to_le_bytes());
+            central.extend_from_slice(&20u16.to_le_bytes());
+            central.extend_from_slice(&20u16.to_le_bytes());
+            central.extend_from_slice(&[0; 2]); // flags
+            central.extend_from_slice(&[0; 2]); // method
+            central.extend_from_slice(&[0; 4]); // time+date
+            central.extend_from_slice(&[0; 4]); // crc
+            central.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            central.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            central.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            central.extend_from_slice(&[0; 2]); // extra len
+            central.extend_from_slice(&[0; 2]); // comment len
+            central.extend_from_slice(&[0; 2]); // disk
+            central.extend_from_slice(&[0; 2]); // int attrs
+            central.extend_from_slice(&[0; 4]); // ext attrs
+            central.extend_from_slice(&offset.to_le_bytes());
+            central.extend_from_slice(name.as_bytes());
+        }
+        let cd_offset = out.len() as u32;
+        out.extend_from_slice(&central);
+        out.extend_from_slice(&0x0605_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[0; 4]); // disk numbers
+        out.extend_from_slice(&(entries.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(entries.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(central.len() as u32).to_le_bytes());
+        out.extend_from_slice(&cd_offset.to_le_bytes());
+        out.extend_from_slice(&[0; 2]); // comment len
+        out
+    }
+
+    fn le_f32(v: &[f32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    fn le_i64(v: &[i64]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn roundtrips_savez_shaped_archive() {
+        let bytes = zip(&[
+            ("weights.npy", npy("<f4", &[2, 2], &le_f32(&[1.0, 2.0, 3.0, 4.0]))),
+            ("codes.npy", npy("<i8", &[3], &le_i64(&[7, -1, 2]))),
+        ]);
+        let dir = std::env::temp_dir().join("hata_io_test.npz");
+        std::fs::write(&dir, &bytes).unwrap();
+        let store = TensorStore::load(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        let w = store.f32("weights").unwrap();
+        assert_eq!(w.shape(), &[2, 2]);
+        assert_eq!(w.data(), &[1.0, 2.0, 3.0, 4.0]);
+        let c = store.i32("codes").unwrap();
+        assert_eq!(c, &[7, -1, 2]);
+        // i32 reinterprets as u32 bit patterns
+        assert_eq!(store.get("codes").unwrap().as_u32().unwrap()[1], u32::MAX);
+        assert!(store.f32("missing").is_err());
+        assert!(store.f32("codes").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("hata_io_garbage.npz");
+        std::fs::write(&dir, b"not a zip at all").unwrap();
+        assert!(TensorStore::load(&dir).is_err());
     }
 }

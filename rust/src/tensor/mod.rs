@@ -2,8 +2,8 @@
 //!
 //! The serving hot path works on raw `&[f32]` slices with explicit dims
 //! (no shape bookkeeping per decode step); `Tensor` carries shapes for
-//! weight storage, goldens and tests. `io` loads `.npz` checkpoints via
-//! the `xla` crate's npy reader.
+//! weight storage, goldens and tests. `io` loads `.npz` checkpoints with
+//! a self-contained reader (no external crates).
 
 pub mod io;
 pub mod ops;

@@ -1,9 +1,9 @@
 //! From-scratch substrates.
 //!
-//! The build image ships no crates.io index beyond the vendored set used by
-//! the `xla` crate (see DESIGN.md §2), so the usual ecosystem pieces —
-//! serde, clap, rand, criterion, rayon — are reimplemented here at the
-//! scale this project needs. Each submodule carries its own unit tests.
+//! The build image ships no crates.io index beyond a tiny vendored set
+//! (see DESIGN.md §2), so the usual ecosystem pieces — serde, clap, rand,
+//! criterion, rayon — are reimplemented here at the scale this project
+//! needs. Each submodule carries its own unit tests.
 
 pub mod cli;
 pub mod json;

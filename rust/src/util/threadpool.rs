@@ -4,15 +4,32 @@
 //! image this degenerates to inline execution, which keeps benches honest
 //! (no fake parallel speedups) while the code path still exercises the
 //! pool on multi-core machines.
+//!
+//! The serving hot path uses [`ThreadPool::scatter`]: the engine fans
+//! per-(sequence, kv-head) decode work across the pool's *persistent*
+//! workers (no per-step thread spawns), handing each worker exclusive use
+//! of one scratch arena. [`ThreadPool::for_each_index`] remains for
+//! borrowed one-shot fan-outs that do not need worker-local state.
 
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 pub struct ThreadPool {
     workers: Vec<std::thread::JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
+}
+
+/// Completion latch shared between one `scatter` call's jobs.
+struct Latch {
+    next: AtomicUsize,
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    cv: Condvar,
 }
 
 impl ThreadPool {
@@ -64,11 +81,11 @@ impl ThreadPool {
             }
             return;
         }
-        let next = std::sync::atomic::AtomicUsize::new(0);
+        let next = AtomicUsize::new(0);
         std::thread::scope(|scope| {
             for _ in 0..width {
                 scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
@@ -76,6 +93,94 @@ impl ThreadPool {
                 });
             }
         });
+    }
+
+    /// Fan `items` across the pool's persistent workers, giving each
+    /// worker exclusive use of one `states` arena: every item is handed
+    /// to `f(index, &mut items[index], &mut states[worker])` exactly
+    /// once. Blocks until all items are processed.
+    ///
+    /// Execution order is unspecified, but which worker runs an item
+    /// cannot affect results as long as `f` fully overwrites whatever it
+    /// reads from the worker arena — the same contract the serial decode
+    /// loop already places on its reused scratch. Runs inline (and in
+    /// index order) when the pool, `states`, or `items` has a single
+    /// entry, so `threads = 1` engines stay strictly serial.
+    ///
+    /// Panics in `f` are caught on the worker, the fan-out drains, and
+    /// the panic is re-raised here (instead of poisoning the pool).
+    pub fn scatter<T, S, F>(&self, items: &mut [T], states: &mut [S], f: F)
+    where
+        T: Send,
+        S: Send,
+        F: Fn(usize, &mut T, &mut S) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let width = self.size().min(n).min(states.len());
+        if width <= 1 {
+            let s = states.first_mut().expect("scatter: states must be non-empty");
+            for (i, t) in items.iter_mut().enumerate() {
+                f(i, t, s);
+            }
+            return;
+        }
+        let latch = Latch {
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(width),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        };
+        let items_addr = items.as_mut_ptr() as usize;
+        let states_addr = states.as_mut_ptr() as usize;
+        let latch_ref = &latch;
+        let f_ref = &f;
+        for w in 0..width {
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                // SAFETY: `w` is unique per job, so this is the only
+                // &mut into states[w] for the whole fan-out.
+                let s = unsafe { &mut *(states_addr as *mut S).add(w) };
+                loop {
+                    let i = latch_ref.next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: the atomic counter yields each index to
+                    // exactly one worker, so this &mut aliases nothing.
+                    let t = unsafe { &mut *(items_addr as *mut T).add(i) };
+                    let guarded = AssertUnwindSafe(|| f_ref(i, t, &mut *s));
+                    if std::panic::catch_unwind(guarded).is_err() {
+                        latch_ref.panicked.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                if latch_ref.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    // notify while holding the lock: the waiter may only
+                    // observe done=true (and then destroy the latch) after
+                    // this worker's final access to it
+                    let mut done = latch_ref.done.lock().unwrap();
+                    *done = true;
+                    latch_ref.cv.notify_all();
+                }
+            });
+            // SAFETY: the job borrows `f`, `latch` and the item/state
+            // slices, all of which outlive this call: we block on the
+            // latch below until every job has signalled completion, so
+            // the 'static erasure can never be observed.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            self.tx.as_ref().unwrap().send(job).expect("pool closed");
+        }
+        let mut done = latch.done.lock().unwrap();
+        while !*done {
+            done = latch.cv.wait(done).unwrap();
+        }
+        drop(done);
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("ThreadPool::scatter: a worker job panicked");
+        }
     }
 }
 
@@ -131,6 +236,41 @@ mod tests {
             *(ptr as *mut usize).add(i) = i * 2;
         });
         assert_eq!(data, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+    }
+
+    #[test]
+    fn scatter_processes_each_item_once_with_worker_state() {
+        let pool = ThreadPool::new(4);
+        let mut items: Vec<usize> = vec![0; 100];
+        let mut states: Vec<usize> = vec![0; 4];
+        pool.scatter(&mut items, &mut states, |i, it, s| {
+            *it += i + 1;
+            *s += 1;
+        });
+        assert!(items.iter().enumerate().all(|(i, &v)| v == i + 1));
+        assert_eq!(states.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn scatter_inline_when_single_state() {
+        let pool = ThreadPool::new(4);
+        let mut items = vec![1usize; 8];
+        let mut states = vec![0usize];
+        pool.scatter(&mut items, &mut states, |_, it, s| {
+            *it *= 2;
+            *s += 1;
+        });
+        assert_eq!(states[0], 8);
+        assert!(items.iter().all(|&v| v == 2));
+    }
+
+    #[test]
+    fn scatter_empty_items_is_noop() {
+        let pool = ThreadPool::new(2);
+        let mut items: Vec<usize> = Vec::new();
+        let mut states = vec![0usize; 2];
+        pool.scatter(&mut items, &mut states, |_, _, s| *s += 1);
+        assert_eq!(states, vec![0, 0]);
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! Parallel-vs-serial determinism: the batched threadpool decode path
+//! (`serve.threads > 1`) must produce byte-identical token streams to the
+//! serial engine for every method — work items touch disjoint state and
+//! per-worker scratch is fully overwritten, so thread count and item
+//! placement cannot change any result.
+
+use std::sync::Arc;
+
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::Request;
+use hata::kvcache::MethodAux;
+use hata::model::{weights::Weights, Model};
+use hata::util::rng::Rng;
+
+/// Run a fixed workload (6 requests, mixed prompt lengths, chunked
+/// prefill) and return the (id, tokens) streams sorted by id.
+fn run(method: Method, threads: usize) -> Vec<(u64, Vec<u32>)> {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 4,
+        prefill_chunk: 64,
+        threads,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    for id in 0..6u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..(40 + id as usize * 13)).map(|i| 32 + (i as u32 % 64)).collect(),
+            max_new_tokens: 5,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let mut out: Vec<(u64, Vec<u32>)> =
+        engine.run_to_completion().into_iter().map(|r| (r.id, r.tokens)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    assert_eq!(out.len(), 6, "all requests must complete ({method:?}, threads={threads})");
+    assert!(out.iter().all(|(_, t)| t.len() == 5));
+    out
+}
+
+#[test]
+fn dense_tokens_identical_across_thread_counts() {
+    let serial = run(Method::Dense, 1);
+    assert_eq!(serial, run(Method::Dense, 2));
+    assert_eq!(serial, run(Method::Dense, 4));
+}
+
+#[test]
+fn hata_tokens_identical_across_thread_counts() {
+    let serial = run(Method::Hata, 1);
+    assert_eq!(serial, run(Method::Hata, 2));
+    assert_eq!(serial, run(Method::Hata, 4));
+}
+
+#[test]
+fn quest_tokens_identical_across_thread_counts() {
+    let serial = run(Method::Quest, 1);
+    assert_eq!(serial, run(Method::Quest, 4));
+}
