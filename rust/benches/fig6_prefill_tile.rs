@@ -1,0 +1,126 @@
+//! Prefill-tiling sweep: wall time of a long-prompt prefill under the
+//! block-tiled threadpool path (`Model::prefill_batch`, engine chunking
+//! emulated) across tile sizes and thread counts, against the token-serial
+//! baseline (`Model::prefill_serial`).
+//!
+//! The tiled path is bit-identical to the baseline for every
+//! (tile, threads) cell — the sweep only moves wall time — and the last
+//! column asserts it by comparing final logits exactly.
+//!
+//! Env: HATA_BENCH_ITERS (default 1), HATA_PREFILL_LEN (default 4096),
+//! HATA_PREFILL_CHUNK (default 512).
+
+use std::time::Instant;
+
+use hata::bench::report::{fmt, Table};
+use hata::config::{preset, Method, ServeConfig};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{weights::Weights, DecodeScratch, Model, PrefillItem, SeqState, WorkerScratch};
+use hata::util::rng::Rng;
+use hata::util::threadpool::ThreadPool;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let iters = env_usize("HATA_BENCH_ITERS", 1).max(1);
+    let s = env_usize("HATA_PREFILL_LEN", 4096);
+    let chunk = env_usize("HATA_PREFILL_CHUNK", 512).max(1);
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method: Method::Hata,
+        budget: 64,
+        prefill_chunk: chunk,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(9);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let model = Model::new(cfg, weights, aux);
+    let prompt: Vec<u32> = (0..s as u32).map(|i| 32 + (i % 64)).collect();
+    let mut scratch = DecodeScratch::new(&model.cfg);
+
+    // ---- token-serial baseline
+    let mut serial_secs = f64::INFINITY;
+    let mut serial_logits = Vec::new();
+    for _ in 0..iters {
+        let mut cache = SeqKvCache::new(&model.cfg, &serve);
+        let mut state = SeqState::new(&model.cfg);
+        let t0 = Instant::now();
+        model.prefill_serial(&prompt, &mut cache, &mut state, &serve, &mut scratch);
+        serial_secs = serial_secs.min(t0.elapsed().as_secs_f64());
+        serial_logits = scratch.logits.clone();
+    }
+    eprintln!("[fig6] serial baseline done ({serial_secs:.3}s)");
+
+    // ---- tiled path: engine-shaped chunking, PrefillItem per chunk
+    let run_tiled = |threads: usize, tile: usize, scratch: &mut DecodeScratch| -> f64 {
+        let pool = ThreadPool::new(threads);
+        let mut workers: Vec<WorkerScratch> =
+            (0..threads).map(|_| WorkerScratch::default()).collect();
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let mut cache = SeqKvCache::new(&model.cfg, &serve);
+            let mut state = SeqState::new(&model.cfg);
+            let t0 = Instant::now();
+            let mut start = 0usize;
+            while start < prompt.len() {
+                let end = (start + chunk).min(prompt.len());
+                let mut items = vec![PrefillItem {
+                    tokens: &prompt[start..end],
+                    start,
+                    whole: false,
+                    tile,
+                    cache: &mut cache,
+                    state: &mut state,
+                    scratch: &mut *scratch,
+                }];
+                model.prefill_batch(&mut items, &serve, &pool, &mut workers);
+                start = end;
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            assert_eq!(
+                scratch.logits, serial_logits,
+                "tiled prefill (threads={threads}, tile={tile}) diverged from serial"
+            );
+        }
+        best
+    };
+
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    let mut table = Table::new(
+        &format!(
+            "Fig 6 prefill-tile sweep: {s}-token prompt, chunk={chunk} (hata-gqa, min of {iters})"
+        ),
+        &["path", "threads", "tile", "seconds", "speedup_vs_serial", "bitwise_equal"],
+    );
+    table.row(vec![
+        "token-serial".into(),
+        "1".into(),
+        "-".into(),
+        fmt(serial_secs),
+        "1.00".into(),
+        "-".into(),
+    ]);
+    let mut thread_counts = vec![1usize];
+    if max_threads > 1 {
+        thread_counts.push(max_threads);
+    }
+    for &threads in &thread_counts {
+        for &tile in &[16usize, 32, 64, 128, 2 * chunk.max(1)] {
+            let secs = run_tiled(threads, tile, &mut scratch);
+            table.row(vec![
+                "tiled".into(),
+                threads.to_string(),
+                tile.to_string(),
+                fmt(secs),
+                fmt(serial_secs / secs),
+                "yes".into(),
+            ]);
+            eprintln!("[fig6] threads={threads} tile={tile} done ({secs:.3}s)");
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig6_prefill_tile").unwrap();
+}

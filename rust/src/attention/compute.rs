@@ -12,6 +12,12 @@
 //! `probs` scratch are exclusive to the caller's work item, and every
 //! scratch prefix that is read is overwritten first — so a reused
 //! worker arena can never leak state between items.
+//!
+//! [`prefill_tile_attention`] extends the same contract to the tiled
+//! prefill path: a [`PrefillTile`] covers a run of consecutive query
+//! rows of one (sequence, kv-head), each row causally masked by bounding
+//! `s` and reduced by the identical [`dense_attention`] kernel, which is
+//! what makes tiled prefill bit-identical to token-serial prefill.
 
 use super::AttnInputs;
 use crate::tensor::ops::dot;
@@ -126,6 +132,63 @@ pub fn sparse_attention_fused(
     }
 }
 
+/// One (sequence, kv-head, query-tile) work item of the tiled prefill
+/// pass: a run of consecutive query rows attending causally over one
+/// head's cache (flash-style query tiling, Dao et al.).
+pub struct PrefillTile<'a> {
+    /// All rotated query rows of the block, [block_len, qstride].
+    pub q: &'a [f32],
+    /// This head's full key cache (prefix + the already-appended block).
+    pub k: &'a [f32],
+    /// This head's full value cache.
+    pub v: &'a [f32],
+    /// GQA query heads per KV head.
+    pub group: usize,
+    /// Head dimension.
+    pub dh: usize,
+    /// Stride between consecutive tokens' query rows (n_heads * dh).
+    pub qstride: usize,
+    /// Offset of this KV head's group inside a query row (kv * group * dh).
+    pub qoff: usize,
+    /// Block-local index of the tile's first query row.
+    pub t0: usize,
+    /// Absolute position of block row 0.
+    pub start: usize,
+}
+
+/// Causally-masked attention for one query tile: row `r` (block index
+/// `t0 + r`, absolute position `start + t0 + r`) attends densely over
+/// cache positions `0..=start + t0 + r`. Each row runs the exact
+/// [`dense_attention`] kernel — same streaming max + fused
+/// exp/accumulate reduction in the same key order — so a tiled prefill
+/// is bit-identical to the token-serial decode path regardless of tile
+/// size or which worker runs the tile. `out` is [rows, group * dh];
+/// `probs` is caller scratch, fully overwritten per row.
+pub fn prefill_tile_attention(tile: &PrefillTile, probs: &mut Vec<f32>, out: &mut [f32]) {
+    let ghd = tile.group * tile.dh;
+    let rows = out.len() / ghd;
+    for r in 0..rows {
+        let t = tile.t0 + r;
+        let pos = tile.start + t;
+        let s = pos + 1;
+        let qat = t * tile.qstride + tile.qoff;
+        let inp = AttnInputs {
+            q: &tile.q[qat..qat + ghd],
+            group: tile.group,
+            dh: tile.dh,
+            k: tile.k,
+            v: tile.v,
+            codes: &[],
+            words: 0,
+            rbit: 0,
+            s,
+            pos,
+            side: super::Side::default(),
+        };
+        dense_attention(&inp, probs, &mut out[r * ghd..(r + 1) * ghd]);
+    }
+}
+
 /// Exact per-query-head qk scores aggregated over the GQA group with
 /// softmax weighting — used by the ExactTopK oracle selector.
 pub fn exact_group_scores(inp: &AttnInputs, out: &mut Vec<f32>) {
@@ -143,7 +206,7 @@ pub fn exact_group_scores(inp: &AttnInputs, out: &mut Vec<f32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::pt::{check, prop_close};
+    use crate::util::pt::{check, prop_assert, prop_close};
     use crate::util::rng::Rng;
 
     fn make_inputs<'a>(
@@ -288,6 +351,60 @@ mod tests {
         dense_attention(&inp, &mut probs, &mut out);
         assert!(out.iter().all(|x| x.is_finite()));
         assert!((out[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn prefill_tile_rows_bit_equal_per_token_dense() {
+        // a query tile must reproduce, bit for bit, what the serial path
+        // computes per token: dense_attention with s = pos + 1
+        check(40, |rng: &mut Rng| {
+            let dh = 16;
+            let group = 1 + rng.below(3);
+            let n_kv = 2;
+            let qstride = n_kv * group * dh;
+            let start = rng.below(20);
+            let block = 1 + rng.below(12);
+            let s_total = start + block;
+            let q = rng.normal_vec(block * qstride);
+            let k = rng.normal_vec(s_total * dh);
+            let v = rng.normal_vec(s_total * dh);
+            let kv = rng.below(n_kv);
+            let t0 = rng.below(block);
+            let rows = 1 + rng.below(block - t0);
+            let tile = PrefillTile {
+                q: &q,
+                k: &k,
+                v: &v,
+                group,
+                dh,
+                qstride,
+                qoff: kv * group * dh,
+                t0,
+                start,
+            };
+            let mut probs = Vec::new();
+            let mut got = vec![0.0f32; rows * group * dh];
+            prefill_tile_attention(&tile, &mut probs, &mut got);
+            for r in 0..rows {
+                let t = t0 + r;
+                let s = start + t + 1;
+                let inp = make_inputs(
+                    &q[t * qstride + kv * group * dh..t * qstride + (kv + 1) * group * dh],
+                    &k[..s * dh],
+                    &v[..s * dh],
+                    group,
+                    dh,
+                    s,
+                );
+                let mut want = vec![0.0f32; group * dh];
+                dense_attention(&inp, &mut probs, &mut want);
+                prop_assert(
+                    got[r * group * dh..(r + 1) * group * dh] == want[..],
+                    "tile row differs from per-token dense",
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

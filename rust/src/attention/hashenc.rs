@@ -83,7 +83,10 @@ pub fn encode_fused_blocked(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64
     }
 }
 
-/// Encode a batch of rows (prefill path).
+/// Encode a batch of contiguous rows in row order. The tiled prefill
+/// block-append path ([`crate::kvcache::HeadMut::append_block`]) runs
+/// the same per-row [`encode_fused_blocked`] over strided rows, so both
+/// produce codes bit-identical to encoding one row per decode step.
 pub fn encode_rows(xs: &[f32], dh: usize, w: &[f32], rbit: usize) -> Vec<u64> {
     let rows = xs.len() / dh;
     let mut out = Vec::with_capacity(rows * words64(rbit));

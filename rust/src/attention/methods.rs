@@ -227,6 +227,7 @@ impl Selector for MagicPigSelector {
 /// StreamingLLM (Xiao et al. 2023): `sinks` initial tokens + recent window.
 #[derive(Clone, Copy, Debug)]
 pub struct StreamingLlm {
+    /// Always-kept initial sink tokens.
     pub sinks: usize,
 }
 
@@ -301,6 +302,7 @@ pub fn h2o_accumulate(st: &mut MethodState, indices: &[u32], probs: &[f32], s: u
 /// `window` prefill queries' mean attention; decode adds a recent window.
 #[derive(Clone, Copy, Debug)]
 pub struct SnapKvSelector {
+    /// Observation-window length used at prefill and for recents.
     pub window: usize,
 }
 

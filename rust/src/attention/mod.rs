@@ -39,15 +39,25 @@ pub mod topk;
 /// caches; `codes` is the packed key-code cache (HATA) and `pos` the
 /// current absolute position (== s - 1 at decode time).
 pub struct AttnInputs<'a> {
+    /// The `group` query-head rows sharing this KV head, [group, dh].
     pub q: &'a [f32],
+    /// GQA query heads per KV head.
     pub group: usize,
+    /// Head dimension.
     pub dh: usize,
+    /// This head's full key cache, [s, dh] row-major.
     pub k: &'a [f32],
+    /// This head's full value cache, [s, dh] row-major.
     pub v: &'a [f32],
+    /// Packed key-code cache (HATA), `words` u64 per token.
     pub codes: &'a [u64],
+    /// Packed code words per token (rbit / 64).
     pub words: usize,
+    /// Hash code bits per key.
     pub rbit: usize,
+    /// Tokens visible to this query (causal bound; <= cache length).
     pub s: usize,
+    /// Absolute position of the query token (== s - 1).
     pub pos: usize,
     /// Method-specific side structures maintained by the KV cache.
     pub side: Side<'a>,
@@ -59,32 +69,40 @@ pub struct AttnInputs<'a> {
 pub struct Side<'a> {
     /// HATA: trained hash weights [dh, rbit] row-major for this head.
     pub hash_w: &'a [f32],
-    /// Quest: per-block elementwise min/max of keys, [nblocks, dh] each.
+    /// Quest: per-block elementwise key minima, [nblocks, dh].
     pub quest_min: &'a [f32],
+    /// Quest: per-block elementwise key maxima, [nblocks, dh].
     pub quest_max: &'a [f32],
+    /// Quest: tokens per block.
     pub quest_block: usize,
-    /// Loki: PCA-projected keys [s, channels] and the projection matrix
-    /// [dh, channels] used to project the query at step time.
+    /// Loki: PCA-projected keys, [s, channels].
     pub loki_kproj: &'a [f32],
+    /// Loki: projection matrix [dh, channels] applied to the query.
     pub loki_pca: &'a [f32],
+    /// Loki: retained low-rank channels.
     pub loki_channels: usize,
-    /// MagicPIG: per-token LSH table signatures [s, L] and the random
-    /// hyperplanes [L * K, dh] shared by queries.
+    /// MagicPIG: per-token LSH table signatures, [s, L].
     pub mp_sigs: &'a [u16],
+    /// MagicPIG: random hyperplanes [L * K, dh] shared by queries.
     pub mp_planes: &'a [f32],
+    /// MagicPIG: bits per table signature.
     pub mp_k: usize,
+    /// MagicPIG: table count.
     pub mp_l: usize,
 }
 
 impl<'a> AttnInputs<'a> {
+    /// Query row of group head `g`.
     pub fn q_row(&self, g: usize) -> &'a [f32] {
         &self.q[g * self.dh..(g + 1) * self.dh]
     }
 
+    /// Cached key row of token `t`.
     pub fn k_row(&self, t: usize) -> &'a [f32] {
         &self.k[t * self.dh..(t + 1) * self.dh]
     }
 
+    /// Packed code row of token `t`.
     pub fn code_row(&self, t: usize) -> &'a [u64] {
         &self.codes[t * self.words..(t + 1) * self.words]
     }
@@ -93,11 +111,17 @@ impl<'a> AttnInputs<'a> {
 /// Reusable per-thread scratch so the decode loop never allocates.
 #[derive(Default)]
 pub struct Scratch {
+    /// Float selection scores, one per candidate.
     pub scores: Vec<f32>,
+    /// Integer (Hamming / collision-count) scores.
     pub iscores: Vec<i32>,
+    /// Selected token indices (the selector's output).
     pub indices: Vec<u32>,
+    /// Attention probabilities / score staging.
     pub probs: Vec<f32>,
+    /// Packed query hash codes (HATA).
     pub qcodes: Vec<u64>,
+    /// Generic float staging (Loki projections, MagicPIG mean query).
     pub fbuf: Vec<f32>,
 }
 
@@ -129,6 +153,7 @@ pub trait Selector: Send + Sync {
         scratch: &mut Scratch,
     );
 
+    /// Stable lowercase method name (table rows, CLI).
     fn name(&self) -> &'static str;
 
     /// Bytes this selector reads per cached token at score time — drives

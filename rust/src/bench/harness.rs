@@ -10,10 +10,15 @@ use crate::util::timer::time_iters;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label.
     pub name: String,
+    /// Timed iterations (after warmup).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// Fastest iteration seconds.
     pub min_s: f64,
 }
 
@@ -34,6 +39,7 @@ pub fn bench(name: &str, warmup: usize, iters: usize, f: impl FnMut()) -> BenchR
 }
 
 impl BenchResult {
+    /// One aligned human-readable report line.
     pub fn line(&self) -> String {
         format!(
             "{:40} {:>10.3} ms/iter (p50 {:>10.3}, min {:>10.3}, n={})",
@@ -49,24 +55,40 @@ impl BenchResult {
 /// Synthetic single-(layer, kv-head) decode fixture: random K/V/codes at a
 /// given context length — the unit under test in Fig 5 and Fig 9.
 pub struct LayerFixture {
+    /// Head dimension.
     pub dh: usize,
+    /// GQA query heads per KV head.
     pub group: usize,
+    /// Hash code bits.
     pub rbit: usize,
+    /// Context length.
     pub s: usize,
+    /// Query rows, [group, dh].
     pub q: Vec<f32>,
+    /// Key cache, [s, dh].
     pub k: Vec<f32>,
+    /// Value cache, [s, dh].
     pub v: Vec<f32>,
+    /// Packed key codes.
     pub codes: Vec<u64>,
+    /// Hash projection, [dh, rbit].
     pub hash_w: Vec<f32>,
+    /// Quest block minima.
     pub quest_min: Vec<f32>,
+    /// Quest block maxima.
     pub quest_max: Vec<f32>,
+    /// Quest tokens per block.
     pub quest_block: usize,
+    /// Loki projected keys.
     pub loki_kproj: Vec<f32>,
+    /// Loki projection matrix.
     pub loki_pca: Vec<f32>,
+    /// Loki retained channels.
     pub loki_channels: usize,
 }
 
 impl LayerFixture {
+    /// Random fixture at context length `s` (deterministic in `seed`).
     pub fn new(s: usize, dh: usize, group: usize, rbit: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let k = rng.normal_vec(s * dh);
@@ -117,6 +139,7 @@ impl LayerFixture {
         }
     }
 
+    /// Borrow the fixture as a selector/kernel input.
     pub fn inputs(&self) -> AttnInputs<'_> {
         AttnInputs {
             q: &self.q,

@@ -8,7 +8,9 @@
 
 use crate::util::rng::Rng;
 
+/// Needle key length (lowercase chars).
 pub const KEY_LEN: usize = 2;
+/// Needle value length (uppercase chars).
 pub const VAL_LEN: usize = 2;
 
 /// Task kinds mirroring RULER's categories (DESIGN.md §6, Table 2).
@@ -31,6 +33,7 @@ pub enum TaskKind {
 }
 
 impl TaskKind {
+    /// Every task kind, in table column order.
     pub fn all() -> &'static [TaskKind] {
         &[
             TaskKind::Ns,
@@ -43,6 +46,7 @@ impl TaskKind {
         ]
     }
 
+    /// Short table label.
     pub fn name(&self) -> &'static str {
         match self {
             TaskKind::Ns => "NS",
@@ -63,6 +67,7 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// Build the word chain deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let n_words = 512;
@@ -84,6 +89,7 @@ impl Corpus {
         Corpus { words, next }
     }
 
+    /// Exactly `n_chars` of filler text.
     pub fn text(&self, rng: &mut Rng, n_chars: usize) -> String {
         let mut out = String::with_capacity(n_chars + 8);
         let mut w = rng.below(self.words.len());

@@ -11,25 +11,33 @@ use crate::util::json::Json;
 /// One lowered HLO graph and the static shape it was compiled for.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HloEntry {
+    /// Graph kind ("prefill", "decode_dense", "decode_hata").
     pub kind: String,
+    /// Static token-capacity bucket the graph was lowered for.
     pub bucket: usize,
     /// top-k budget compiled into decode_hata graphs (0 otherwise).
     pub budget: usize,
+    /// HLO text file path.
     pub path: PathBuf,
 }
 
 /// Everything exported for one model.
 #[derive(Clone, Debug)]
 pub struct ModelArtifacts {
+    /// Model shape parameters.
     pub config: ModelConfig,
+    /// Weights .npz path.
     pub weights: PathBuf,
     /// rbit -> hash-weights npz path.
     pub hash_weights: Vec<(usize, PathBuf)>,
+    /// Flat dotted-key parameter order shared with aot.py.
     pub param_order: Vec<String>,
+    /// All lowered graphs.
     pub hlo: Vec<HloEntry>,
 }
 
 impl ModelArtifacts {
+    /// Trained hash weights for a bit width, when exported.
     pub fn hash_weights_for(&self, rbit: usize) -> Option<&PathBuf> {
         self.hash_weights.iter().find(|(r, _)| *r == rbit).map(|(_, p)| p)
     }
@@ -46,11 +54,14 @@ impl ModelArtifacts {
 /// The whole manifest.
 #[derive(Debug, Default)]
 pub struct Manifest {
+    /// Every exported model.
     pub models: Vec<ModelArtifacts>,
+    /// Artifact directory all paths are relative to.
     pub root: PathBuf,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let root = dir.as_ref().to_path_buf();
         let path = root.join("manifest.json");
@@ -113,6 +124,7 @@ impl Manifest {
         Ok(Manifest { models, root })
     }
 
+    /// Artifacts of one model by config name.
     pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
         self.models
             .iter()

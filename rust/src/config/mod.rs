@@ -8,15 +8,25 @@ use crate::util::json::Json;
 /// Transformer shape parameters (mirror of python/compile/model.py).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
+    /// Preset / manifest model name.
     pub name: String,
+    /// Vocabulary size (byte tokenizer: 128).
     pub vocab: usize,
+    /// Residual stream width.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Query head count.
     pub n_heads: usize,
+    /// KV head count (GQA when < `n_heads`).
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// MLP hidden width.
     pub ffn_hidden: usize,
+    /// RoPE base frequency.
     pub rope_theta: f32,
+    /// Hash code bits per key (HATA).
     pub rbit: usize,
     /// First N layers always run dense attention (paper Sec 5.1).
     pub dense_layers: usize,
@@ -43,6 +53,7 @@ impl ModelConfig {
         self.n_layers * self.n_kv_heads * self.code_words() * 4
     }
 
+    /// Parse a config object (manifest.json `config` entry).
     pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
         let get = |k: &str| -> anyhow::Result<f64> {
             j.get(k)
@@ -68,6 +79,7 @@ impl ModelConfig {
         })
     }
 
+    /// Serialize back to the manifest JSON shape.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -182,6 +194,8 @@ pub enum Method {
 }
 
 impl Method {
+    /// Parse a CLI method name (accepts the short aliases printed by
+    /// `hata --help`).
     pub fn parse(s: &str) -> Option<Method> {
         Some(match s.to_ascii_lowercase().as_str() {
             "dense" => Method::Dense,
@@ -197,6 +211,7 @@ impl Method {
         })
     }
 
+    /// Canonical lowercase name (CLI value, table row label).
     pub fn name(&self) -> &'static str {
         match self {
             Method::Dense => "dense",
@@ -211,6 +226,7 @@ impl Method {
         }
     }
 
+    /// Every method, in the paper's table column order.
     pub fn all() -> &'static [Method] {
         &[
             Method::Dense,
@@ -229,6 +245,7 @@ impl Method {
 /// Serving engine parameters.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// Attention/selection method driving sparse decode.
     pub method: Method,
     /// Sparse token budget per decode step (0 = method default / dense).
     pub budget: usize,
@@ -236,14 +253,21 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Max tokens a prefill chunk may process per scheduler step.
     pub prefill_chunk: usize,
+    /// Query rows per tiled-prefill attention work item: each prefill
+    /// chunk fans (sequence, kv-head, query-tile) tiles of this many
+    /// query tokens across the engine threadpool. Any value >= 1 is
+    /// bit-identical to any other (and to the token-serial reference);
+    /// it only shapes the fan-out granularity.
+    pub prefill_tile: usize,
     /// KV pool capacity in tokens (across sequences).
     pub kv_capacity: usize,
     /// Loki channels (low-rank dims) when method == Loki.
     pub loki_channels: usize,
     /// Quest block size when method == Quest.
     pub quest_block: usize,
-    /// MagicPIG (K, L) table parameters.
+    /// MagicPIG bits per LSH table signature.
     pub magicpig_k: usize,
+    /// MagicPIG LSH table count.
     pub magicpig_l: usize,
     /// StreamingLLM sink count.
     pub sinks: usize,
@@ -268,6 +292,7 @@ impl Default for ServeConfig {
             budget: 64,
             max_batch: 8,
             prefill_chunk: 512,
+            prefill_tile: 32,
             kv_capacity: 1 << 20,
             loki_channels: 4, // paper: 32 of 128 dims; here 4 of 16 (same 25%)
             quest_block: 16,  // paper: 32; scaled to our shorter contexts

@@ -1,13 +1,15 @@
 //! The serving engine: continuous-batching step loop over the native
 //! model. One engine = one worker process; the [`super::router`] shards
 //! requests across engines, and within an engine the step fans
-//! per-(sequence, kv-head) work across `serve.threads` pool workers.
+//! per-(sequence, kv-head) decode work and per-(sequence, kv-head,
+//! query-tile) prefill work across `serve.threads` pool workers.
 //!
 //! Scratch ownership per step: one [`DecodeScratch`] per batch slot
-//! (sequence activations + logits), one [`WorkerScratch`] per pool
-//! worker (selection buffers). The plan's decode/prefill batches are
-//! materialized into disjoint-`&mut` work items and handed to
-//! [`Model::decode_batch`] / [`Model::prefill_batch`].
+//! (sequence activations + tiled-prefill block arenas + logits), one
+//! [`WorkerScratch`] per pool worker (selection buffers + tile
+//! temporaries). The plan's decode/prefill batches are materialized into
+//! disjoint-`&mut` work items and handed to [`Model::decode_batch`] /
+//! [`Model::prefill_batch`].
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -55,6 +57,7 @@ pub struct StepOutcome {
 }
 
 impl StepOutcome {
+    /// Total units of work done (zero steps feed the stall detector).
     pub fn progress(&self) -> usize {
         self.decoded + self.prefilled + self.admitted
     }
@@ -62,7 +65,9 @@ impl StepOutcome {
 
 /// Single-worker serving engine.
 pub struct Engine {
+    /// The model this engine serves (shared across engines).
     pub model: Arc<Model>,
+    /// Serving parameters (method, budget, batch/chunk/tile knobs).
     pub serve: ServeConfig,
     selector: Option<Box<dyn crate::attention::Selector + Send + Sync>>,
     scheduler: Scheduler,
@@ -73,12 +78,15 @@ pub struct Engine {
     /// per-batch-slot activation buffers, grown on demand
     seq_scratch: Vec<DecodeScratch>,
     sampler: Sampler,
+    /// Latency/throughput counters, updated every step.
     pub metrics: Metrics,
     clock: Instant,
     responses: Vec<Response>,
 }
 
 impl Engine {
+    /// Build an engine: scheduler, KV pool, threadpool and scratch sized
+    /// from `serve`.
     pub fn new(model: Arc<Model>, serve: ServeConfig) -> Self {
         let selector = make_selector(&serve);
         let threads = serve.threads.max(1);
@@ -108,6 +116,8 @@ impl Engine {
         self.clock.elapsed().as_secs_f64()
     }
 
+    /// Accept a request: allocate its cache/state and queue it for
+    /// admission.
     pub fn submit(&mut self, mut req: Request) {
         req.arrival = self.now();
         self.scheduler.submit(SeqTicket {
@@ -134,10 +144,12 @@ impl Engine {
         );
     }
 
+    /// Anything queued or live?
     pub fn has_work(&self) -> bool {
         self.scheduler.queue_len() > 0 || self.scheduler.live_len() > 0
     }
 
+    /// Drain completed responses accumulated since the last call.
     pub fn take_responses(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.responses)
     }
@@ -167,6 +179,7 @@ impl Engine {
                         tokens: &req.prompt[w.range.clone()],
                         start: w.range.start,
                         whole: w.range.start == 0 && w.is_final,
+                        tile: w.tile,
                         cache,
                         state,
                         scratch,

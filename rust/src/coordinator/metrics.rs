@@ -2,14 +2,22 @@
 
 use crate::util::stats::{LatencyHistogram, Summary};
 
+/// Engine counters and latency histograms, updated every step.
 #[derive(Default)]
 pub struct Metrics {
+    /// Time-to-first-token distribution.
     pub ttft: LatencyHistogram,
+    /// Engine step latency distribution.
     pub step_latency: LatencyHistogram,
+    /// Per-request completion times.
     pub per_request: Summary,
+    /// Prompt tokens of completed requests.
     pub prompt_tokens: u64,
+    /// Tokens decoded across all steps.
     pub generated_tokens: u64,
+    /// Requests finished (any reason but preemption).
     pub completed: u64,
+    /// Requests evicted by stall recovery.
     pub preempted: u64,
     /// stall events: the engine detected zero progress for consecutive
     /// steps and preempted the stuck work (see `Engine::run_to_completion`)
@@ -18,19 +26,23 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh metrics with the wall clock started now.
     pub fn new() -> Self {
         Metrics { started_at: Some(std::time::Instant::now()), ..Default::default() }
     }
 
+    /// Record one engine step.
     pub fn on_step(&mut self, seconds: f64, decoded: usize) {
         self.step_latency.record(seconds);
         self.generated_tokens += decoded as u64;
     }
 
+    /// Record a request's first generated token.
     pub fn on_first_token(&mut self, ttft: f64) {
         self.ttft.record(ttft);
     }
 
+    /// Record a request completion.
     pub fn on_complete(&mut self, total_time: f64, prompt_len: usize) {
         self.completed += 1;
         self.prompt_tokens += prompt_len as u64;
@@ -43,6 +55,7 @@ impl Metrics {
         self.preempted += preempted as u64;
     }
 
+    /// Seconds since [`Metrics::new`].
     pub fn elapsed(&self) -> f64 {
         self.started_at.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
@@ -57,6 +70,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "completed={} gen_tokens={} prompt_tokens={} tput={:.1} tok/s \

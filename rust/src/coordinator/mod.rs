@@ -12,22 +12,26 @@
 //!
 //! Each engine step turns the scheduler's [`scheduler::StepPlan`] — a
 //! batch structure of [`scheduler::DecodeWork`] (id + token position) and
-//! [`scheduler::PrefillWork`] (id + chunk range + finality) — into
-//! disjoint-`&mut` work items and hands them to the model's batched entry
-//! points, which fan them across the engine's threadpool:
+//! [`scheduler::PrefillWork`] (id + chunk range + finality + attention
+//! tile geometry) — into disjoint-`&mut` work items and hands them to
+//! the model's batched entry points, which fan them across the engine's
+//! threadpool:
 //!
-//! * prefill chunks parallelize at **sequence** granularity (each chunk
-//!   is causally serial inside);
+//! * prefill chunks advance as **token blocks**: per layer, (sequence,
+//!   tile) projection/MLP items and (sequence, kv-head, query-tile)
+//!   causally-masked attention items run on pool workers — the chunk is
+//!   no longer serial inside;
 //! * decode parallelizes at **(sequence, kv-head)** granularity within
 //!   each layer — hash encode/append, Hamming scoring, top-k select and
 //!   sparse attend all run on pool workers.
 //!
 //! Ownership: the engine keeps one `DecodeScratch` per batch slot
-//! (sequence activations + logits, read back for sampling) and one
-//! `WorkerScratch` per pool worker (selection buffers). KV writes are
-//! disjoint per (layer, head) region (`SeqKvCache::layer_heads_mut`), so
-//! no lock sits on the decode hot path, and `threads = N` produces
-//! byte-identical token streams to `threads = 1`.
+//! (sequence activations + prefill block arenas + logits, read back for
+//! sampling) and one `WorkerScratch` per pool worker (selection buffers
+//! + tile temporaries). KV writes are disjoint per (layer, head) region
+//! (`SeqKvCache::layer_heads_mut`), so no lock sits on the decode hot
+//! path, and `threads = N` produces byte-identical token streams to
+//! `threads = 1` — prefill tiling included.
 
 pub mod engine;
 pub mod metrics;

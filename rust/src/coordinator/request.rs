@@ -3,8 +3,11 @@
 /// A generation request as submitted by a client.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen unique id (echoed in the response).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<u32>,
+    /// Generation budget.
     pub max_new_tokens: usize,
     /// stop generation at this token (e.g. b'\n') if Some
     pub stop_token: Option<u32>,
@@ -25,10 +28,14 @@ pub enum Phase {
     Finished(FinishReason),
 }
 
+/// Why a request stopped generating.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
+    /// `max_new_tokens` generated.
     MaxTokens,
+    /// The configured stop token was produced.
     StopToken,
+    /// Cancelled by the client.
     Cancelled,
     /// evicted under memory pressure and not retried
     Preempted,
@@ -37,13 +44,17 @@ pub enum FinishReason {
 /// Completed response with timing milestones.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The request's id.
     pub id: u64,
+    /// Generated token ids.
     pub tokens: Vec<u32>,
+    /// Why generation stopped.
     pub reason: FinishReason,
     /// seconds from arrival to first generated token
     pub ttft: f64,
     /// seconds from arrival to completion
     pub total_time: f64,
+    /// Prompt length (throughput accounting).
     pub prompt_len: usize,
 }
 

@@ -15,9 +15,12 @@ use crate::model::Model;
 use super::engine::Engine;
 use super::request::{Request, Response};
 
+/// Worker-selection policy for incoming requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
+    /// Cycle through workers in order.
     RoundRobin,
+    /// Pick the worker with the fewest outstanding requests.
     LeastLoaded,
 }
 
@@ -38,6 +41,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Spawn `n_workers` engine threads sharing one model.
     pub fn new(model: Arc<Model>, serve: ServeConfig, n_workers: usize, policy: Policy) -> Self {
         let (resp_tx, resp_rx) = channel::<Response>();
         let mut txs = Vec::new();
@@ -103,6 +107,7 @@ impl Router {
         }
     }
 
+    /// Route one request to a worker according to the policy.
     pub fn submit(&mut self, req: Request) {
         let i = self.pick();
         self.outstanding[i].fetch_add(1, Ordering::SeqCst);
@@ -123,6 +128,7 @@ impl Router {
         out
     }
 
+    /// Engine worker threads owned by this router.
     pub fn worker_count(&self) -> usize {
         self.txs.len()
     }

@@ -10,9 +10,9 @@
 //!
 //! The plan is a *batch structure*, not id lists: each [`DecodeWork`]
 //! carries the absolute token position and each [`PrefillWork`] its chunk
-//! range + finality, so the engine can build the whole step's work items
-//! up front and fan them across the threadpool without re-deriving
-//! per-sequence state mid-step.
+//! range, finality and attention tile geometry, so the engine can build
+//! the whole step's work items up front and fan them across the
+//! threadpool without re-deriving per-sequence state mid-step.
 
 use std::collections::VecDeque;
 
@@ -22,14 +22,20 @@ use crate::kvcache::pool::KvPool;
 /// Scheduler's view of one live sequence.
 #[derive(Clone, Debug)]
 pub struct SeqTicket {
+    /// Sequence id (request id).
     pub id: u64,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Prompt tokens already prefilled.
     pub prefilled: usize,
+    /// Tokens generated so far.
     pub generated: usize,
+    /// Generation budget (`max_new_tokens`).
     pub max_new: usize,
 }
 
 impl SeqTicket {
+    /// Whole prompt is in the KV cache; the sequence can decode.
     pub fn is_prefill_done(&self) -> bool {
         self.prefilled >= self.prompt_len
     }
@@ -38,6 +44,7 @@ impl SeqTicket {
 /// One decode slot of a step batch: feed the sampled token at `pos`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DecodeWork {
+    /// Sequence id.
     pub id: u64,
     /// Absolute position of the token being fed (prompt_len + generated).
     pub pos: usize,
@@ -46,10 +53,17 @@ pub struct DecodeWork {
 /// One prefill chunk of a step batch.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PrefillWork {
+    /// Sequence id.
     pub id: u64,
+    /// Prompt token range this chunk covers.
     pub range: std::ops::Range<usize>,
     /// This chunk completes the prompt (the sequence becomes decodable).
     pub is_final: bool,
+    /// Query rows per attention tile when the engine fans this chunk's
+    /// block pass across the threadpool (`serve.prefill_tile`). Tile
+    /// geometry travels with the work order so the engine never
+    /// re-derives per-chunk state mid-step.
+    pub tile: usize,
 }
 
 /// One engine step's work order.
@@ -69,41 +83,49 @@ pub struct Scheduler {
     live: Vec<SeqTicket>,
     max_batch: usize,
     prefill_chunk: usize,
+    prefill_tile: usize,
 }
 
 impl Scheduler {
+    /// Scheduler for `serve`'s batch/chunk/tile policy knobs.
     pub fn new(serve: &ServeConfig) -> Self {
         Scheduler {
             queue: VecDeque::new(),
             live: Vec::new(),
             max_batch: serve.max_batch,
             prefill_chunk: serve.prefill_chunk,
+            prefill_tile: serve.prefill_tile,
         }
     }
 
+    /// Enqueue a new sequence for FCFS admission.
     pub fn submit(&mut self, ticket: SeqTicket) {
         self.queue.push_back(ticket);
     }
 
+    /// Sequences waiting for admission.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Admitted (prefilling or decoding) sequences.
     pub fn live_len(&self) -> usize {
         self.live.len()
     }
 
+    /// Look up a live sequence's ticket.
     pub fn ticket(&self, id: u64) -> Option<&SeqTicket> {
         self.live.iter().find(|t| t.id == id)
     }
 
-    /// Record `n` generated tokens for `id` (engine callback).
+    /// Record one generated token for `id` (engine callback).
     pub fn on_decoded(&mut self, id: u64) {
         if let Some(t) = self.live.iter_mut().find(|t| t.id == id) {
             t.generated += 1;
         }
     }
 
+    /// Record `n` prefilled prompt tokens for `id` (engine callback).
     pub fn on_prefilled(&mut self, id: u64, n: usize) {
         if let Some(t) = self.live.iter_mut().find(|t| t.id == id) {
             t.prefilled += n;
@@ -161,6 +183,7 @@ impl Scheduler {
                         id: t.id,
                         range: t.prefilled..t.prefilled + take,
                         is_final: t.prefilled + take >= t.prompt_len,
+                        tile: self.prefill_tile,
                     });
                     chunk_left -= take;
                 }
@@ -189,7 +212,7 @@ mod tests {
     }
 
     fn pf(id: u64, range: std::ops::Range<usize>, is_final: bool) -> PrefillWork {
-        PrefillWork { id, range, is_final }
+        PrefillWork { id, range, is_final, tile: ServeConfig::default().prefill_tile }
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! so the batched decode path can split-borrow disjoint regions
 //! ([`SeqKvCache::layer_heads_mut`]) and append to them from worker
 //! threads concurrently — the ownership story the engine/model/attention
-//! threadpool fan-out is built on.
+//! threadpool fan-out is built on. The tiled prefill path appends whole
+//! token blocks per head ([`HeadMut::append_block`], then one
+//! [`SeqKvCache::advance_len_by`]), with identical per-row arithmetic so
+//! block decomposition never changes cache contents.
 
 pub mod offload;
 pub mod pool;
@@ -22,15 +25,19 @@ use crate::util::rng::Rng;
 /// loop walks sequential memory.
 #[derive(Default)]
 pub struct HeadCache {
+    /// Key rows, [len, dh] row-major.
     pub k: Vec<f32>,
+    /// Value rows, [len, dh] row-major.
     pub v: Vec<f32>,
+    /// Packed key hash codes, rbit/64 words per token (HATA).
     pub codes: Vec<u64>,
-    // Quest block summaries
+    /// Quest per-block elementwise key minima, [nblocks, dh].
     pub quest_min: Vec<f32>,
+    /// Quest per-block elementwise key maxima, [nblocks, dh].
     pub quest_max: Vec<f32>,
-    // Loki projected keys
+    /// Loki PCA-projected keys, [len, channels].
     pub loki_kproj: Vec<f32>,
-    // MagicPIG signatures
+    /// MagicPIG LSH signatures, [len, L].
     pub mp_sigs: Vec<u16>,
 }
 
@@ -55,6 +62,7 @@ pub struct HeadMut<'a> {
     loki_channels: usize,
     mp_k: usize,
     mp_l: usize,
+    /// The underlying (layer, kv-head) cache region.
     pub hc: &'a mut HeadCache,
 }
 
@@ -120,6 +128,38 @@ impl HeadMut<'_> {
         }
     }
 
+    /// Append a whole block of tokens' K/V rows for this head in token
+    /// order. `krows`/`vrows` are [len, stride] row-major with this
+    /// head's dh-wide slice starting at `offset` in each row — exactly
+    /// how the tiled prefill path lays out per-token projection rows.
+    /// Per-row work (hash-code encode + side-structure maintenance) is
+    /// [`HeadMut::append`], so the resulting cache is bit-identical to
+    /// appending the same rows one decode step at a time; only the
+    /// reservation is amortized over the block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_block(
+        &mut self,
+        krows: &[f32],
+        vrows: &[f32],
+        stride: usize,
+        offset: usize,
+        hash_w: &[f32],
+        rbit: usize,
+        aux: &MethodAux,
+    ) {
+        let dh = self.dh;
+        let rows = krows.len() / stride;
+        self.hc.k.reserve(rows * dh);
+        self.hc.v.reserve(rows * dh);
+        if !hash_w.is_empty() {
+            self.hc.codes.reserve(rows * (rbit / 64));
+        }
+        for r in 0..rows {
+            let at = r * stride + offset;
+            self.append(&krows[at..at + dh], &vrows[at..at + dh], hash_w, rbit, aux);
+        }
+    }
+
     /// Borrow the method side structures of this head.
     pub fn side<'b>(&'b self, hash_w: &'b [f32], aux: &'b MethodAux) -> Side<'b> {
         Side {
@@ -141,9 +181,13 @@ impl HeadMut<'_> {
 /// All cached state for one sequence: K/V per (layer, kv-head), the packed
 /// key-code cache, and per-method side structures.
 pub struct SeqKvCache {
+    /// Layer count (head regions are [layer][kv] ordered).
     pub n_layers: usize,
+    /// KV heads per layer.
     pub n_kv: usize,
+    /// Per-head dimension of the stored K/V rows.
     pub dh: usize,
+    /// Packed code words per token (rbit / 64).
     pub words: usize,
     len: usize,
     quest_block: usize,
@@ -154,6 +198,8 @@ pub struct SeqKvCache {
 }
 
 impl SeqKvCache {
+    /// Empty cache sized for `cfg`, with the side structures demanded by
+    /// `serve.method` enabled.
     pub fn new(cfg: &ModelConfig, serve: &ServeConfig) -> Self {
         let heads = cfg.n_layers * cfg.n_kv_heads;
         let enable_quest = serve.method == Method::Quest;
@@ -173,15 +219,18 @@ impl SeqKvCache {
         }
     }
 
+    /// Absolute head index (layer * n_kv + kv) keying the aux tables.
     #[inline]
     pub fn head_index(&self, layer: usize, kv: usize) -> usize {
         layer * self.n_kv + kv
     }
 
+    /// Cached tokens (same for every head region).
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True before the first token is appended.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -231,6 +280,13 @@ impl SeqKvCache {
         self.len += 1;
     }
 
+    /// Record `n` fully-appended tokens at once — the tiled prefill path
+    /// appends a whole chunk per head ([`HeadMut::append_block`]) before
+    /// bumping the sequence length.
+    pub fn advance_len_by(&mut self, n: usize) {
+        self.len += n;
+    }
+
     /// Append one token's K/V for a given (layer, kv) head, maintaining
     /// the code cache and any enabled side structures. The sequence
     /// length bumps automatically when the last (layer, kv) head is
@@ -258,14 +314,17 @@ impl SeqKvCache {
         }
     }
 
+    /// Key rows of one head region, [len, dh] row-major.
     pub fn k_slice(&self, layer: usize, kv: usize) -> &[f32] {
         &self.heads[self.head_index(layer, kv)].k
     }
 
+    /// Value rows of one head region, [len, dh] row-major.
     pub fn v_slice(&self, layer: usize, kv: usize) -> &[f32] {
         &self.heads[self.head_index(layer, kv)].v
     }
 
+    /// Packed key-code words of one head region.
     pub fn codes_slice(&self, layer: usize, kv: usize) -> &[u64] {
         &self.heads[self.head_index(layer, kv)].codes
     }
@@ -299,7 +358,9 @@ impl SeqKvCache {
 /// Loki PCA matrices and MagicPIG hyperplanes, per (layer, kv) head.
 #[derive(Default)]
 pub struct MethodAux {
+    /// Loki PCA projection per head, each [dh, channels] row-major.
     pub loki_pca: Vec<Vec<f32>>,
+    /// MagicPIG hyperplanes per head, each [L * K, dh] row-major.
     pub mp_planes: Vec<Vec<f32>>,
 }
 
@@ -419,6 +480,76 @@ mod tests {
         assert!(side.quest_min.is_empty());
         assert!(side.loki_kproj.is_empty());
         assert!(side.mp_sigs.is_empty());
+    }
+
+    #[test]
+    fn block_append_matches_per_token_append() {
+        // append_block over [len, n_kv * dh] projection rows must build
+        // the exact same cache (codes + side structures) as per-token
+        // appends — the invariant the tiled prefill path rests on
+        for method in [Method::Hata, Method::Quest, Method::Loki, Method::MagicPig] {
+            let (cfg, serve) = cfg_serve(method);
+            let aux = MethodAux::build(&cfg, &serve, None, 3);
+            let hash_w = if method == Method::Hata {
+                vec![0.25; cfg.head_dim * cfg.rbit]
+            } else {
+                Vec::new()
+            };
+            let len = 2 * serve.quest_block + 3;
+            let stride = cfg.n_kv_heads * cfg.head_dim;
+            let krows: Vec<f32> = (0..len * stride).map(|i| (i as f32).sin()).collect();
+            let vrows: Vec<f32> = (0..len * stride).map(|i| (i as f32).cos()).collect();
+            let mut serial = SeqKvCache::new(&cfg, &serve);
+            let mut block = SeqKvCache::new(&cfg, &serve);
+            for t in 0..len {
+                for layer in 0..cfg.n_layers {
+                    for kv in 0..cfg.n_kv_heads {
+                        let at = t * stride + kv * cfg.head_dim;
+                        serial.head_mut(layer, kv).append(
+                            &krows[at..at + cfg.head_dim],
+                            &vrows[at..at + cfg.head_dim],
+                            &hash_w,
+                            cfg.rbit,
+                            &aux,
+                        );
+                    }
+                }
+                serial.advance_len();
+            }
+            for layer in 0..cfg.n_layers {
+                for (kv, mut head) in block.layer_heads_mut(layer).into_iter().enumerate() {
+                    head.append_block(
+                        &krows,
+                        &vrows,
+                        stride,
+                        kv * cfg.head_dim,
+                        &hash_w,
+                        cfg.rbit,
+                        &aux,
+                    );
+                }
+            }
+            block.advance_len_by(len);
+            assert_eq!(serial.len(), block.len(), "{method:?}");
+            for layer in 0..cfg.n_layers {
+                for kv in 0..cfg.n_kv_heads {
+                    assert_eq!(serial.k_slice(layer, kv), block.k_slice(layer, kv), "{method:?}");
+                    assert_eq!(serial.v_slice(layer, kv), block.v_slice(layer, kv), "{method:?}");
+                    assert_eq!(
+                        serial.codes_slice(layer, kv),
+                        block.codes_slice(layer, kv),
+                        "{method:?}"
+                    );
+                    let a = serial.side(layer, kv, &hash_w, &aux);
+                    let b = block.side(layer, kv, &hash_w, &aux);
+                    assert_eq!(a.quest_min, b.quest_min, "{method:?}");
+                    assert_eq!(a.quest_max, b.quest_max, "{method:?}");
+                    assert_eq!(a.loki_kproj, b.loki_kproj, "{method:?}");
+                    assert_eq!(a.mp_sigs, b.mp_sigs, "{method:?}");
+                }
+            }
+            assert_eq!(serial.bytes(), block.bytes(), "{method:?}");
+        }
     }
 
     #[test]

@@ -21,12 +21,16 @@ use crate::simulator::pcie::{PcieModel, TransferLedger};
 /// (2 TB/s HBM), the CPU rate a 48-thread host (~100 GB/s, ~2 TFLOPS).
 #[derive(Clone, Copy, Debug)]
 pub struct OffloadRates {
+    /// Device (GPU) memory bandwidth, bytes/s.
     pub dev_bw: f64,
+    /// Host (CPU) memory bandwidth, bytes/s.
     pub host_bw: f64,
+    /// PCIe link model.
     pub pcie: PcieModel,
 }
 
 impl OffloadRates {
+    /// The paper's Table 3 testbed constants.
     pub fn paper_testbed() -> Self {
         OffloadRates { dev_bw: 2.0e12, host_bw: 100.0e9, pcie: PcieModel::gen4_x16() }
     }
@@ -35,12 +39,16 @@ impl OffloadRates {
 /// Accounting result for a whole request (prefill + N decode steps).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OffloadReport {
+    /// Modeled prefill seconds (compute overlapped with offload stream).
     pub prefill_seconds: f64,
+    /// Modeled decode seconds across all steps.
     pub decode_seconds: f64,
+    /// Bytes and seconds that crossed the PCIe link.
     pub ledger: TransferLedger,
 }
 
 impl OffloadReport {
+    /// Prefill + decode seconds.
     pub fn total(&self) -> f64 {
         self.prefill_seconds + self.decode_seconds
     }

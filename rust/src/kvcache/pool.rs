@@ -6,12 +6,21 @@
 
 use std::collections::BTreeMap;
 
+/// Tokens per KV page (the allocation granularity).
 pub const PAGE_TOKENS: usize = 64;
 
+/// Admission/accounting failures.
 #[derive(Debug, thiserror::Error)]
 pub enum PoolError {
+    /// Not enough free pages for the requested growth.
     #[error("kv pool exhausted: need {need} pages, free {free}")]
-    Exhausted { need: usize, free: usize },
+    Exhausted {
+        /// Pages the growth needed.
+        need: usize,
+        /// Pages currently free.
+        free: usize,
+    },
+    /// Release of a sequence the pool never saw.
     #[error("unknown sequence {0}")]
     UnknownSeq(u64),
 }
@@ -31,19 +40,23 @@ struct SeqAlloc {
 }
 
 impl KvPool {
+    /// Pool with `capacity_tokens / PAGE_TOKENS` pages.
     pub fn new(capacity_tokens: usize) -> Self {
         let pages = capacity_tokens / PAGE_TOKENS;
         KvPool { capacity_pages: pages, free_pages: pages, seqs: BTreeMap::new() }
     }
 
+    /// Total capacity in tokens.
     pub fn capacity_tokens(&self) -> usize {
         self.capacity_pages * PAGE_TOKENS
     }
 
+    /// Unreserved capacity in tokens.
     pub fn free_tokens(&self) -> usize {
         self.free_pages * PAGE_TOKENS
     }
 
+    /// Fraction of pages reserved (0 = empty, 1 = full).
     pub fn utilization(&self) -> f64 {
         1.0 - self.free_pages as f64 / self.capacity_pages.max(1) as f64
     }
@@ -76,10 +89,12 @@ impl KvPool {
         Ok(())
     }
 
+    /// Tokens accounted to one sequence.
     pub fn seq_tokens(&self, seq: u64) -> usize {
         self.seqs.get(&seq).map(|a| a.tokens).unwrap_or(0)
     }
 
+    /// Sequences currently holding pages.
     pub fn active_seqs(&self) -> usize {
         self.seqs.len()
     }

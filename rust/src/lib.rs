@@ -15,6 +15,15 @@
 //!   manager), the native CPU inference engine, every baseline top-k /
 //!   compression method the paper compares against, and the PJRT runtime
 //!   that loads the AOT artifacts. Python is never on the request path.
+//!
+//! `docs/ARCHITECTURE.md` has the module map and the life-of-a-request
+//! walkthrough for both the batched decode path and the block-tiled
+//! prefill path; `README.md` has the build/run quickstart.
+//!
+//! Documentation is a build gate: CI runs `cargo doc --no-deps` with
+//! `RUSTDOCFLAGS="-D warnings"`, and the `missing_docs` lint below makes
+//! an undocumented public item (or a broken intra-doc link) fail it.
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod config;

@@ -27,7 +27,7 @@ use hata::util::rng::Rng;
 const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
-    "artifacts", "rbit", "verbose!", "random-weights!", "out",
+    "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
 ];
 
 fn main() {
@@ -70,7 +70,9 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
   --fig N           regenerate figure 6|7|8
   --requests N      serve: number of synthetic requests
   --workers N       serve: router workers
-  --threads N       engine decode threadpool width (default 1 = serial)
+  --threads N       engine threadpool width (default 1 = serial)
+  --prefill-tile N  query rows per tiled-prefill work item (default 32;
+                    any value is bit-identical, it only shapes fan-out)
   --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
@@ -106,13 +108,15 @@ fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
 
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let method = Method::parse(&args.str("method", "hata")).context("bad --method")?;
+    let base = ServeConfig::default();
     Ok(ServeConfig {
         method,
         budget: args.usize("budget", 64)?,
         threads: args.usize("threads", 1)?,
+        prefill_tile: args.usize("prefill-tile", base.prefill_tile)?,
         temperature: args.f64("temperature", 0.0)? as f32,
         seed: args.u64("seed", 0)?,
-        ..Default::default()
+        ..base
     })
 }
 

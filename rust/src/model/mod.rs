@@ -12,7 +12,7 @@
 //! [`Model::decode_batch`] advances a whole scheduler batch one token in
 //! lock-step over layers. Within each layer the per-(sequence, kv-head)
 //! attention unit — hash encode + append, Hamming scoring, top-k select,
-//! sparse gather/attend — is an [`AttnWork`] item fanned across
+//! sparse gather/attend — is an `AttnWork` item fanned across
 //! [`crate::util::threadpool::ThreadPool::scatter`]. Ownership:
 //!
 //! * weights/config ([`Model`]) — shared reads from every worker;
@@ -25,12 +25,44 @@
 //! The serial [`Model::decode_step`] runs the identical per-head routine
 //! ([`Model::decode_batch`] with one item degenerates to it), so
 //! `threads = N` is byte-identical to `threads = 1`.
+//!
+//! ## Block-tiled parallel prefill
+//!
+//! Prefill used to walk the prompt one token at a time through the
+//! decode step path, leaving the pool idle during the O(s^2) phase that
+//! dominates long-context serving. [`Model::prefill`] /
+//! [`Model::prefill_batch`] now advance whole token blocks through the
+//! layer stack: per layer, every block token's Q/K/V rows are computed
+//! in one pass, appended block-wise to the per-head
+//! [`crate::kvcache::HeadCache`] regions, and the attention runs as
+//! (sequence, kv-head, query-tile)
+//! work items — causally masked tiles over the already-written prefix
+//! plus the intra-block lower triangle
+//! ([`crate::attention::compute::prefill_tile_attention`]) — fanned
+//! across the same [`crate::util::threadpool::ThreadPool::scatter`] /
+//! [`WorkerScratch`] machinery as decode. Per-token arithmetic is never
+//! reordered (each query row reduces its key prefix with the decode
+//! kernel, in key order), so tiled prefill is bit-identical to the
+//! token-serial reference [`Model::prefill_serial`] for every tile,
+//! chunk and thread count — which keeps the Dense/Hata/Quest parity and
+//! determinism suites exact. H2O is the one exception: its cumulative
+//! attention mass accumulates in query order during dense prefill, so
+//! H2O chunks keep the serial path.
+//!
+//! Ownership adds one arena to the decode story: block activations
+//! ([`PrefillScratch`], inside each sequence's [`DecodeScratch`]) are
+//! split-borrowed per query tile (x/q/k/v rows) and per kv-head
+//! (head-major attention staging), while per-token norm/MLP temporaries
+//! live in the per-worker [`WorkerScratch`].
 
 pub mod sampler;
 pub mod tokenizer;
 pub mod weights;
 
-use crate::attention::compute::{dense_attention, sparse_attention_fused, sparse_attention_gather};
+use crate::attention::compute::{
+    dense_attention, prefill_tile_attention, sparse_attention_fused, sparse_attention_gather,
+    PrefillTile,
+};
 use crate::attention::methods::h2o_accumulate;
 use crate::attention::{AttnInputs, MethodState, Scratch, Selector};
 use crate::config::{Method, ModelConfig, ServeConfig};
@@ -55,11 +87,16 @@ pub struct DecodeScratch {
     mlp: Vec<f32>,
     kgather: Vec<f32>,
     vgather: Vec<f32>,
+    /// LM-head output of the last token fed through this scratch.
     pub logits: Vec<f32>,
+    /// Selection buffers for the serial (pool-free) path.
     pub sel: Scratch,
+    /// Block activations for the tiled prefill path, grown on demand.
+    pub block: PrefillScratch,
 }
 
 impl DecodeScratch {
+    /// Allocate all per-step buffers for `cfg`'s shapes.
     pub fn new(cfg: &ModelConfig) -> Self {
         DecodeScratch {
             x: vec![0.0; cfg.d_model],
@@ -75,27 +112,76 @@ impl DecodeScratch {
             vgather: Vec::new(),
             logits: vec![0.0; cfg.vocab],
             sel: Scratch::default(),
+            block: PrefillScratch::default(),
         }
     }
 }
 
-/// Per-worker-thread selection/gather buffers for the batched decode
-/// path. Per-sequence activations live in [`DecodeScratch`]; these arenas
-/// are lent to whichever work item the worker picks up, and every routine
-/// fully overwrites what it reads, so placement cannot affect results.
+/// Per-sequence block buffers for the tiled prefill path: token-major
+/// activation rows plus the head-major attention staging area, resized
+/// to the current chunk length before each block pass. Every row that a
+/// stage reads was fully written by an earlier stage of the same block,
+/// so reuse across blocks cannot leak state.
+#[derive(Default)]
+pub struct PrefillScratch {
+    /// residual stream rows [len, d_model]
+    x: Vec<f32>,
+    /// rotated query rows [len, n_heads * head_dim]
+    q: Vec<f32>,
+    /// key rows [len, n_kv_heads * head_dim]
+    k: Vec<f32>,
+    /// value rows [len, n_kv_heads * head_dim]
+    v: Vec<f32>,
+    /// attention outputs, head-major [n_kv_heads, len, group * head_dim]
+    /// so (kv-head, query-tile) work items write disjoint contiguous
+    /// slices; the MLP stage re-gathers per-token rows
+    attn: Vec<f32>,
+}
+
+impl PrefillScratch {
+    fn ensure(&mut self, cfg: &ModelConfig, len: usize) {
+        self.x.resize(len * cfg.d_model, 0.0);
+        self.q.resize(len * cfg.n_heads * cfg.head_dim, 0.0);
+        self.k.resize(len * cfg.n_kv_heads * cfg.head_dim, 0.0);
+        self.v.resize(len * cfg.n_kv_heads * cfg.head_dim, 0.0);
+        self.attn.resize(len * cfg.n_heads * cfg.head_dim, 0.0);
+    }
+}
+
+/// Per-worker-thread buffers for the batched decode and tiled prefill
+/// paths. Per-sequence activations live in [`DecodeScratch`]; these
+/// arenas are lent to whichever work item the worker picks up, and every
+/// routine fully overwrites what it reads, so placement cannot affect
+/// results.
 #[derive(Default)]
 pub struct WorkerScratch {
+    /// selection buffers (scores, indices, probs, query codes)
     pub sel: Scratch,
+    /// K gather staging for [`SparseKernel::Gather`]
     pub kgather: Vec<f32>,
+    /// V gather staging for [`SparseKernel::Gather`]
     pub vgather: Vec<f32>,
+    /// tiled prefill: rms-norm output row (projection input)
+    pub h: Vec<f32>,
+    /// tiled prefill: MLP gate activations
+    pub gate: Vec<f32>,
+    /// tiled prefill: MLP up-projection activations
+    pub up: Vec<f32>,
+    /// tiled prefill: MLP down-projection row
+    pub mlp: Vec<f32>,
+    /// tiled prefill: one token's attention outputs gathered contiguous
+    /// (head order) before the `wo` projection
+    pub attn_row: Vec<f32>,
 }
 
 /// Per-sequence method state for all (layer, kv) heads.
 pub struct SeqState {
+    /// [`MethodState`] per (layer, kv) head, layer-major.
     pub per_head: Vec<MethodState>,
 }
 
 impl SeqState {
+    /// Default state for every (layer, kv) head of `cfg`.
     pub fn new(cfg: &ModelConfig) -> Self {
         SeqState { per_head: vec![MethodState::default(); cfg.n_layers * cfg.n_kv_heads] }
     }
@@ -107,21 +193,33 @@ pub struct DecodeItem<'a> {
     pub token: u32,
     /// absolute position of `token`
     pub pos: usize,
+    /// this sequence's KV/code cache
     pub cache: &'a mut SeqKvCache,
+    /// this sequence's per-head method state
     pub state: &'a mut SeqState,
+    /// this sequence's activation buffers (logits land here)
     pub scratch: &'a mut DecodeScratch,
 }
 
 /// One sequence's prefill chunk in a batched step.
 pub struct PrefillItem<'a> {
+    /// the chunk's prompt tokens
     pub tokens: &'a [u32],
     /// absolute position of `tokens[0]`
     pub start: usize,
-    /// chunk covers the entire prompt: use [`Model::prefill`] (captures
-    /// SnapKV observation state); otherwise dense decode steps
+    /// chunk covers the entire prompt: capture SnapKV observation state
+    /// after the block pass (chunked prompts skip the capture, exactly
+    /// as the token-serial path always has)
     pub whole: bool,
+    /// query rows per attention tile work item (`serve.prefill_tile`,
+    /// surfaced per chunk by
+    /// [`crate::coordinator::scheduler::PrefillWork`])
+    pub tile: usize,
+    /// this sequence's KV/code cache
     pub cache: &'a mut SeqKvCache,
+    /// this sequence's per-head method state
     pub state: &'a mut SeqState,
+    /// this sequence's activation buffers (block arenas + logits)
     pub scratch: &'a mut DecodeScratch,
 }
 
@@ -140,23 +238,111 @@ struct AttnWork<'a> {
     hash_w: &'a [f32],
 }
 
+/// One sequence's token block inside a tiled prefill pass — the unit
+/// `prefill_blocks` advances in lock-step over layers.
+struct PrefillBlock<'a> {
+    tokens: &'a [u32],
+    /// absolute position of `tokens[0]`
+    start: usize,
+    /// query rows per attention tile (clamped to the block length)
+    tile: usize,
+    cache: &'a mut SeqKvCache,
+    scratch: &'a mut DecodeScratch,
+}
+
+/// Stage-1 work item: rms-norm + Q/K/V projections + RoPE for one run
+/// of consecutive block tokens (split-borrowed rows of the sequence's
+/// `PrefillScratch`).
+struct QkvTile<'a> {
+    x: &'a [f32],
+    q: &'a mut [f32],
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+    /// absolute position of the tile's first row
+    pos0: usize,
+}
+
+/// Stage-2 work item: append one (sequence, kv-head)'s whole block of
+/// K/V rows (plus codes and side structures) to its cache region.
+struct AppendBlock<'a> {
+    head: HeadMut<'a>,
+    k: &'a [f32],
+    v: &'a [f32],
+    kv: usize,
+    hash_w: &'a [f32],
+}
+
+/// Stage-3 work item: one causal query tile of one (sequence, kv-head),
+/// writing its disjoint slice of the head-major attention staging area.
+struct AttnTileItem<'a> {
+    tile: PrefillTile<'a>,
+    out: &'a mut [f32],
+}
+
+/// Stage-4 work item: output projection + residual + MLP for one run of
+/// consecutive block tokens.
+struct MlpTile<'a> {
+    x: &'a mut [f32],
+    /// the sequence's full head-major attention staging area
+    attn: &'a [f32],
+    /// block-local index of the tile's first row
+    t0: usize,
+    /// block length (head-major stride is `len * group * dh`)
+    len: usize,
+}
+
+/// Execution context for the tiled prefill stages: the engine pool plus
+/// per-worker arenas (batched path), or a single inline arena (the
+/// serial [`Model::prefill`]). Inline runs items in index order; pooled
+/// placement cannot change results (the `scatter` contract), so both
+/// are bit-identical.
+enum PrefillExec<'a> {
+    Pool(&'a ThreadPool, &'a mut [WorkerScratch]),
+    Inline(&'a mut WorkerScratch),
+}
+
+impl PrefillExec<'_> {
+    /// Run one stage: `f(index, item, arena)` exactly once per item.
+    fn run<T, F>(&mut self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T, &mut WorkerScratch) + Sync,
+    {
+        match self {
+            PrefillExec::Pool(pool, workers) => pool.scatter(items, &mut **workers, f),
+            PrefillExec::Inline(ws) => {
+                for (i, it) in items.iter_mut().enumerate() {
+                    f(i, it, &mut **ws);
+                }
+            }
+        }
+    }
+}
+
 /// Which sparse-attention compute variant the engine uses (Fig. 9
 /// 'FusedAttn' ablation axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SparseKernel {
+    /// 'Simple': materialize gathered K/V copies, then attend.
     Gather,
+    /// Gather folded into the score/accumulate loops (paper default).
     Fused,
 }
 
 /// The model: weights + config + per-model method constants.
 pub struct Model {
+    /// Transformer shape parameters.
     pub cfg: ModelConfig,
+    /// Loaded (or random) parameters + trained hash weights.
     pub weights: Weights,
+    /// Per-model method constants (Loki PCA, MagicPIG planes).
     pub aux: MethodAux,
+    /// Which sparse-attention compute variant decode uses.
     pub sparse_kernel: SparseKernel,
 }
 
 impl Model {
+    /// Assemble a model (fused sparse kernel by default).
     pub fn new(cfg: ModelConfig, weights: Weights, aux: MethodAux) -> Self {
         Model { cfg, weights, aux, sparse_kernel: SparseKernel::Fused }
     }
@@ -386,9 +572,16 @@ impl Model {
         }
     }
 
-    /// Batched prefill chunks: each chunk is token-serial (causal), but
-    /// chunks of different sequences are independent, so they fan across
-    /// the pool at sequence granularity.
+    /// Batched prefill chunks: every chunk advances through the tiled
+    /// block-forward path in lock-step over layers, with (sequence,
+    /// tile) projection/MLP items and (sequence, kv-head, query-tile)
+    /// attention items fanned across `pool` — the same work-item
+    /// machinery as [`Model::decode_batch`], bit-identical to the
+    /// token-serial reference for any tile/thread count. Whole-prompt
+    /// chunks additionally capture SnapKV observation state after the
+    /// pass. H2O chunks keep the token-serial path (sequence-granular
+    /// fan-out): its cumulative attention mass accumulates in query
+    /// order during dense prefill, which tiling would reorder.
     pub fn prefill_batch(
         &self,
         items: &mut [PrefillItem],
@@ -396,35 +589,123 @@ impl Model {
         pool: &ThreadPool,
         workers: &mut [WorkerScratch],
     ) {
-        let dense = ServeConfig { budget: 0, ..serve.clone() };
-        pool.scatter(items, workers, |_, it, _| {
-            if it.whole {
-                // single-chunk prompt: captures SnapKV state
-                self.prefill(it.tokens, &mut *it.cache, &mut *it.state, serve, &mut *it.scratch);
-            } else {
-                for (i, &tok) in it.tokens.iter().enumerate() {
-                    self.decode_step(
-                        tok,
-                        it.start + i,
+        if serve.method == Method::H2o {
+            let dense = ServeConfig { budget: 0, ..serve.clone() };
+            pool.scatter(items, workers, |_, it, _| {
+                if it.whole {
+                    self.prefill_serial(
+                        it.tokens,
                         &mut *it.cache,
                         &mut *it.state,
-                        &dense,
-                        None,
+                        serve,
                         &mut *it.scratch,
                     );
+                } else {
+                    for (i, &tok) in it.tokens.iter().enumerate() {
+                        self.decode_step(
+                            tok,
+                            it.start + i,
+                            &mut *it.cache,
+                            &mut *it.state,
+                            &dense,
+                            None,
+                            &mut *it.scratch,
+                        );
+                    }
                 }
+            });
+            return;
+        }
+        {
+            let mut blocks: Vec<PrefillBlock> = items
+                .iter_mut()
+                .map(|it| PrefillBlock {
+                    tokens: it.tokens,
+                    start: it.start,
+                    tile: it.tile,
+                    cache: &mut *it.cache,
+                    scratch: &mut *it.scratch,
+                })
+                .collect();
+            self.prefill_blocks(&mut blocks, &mut PrefillExec::Pool(pool, workers));
+        }
+        if serve.method == Method::SnapKv {
+            for it in items.iter_mut().filter(|it| it.whole) {
+                let len = it.tokens.len();
+                if len == 0 {
+                    continue;
+                }
+                let w0 = len.saturating_sub(serve.snapkv_window);
+                let mut qwin: Vec<Vec<f32>> = vec![Vec::new(); self.cfg.n_kv_heads];
+                self.snapkv_gather(&it.scratch.block.q, w0..len, &mut qwin);
+                self.snapkv_finalize(&qwin, &mut *it.cache, &mut *it.state, &mut it.scratch.sel);
             }
-        });
+        }
     }
 
     /// Prefill `tokens` into `cache` with full attention (paper Alg. 1),
     /// computing SnapKV observation state when requested. Leaves the
     /// last-token logits in `scratch.logits`.
     ///
-    /// Implementation: token-by-token decode steps with dense attention —
-    /// O(s^2) like any causal prefill, sharing the exact step code path
-    /// (the AOT/PJRT engine has the batched matmul formulation).
+    /// Implementation: the prompt walks in `serve.prefill_chunk` token
+    /// blocks through the tiled block-forward path — the same stages
+    /// [`Model::prefill_batch`] fans across the engine threadpool, run
+    /// inline here in canonical order. Results are bit-identical to the
+    /// token-serial reference [`Model::prefill_serial`] for every
+    /// chunk/tile size; H2O falls back to it (query-order cumulative
+    /// state).
     pub fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut SeqKvCache,
+        state: &mut SeqState,
+        serve: &ServeConfig,
+        scratch: &mut DecodeScratch,
+    ) {
+        if serve.method == Method::H2o {
+            return self.prefill_serial(tokens, cache, state, serve, scratch);
+        }
+        let chunk = serve.prefill_chunk.max(1);
+        let snap_window = if serve.method == Method::SnapKv { serve.snapkv_window } else { 0 };
+        let s = tokens.len();
+        let nheads = self.cfg.n_kv_heads;
+        let mut qwin: Vec<Vec<f32>> = vec![Vec::new(); if snap_window > 0 { nheads } else { 0 }];
+        let mut ws = WorkerScratch::default();
+        let mut start = 0usize;
+        while start < s {
+            let end = (start + chunk).min(s);
+            {
+                let mut blocks = [PrefillBlock {
+                    tokens: &tokens[start..end],
+                    start,
+                    tile: serve.prefill_tile,
+                    cache: &mut *cache,
+                    scratch: &mut *scratch,
+                }];
+                self.prefill_blocks(&mut blocks, &mut PrefillExec::Inline(&mut ws));
+            }
+            if snap_window > 0 {
+                // scratch.block.q holds the FINAL layer's rotated queries
+                // for every block token here. SnapKV observation windows
+                // are layer-local in the paper; we apply the final-layer
+                // ranking to every layer — a scaled-down approximation
+                // documented in DESIGN.md §4.
+                let w0 = s.saturating_sub(snap_window);
+                self.snapkv_gather(&scratch.block.q, start.max(w0) - start..end - start, &mut qwin);
+            }
+            start = end;
+        }
+        if snap_window > 0 {
+            self.snapkv_finalize(&qwin, cache, state, &mut scratch.sel);
+        }
+    }
+
+    /// Token-serial reference prefill: one [`Model::decode_step`] per
+    /// prompt token, dense attention throughout — the pre-tiling
+    /// baseline, kept as the equivalence oracle for the tiled path
+    /// (rust/tests/parallel.rs, benches/fig6_prefill_tile.rs) and as the
+    /// H2O path (its cumulative mass accumulates in query order).
+    pub fn prefill_serial(
         &self,
         tokens: &[u32],
         cache: &mut SeqKvCache,
@@ -441,44 +722,285 @@ impl Model {
         for (pos, &tok) in tokens.iter().enumerate() {
             self.decode_step(tok, pos, cache, state, &dense_serve, None, scratch);
             if snap_window > 0 && pos >= s.saturating_sub(snap_window) {
-                // scratch.q holds the FINAL layer's rotated queries here.
-                // SnapKV observation windows are layer-local in the paper;
-                // we apply the final-layer ranking to every layer — a
-                // scaled-down approximation documented in DESIGN.md §4.
+                // scratch.q holds the FINAL layer's rotated queries here
                 let g = self.cfg.group();
-                for kv in 0..nheads {
-                    qwin[kv].extend_from_slice(
+                for (kv, win) in qwin.iter_mut().enumerate() {
+                    win.extend_from_slice(
                         &scratch.q[kv * g * self.cfg.head_dim..(kv + 1) * g * self.cfg.head_dim],
                     );
                 }
             }
         }
         if snap_window > 0 {
-            let li = self.cfg.n_layers - 1;
-            for kv in 0..nheads {
-                let g = self.cfg.group();
-                let w = qwin[kv].len() / (g * self.cfg.head_dim);
-                if w == 0 {
+            self.snapkv_finalize(&qwin, cache, state, &mut scratch.sel);
+        }
+    }
+
+    /// Extend the per-head SnapKV observation windows with the
+    /// final-layer rotated queries of block rows `rows` (read from a
+    /// [`PrefillScratch`] query buffer after a block pass).
+    fn snapkv_gather(
+        &self,
+        block_q: &[f32],
+        rows: std::ops::Range<usize>,
+        qwin: &mut [Vec<f32>],
+    ) {
+        let g = self.cfg.group();
+        let dh = self.cfg.head_dim;
+        let qrow = self.cfg.n_heads * dh;
+        for t in rows {
+            for (kv, win) in qwin.iter_mut().enumerate() {
+                win.extend_from_slice(
+                    &block_q[t * qrow + kv * g * dh..t * qrow + (kv + 1) * g * dh],
+                );
+            }
+        }
+    }
+
+    /// SnapKV epilogue shared by every prefill path: rank prefix tokens
+    /// by the observation-window queries' attention (final layer) and
+    /// store the ranking in every layer's head state.
+    fn snapkv_finalize(
+        &self,
+        qwin: &[Vec<f32>],
+        cache: &mut SeqKvCache,
+        state: &mut SeqState,
+        sel: &mut Scratch,
+    ) {
+        let li = self.cfg.n_layers - 1;
+        let nheads = self.cfg.n_kv_heads;
+        let g = self.cfg.group();
+        for (kv, win) in qwin.iter().enumerate() {
+            let w = win.len() / (g * self.cfg.head_dim);
+            if w == 0 {
+                continue;
+            }
+            let inp = AttnInputs {
+                q: win.as_slice(),
+                group: g,
+                dh: self.cfg.head_dim,
+                k: cache.k_slice(li, kv),
+                v: cache.v_slice(li, kv),
+                codes: cache.codes_slice(li, kv),
+                words: self.cfg.rbit / 64,
+                rbit: self.cfg.rbit,
+                s: cache.len(),
+                pos: cache.len() - 1,
+                side: crate::attention::Side::default(),
+            };
+            let mut st = MethodState::default();
+            crate::attention::methods::snapkv_prefill(&mut st, &inp, w, sel);
+            for li2 in 0..self.cfg.n_layers {
+                state.per_head[li2 * nheads + kv].snapkv_keep = st.snapkv_keep.clone();
+            }
+        }
+    }
+
+    /// Advance every sequence's token block through the full layer stack
+    /// with the tiled stage fan-out. Per layer: (sequence, tile) Q/K/V
+    /// projection items, (sequence, kv-head) block appends, (sequence,
+    /// kv-head, query-tile) causal attention items, then (sequence,
+    /// tile) MLP items — each stage's work vector is built serially
+    /// (cheap split-borrow bookkeeping) and run on `exec`. The epilogue
+    /// bumps cache lengths and leaves last-token logits (plus the
+    /// final-layer queries in `scratch.q`) exactly like the serial path.
+    fn prefill_blocks(&self, items: &mut [PrefillBlock], exec: &mut PrefillExec) {
+        let cfg = &self.cfg;
+        let dm = cfg.d_model;
+        let dh = cfg.head_dim;
+        let group = cfg.group();
+        let ghd = group * dh;
+        let qrow = cfg.n_heads * dh;
+        let krow = cfg.n_kv_heads * dh;
+        for it in items.iter_mut() {
+            it.scratch.block.ensure(cfg, it.tokens.len());
+            for (t, &tok) in it.tokens.iter().enumerate() {
+                it.scratch.block.x[t * dm..(t + 1) * dm]
+                    .copy_from_slice(self.weights.embed.row(tok as usize));
+            }
+        }
+        for li in 0..cfg.n_layers {
+            // stage 1: norm + q/k/v projections + RoPE per (sequence, tile)
+            let mut qkv: Vec<QkvTile> = Vec::new();
+            for it in items.iter_mut() {
+                let len = it.tokens.len();
+                if len == 0 {
                     continue;
                 }
-                let inp = AttnInputs {
-                    q: &qwin[kv],
-                    group: g,
-                    dh: self.cfg.head_dim,
-                    k: cache.k_slice(li, kv),
-                    v: cache.v_slice(li, kv),
-                    codes: cache.codes_slice(li, kv),
-                    words: self.cfg.rbit / 64,
-                    rbit: self.cfg.rbit,
-                    s: cache.len(),
-                    pos: cache.len() - 1,
-                    side: crate::attention::Side::default(),
-                };
-                let mut st = MethodState::default();
-                crate::attention::methods::snapkv_prefill(&mut st, &inp, w, &mut scratch.sel);
-                for li2 in 0..self.cfg.n_layers {
-                    state.per_head[li2 * nheads + kv].snapkv_keep = st.snapkv_keep.clone();
+                let tile = it.tile.clamp(1, len);
+                let PrefillScratch { x, q, k, v, .. } = &mut it.scratch.block;
+                let mut qi = q.chunks_mut(tile * qrow);
+                let mut ki = k.chunks_mut(tile * krow);
+                let mut vi = v.chunks_mut(tile * krow);
+                for (ti, xs) in x.chunks(tile * dm).enumerate() {
+                    qkv.push(QkvTile {
+                        x: xs,
+                        q: qi.next().unwrap(),
+                        k: ki.next().unwrap(),
+                        v: vi.next().unwrap(),
+                        pos0: it.start + ti * tile,
+                    });
                 }
+            }
+            exec.run(&mut qkv, |_, t, ws| self.qkv_tile(li, t, ws));
+            drop(qkv);
+            // stage 2: block append per (sequence, kv-head)
+            let mut appends: Vec<AppendBlock> = Vec::new();
+            for it in items.iter_mut() {
+                if it.tokens.is_empty() {
+                    continue;
+                }
+                let heads = it.cache.layer_heads_mut(li);
+                let PrefillScratch { k, v, .. } = &it.scratch.block;
+                for (kv, head) in heads.into_iter().enumerate() {
+                    appends.push(AppendBlock {
+                        head,
+                        k: k.as_slice(),
+                        v: v.as_slice(),
+                        kv,
+                        hash_w: self.weights.hash_head(li, kv),
+                    });
+                }
+            }
+            exec.run(&mut appends, |_, a, _| {
+                a.head.append_block(a.k, a.v, krow, a.kv * dh, a.hash_w, cfg.rbit, &self.aux)
+            });
+            drop(appends);
+            // stage 3: causal attention per (sequence, kv-head, query-tile)
+            let mut tiles: Vec<AttnTileItem> = Vec::new();
+            for it in items.iter_mut() {
+                let len = it.tokens.len();
+                if len == 0 {
+                    continue;
+                }
+                let tile = it.tile.clamp(1, len);
+                let start = it.start;
+                let PrefillScratch { q, attn, .. } = &mut it.scratch.block;
+                let q = q.as_slice();
+                let cache = &*it.cache;
+                for (kv, ahead) in attn.chunks_mut(len * ghd).enumerate() {
+                    let k = cache.k_slice(li, kv);
+                    let v = cache.v_slice(li, kv);
+                    for (ti, out) in ahead.chunks_mut(tile * ghd).enumerate() {
+                        tiles.push(AttnTileItem {
+                            tile: PrefillTile {
+                                q,
+                                k,
+                                v,
+                                group,
+                                dh,
+                                qstride: qrow,
+                                qoff: kv * ghd,
+                                t0: ti * tile,
+                                start,
+                            },
+                            out,
+                        });
+                    }
+                }
+            }
+            exec.run(&mut tiles, |_, t, ws| {
+                prefill_tile_attention(&t.tile, &mut ws.sel.probs, &mut *t.out)
+            });
+            drop(tiles);
+            // stage 4: wo + residual + MLP per (sequence, tile)
+            let mut mlps: Vec<MlpTile> = Vec::new();
+            for it in items.iter_mut() {
+                let len = it.tokens.len();
+                if len == 0 {
+                    continue;
+                }
+                let tile = it.tile.clamp(1, len);
+                let PrefillScratch { x, attn, .. } = &mut it.scratch.block;
+                let attn = attn.as_slice();
+                for (ti, xs) in x.chunks_mut(tile * dm).enumerate() {
+                    mlps.push(MlpTile { x: xs, attn, t0: ti * tile, len });
+                }
+            }
+            exec.run(&mut mlps, |_, t, ws| self.mlp_tile(li, t, ws));
+            drop(mlps);
+        }
+        // epilogue: cache length bookkeeping + last-token logits per
+        // sequence, mirroring what the serial path leaves behind
+        exec.run(items, |_, it, _| {
+            let len = it.tokens.len();
+            if len == 0 {
+                return;
+            }
+            it.cache.advance_len_by(len);
+            {
+                let DecodeScratch { x, q, block, .. } = &mut *it.scratch;
+                q.copy_from_slice(&block.q[(len - 1) * qrow..len * qrow]);
+                x.copy_from_slice(&block.x[(len - 1) * dm..len * dm]);
+            }
+            self.lm_head(&mut *it.scratch);
+        });
+    }
+
+    /// Stage-1 tile worker: rms-norm + Q/K/V projections + RoPE for the
+    /// tile's token rows — per-token arithmetic identical to the decode
+    /// path's `layer_qkv`, with the norm temporary in the worker arena.
+    fn qkv_tile(&self, li: usize, t: &mut QkvTile, ws: &mut WorkerScratch) {
+        let cfg = &self.cfg;
+        let lw = &self.weights.layers[li];
+        let dm = cfg.d_model;
+        let dh = cfg.head_dim;
+        let qrow = cfg.n_heads * dh;
+        let krow = cfg.n_kv_heads * dh;
+        ws.h.resize(dm, 0.0);
+        for (r, xs) in t.x.chunks(dm).enumerate() {
+            let pos = t.pos0 + r;
+            rms_norm(xs, lw.attn_norm.data(), &mut ws.h, 1e-5);
+            let q = &mut t.q[r * qrow..(r + 1) * qrow];
+            vecmat(&ws.h, lw.wq.data(), qrow, q);
+            vecmat(&ws.h, lw.wk.data(), krow, &mut t.k[r * krow..(r + 1) * krow]);
+            vecmat(&ws.h, lw.wv.data(), krow, &mut t.v[r * krow..(r + 1) * krow]);
+            for hh in 0..cfg.n_heads {
+                rope_inplace(&mut q[hh * dh..(hh + 1) * dh], pos, cfg.rope_theta);
+            }
+            let k = &mut t.k[r * krow..(r + 1) * krow];
+            for kv in 0..cfg.n_kv_heads {
+                rope_inplace(&mut k[kv * dh..(kv + 1) * dh], pos, cfg.rope_theta);
+            }
+        }
+    }
+
+    /// Stage-4 tile worker: output projection + residual + MLP for the
+    /// tile's token rows — per-token arithmetic identical to the decode
+    /// path's `layer_mlp`. Each token's per-head attention outputs are
+    /// gathered from the head-major staging area into a contiguous row
+    /// first, so the `wo` reduction order matches the serial path bit
+    /// for bit.
+    fn mlp_tile(&self, li: usize, t: &mut MlpTile, ws: &mut WorkerScratch) {
+        let cfg = &self.cfg;
+        let lw = &self.weights.layers[li];
+        let dm = cfg.d_model;
+        let ghd = cfg.group() * cfg.head_dim;
+        let arow = cfg.n_heads * cfg.head_dim;
+        ws.attn_row.resize(arow, 0.0);
+        ws.h.resize(dm, 0.0);
+        ws.gate.resize(cfg.ffn_hidden, 0.0);
+        ws.up.resize(cfg.ffn_hidden, 0.0);
+        ws.mlp.resize(dm, 0.0);
+        for (r, xs) in t.x.chunks_mut(dm).enumerate() {
+            let row = t.t0 + r;
+            for kv in 0..cfg.n_kv_heads {
+                let at = (kv * t.len + row) * ghd;
+                ws.attn_row[kv * ghd..(kv + 1) * ghd].copy_from_slice(&t.attn[at..at + ghd]);
+            }
+            vecmat(&ws.attn_row, lw.wo.data(), dm, &mut ws.h);
+            for (x, &h) in xs.iter_mut().zip(&ws.h) {
+                *x += h;
+            }
+            rms_norm(xs, lw.mlp_norm.data(), &mut ws.h, 1e-5);
+            vecmat(&ws.h, lw.w_gate.data(), cfg.ffn_hidden, &mut ws.gate);
+            vecmat(&ws.h, lw.w_up.data(), cfg.ffn_hidden, &mut ws.up);
+            for (g, &u) in ws.gate.iter_mut().zip(&ws.up) {
+                *g = silu(*g) * u;
+            }
+            vecmat(&ws.gate, lw.w_down.data(), dm, &mut ws.mlp);
+            for (x, &m) in xs.iter_mut().zip(&ws.mlp) {
+                *x += m;
             }
         }
     }
@@ -628,6 +1150,39 @@ mod tests {
             model.generate(&prompt, 5, &serve, sel_ref(&sel), &mut cache, &mut state, &mut scratch)
         };
         assert_eq!(gen(0), gen(1));
+    }
+
+    #[test]
+    fn tiled_prefill_matches_serial_prefill() {
+        // block/tile decomposition must not change a single bit: caches,
+        // codes, final-layer queries and logits all compare exactly
+        let (model, serve) = tiny_model(Method::Hata);
+        let prompt: Vec<u32> = (0..90u32).map(|i| 32 + (i % 64)).collect();
+        let mut c1 = SeqKvCache::new(&model.cfg, &serve);
+        let mut s1 = SeqState::new(&model.cfg);
+        let mut sc1 = DecodeScratch::new(&model.cfg);
+        model.prefill_serial(&prompt, &mut c1, &mut s1, &serve, &mut sc1);
+        for (chunk, tile) in [(32usize, 5usize), (64, 16), (1024, 7), (16, 1024)] {
+            let serve_t = ServeConfig { prefill_chunk: chunk, prefill_tile: tile, ..serve.clone() };
+            let mut c2 = SeqKvCache::new(&model.cfg, &serve_t);
+            let mut s2 = SeqState::new(&model.cfg);
+            let mut sc2 = DecodeScratch::new(&model.cfg);
+            model.prefill(&prompt, &mut c2, &mut s2, &serve_t, &mut sc2);
+            assert_eq!(c1.len(), c2.len(), "chunk {chunk} tile {tile}");
+            for li in 0..model.cfg.n_layers {
+                for kv in 0..model.cfg.n_kv_heads {
+                    assert_eq!(c1.k_slice(li, kv), c2.k_slice(li, kv), "chunk {chunk} tile {tile}");
+                    assert_eq!(c1.v_slice(li, kv), c2.v_slice(li, kv), "chunk {chunk} tile {tile}");
+                    assert_eq!(
+                        c1.codes_slice(li, kv),
+                        c2.codes_slice(li, kv),
+                        "chunk {chunk} tile {tile}"
+                    );
+                }
+            }
+            assert_eq!(sc1.logits, sc2.logits, "chunk {chunk} tile {tile}");
+            assert_eq!(sc1.q, sc2.q, "chunk {chunk} tile {tile}");
+        }
     }
 
     #[test]

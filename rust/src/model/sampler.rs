@@ -3,13 +3,17 @@
 use crate::tensor::ops::argmax;
 use crate::util::rng::Rng;
 
+/// Token sampling policy applied to each step's logits.
 #[derive(Clone, Copy, Debug)]
 pub enum Sampler {
+    /// Argmax (deterministic, the serving default).
     Greedy,
+    /// Softmax sampling at the given temperature (seeded per request).
     Temperature(f32),
 }
 
 impl Sampler {
+    /// Pick the next token from `logits`.
     pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
         match self {
             Sampler::Greedy => argmax(logits) as u32,

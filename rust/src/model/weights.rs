@@ -11,22 +11,35 @@ use crate::util::rng::Rng;
 
 /// One transformer block's parameters.
 pub struct LayerWeights {
+    /// Pre-attention RMSNorm gain, [d_model].
     pub attn_norm: Tensor,
+    /// Query projection, [d_model, n_heads * dh].
     pub wq: Tensor,
+    /// Key projection, [d_model, n_kv_heads * dh].
     pub wk: Tensor,
+    /// Value projection, [d_model, n_kv_heads * dh].
     pub wv: Tensor,
+    /// Attention output projection, [n_heads * dh, d_model].
     pub wo: Tensor,
+    /// Pre-MLP RMSNorm gain, [d_model].
     pub mlp_norm: Tensor,
+    /// MLP gate projection, [d_model, ffn_hidden].
     pub w_gate: Tensor,
+    /// MLP up projection, [d_model, ffn_hidden].
     pub w_up: Tensor,
+    /// MLP down projection, [ffn_hidden, d_model].
     pub w_down: Tensor,
 }
 
 /// Full model parameters + trained hash weights.
 pub struct Weights {
+    /// Token embedding table, [vocab, d_model].
     pub embed: Tensor,
+    /// Final RMSNorm gain, [d_model].
     pub final_norm: Tensor,
+    /// LM head, [d_model, vocab].
     pub lm_head: Tensor,
+    /// Per-layer block parameters.
     pub layers: Vec<LayerWeights>,
     /// Per (layer, kv-head) hash projection, each [head_dim * rbit]
     /// row-major. Empty when no hash weights were loaded.
@@ -96,6 +109,7 @@ impl Weights {
         }
     }
 
+    /// Bit width the loaded hash weights were trained for (0 = none).
     pub fn hash_rbit(&self) -> usize {
         self.hash_rbit
     }

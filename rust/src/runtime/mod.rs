@@ -21,11 +21,14 @@ mod stub {
 
     /// Stub compiled without `--cfg pjrt`: same surface, fails at load.
     pub struct PjrtModel {
+        /// Static token-capacity bucket of the loaded graphs.
         pub bucket: usize,
+        /// Top-k budget compiled into the HATA decode graph.
         pub hata_budget: usize,
     }
 
     impl PjrtModel {
+        /// Always fails: the `xla` bindings are not compiled in.
         pub fn load(_arts: &ModelArtifacts, _needed: usize) -> Result<PjrtModel> {
             bail!(
                 "PJRT runtime unavailable: built without `--cfg pjrt` \
@@ -33,6 +36,7 @@ mod stub {
             )
         }
 
+        /// Always fails: the `xla` bindings are not compiled in.
         pub fn generate(&self, _prompt: &[u32], _n_new: usize, _budget: usize) -> Result<Vec<u32>> {
             bail!("PJRT runtime unavailable: built without `--cfg pjrt`")
         }

@@ -22,6 +22,7 @@ pub struct StepTraffic {
 }
 
 impl StepTraffic {
+    /// All bytes moved by the step.
     pub fn total(&self) -> u64 {
         self.score_bytes + self.attend_bytes + self.write_bytes
     }

@@ -38,18 +38,23 @@ impl PcieModel {
 /// Accumulates modeled transfer time + bytes for a run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TransferLedger {
+    /// Bytes that crossed the link.
     pub bytes: u64,
+    /// Modeled link seconds.
     pub seconds: f64,
+    /// DMA count.
     pub transfers: u64,
 }
 
 impl TransferLedger {
+    /// Account one contiguous DMA.
     pub fn add(&mut self, model: &PcieModel, bytes: usize) {
         self.bytes += bytes as u64;
         self.seconds += model.transfer_time(bytes);
         self.transfers += 1;
     }
 
+    /// Account one scattered row gather.
     pub fn add_gather(&mut self, model: &PcieModel, bytes: usize, rows: usize) {
         self.bytes += bytes as u64;
         self.seconds += model.gather_time(bytes, rows);

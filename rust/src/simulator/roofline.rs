@@ -19,6 +19,7 @@ pub struct Device {
 }
 
 impl Device {
+    /// TPU v4-class constants.
     pub fn tpu_v4() -> Self {
         Device { hbm_bw: 1.2e12, mxu_flops: 275e12, vpu_ops: 4e12, vmem: 16 << 20 }
     }
@@ -27,9 +28,13 @@ impl Device {
 /// Roofline estimate for one kernel invocation.
 #[derive(Clone, Copy, Debug)]
 pub struct KernelEstimate {
+    /// Bytes streamed from/to HBM.
     pub hbm_bytes: f64,
+    /// MXU floating-point operations.
     pub flops: f64,
+    /// VPU element operations.
     pub vpu_ops: f64,
+    /// Peak VMEM residency.
     pub vmem_bytes: usize,
     /// max(memory time, compute time)
     pub seconds: f64,

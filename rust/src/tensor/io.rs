@@ -16,11 +16,19 @@ use super::Tensor;
 /// A named array loaded from an .npz: f32 or i32 payload.
 #[derive(Clone, Debug)]
 pub enum Array {
+    /// Float payload (f4/f8 sources, f8 narrowed).
     F32(Tensor),
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// Integer payload (i4/u4/i8/u8 sources, 64-bit narrowed).
+    I32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat row-major payload.
+        data: Vec<i32>,
+    },
 }
 
 impl Array {
+    /// Dimension sizes regardless of dtype.
     pub fn shape(&self) -> &[usize] {
         match self {
             Array::F32(t) => t.shape(),
@@ -28,6 +36,7 @@ impl Array {
         }
     }
 
+    /// The float tensor, or an error for integer payloads.
     pub fn as_f32(&self) -> Result<&Tensor> {
         match self {
             Array::F32(t) => Ok(t),
@@ -35,6 +44,7 @@ impl Array {
         }
     }
 
+    /// The integer payload, or an error for float payloads.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Array::I32 { data, .. } => Ok(data),
@@ -239,6 +249,7 @@ pub struct TensorStore {
 }
 
 impl TensorStore {
+    /// Read and parse every member of one .npz archive.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let bytes =
@@ -255,28 +266,34 @@ impl TensorStore {
         Ok(TensorStore { arrays })
     }
 
+    /// Array by name (error when missing).
     pub fn get(&self, name: &str) -> Result<&Array> {
         self.arrays
             .get(name)
             .with_context(|| format!("npz missing array {name:?}"))
     }
 
+    /// Float tensor by name.
     pub fn f32(&self, name: &str) -> Result<&Tensor> {
         self.get(name)?.as_f32()
     }
 
+    /// Integer payload by name.
     pub fn i32(&self, name: &str) -> Result<&[i32]> {
         self.get(name)?.as_i32()
     }
 
+    /// All array names (sorted).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.arrays.keys().map(|s| s.as_str())
     }
 
+    /// Array count.
     pub fn len(&self) -> usize {
         self.arrays.len()
     }
 
+    /// True when the archive held no arrays.
     pub fn is_empty(&self) -> bool {
         self.arrays.is_empty()
     }

@@ -16,32 +16,39 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Wrap data with a shape (element count must match).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Dimension sizes.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Flat row-major payload.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major payload.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True for zero-element tensors.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -66,6 +73,7 @@ impl Tensor {
         self
     }
 
+    /// Element [a, b, c, d] of a 4-D tensor.
     pub fn index4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
         let s = &self.shape;
         assert_eq!(s.len(), 4);

@@ -6,20 +6,27 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positional args and typed flag access.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First bare argument when subcommands are enabled.
     pub subcommand: Option<String>,
+    /// Remaining bare arguments.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     known: Vec<String>,
 }
 
+/// Argument parsing failures (reported with the offending flag).
 #[derive(Debug, thiserror::Error)]
 pub enum CliError {
+    /// Flag is not in the spec (likely a typo).
     #[error("unknown flag --{0}")]
     Unknown(String),
+    /// Non-boolean flag appeared without a value.
     #[error("flag --{0} expects a value")]
     MissingValue(String),
+    /// Value failed to parse as the requested type.
     #[error("flag --{0}: cannot parse {1:?}")]
     BadValue(String, String),
 }
@@ -63,14 +70,17 @@ impl Args {
         Ok(out)
     }
 
+    /// String flag with a default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// String flag, `None` when absent.
     pub fn opt_str(&self, key: &str) -> Option<String> {
         self.flags.get(key).cloned()
     }
 
+    /// `usize` flag with a default.
     pub fn usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -80,6 +90,7 @@ impl Args {
         }
     }
 
+    /// `u64` flag with a default.
     pub fn u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -89,6 +100,7 @@ impl Args {
         }
     }
 
+    /// `f64` flag with a default.
     pub fn f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -98,6 +110,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag: present (or `--key=true`)?
     pub fn flag(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v == "true").unwrap_or(false)
     }

@@ -8,25 +8,36 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value (all numbers are f64, object keys are ordered).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key-sorted).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset into the input.
     pub pos: usize,
+    /// What the parser expected.
     pub msg: String,
 }
 
 impl Json {
     // ------------------------------------------------------------ access
+    /// Object field access (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -34,6 +45,7 @@ impl Json {
         }
     }
 
+    /// Array element access (`None` for non-arrays / out of range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -41,6 +53,7 @@ impl Json {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -48,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -55,10 +69,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -66,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -73,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -81,19 +99,23 @@ impl Json {
     }
 
     // ------------------------------------------------------------- build
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a numeric value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
     // ------------------------------------------------------------- parse
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, pos: 0 };
@@ -107,12 +129,14 @@ impl Json {
     }
 
     // ------------------------------------------------------------- write
+    /// Compact serialization.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);
         s
     }
 
+    /// Two-space-indented serialization.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);

@@ -3,11 +3,16 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, ordered (`Debug` lowest).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Verbose diagnostics (off by default).
     Debug = 0,
+    /// Normal operational messages (the default threshold).
     Info = 1,
+    /// Recoverable anomalies (stalls, fallbacks).
     Warn = 2,
+    /// Failures.
     Error = 3,
 }
 
@@ -15,14 +20,18 @@ static LEVEL: AtomicU8 = AtomicU8::new(1);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
+/// Set the global minimum level that gets printed.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Would a message at `level` be printed?
 pub fn enabled(level: Level) -> bool {
     level as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Print one message to stderr with a monotonic timestamp (prefer the
+/// `log_info!`/`log_debug!`/`log_warn!` macros).
 pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
     if !enabled(level) {
         return;
@@ -38,6 +47,7 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
     eprintln!("[{secs:9.3}s {tag} {target}] {msg}");
 }
 
+/// Log a formatted message at [`Level::Info`].
 #[macro_export]
 macro_rules! log_info {
     ($target:expr, $($arg:tt)*) => {
@@ -45,6 +55,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log a formatted message at [`Level::Debug`].
 #[macro_export]
 macro_rules! log_debug {
     ($target:expr, $($arg:tt)*) => {
@@ -52,6 +63,7 @@ macro_rules! log_debug {
     };
 }
 
+/// Log a formatted message at [`Level::Warn`].
 #[macro_export]
 macro_rules! log_warn {
     ($target:expr, $($arg:tt)*) => {

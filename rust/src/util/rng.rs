@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a stream (SplitMix64-expanded state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
@@ -29,6 +30,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -43,6 +45,7 @@ impl Rng {
         result
     }
 
+    /// Next raw 32-bit output (high word of [`Rng::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -7,18 +7,22 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Summary { samples: Vec::new() }
     }
 
+    /// Record one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> usize {
         self.samples.len()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -26,6 +30,7 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Sample standard deviation (0 with fewer than two samples).
     pub fn std(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -35,10 +40,12 @@ impl Summary {
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -60,10 +67,12 @@ impl Summary {
         }
     }
 
+    /// Median.
     pub fn p50(&self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// 99th percentile.
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
@@ -81,11 +90,12 @@ pub struct LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram (base 1us, quarter-octave buckets up to ~1000s).
     pub fn new() -> Self {
-        // base 1us, quarter-octave buckets up to ~1000s
         LatencyHistogram { counts: vec![0; 120], base: 1e-6, total: 0, sum: 0.0 }
     }
 
+    /// Record one latency sample.
     pub fn record(&mut self, seconds: f64) {
         let idx = if seconds <= self.base {
             0
@@ -97,10 +107,12 @@ impl LatencyHistogram {
         self.sum += seconds;
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Exact mean of all recorded samples (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             f64::NAN

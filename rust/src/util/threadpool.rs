@@ -6,10 +6,13 @@
 //! pool on multi-core machines.
 //!
 //! The serving hot path uses [`ThreadPool::scatter`]: the engine fans
-//! per-(sequence, kv-head) decode work across the pool's *persistent*
-//! workers (no per-step thread spawns), handing each worker exclusive use
-//! of one scratch arena. [`ThreadPool::for_each_index`] remains for
-//! borrowed one-shot fan-outs that do not need worker-local state.
+//! per-(sequence, kv-head) decode work — and, since the block-tiled
+//! prefill refactor, per-(sequence, tile) projection/MLP and
+//! per-(sequence, kv-head, query-tile) prefill attention work — across
+//! the pool's *persistent* workers (no per-step thread spawns), handing
+//! each worker exclusive use of one scratch arena.
+//! [`ThreadPool::for_each_index`] remains for borrowed one-shot fan-outs
+//! that do not need worker-local state.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -18,6 +21,8 @@ use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-width pool of persistent worker threads fed over one shared
+/// channel; see the module docs for the fan-out patterns it backs.
 pub struct ThreadPool {
     workers: Vec<std::thread::JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
@@ -33,6 +38,7 @@ struct Latch {
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `threads.max(1)` persistent workers.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -52,15 +58,18 @@ impl ThreadPool {
         ThreadPool { workers, tx: Some(tx) }
     }
 
+    /// Pool sized from `std::thread::available_parallelism`.
     pub fn with_default_size() -> Self {
         let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Self::new(n)
     }
 
+    /// Worker count.
     pub fn size(&self) -> usize {
         self.workers.len()
     }
 
+    /// Queue one fire-and-forget job on the pool.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx.as_ref().unwrap().send(Box::new(job)).expect("pool closed");
     }

@@ -1,7 +1,9 @@
 //! Parallel-vs-serial determinism: the batched threadpool decode path
-//! (`serve.threads > 1`) must produce byte-identical token streams to the
-//! serial engine for every method — work items touch disjoint state and
-//! per-worker scratch is fully overwritten, so thread count and item
+//! (`serve.threads > 1`) and the block-tiled prefill path (any
+//! `prefill_tile` / `prefill_chunk`) must produce byte-identical results
+//! to the serial engine for every method — work items touch disjoint
+//! state, per-worker scratch is fully overwritten, and tile reduction
+//! order is fixed per query row, so thread count, tile geometry and item
 //! placement cannot change any result.
 
 use std::sync::Arc;
@@ -9,8 +11,8 @@ use std::sync::Arc;
 use hata::config::{preset, Method, ServeConfig};
 use hata::coordinator::engine::Engine;
 use hata::coordinator::request::Request;
-use hata::kvcache::MethodAux;
-use hata::model::{weights::Weights, Model};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{weights::Weights, DecodeScratch, Model, SeqState};
 use hata::util::rng::Rng;
 
 /// Run a fixed workload (6 requests, mixed prompt lengths, chunked
@@ -64,4 +66,132 @@ fn hata_tokens_identical_across_thread_counts() {
 fn quest_tokens_identical_across_thread_counts() {
     let serial = run(Method::Quest, 1);
     assert_eq!(serial, run(Method::Quest, 4));
+}
+
+/// Build one random model for the prefill-equivalence tests.
+fn model_for(method: Method, serve: &ServeConfig) -> Model {
+    let cfg = preset("hata-gqa").unwrap();
+    let mut rng = Rng::new(7);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, serve, None, 1);
+    Model::new(cfg, weights, aux)
+}
+
+/// Tiled prefill must produce bit-identical caches, hash codes, side
+/// structures and logits to the token-serial reference for every tile
+/// size — including a tile larger than the chunk (clamped) — for the
+/// Dense, Hata and Quest selectors.
+#[test]
+fn tiled_prefill_bit_identical_to_token_serial() {
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        let serve = ServeConfig { method, budget: 16, prefill_chunk: 128, ..Default::default() };
+        let model = model_for(method, &serve);
+        let prompt: Vec<u32> = (0..300u32).map(|i| 32 + (i % 64)).collect();
+        // token-serial reference
+        let mut c1 = SeqKvCache::new(&model.cfg, &serve);
+        let mut s1 = SeqState::new(&model.cfg);
+        let mut sc1 = DecodeScratch::new(&model.cfg);
+        model.prefill_serial(&prompt, &mut c1, &mut s1, &serve, &mut sc1);
+        for tile in [1usize, 8, 32, 1024] {
+            let serve_t = ServeConfig { prefill_tile: tile, ..serve.clone() };
+            let mut c2 = SeqKvCache::new(&model.cfg, &serve_t);
+            let mut s2 = SeqState::new(&model.cfg);
+            let mut sc2 = DecodeScratch::new(&model.cfg);
+            model.prefill(&prompt, &mut c2, &mut s2, &serve_t, &mut sc2);
+            assert_eq!(c1.len(), c2.len(), "{method:?} tile {tile}");
+            for li in 0..model.cfg.n_layers {
+                for kv in 0..model.cfg.n_kv_heads {
+                    assert_eq!(
+                        c1.k_slice(li, kv),
+                        c2.k_slice(li, kv),
+                        "{method:?} tile {tile} k l{li} kv{kv}"
+                    );
+                    assert_eq!(
+                        c1.v_slice(li, kv),
+                        c2.v_slice(li, kv),
+                        "{method:?} tile {tile} v l{li} kv{kv}"
+                    );
+                    assert_eq!(
+                        c1.codes_slice(li, kv),
+                        c2.codes_slice(li, kv),
+                        "{method:?} tile {tile} codes l{li} kv{kv}"
+                    );
+                    let a = c1.side(li, kv, &[], &model.aux);
+                    let b = c2.side(li, kv, &[], &model.aux);
+                    assert_eq!(a.quest_min, b.quest_min, "{method:?} tile {tile}");
+                    assert_eq!(a.quest_max, b.quest_max, "{method:?} tile {tile}");
+                }
+            }
+            assert_eq!(c1.bytes(), c2.bytes(), "{method:?} tile {tile}");
+            assert_eq!(sc1.logits, sc2.logits, "{method:?} tile {tile} logits");
+            assert_eq!(sc1.q, sc2.q, "{method:?} tile {tile} final-layer q");
+        }
+    }
+}
+
+/// SnapKV's prefill-time observation state must survive the tiling —
+/// including a window that spans a chunk boundary (prompt 130, chunk 64:
+/// the 16-token window covers the last two blocks).
+#[test]
+fn tiled_prefill_matches_serial_snapkv_state() {
+    let serve =
+        ServeConfig { method: Method::SnapKv, budget: 12, prefill_chunk: 64, ..Default::default() };
+    let model = model_for(Method::SnapKv, &serve);
+    let prompt: Vec<u32> = (0..130u32).map(|i| 32 + (i % 64)).collect();
+    let mut c1 = SeqKvCache::new(&model.cfg, &serve);
+    let mut s1 = SeqState::new(&model.cfg);
+    let mut sc1 = DecodeScratch::new(&model.cfg);
+    model.prefill_serial(&prompt, &mut c1, &mut s1, &serve, &mut sc1);
+    let mut c2 = SeqKvCache::new(&model.cfg, &serve);
+    let mut s2 = SeqState::new(&model.cfg);
+    let mut sc2 = DecodeScratch::new(&model.cfg);
+    model.prefill(&prompt, &mut c2, &mut s2, &serve, &mut sc2);
+    assert_eq!(sc1.logits, sc2.logits);
+    for (i, (a, b)) in s1.per_head.iter().zip(&s2.per_head).enumerate() {
+        assert_eq!(a.snapkv_keep, b.snapkv_keep, "head {i}");
+    }
+}
+
+/// Engine-level prefill determinism: token streams must be identical
+/// across thread counts AND tile sizes (chunked prefill, long prompts).
+fn run_tiled(method: Method, threads: usize, tile: usize) -> Vec<(u64, Vec<u32>)> {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 3,
+        prefill_chunk: 48,
+        prefill_tile: tile,
+        threads,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    for id in 0..4u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..(90 + id as usize * 37)).map(|i| 32 + (i as u32 % 64)).collect(),
+            max_new_tokens: 4,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let mut out: Vec<(u64, Vec<u32>)> =
+        engine.run_to_completion().into_iter().map(|r| (r.id, r.tokens)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    assert_eq!(out.len(), 4, "all requests must complete ({method:?}, threads={threads})");
+    assert!(out.iter().all(|(_, t)| t.len() == 4));
+    out
+}
+
+#[test]
+fn tiled_prefill_engine_identical_across_threads_and_tiles() {
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        let base = run_tiled(method, 1, 16);
+        assert_eq!(base, run_tiled(method, 4, 16), "{method:?} threads");
+        assert_eq!(base, run_tiled(method, 4, 64), "{method:?} tile 64");
+        assert_eq!(base, run_tiled(method, 2, 7), "{method:?} odd tile");
+    }
 }
