@@ -1,0 +1,241 @@
+//! Queue-vs-barrier executor sweep: decode-step wall time of the
+//! dependency-driven work queue (`--exec queue`) against the
+//! barrier-per-stage scatter baseline (`--exec barrier`) across
+//! batch × threads, plus one prefill column at the largest batch.
+//!
+//! Both executors are bit-identical by construction — every cell
+//! asserts exact equality of the whole per-step logits trace against
+//! the barrier baseline before reporting its speedup, so a regression
+//! in either executor fails the bench instead of skewing it.
+//!
+//! Env: HATA_BENCH_ITERS (default 1), HATA_FIG7_CTX (default 256),
+//! HATA_FIG7_STEPS (default 32), HATA_FIG7_BATCHES (default 1,2,4,8).
+
+use std::time::Instant;
+
+use hata::config::{preset, ExecMode, Method, ServeConfig};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{
+    make_selector, sel_ref, weights::Weights, DecodeItem, DecodeScratch, Model, PrefillItem,
+    SeqState, WorkerScratch,
+};
+use hata::tensor::ops::argmax;
+use hata::util::rng::Rng;
+use hata::util::threadpool::ThreadPool;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+/// Run `steps` decode steps for a batch of `prompts` under `serve`;
+/// returns (wall seconds, flattened per-step logits trace).
+#[allow(clippy::too_many_arguments)]
+fn run_decode(
+    model: &Model,
+    serve: &ServeConfig,
+    prompts: &[Vec<u32>],
+    steps: usize,
+    pool: &ThreadPool,
+    workers: &mut [WorkerScratch],
+) -> (f64, Vec<f32>) {
+    let sel = make_selector(serve);
+    let mut caches: Vec<SeqKvCache> =
+        prompts.iter().map(|_| SeqKvCache::new(&model.cfg, serve)).collect();
+    let mut states: Vec<SeqState> = prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+    let mut scratches: Vec<DecodeScratch> =
+        prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+    // identical prefill for both executors: batched tiled path
+    {
+        let mut items: Vec<PrefillItem> = prompts
+            .iter()
+            .zip(caches.iter_mut())
+            .zip(states.iter_mut())
+            .zip(scratches.iter_mut())
+            .map(|(((p, cache), state), scratch)| PrefillItem {
+                tokens: p,
+                start: 0,
+                whole: false,
+                tile: serve.prefill_tile,
+                cache,
+                state,
+                scratch,
+            })
+            .collect();
+        model.prefill_batch(&mut items, serve, pool, workers);
+    }
+    let mut next: Vec<u32> = scratches.iter().map(|sc| argmax(&sc.logits) as u32).collect();
+    let mut trace: Vec<f32> = Vec::new();
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let mut items: Vec<DecodeItem> = caches
+            .iter_mut()
+            .zip(states.iter_mut())
+            .zip(scratches.iter_mut())
+            .enumerate()
+            .map(|(i, ((cache, state), scratch))| DecodeItem {
+                token: next[i],
+                pos: prompts[i].len() + step,
+                cache,
+                state,
+                scratch,
+            })
+            .collect();
+        model.decode_batch(&mut items, serve, sel_ref(&sel), pool, workers);
+        drop(items);
+        for (i, n) in next.iter_mut().enumerate() {
+            *n = argmax(&scratches[i].logits) as u32;
+        }
+        for sc in &scratches {
+            trace.extend_from_slice(&sc.logits);
+        }
+    }
+    (t0.elapsed().as_secs_f64(), trace)
+}
+
+/// One long-prompt batched prefill under `serve`; returns (seconds,
+/// final logits of every sequence).
+fn run_prefill(
+    model: &Model,
+    serve: &ServeConfig,
+    prompts: &[Vec<u32>],
+    pool: &ThreadPool,
+    workers: &mut [WorkerScratch],
+) -> (f64, Vec<f32>) {
+    let mut caches: Vec<SeqKvCache> =
+        prompts.iter().map(|_| SeqKvCache::new(&model.cfg, serve)).collect();
+    let mut states: Vec<SeqState> = prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+    let mut scratches: Vec<DecodeScratch> =
+        prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+    let t0 = Instant::now();
+    {
+        let mut items: Vec<PrefillItem> = prompts
+            .iter()
+            .zip(caches.iter_mut())
+            .zip(states.iter_mut())
+            .zip(scratches.iter_mut())
+            .map(|(((p, cache), state), scratch)| PrefillItem {
+                tokens: p,
+                start: 0,
+                whole: false,
+                tile: serve.prefill_tile,
+                cache,
+                state,
+                scratch,
+            })
+            .collect();
+        model.prefill_batch(&mut items, serve, pool, workers);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let mut logits = Vec::new();
+    for sc in &scratches {
+        logits.extend_from_slice(&sc.logits);
+    }
+    (secs, logits)
+}
+
+fn main() {
+    let iters = env_usize("HATA_BENCH_ITERS", 1).max(1);
+    let ctx = env_usize("HATA_FIG7_CTX", 256);
+    let steps = env_usize("HATA_FIG7_STEPS", 32);
+    let batches = env_list("HATA_FIG7_BATCHES", &[1, 2, 4, 8]);
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    let mut thread_counts = vec![1usize];
+    if max_threads > 1 {
+        thread_counts.push(max_threads);
+    }
+    let cfg = preset("hata-gqa").unwrap();
+    let serve_base = ServeConfig { method: Method::Hata, budget: 64, ..Default::default() };
+    let mut rng = Rng::new(11);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve_base, None, 1);
+    let model = Model::new(cfg, weights, aux);
+
+    let mut table = hata::bench::report::Table::new(
+        &format!(
+            "Fig 7 queue-vs-barrier: {steps} decode steps after a {ctx}-token prefill \
+             (hata-gqa, min of {iters})"
+        ),
+        &["phase", "batch", "threads", "barrier_s", "queue_s", "speedup", "bitwise_equal"],
+    );
+    for &batch in &batches {
+        let prompts: Vec<Vec<u32>> = (0..batch)
+            .map(|s| (0..ctx).map(|i| 32 + ((i + s * 7) as u32 % 64)).collect())
+            .collect();
+        for &threads in &thread_counts {
+            let pool = ThreadPool::new(threads);
+            let mut workers: Vec<WorkerScratch> =
+                (0..threads).map(|_| WorkerScratch::default()).collect();
+            let mut cell = |exec_mode: ExecMode| -> (f64, Vec<f32>) {
+                let serve = ServeConfig { threads, exec_mode, ..serve_base.clone() };
+                let mut best = f64::INFINITY;
+                let mut trace = Vec::new();
+                for _ in 0..iters {
+                    let (secs, t) =
+                        run_decode(&model, &serve, &prompts, steps, &pool, &mut workers);
+                    best = best.min(secs);
+                    trace = t;
+                }
+                (best, trace)
+            };
+            let (bs, bt) = cell(ExecMode::Barrier);
+            let (qs, qt) = cell(ExecMode::Queue);
+            assert_eq!(
+                bt, qt,
+                "queue decode diverged from barrier (batch={batch}, threads={threads})"
+            );
+            table.row(vec![
+                "decode".into(),
+                batch.to_string(),
+                threads.to_string(),
+                hata::bench::report::fmt(bs),
+                hata::bench::report::fmt(qs),
+                hata::bench::report::fmt(bs / qs),
+                "yes".into(),
+            ]);
+            eprintln!("[fig7] decode batch={batch} threads={threads} done");
+        }
+    }
+    // one prefill row per thread count at the largest batch
+    let batch = *batches.last().unwrap_or(&4);
+    let prompts: Vec<Vec<u32>> = (0..batch)
+        .map(|s| (0..4 * ctx).map(|i| 32 + ((i + s * 13) as u32 % 64)).collect())
+        .collect();
+    for &threads in &thread_counts {
+        let pool = ThreadPool::new(threads);
+        let mut workers: Vec<WorkerScratch> =
+            (0..threads).map(|_| WorkerScratch::default()).collect();
+        let mut cell = |exec_mode: ExecMode| -> (f64, Vec<f32>) {
+            let serve = ServeConfig { threads, exec_mode, ..serve_base.clone() };
+            let mut best = f64::INFINITY;
+            let mut logits = Vec::new();
+            for _ in 0..iters {
+                let (secs, l) = run_prefill(&model, &serve, &prompts, &pool, &mut workers);
+                best = best.min(secs);
+                logits = l;
+            }
+            (best, logits)
+        };
+        let (bs, bl) = cell(ExecMode::Barrier);
+        let (qs, ql) = cell(ExecMode::Queue);
+        assert_eq!(bl, ql, "queue prefill diverged from barrier (threads={threads})");
+        table.row(vec![
+            "prefill".into(),
+            batch.to_string(),
+            threads.to_string(),
+            hata::bench::report::fmt(bs),
+            hata::bench::report::fmt(qs),
+            hata::bench::report::fmt(bs / qs),
+            "yes".into(),
+        ]);
+        eprintln!("[fig7] prefill batch={batch} threads={threads} done");
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig7_queue_vs_barrier").unwrap();
+}

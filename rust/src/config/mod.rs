@@ -242,6 +242,43 @@ impl Method {
     }
 }
 
+/// How the engine executes a batch step's work items across the
+/// threadpool (`--exec`). Both modes run the identical per-item
+/// routines on disjoint state, so they are bit-identical for every
+/// (threads, batch, tile, method) combination; they differ only in
+/// synchronization cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Barrier-per-stage reference path: each layer's stages run as
+    /// consecutive [`crate::util::threadpool::ThreadPool::scatter`]
+    /// calls, with a full-pool barrier between stages.
+    Barrier,
+    /// Dependency-driven work queue (default): the whole step becomes
+    /// one [`crate::util::workqueue::TaskGraph`] per batch, and a
+    /// sequence's next task starts the moment its own inputs are ready
+    /// instead of waiting on the batch's slowest straggler.
+    Queue,
+}
+
+impl ExecMode {
+    /// Parse a CLI value (`queue` | `barrier`).
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "queue" | "q" => ExecMode::Queue,
+            "barrier" | "scatter" | "b" => ExecMode::Barrier,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name (CLI value, bench row label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Barrier => "barrier",
+            ExecMode::Queue => "queue",
+        }
+    }
+}
+
 /// Serving engine parameters.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -277,6 +314,10 @@ pub struct ServeConfig {
     /// (1 = strictly serial; higher fans (sequence, kv-head) work items
     /// across the threadpool).
     pub threads: usize,
+    /// Step executor: dependency-driven work queue (default) or the
+    /// barrier-per-stage scatter reference path. Bit-identical outputs
+    /// either way — this knob only trades synchronization overhead.
+    pub exec_mode: ExecMode,
     /// Softmax sampling temperature; 0 = greedy (argmax), the default so
     /// serving stays deterministic.
     pub temperature: f32,
@@ -301,6 +342,7 @@ impl Default for ServeConfig {
             sinks: 4,
             snapkv_window: 16,
             threads: 1,
+            exec_mode: ExecMode::Queue,
             temperature: 0.0,
             seed: 0,
         }
@@ -348,6 +390,15 @@ mod tests {
     #[test]
     fn unknown_preset_none() {
         assert!(preset("gpt5").is_none());
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        for m in [ExecMode::Barrier, ExecMode::Queue] {
+            assert_eq!(ExecMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ExecMode::parse("scatter"), Some(ExecMode::Barrier));
+        assert_eq!(ExecMode::parse("nope"), None);
     }
 
     #[test]

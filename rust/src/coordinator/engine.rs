@@ -2,7 +2,11 @@
 //! model. One engine = one worker process; the [`super::router`] shards
 //! requests across engines, and within an engine the step fans
 //! per-(sequence, kv-head) decode work and per-(sequence, kv-head,
-//! query-tile) prefill work across `serve.threads` pool workers.
+//! query-tile) prefill work across `serve.threads` pool workers — as one
+//! dependency-driven task graph per batch under the default `--exec
+//! queue`, or as barrier-separated scatter stages under `--exec barrier`
+//! (bit-identical outputs either way; the work-queue executor's busy/idle
+//! counters land in [`Metrics::decode_exec`]/[`Metrics::prefill_exec`]).
 //!
 //! Scratch ownership per step: one [`DecodeScratch`] per batch slot
 //! (sequence activations + tiled-prefill block arenas + logits), one
@@ -185,12 +189,13 @@ impl Engine {
                         scratch,
                     });
                 }
-                self.model.prefill_batch(
+                let exec = self.model.prefill_batch(
                     &mut items,
                     &self.serve,
                     &self.workers,
                     &mut self.worker_scratch,
                 );
+                self.metrics.on_prefill_exec(exec);
             }
             for (slot, w) in plan.prefill.iter().enumerate() {
                 self.scheduler.on_prefilled(w.id, w.range.len());
@@ -242,13 +247,14 @@ impl Engine {
                     let LiveSeq { cache, state, .. } = seq;
                     items.push(DecodeItem { token: *tok, pos: *pos, cache, state, scratch });
                 }
-                self.model.decode_batch(
+                let exec = self.model.decode_batch(
                     &mut items,
                     &self.serve,
                     sel_ref(&self.selector),
                     &self.workers,
                     &mut self.worker_scratch,
                 );
+                self.metrics.on_decode_exec(exec);
             }
             for (slot, (id, _, _)) in work.iter().enumerate() {
                 let logits = &self.seq_scratch[slot].logits;

@@ -1,6 +1,9 @@
-//! Serving metrics: TTFT / per-token latency histograms and throughput.
+//! Serving metrics: TTFT / per-token latency histograms, throughput,
+//! and the work-queue executor's per-stage (decode vs prefill)
+//! busy/idle counters.
 
 use crate::util::stats::{LatencyHistogram, Summary};
+use crate::util::workqueue::QueueStats;
 
 /// Engine counters and latency histograms, updated every step.
 #[derive(Default)]
@@ -22,6 +25,13 @@ pub struct Metrics {
     /// stall events: the engine detected zero progress for consecutive
     /// steps and preempted the stuck work (see `Engine::run_to_completion`)
     pub stalls: u64,
+    /// Work-queue executor counters for the decode stage (`--exec
+    /// queue`; stays zero under `--exec barrier`). `idle_waits` high
+    /// relative to `tasks` means workers starve — batch too small for
+    /// the thread count.
+    pub decode_exec: QueueStats,
+    /// Work-queue executor counters for the prefill stage.
+    pub prefill_exec: QueueStats,
     started_at: Option<std::time::Instant>,
 }
 
@@ -55,6 +65,16 @@ impl Metrics {
         self.preempted += preempted as u64;
     }
 
+    /// Accumulate one decode batch's work-queue executor counters.
+    pub fn on_decode_exec(&mut self, s: QueueStats) {
+        self.decode_exec.merge(s);
+    }
+
+    /// Accumulate one prefill batch's work-queue executor counters.
+    pub fn on_prefill_exec(&mut self, s: QueueStats) {
+        self.prefill_exec.merge(s);
+    }
+
     /// Seconds since [`Metrics::new`].
     pub fn elapsed(&self) -> f64 {
         self.started_at.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
@@ -72,7 +92,7 @@ impl Metrics {
 
     /// One-line human-readable summary.
     pub fn report(&self) -> String {
-        format!(
+        let mut line = format!(
             "completed={} gen_tokens={} prompt_tokens={} tput={:.1} tok/s \
              step p50={:.3}ms p99={:.3}ms ttft p50={:.1}ms stalls={} preempted={}",
             self.completed,
@@ -84,7 +104,16 @@ impl Metrics {
             self.ttft.quantile(0.5) * 1e3,
             self.stalls,
             self.preempted,
-        )
+        );
+        for (stage, s) in [("decode", &self.decode_exec), ("prefill", &self.prefill_exec)] {
+            if s.runs > 0 {
+                line.push_str(&format!(
+                    " q_{stage}[runs={} tasks={} idle_waits={}]",
+                    s.runs, s.tasks, s.idle_waits
+                ));
+            }
+        }
+        line
     }
 }
 
@@ -103,5 +132,20 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.prompt_tokens, 32);
         assert!(m.report().contains("completed=1"));
+    }
+
+    #[test]
+    fn queue_counters_accumulate_and_report() {
+        let mut m = Metrics::new();
+        assert!(!m.report().contains("q_decode"), "no queue runs yet");
+        m.on_decode_exec(QueueStats { runs: 1, inline_runs: 0, tasks: 13, idle_waits: 2 });
+        m.on_decode_exec(QueueStats { runs: 1, inline_runs: 1, tasks: 7, idle_waits: 0 });
+        m.on_prefill_exec(QueueStats { runs: 1, inline_runs: 0, tasks: 40, idle_waits: 5 });
+        assert_eq!(m.decode_exec.tasks, 20);
+        assert_eq!(m.decode_exec.runs, 2);
+        assert_eq!(m.prefill_exec.idle_waits, 5);
+        let r = m.report();
+        assert!(r.contains("q_decode[runs=2 tasks=20 idle_waits=2]"), "{r}");
+        assert!(r.contains("q_prefill[runs=1 tasks=40 idle_waits=5]"), "{r}");
     }
 }

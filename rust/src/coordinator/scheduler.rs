@@ -11,8 +11,10 @@
 //! The plan is a *batch structure*, not id lists: each [`DecodeWork`]
 //! carries the absolute token position and each [`PrefillWork`] its chunk
 //! range, finality and attention tile geometry, so the engine can build
-//! the whole step's work items up front and fan them across the
-//! threadpool without re-deriving per-sequence state mid-step.
+//! the whole step's work up front — under `--exec queue`, one dependency
+//! task graph per batch (`crate::util::workqueue`); under `--exec
+//! barrier`, per-stage scatter vectors — without re-deriving per-sequence
+//! state mid-step.
 
 use std::collections::VecDeque;
 

@@ -178,6 +178,69 @@ impl HeadMut<'_> {
     }
 }
 
+/// Address-based view of one (layer, kv-head) cache region for the
+/// dependency-driven work-queue executor ([`crate::util::workqueue`]):
+/// tasks for every layer exist simultaneously, so exclusivity comes from
+/// graph edges rather than borrows, and each task re-materializes a
+/// normal [`HeadMut`]/[`HeadCache`] view only while it runs.
+///
+/// Obtained from [`SeqKvCache::head_handles`]; the pointer stays valid
+/// for the cache's lifetime (the per-head structs never move — only the
+/// buffers inside them grow). Copyable so the append task and the
+/// attention tasks of one head can each carry the same handle.
+#[derive(Clone, Copy)]
+pub struct HeadHandle {
+    head: usize,
+    dh: usize,
+    quest_block: usize,
+    loki_channels: usize,
+    mp_k: usize,
+    mp_l: usize,
+    hc: *mut HeadCache,
+}
+
+// SAFETY: a HeadHandle is just an address plus copies of shared scalars;
+// sending it between threads is safe because every dereference site is
+// an `unsafe fn` whose caller must prove exclusive (head_mut) or shared
+// (head_ref) access — in the workqueue path, via dependency edges.
+unsafe impl Send for HeadHandle {}
+
+impl HeadHandle {
+    /// Absolute head index (layer * n_kv + kv) — keys the aux tables.
+    pub fn index(&self) -> usize {
+        self.head
+    }
+
+    /// Materialize the mutable append view of this head region.
+    ///
+    /// # Safety
+    /// The caller must guarantee no other access to this head region is
+    /// live for the returned view's lifetime — in the work-queue path,
+    /// by being the only task for this (layer, kv) head and running
+    /// after every task that reads it has completed (graph edges).
+    pub unsafe fn head_mut(&self) -> HeadMut<'_> {
+        HeadMut {
+            head: self.head,
+            dh: self.dh,
+            quest_block: self.quest_block,
+            loki_channels: self.loki_channels,
+            mp_k: self.mp_k,
+            mp_l: self.mp_l,
+            hc: &mut *self.hc,
+        }
+    }
+
+    /// Materialize a shared read view of this head region.
+    ///
+    /// # Safety
+    /// The caller must guarantee no mutation of this head region is live
+    /// for the returned borrow's lifetime — in the work-queue path, by
+    /// depending on the head's append task (reads may then share freely).
+    pub unsafe fn head_ref(&self) -> &HeadCache {
+        &*self.hc
+    }
+}
+
 /// All cached state for one sequence: K/V per (layer, kv-head), the packed
 /// key-code cache, and per-method side structures.
 pub struct SeqKvCache {
@@ -264,6 +327,37 @@ impl SeqKvCache {
             .enumerate()
             .map(|(kv, hc)| HeadMut {
                 head: base + kv,
+                dh,
+                quest_block: qb,
+                loki_channels: lc,
+                mp_k: mk,
+                mp_l: ml,
+                hc,
+            })
+            .collect()
+    }
+
+    /// Stable raw handles to every (layer, kv) head region at once —
+    /// the work-queue analogue of [`Self::layer_heads_mut`]. Where the
+    /// barrier path re-borrows one layer's heads per scatter stage, the
+    /// dependency-graph path builds tasks for *all* layers up front, so
+    /// it takes addresses instead of borrows and re-materializes a
+    /// short-lived view inside each task ([`HeadHandle::head_mut`] /
+    /// [`HeadHandle::head_ref`]), with graph edges supplying the
+    /// exclusivity the borrow checker normally would.
+    ///
+    /// Handles are ordered layer-major (`layer * n_kv + kv`), matching
+    /// [`Self::head_index`]. They stay valid until this cache is moved
+    /// or dropped — the `heads` vector itself is never resized, only the
+    /// buffers inside each [`HeadCache`] grow.
+    pub fn head_handles(&mut self) -> Vec<HeadHandle> {
+        let (dh, qb, lc, mk, ml) =
+            (self.dh, self.quest_block, self.loki_channels, self.mp_k, self.mp_l);
+        self.heads
+            .iter_mut()
+            .enumerate()
+            .map(|(h, hc)| HeadHandle {
+                head: h,
                 dh,
                 quest_block: qb,
                 loki_channels: lc,

@@ -16,7 +16,7 @@ use hata::bench::eval::{fidelity, task_accuracy};
 use hata::bench::report::{fmt, Table};
 use hata::bench::tasks::TaskKind;
 use hata::config::manifest::Manifest;
-use hata::config::{preset, Method, ServeConfig};
+use hata::config::{preset, ExecMode, Method, ServeConfig};
 use hata::coordinator::request::Request;
 use hata::coordinator::router::{Policy, Router};
 use hata::kvcache::MethodAux;
@@ -28,6 +28,7 @@ const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
+    "exec",
 ];
 
 fn main() {
@@ -73,6 +74,9 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
   --threads N       engine threadpool width (default 1 = serial)
   --prefill-tile N  query rows per tiled-prefill work item (default 32;
                     any value is bit-identical, it only shapes fan-out)
+  --exec MODE       step executor: queue (dependency-driven work queue,
+                    default) | barrier (scatter-per-stage reference);
+                    outputs are bit-identical either way
   --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
@@ -109,11 +113,14 @@ fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let method = Method::parse(&args.str("method", "hata")).context("bad --method")?;
     let base = ServeConfig::default();
+    let exec_mode =
+        ExecMode::parse(&args.str("exec", base.exec_mode.name())).context("bad --exec")?;
     Ok(ServeConfig {
         method,
         budget: args.usize("budget", 64)?,
         threads: args.usize("threads", 1)?,
         prefill_tile: args.usize("prefill-tile", base.prefill_tile)?,
+        exec_mode,
         temperature: args.f64("temperature", 0.0)? as f32,
         seed: args.u64("seed", 0)?,
         ..base

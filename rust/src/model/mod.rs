@@ -9,11 +9,13 @@
 //!
 //! ## Batched parallel decode
 //!
-//! [`Model::decode_batch`] advances a whole scheduler batch one token in
-//! lock-step over layers. Within each layer the per-(sequence, kv-head)
-//! attention unit — hash encode + append, Hamming scoring, top-k select,
-//! sparse gather/attend — is an `AttnWork` item fanned across
-//! [`crate::util::threadpool::ThreadPool::scatter`]. Ownership:
+//! [`Model::decode_batch`] advances a whole scheduler batch one token.
+//! The per-(sequence, kv-head) attention unit — hash encode + append,
+//! Hamming scoring, top-k select, sparse gather/attend — is one work
+//! item; items reach the pool through the executor `serve.exec_mode`
+//! picks (dependency task graph by default, or lock-step
+//! [`crate::util::threadpool::ThreadPool::scatter`] stages per layer —
+//! see the executors section below). Ownership, identical in both modes:
 //!
 //! * weights/config ([`Model`]) — shared reads from every worker;
 //! * activations ([`DecodeScratch`]) — one per *sequence*, split-borrowed
@@ -25,6 +27,22 @@
 //! The serial [`Model::decode_step`] runs the identical per-head routine
 //! ([`Model::decode_batch`] with one item degenerates to it), so
 //! `threads = N` is byte-identical to `threads = 1`.
+//!
+//! ## Executors: dependency-driven queue vs barrier-per-stage
+//!
+//! `serve.exec_mode` picks how a batch's work items reach the pool.
+//! Under the default [`crate::config::ExecMode::Queue`], the whole
+//! decode step (and each prefill block pass) becomes one
+//! [`crate::util::workqueue::TaskGraph`]: per sequence, a chain of
+//! QKV → per-head attention → MLP tasks across *all* layers, so a
+//! sequence's attention starts the moment its own QKV lands and no
+//! task ever waits on another sequence's straggler.
+//! [`crate::config::ExecMode::Barrier`] keeps the original reference
+//! path — consecutive [`crate::util::threadpool::ThreadPool::scatter`]
+//! calls with a full-pool barrier between stages. Both executors run
+//! the same per-item routines on the same disjoint state, so they are
+//! bit-identical for every (threads, tile, method) combination
+//! (rust/tests/parallel.rs; benches/fig7_queue_vs_barrier.rs).
 //!
 //! ## Block-tiled parallel prefill
 //!
@@ -39,8 +57,9 @@
 //! work items — causally masked tiles over the already-written prefix
 //! plus the intra-block lower triangle
 //! ([`crate::attention::compute::prefill_tile_attention`]) — fanned
-//! across the same [`crate::util::threadpool::ThreadPool::scatter`] /
-//! [`WorkerScratch`] machinery as decode. Per-token arithmetic is never
+//! across the same executor / [`WorkerScratch`] machinery as decode
+//! (task graph or scatter stages, per `serve.exec_mode`; see the
+//! executors section below). Per-token arithmetic is never
 //! reordered (each query row reduces its key prefix with the decode
 //! kernel, in key order), so tiled prefill is bit-identical to the
 //! token-serial reference [`Model::prefill_serial`] for every tile,
@@ -65,10 +84,11 @@ use crate::attention::compute::{
 };
 use crate::attention::methods::h2o_accumulate;
 use crate::attention::{AttnInputs, MethodState, Scratch, Selector};
-use crate::config::{Method, ModelConfig, ServeConfig};
-use crate::kvcache::{HeadMut, MethodAux, SeqKvCache};
+use crate::config::{ExecMode, Method, ModelConfig, ServeConfig};
+use crate::kvcache::{HeadHandle, HeadMut, MethodAux, SeqKvCache};
 use crate::tensor::ops::{rms_norm, rope_inplace, silu, vecmat};
 use crate::util::threadpool::ThreadPool;
+use crate::util::workqueue::{QueueStats, TaskGraph, TaskId};
 use weights::Weights;
 
 /// Reusable per-sequence decode buffers: activations that must persist
@@ -291,6 +311,127 @@ struct MlpTile<'a> {
     len: usize,
 }
 
+/// Build-time-carved raw read view into a scratch buffer, used by the
+/// work-queue task payloads where reader and writer tasks of the same
+/// buffer coexist in one task vector (graph edges order the accesses,
+/// which plain borrows cannot express). Only materialized inside a
+/// running task, after its dependencies completed.
+#[derive(Clone, Copy)]
+struct RawSlice {
+    ptr: *const f32,
+    len: usize,
+}
+
+impl RawSlice {
+    /// Materialize the slice.
+    ///
+    /// # Safety
+    /// Every task that writes this region must have completed (graph
+    /// edges), and no task writing it may run until the borrow ends.
+    unsafe fn get<'x>(&self) -> &'x [f32] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// Build-time-carved raw write view; see [`RawSlice`].
+#[derive(Clone, Copy)]
+struct RawSliceMut {
+    ptr: *mut f32,
+    len: usize,
+}
+
+impl RawSliceMut {
+    /// Materialize the slice.
+    ///
+    /// # Safety
+    /// This task must be the only live accessor of the region (graph
+    /// edges: writers are exclusive).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get<'x>(&self) -> &'x mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+/// One node's payload in the decode-step task graph (`--exec queue`).
+/// Raw pointers stand in for the borrows that graph edges make
+/// exclusive; every dereference site states which edge justifies it.
+/// One chain per sequence: Qkv(0) → Attn(0, kv)* → Mlp(0) → Qkv(1) → …
+/// → LmHead, so a fast sequence never waits on a slow one.
+enum DecodeTask<'a> {
+    /// rms-norm + Q/K/V projections + RoPE for one (sequence, layer).
+    Qkv { sc: *mut DecodeScratch, layer: usize, pos: usize },
+    /// One (sequence, layer, kv-head) attention unit (append + select +
+    /// attend), reading the QKV task's rows and writing its disjoint
+    /// `attn` chunk.
+    Attn {
+        head: HeadHandle,
+        st: &'a mut MethodState,
+        q: RawSlice,
+        krow: RawSlice,
+        vrow: RawSlice,
+        out: RawSliceMut,
+        pos: usize,
+        layer: usize,
+        hash_w: &'a [f32],
+    },
+    /// Output projection + residual + MLP for one (sequence, layer).
+    Mlp { sc: *mut DecodeScratch, layer: usize },
+    /// Final norm + LM head for one sequence.
+    LmHead { sc: *mut DecodeScratch },
+}
+
+// SAFETY: the raw pointers reference per-sequence state whose accesses
+// are ordered and made exclusive by the task graph's dependency edges
+// (see the build site in `decode_batch_queue`).
+unsafe impl Send for DecodeTask<'_> {}
+
+/// One node's payload in the prefill-block task graph (`--exec queue`):
+/// the four barrier stages of `prefill_blocks` as dependency-ordered
+/// tasks, chained across layers per sequence. Tile boundaries match the
+/// barrier path exactly, so every task computes the same values on the
+/// same rows.
+enum PrefillTask<'a> {
+    /// Stage 1: norm + Q/K/V + RoPE for one (sequence, layer, tile).
+    Qkv {
+        x: RawSlice,
+        q: RawSliceMut,
+        k: RawSliceMut,
+        v: RawSliceMut,
+        pos0: usize,
+        layer: usize,
+    },
+    /// Stage 2: block append for one (sequence, layer, kv-head); depends
+    /// on all of the block's QKV tiles (it reads every row).
+    Append {
+        head: HeadHandle,
+        k: RawSlice,
+        v: RawSlice,
+        kv: usize,
+        hash_w: &'a [f32],
+    },
+    /// Stage 3: one causal query tile of one (sequence, layer, kv-head);
+    /// depends on that head's append (reads the head's K/V through the
+    /// handle at run time — the append may have reallocated the buffers).
+    AttnTile {
+        head: HeadHandle,
+        q: RawSlice,
+        out: RawSliceMut,
+        qoff: usize,
+        t0: usize,
+        start: usize,
+    },
+    /// Stage 4: wo + residual + MLP for one (sequence, layer, tile);
+    /// depends on that tile's attention tasks across all kv-heads.
+    Mlp { x: RawSliceMut, attn: RawSlice, t0: usize, len: usize, layer: usize },
+    /// Per-sequence epilogue after the last layer: bump the cache length,
+    /// stage the last token's activations, run the LM head.
+    Epilogue { cache: *mut SeqKvCache, sc: *mut DecodeScratch, len: usize },
+}
+
+// SAFETY: as for `DecodeTask` — all raw state is per-sequence and its
+// accesses are ordered by the graph edges built in `prefill_blocks_queue`.
+unsafe impl Send for PrefillTask<'_> {}
+
 /// Execution context for the tiled prefill stages: the engine pool plus
 /// per-worker arenas (batched path), or a single inline arena (the
 /// serial [`Model::prefill`]). Inline runs items in index order; pooled
@@ -505,15 +646,37 @@ impl Model {
         cache.advance_len();
     }
 
-    /// Advance a whole batch one token: lock-step over layers, with the
-    /// per-(sequence, kv-head) attention units fanned across `pool` and
-    /// one [`WorkerScratch`] arena per worker. Leaves each sequence's
-    /// logits in its own `scratch.logits`.
+    /// Advance a whole batch one token, leaving each sequence's logits
+    /// in its own `scratch.logits`. `serve.exec_mode` picks the
+    /// executor: the dependency-driven work queue (default — one task
+    /// chain per sequence, no inter-stage barriers) or the
+    /// barrier-per-stage scatter reference path.
     ///
-    /// Byte-identical to running [`Model::decode_step`] per item: work
-    /// items only touch disjoint state, so neither thread count nor
-    /// placement can change any result.
+    /// Byte-identical to running [`Model::decode_step`] per item under
+    /// either mode: work items only touch disjoint state, so neither
+    /// thread count, executor, nor placement can change any result.
+    /// Returns the executor's counters (zero for the barrier path).
     pub fn decode_batch(
+        &self,
+        items: &mut [DecodeItem],
+        serve: &ServeConfig,
+        selector: Option<&dyn Selector>,
+        pool: &ThreadPool,
+        workers: &mut [WorkerScratch],
+    ) -> QueueStats {
+        match serve.exec_mode {
+            ExecMode::Queue => self.decode_batch_queue(items, serve, selector, pool, workers),
+            ExecMode::Barrier => {
+                self.decode_batch_barrier(items, serve, selector, pool, workers);
+                QueueStats::default()
+            }
+        }
+    }
+
+    /// Barrier-per-stage reference executor for [`Model::decode_batch`]:
+    /// lock-step over layers, each layer's three stages as consecutive
+    /// [`ThreadPool::scatter`] calls.
+    fn decode_batch_barrier(
         &self,
         items: &mut [DecodeItem],
         serve: &ServeConfig,
@@ -572,23 +735,136 @@ impl Model {
         }
     }
 
+    /// Work-queue executor for [`Model::decode_batch`]: one dependency
+    /// chain per sequence across *all* layers — Qkv → per-head Attn →
+    /// Mlp per layer, then the LM head — run as a single
+    /// [`TaskGraph`]. No stage or layer barriers: a sequence's
+    /// attention starts the moment its own QKV lands, and its layer 2
+    /// can run while another sequence is still in layer 0.
+    fn decode_batch_queue(
+        &self,
+        items: &mut [DecodeItem],
+        serve: &ServeConfig,
+        selector: Option<&dyn Selector>,
+        pool: &ThreadPool,
+        workers: &mut [WorkerScratch],
+    ) -> QueueStats {
+        let cfg = &self.cfg;
+        let group = cfg.group();
+        let dh = cfg.head_dim;
+        let ghd = group * dh;
+        let per_seq = cfg.n_layers * (2 + cfg.n_kv_heads) + 1;
+        let mut graph = TaskGraph::with_capacity(items.len() * per_seq);
+        let mut tasks: Vec<DecodeTask> = Vec::with_capacity(items.len() * per_seq);
+        let mut attn_ids: Vec<TaskId> = Vec::with_capacity(cfg.n_kv_heads);
+        for it in items.iter_mut() {
+            it.scratch.x.copy_from_slice(self.weights.embed.row(it.token as usize));
+            let pos = it.pos;
+            let scp: *mut DecodeScratch = &mut *it.scratch;
+            // SAFETY: carve base pointers into the fixed-size activation
+            // buffers once; decode never resizes them, and every task
+            // access below is ordered by the graph edges.
+            let (qp, kp, vp, ap) = unsafe {
+                let s = &mut *scp;
+                (s.q.as_mut_ptr(), s.k.as_mut_ptr(), s.v.as_mut_ptr(), s.attn.as_mut_ptr())
+            };
+            let handles = it.cache.head_handles();
+            let mut states = it.state.per_head.iter_mut();
+            let mut prev: Option<TaskId> = None;
+            for li in 0..cfg.n_layers {
+                let qkv = match prev {
+                    Some(p) => graph.add(&[p]),
+                    None => graph.add(&[]),
+                };
+                tasks.push(DecodeTask::Qkv { sc: scp, layer: li, pos });
+                attn_ids.clear();
+                for kv in 0..cfg.n_kv_heads {
+                    attn_ids.push(graph.add(&[qkv]));
+                    tasks.push(DecodeTask::Attn {
+                        head: handles[li * cfg.n_kv_heads + kv],
+                        st: states.next().expect("per-head state"),
+                        q: RawSlice { ptr: unsafe { qp.add(kv * ghd) }, len: ghd },
+                        krow: RawSlice { ptr: unsafe { kp.add(kv * dh) }, len: dh },
+                        vrow: RawSlice { ptr: unsafe { vp.add(kv * dh) }, len: dh },
+                        out: RawSliceMut { ptr: unsafe { ap.add(kv * ghd) }, len: ghd },
+                        pos,
+                        layer: li,
+                        hash_w: self.weights.hash_head(li, kv),
+                    });
+                }
+                let mlp = graph.add(&attn_ids);
+                tasks.push(DecodeTask::Mlp { sc: scp, layer: li });
+                prev = Some(mlp);
+            }
+            graph.add(&[prev.expect("at least one layer")]);
+            tasks.push(DecodeTask::LmHead { sc: scp });
+        }
+        let stats = graph.run(pool, &mut tasks, workers, |_, t, ws| {
+            self.run_decode_task(t, serve, selector, ws)
+        });
+        drop(tasks);
+        for it in items.iter_mut() {
+            it.cache.advance_len();
+        }
+        stats
+    }
+
+    /// Execute one decode-graph task. Each arm's `unsafe` materializes
+    /// the views its graph edges make exclusive: Qkv/Mlp/LmHead are the
+    /// only live tasks of their sequence when they run (chain order), and
+    /// Attn tasks read rows their QKV dependency finished writing while
+    /// owning their disjoint `attn` chunk and (layer, kv) head region.
+    fn run_decode_task(
+        &self,
+        t: &mut DecodeTask,
+        serve: &ServeConfig,
+        selector: Option<&dyn Selector>,
+        ws: &mut WorkerScratch,
+    ) {
+        match t {
+            DecodeTask::Qkv { sc, layer, pos } => {
+                self.layer_qkv(*layer, *pos, unsafe { &mut **sc })
+            }
+            DecodeTask::Attn { head, st, q, krow, vrow, out, pos, layer, hash_w } => {
+                let mut w = AttnWork {
+                    head: unsafe { head.head_mut() },
+                    st: &mut **st,
+                    q: unsafe { q.get() },
+                    krow: unsafe { krow.get() },
+                    vrow: unsafe { vrow.get() },
+                    out: unsafe { out.get() },
+                    pos: *pos,
+                    layer: *layer,
+                    hash_w: *hash_w,
+                };
+                let (kg, vg) = (&mut ws.kgather, &mut ws.vgather);
+                self.run_attn_work(&mut w, serve, selector, &mut ws.sel, kg, vg);
+            }
+            DecodeTask::Mlp { sc, layer } => self.layer_mlp(*layer, unsafe { &mut **sc }),
+            DecodeTask::LmHead { sc } => self.lm_head(unsafe { &mut **sc }),
+        }
+    }
+
     /// Batched prefill chunks: every chunk advances through the tiled
     /// block-forward path in lock-step over layers, with (sequence,
     /// tile) projection/MLP items and (sequence, kv-head, query-tile)
     /// attention items fanned across `pool` — the same work-item
     /// machinery as [`Model::decode_batch`], bit-identical to the
-    /// token-serial reference for any tile/thread count. Whole-prompt
-    /// chunks additionally capture SnapKV observation state after the
-    /// pass. H2O chunks keep the token-serial path (sequence-granular
-    /// fan-out): its cumulative attention mass accumulates in query
-    /// order during dense prefill, which tiling would reorder.
+    /// token-serial reference for any tile/thread count and either
+    /// `serve.exec_mode` (queue by default, barrier-per-stage scatter as
+    /// the reference path). Whole-prompt chunks additionally capture
+    /// SnapKV observation state after the pass. H2O chunks keep the
+    /// token-serial path (sequence-granular fan-out) under both modes:
+    /// its cumulative attention mass accumulates in query order during
+    /// dense prefill, which tiling would reorder. Returns the work-queue
+    /// executor's counters (zero for barrier/H2O).
     pub fn prefill_batch(
         &self,
         items: &mut [PrefillItem],
         serve: &ServeConfig,
         pool: &ThreadPool,
         workers: &mut [WorkerScratch],
-    ) {
+    ) -> QueueStats {
         if serve.method == Method::H2o {
             let dense = ServeConfig { budget: 0, ..serve.clone() };
             pool.scatter(items, workers, |_, it, _| {
@@ -614,9 +890,9 @@ impl Model {
                     }
                 }
             });
-            return;
+            return QueueStats::default();
         }
-        {
+        let stats = {
             let mut blocks: Vec<PrefillBlock> = items
                 .iter_mut()
                 .map(|it| PrefillBlock {
@@ -627,8 +903,14 @@ impl Model {
                     scratch: &mut *it.scratch,
                 })
                 .collect();
-            self.prefill_blocks(&mut blocks, &mut PrefillExec::Pool(pool, workers));
-        }
+            match serve.exec_mode {
+                ExecMode::Queue => self.prefill_blocks_queue(&mut blocks, pool, workers),
+                ExecMode::Barrier => {
+                    self.prefill_blocks(&mut blocks, &mut PrefillExec::Pool(pool, workers));
+                    QueueStats::default()
+                }
+            }
+        };
         if serve.method == Method::SnapKv {
             for it in items.iter_mut().filter(|it| it.whole) {
                 let len = it.tokens.len();
@@ -641,6 +923,7 @@ impl Model {
                 self.snapkv_finalize(&qwin, &mut *it.cache, &mut *it.state, &mut it.scratch.sel);
             }
         }
+        stats
     }
 
     /// Prefill `tokens` into `cache` with full attention (paper Alg. 1),
@@ -935,6 +1218,216 @@ impl Model {
             }
             self.lm_head(&mut *it.scratch);
         });
+    }
+
+    /// Work-queue executor for the tiled prefill block pass: the same
+    /// four stages as [`Model::prefill_blocks`], but as one
+    /// [`TaskGraph`] per batch, chained across layers per sequence —
+    /// QKV tiles → per-head block appends → per-(head, tile) causal
+    /// attention → MLP tiles → next layer, then a per-sequence
+    /// epilogue. Dependencies (append waits on every QKV tile of its
+    /// block; an MLP tile waits on its tile's attention across all
+    /// heads) also carry the write-after-read hazards: a tile's next-
+    /// layer QKV overwrite is transitively ordered after every reader
+    /// of the current layer's rows. Same tile boundaries, kernels and
+    /// reduction orders as the barrier path — bit-identical output.
+    fn prefill_blocks_queue(
+        &self,
+        items: &mut [PrefillBlock],
+        pool: &ThreadPool,
+        workers: &mut [WorkerScratch],
+    ) -> QueueStats {
+        let cfg = &self.cfg;
+        let dm = cfg.d_model;
+        let dh = cfg.head_dim;
+        let group = cfg.group();
+        let ghd = group * dh;
+        let qrow = cfg.n_heads * dh;
+        let krow = cfg.n_kv_heads * dh;
+        let mut graph = TaskGraph::new();
+        let mut tasks: Vec<PrefillTask> = Vec::new();
+        for it in items.iter_mut() {
+            let len = it.tokens.len();
+            it.scratch.block.ensure(cfg, len);
+            for (t, &tok) in it.tokens.iter().enumerate() {
+                it.scratch.block.x[t * dm..(t + 1) * dm]
+                    .copy_from_slice(self.weights.embed.row(tok as usize));
+            }
+            if len == 0 {
+                continue;
+            }
+            let tile = it.tile.clamp(1, len);
+            let ntiles = len.div_ceil(tile);
+            let start = it.start;
+            let cp: *mut SeqKvCache = &mut *it.cache;
+            let scp: *mut DecodeScratch = &mut *it.scratch;
+            // SAFETY: base pointers into the block arenas, which `ensure`
+            // sized above and nothing resizes during the run; all task
+            // accesses below are ordered by the graph edges.
+            let (xp, qp, kp, vp, ap) = unsafe {
+                let b = &mut (*scp).block;
+                (
+                    b.x.as_mut_ptr(),
+                    b.q.as_mut_ptr(),
+                    b.k.as_mut_ptr(),
+                    b.v.as_mut_ptr(),
+                    b.attn.as_mut_ptr(),
+                )
+            };
+            // SAFETY: derive the head handles through `cp` (not a fresh
+            // `&mut it.cache` reborrow) so every raw view of this cache
+            // shares one derivation chain; at run time the handles are
+            // used strictly before the epilogue task re-materializes the
+            // whole cache from `cp` (graph edges put the epilogue last).
+            let handles = unsafe { (*cp).head_handles() };
+            let mut prev_mlp: Vec<TaskId> = Vec::new();
+            let mut qkv_ids: Vec<TaskId> = Vec::with_capacity(ntiles);
+            let mut append_ids: Vec<TaskId> = Vec::with_capacity(cfg.n_kv_heads);
+            for li in 0..cfg.n_layers {
+                qkv_ids.clear();
+                for ti in 0..ntiles {
+                    let r0 = ti * tile;
+                    let rows = tile.min(len - r0);
+                    let id = if li == 0 {
+                        graph.add(&[])
+                    } else {
+                        graph.add(&[prev_mlp[ti]])
+                    };
+                    qkv_ids.push(id);
+                    tasks.push(PrefillTask::Qkv {
+                        x: RawSlice { ptr: unsafe { xp.add(r0 * dm) }, len: rows * dm },
+                        q: RawSliceMut { ptr: unsafe { qp.add(r0 * qrow) }, len: rows * qrow },
+                        k: RawSliceMut { ptr: unsafe { kp.add(r0 * krow) }, len: rows * krow },
+                        v: RawSliceMut { ptr: unsafe { vp.add(r0 * krow) }, len: rows * krow },
+                        pos0: start + r0,
+                        layer: li,
+                    });
+                }
+                append_ids.clear();
+                for kv in 0..cfg.n_kv_heads {
+                    append_ids.push(graph.add(&qkv_ids));
+                    tasks.push(PrefillTask::Append {
+                        head: handles[li * cfg.n_kv_heads + kv],
+                        k: RawSlice { ptr: kp, len: len * krow },
+                        v: RawSlice { ptr: vp, len: len * krow },
+                        kv,
+                        hash_w: self.weights.hash_head(li, kv),
+                    });
+                }
+                let mut attn_by_tile: Vec<Vec<TaskId>> =
+                    vec![Vec::with_capacity(cfg.n_kv_heads); ntiles];
+                for kv in 0..cfg.n_kv_heads {
+                    for (ti, by_tile) in attn_by_tile.iter_mut().enumerate() {
+                        let r0 = ti * tile;
+                        let rows = tile.min(len - r0);
+                        by_tile.push(graph.add(&[append_ids[kv]]));
+                        tasks.push(PrefillTask::AttnTile {
+                            head: handles[li * cfg.n_kv_heads + kv],
+                            q: RawSlice { ptr: qp, len: len * qrow },
+                            out: RawSliceMut {
+                                ptr: unsafe { ap.add((kv * len + r0) * ghd) },
+                                len: rows * ghd,
+                            },
+                            qoff: kv * ghd,
+                            t0: r0,
+                            start,
+                        });
+                    }
+                }
+                prev_mlp.clear();
+                for (ti, by_tile) in attn_by_tile.iter().enumerate() {
+                    let r0 = ti * tile;
+                    let rows = tile.min(len - r0);
+                    prev_mlp.push(graph.add(by_tile));
+                    tasks.push(PrefillTask::Mlp {
+                        x: RawSliceMut { ptr: unsafe { xp.add(r0 * dm) }, len: rows * dm },
+                        attn: RawSlice { ptr: ap, len: len * cfg.n_heads * dh },
+                        t0: r0,
+                        len,
+                        layer: li,
+                    });
+                }
+            }
+            graph.add(&prev_mlp);
+            tasks.push(PrefillTask::Epilogue { cache: cp, sc: scp, len });
+        }
+        let stats = graph.run(pool, &mut tasks, workers, |_, t, ws| self.run_prefill_task(t, ws));
+        drop(tasks);
+        stats
+    }
+
+    /// Execute one prefill-graph task; each arm materializes exactly the
+    /// views its dependency edges make safe (see
+    /// [`Model::prefill_blocks_queue`]) and calls the same per-tile
+    /// routine as the barrier path.
+    fn run_prefill_task(&self, t: &mut PrefillTask, ws: &mut WorkerScratch) {
+        let cfg = &self.cfg;
+        match t {
+            PrefillTask::Qkv { x, q, k, v, pos0, layer } => {
+                let mut tile = QkvTile {
+                    x: unsafe { x.get() },
+                    q: unsafe { q.get() },
+                    k: unsafe { k.get() },
+                    v: unsafe { v.get() },
+                    pos0: *pos0,
+                };
+                self.qkv_tile(*layer, &mut tile, ws);
+            }
+            PrefillTask::Append { head, k, v, kv, hash_w } => {
+                let mut head = unsafe { head.head_mut() };
+                head.append_block(
+                    unsafe { k.get() },
+                    unsafe { v.get() },
+                    cfg.n_kv_heads * cfg.head_dim,
+                    *kv * cfg.head_dim,
+                    *hash_w,
+                    cfg.rbit,
+                    &self.aux,
+                );
+            }
+            PrefillTask::AttnTile { head, q, out, qoff, t0, start } => {
+                // SAFETY: this head's append task completed (graph edge),
+                // so its K/V buffers are stable for the whole read.
+                let hc = unsafe { head.head_ref() };
+                let tile = PrefillTile {
+                    q: unsafe { q.get() },
+                    k: &hc.k,
+                    v: &hc.v,
+                    group: cfg.group(),
+                    dh: cfg.head_dim,
+                    qstride: cfg.n_heads * cfg.head_dim,
+                    qoff: *qoff,
+                    t0: *t0,
+                    start: *start,
+                };
+                prefill_tile_attention(&tile, &mut ws.sel.probs, unsafe { out.get() });
+            }
+            PrefillTask::Mlp { x, attn, t0, len, layer } => {
+                let mut tile = MlpTile {
+                    x: unsafe { x.get() },
+                    attn: unsafe { attn.get() },
+                    t0: *t0,
+                    len: *len,
+                };
+                self.mlp_tile(*layer, &mut tile, ws);
+            }
+            PrefillTask::Epilogue { cache, sc, len } => {
+                // SAFETY: every task of this sequence completed (the
+                // epilogue depends on the last layer's MLP tiles, which
+                // transitively cover all appends and reads).
+                let cache = unsafe { &mut **cache };
+                cache.advance_len_by(*len);
+                let scratch = unsafe { &mut **sc };
+                let dm = cfg.d_model;
+                let qrow = cfg.n_heads * cfg.head_dim;
+                {
+                    let DecodeScratch { x, q, block, .. } = scratch;
+                    q.copy_from_slice(&block.q[(*len - 1) * qrow..*len * qrow]);
+                    x.copy_from_slice(&block.x[(*len - 1) * dm..*len * dm]);
+                }
+                self.lm_head(scratch);
+            }
+        }
     }
 
     /// Stage-1 tile worker: rms-norm + Q/K/V projections + RoPE for the

@@ -13,3 +13,4 @@ pub mod rng;
 pub mod stats;
 pub mod threadpool;
 pub mod timer;
+pub mod workqueue;

@@ -5,12 +5,16 @@
 //! (no fake parallel speedups) while the code path still exercises the
 //! pool on multi-core machines.
 //!
-//! The serving hot path uses [`ThreadPool::scatter`]: the engine fans
-//! per-(sequence, kv-head) decode work — and, since the block-tiled
-//! prefill refactor, per-(sequence, tile) projection/MLP and
-//! per-(sequence, kv-head, query-tile) prefill attention work — across
-//! the pool's *persistent* workers (no per-step thread spawns), handing
-//! each worker exclusive use of one scratch arena.
+//! The serving hot path fans per-(sequence, kv-head) decode work — and,
+//! since the block-tiled prefill refactor, per-(sequence, tile)
+//! projection/MLP and per-(sequence, kv-head, query-tile) prefill
+//! attention work — across the pool's *persistent* workers (no per-step
+//! thread spawns), handing each worker exclusive use of one scratch
+//! arena. Two executors drive that fan-out: [`ThreadPool::scatter`]
+//! (one stage at a time, full-pool barrier per stage — the `--exec
+//! barrier` reference path) and the dependency-driven
+//! [`crate::util::workqueue::TaskGraph`] (`--exec queue`, the default),
+//! which runs on the same pool via [`ThreadPool::execute`].
 //! [`ThreadPool::for_each_index`] remains for borrowed one-shot fan-outs
 //! that do not need worker-local state.
 

@@ -8,12 +8,15 @@
 
 use std::sync::Arc;
 
-use hata::config::{preset, Method, ServeConfig};
+use hata::config::{preset, ExecMode, Method, ServeConfig};
 use hata::coordinator::engine::Engine;
 use hata::coordinator::request::Request;
 use hata::kvcache::{MethodAux, SeqKvCache};
-use hata::model::{weights::Weights, DecodeScratch, Model, SeqState};
+use hata::model::{
+    weights::Weights, DecodeItem, DecodeScratch, Model, PrefillItem, SeqState, WorkerScratch,
+};
 use hata::util::rng::Rng;
+use hata::util::threadpool::ThreadPool;
 
 /// Run a fixed workload (6 requests, mixed prompt lengths, chunked
 /// prefill) and return the (id, tokens) streams sorted by id.
@@ -193,5 +196,232 @@ fn tiled_prefill_engine_identical_across_threads_and_tiles() {
         assert_eq!(base, run_tiled(method, 4, 16), "{method:?} threads");
         assert_eq!(base, run_tiled(method, 4, 64), "{method:?} tile 64");
         assert_eq!(base, run_tiled(method, 2, 7), "{method:?} odd tile");
+    }
+}
+
+/// Engine-level executor determinism: identical token streams from the
+/// full serving loop (chunked prefill + batched decode) under `--exec
+/// queue` and `--exec barrier`.
+fn run_exec(
+    method: Method,
+    threads: usize,
+    tile: usize,
+    exec_mode: ExecMode,
+) -> Vec<(u64, Vec<u32>)> {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 3,
+        prefill_chunk: 48,
+        prefill_tile: tile,
+        threads,
+        exec_mode,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    for id in 0..4u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..(90 + id as usize * 37)).map(|i| 32 + (i as u32 % 64)).collect(),
+            max_new_tokens: 4,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let mut out: Vec<(u64, Vec<u32>)> =
+        engine.run_to_completion().into_iter().map(|r| (r.id, r.tokens)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    assert_eq!(out.len(), 4, "all requests must complete ({method:?}, {exec_mode:?})");
+    out
+}
+
+/// The acceptance matrix: `--exec queue` ≡ `--exec barrier` for every
+/// (threads ∈ {1, 2, 8}) × (tile ∈ {1, 16}) × (Dense/Hata/Quest) cell.
+#[test]
+fn queue_exec_engine_identical_to_barrier() {
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        for threads in [1usize, 2, 8] {
+            for tile in [1usize, 16] {
+                let barrier = run_exec(method, threads, tile, ExecMode::Barrier);
+                let queue = run_exec(method, threads, tile, ExecMode::Queue);
+                assert_eq!(barrier, queue, "{method:?} threads={threads} tile={tile}");
+            }
+        }
+    }
+}
+
+/// H2O keeps its serial prefill under both executors (query-order
+/// cumulative state), so the modes must still agree end to end.
+#[test]
+fn queue_exec_matches_barrier_for_h2o() {
+    assert_eq!(
+        run_exec(Method::H2o, 4, 16, ExecMode::Barrier),
+        run_exec(Method::H2o, 4, 16, ExecMode::Queue),
+    );
+}
+
+/// SnapKV reads the final-layer queries out of `scratch.block.q` after a
+/// whole-prompt batched prefill — exactly what the queue epilogue/QKV
+/// tasks leave behind — so its observation state and logits must be
+/// byte-identical across executors (engine streams too).
+#[test]
+fn queue_exec_matches_barrier_for_snapkv() {
+    assert_eq!(
+        run_exec(Method::SnapKv, 4, 16, ExecMode::Barrier),
+        run_exec(Method::SnapKv, 4, 16, ExecMode::Queue),
+    );
+    // model level: whole-prompt prefill_batch, then compare snapkv_keep
+    // rankings and logits bit-for-bit
+    let mk_serve = |exec_mode: ExecMode| ServeConfig {
+        method: Method::SnapKv,
+        budget: 12,
+        prefill_tile: 8,
+        exec_mode,
+        ..Default::default()
+    };
+    let model = model_for(Method::SnapKv, &mk_serve(ExecMode::Barrier));
+    let pool = ThreadPool::new(4);
+    let prompts: Vec<Vec<u32>> =
+        (0..3).map(|s| (0..(60 + s * 31)).map(|i| 32 + (i as u32 % 64)).collect()).collect();
+    let run = |serve: &ServeConfig| {
+        let mut workers: Vec<WorkerScratch> = (0..4).map(|_| WorkerScratch::default()).collect();
+        let mut caches: Vec<SeqKvCache> =
+            prompts.iter().map(|_| SeqKvCache::new(&model.cfg, serve)).collect();
+        let mut states: Vec<SeqState> = prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+        let mut scratches: Vec<DecodeScratch> =
+            prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+        {
+            let mut items: Vec<PrefillItem> = prompts
+                .iter()
+                .zip(caches.iter_mut())
+                .zip(states.iter_mut())
+                .zip(scratches.iter_mut())
+                .map(|(((p, cache), state), scratch)| PrefillItem {
+                    tokens: p,
+                    start: 0,
+                    whole: true,
+                    tile: serve.prefill_tile,
+                    cache,
+                    state,
+                    scratch,
+                })
+                .collect();
+            model.prefill_batch(&mut items, serve, &pool, &mut workers);
+        }
+        let logits: Vec<Vec<f32>> = scratches.iter().map(|sc| sc.logits.clone()).collect();
+        let keeps: Vec<Vec<Vec<u32>>> = states
+            .iter()
+            .map(|st| st.per_head.iter().map(|h| h.snapkv_keep.clone()).collect())
+            .collect();
+        (logits, keeps)
+    };
+    let (l1, k1) = run(&mk_serve(ExecMode::Barrier));
+    let (l2, k2) = run(&mk_serve(ExecMode::Queue));
+    assert_eq!(l1, l2, "snapkv logits");
+    assert_eq!(k1, k2, "snapkv observation state");
+}
+
+/// Model-level bit-identity: queue-mode `prefill_batch` + `decode_batch`
+/// must leave byte-identical KV caches, hash codes, side structures and
+/// logits to barrier mode — not just the same argmax tokens.
+#[test]
+fn queue_exec_bit_identical_caches_and_logits() {
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        let mk_serve = |exec_mode: ExecMode| ServeConfig {
+            method,
+            budget: 16,
+            prefill_tile: 8,
+            exec_mode,
+            ..Default::default()
+        };
+        let model = model_for(method, &mk_serve(ExecMode::Barrier));
+        let pool = ThreadPool::new(4);
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|s| (0..(70 + s * 23)).map(|i| 32 + (i as u32 % 64)).collect())
+            .collect();
+        let run = |serve: &ServeConfig| {
+            let mut workers: Vec<WorkerScratch> =
+                (0..4).map(|_| WorkerScratch::default()).collect();
+            let mut caches: Vec<SeqKvCache> =
+                prompts.iter().map(|_| SeqKvCache::new(&model.cfg, serve)).collect();
+            let mut states: Vec<SeqState> =
+                prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+            let mut scratches: Vec<DecodeScratch> =
+                prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+            // batched tiled prefill, all sequences in one call
+            {
+                let mut items: Vec<PrefillItem> = prompts
+                    .iter()
+                    .zip(caches.iter_mut())
+                    .zip(states.iter_mut())
+                    .zip(scratches.iter_mut())
+                    .map(|(((p, cache), state), scratch)| PrefillItem {
+                        tokens: p,
+                        start: 0,
+                        whole: true,
+                        tile: serve.prefill_tile,
+                        cache,
+                        state,
+                        scratch,
+                    })
+                    .collect();
+                model.prefill_batch(&mut items, serve, &pool, &mut workers);
+            }
+            let sel = hata::model::make_selector(serve);
+            let mut next: Vec<u32> = scratches
+                .iter()
+                .map(|sc| hata::tensor::ops::argmax(&sc.logits) as u32)
+                .collect();
+            let mut logit_trace: Vec<Vec<f32>> = Vec::new();
+            for step in 0..4 {
+                let mut items: Vec<DecodeItem> = caches
+                    .iter_mut()
+                    .zip(states.iter_mut())
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                    .map(|(i, ((cache, state), scratch))| DecodeItem {
+                        token: next[i],
+                        pos: prompts[i].len() + step,
+                        cache,
+                        state,
+                        scratch,
+                    })
+                    .collect();
+                let sel = hata::model::sel_ref(&sel);
+                model.decode_batch(&mut items, serve, sel, &pool, &mut workers);
+                drop(items);
+                for (i, n) in next.iter_mut().enumerate() {
+                    *n = hata::tensor::ops::argmax(&scratches[i].logits) as u32;
+                }
+                logit_trace.extend(scratches.iter().map(|sc| sc.logits.clone()));
+            }
+            (caches, logit_trace)
+        };
+        let (c1, l1) = run(&mk_serve(ExecMode::Barrier));
+        let (c2, l2) = run(&mk_serve(ExecMode::Queue));
+        assert_eq!(l1, l2, "{method:?} logits");
+        for (s, (a, b)) in c1.iter().zip(&c2).enumerate() {
+            assert_eq!(a.len(), b.len(), "{method:?} seq {s}");
+            for li in 0..model.cfg.n_layers {
+                for kv in 0..model.cfg.n_kv_heads {
+                    assert_eq!(a.k_slice(li, kv), b.k_slice(li, kv), "{method:?} seq {s} k");
+                    assert_eq!(a.v_slice(li, kv), b.v_slice(li, kv), "{method:?} seq {s} v");
+                    assert_eq!(
+                        a.codes_slice(li, kv),
+                        b.codes_slice(li, kv),
+                        "{method:?} seq {s} codes"
+                    );
+                    let sa = a.side(li, kv, &[], &model.aux);
+                    let sb = b.side(li, kv, &[], &model.aux);
+                    assert_eq!(sa.quest_min, sb.quest_min, "{method:?} seq {s}");
+                    assert_eq!(sa.quest_max, sb.quest_max, "{method:?} seq {s}");
+                }
+            }
+            assert_eq!(a.bytes(), b.bytes(), "{method:?} seq {s}");
+        }
     }
 }

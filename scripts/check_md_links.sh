@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Check that relative markdown links resolve to real files/directories.
+# Usage: scripts/check_md_links.sh README.md docs/*.md
+# External (http/mailto) links and pure in-page anchors are skipped;
+# anchors on relative links are stripped before the existence check.
+set -u
+
+fail=0
+for f in "$@"; do
+  [ -f "$f" ] || { echo "missing markdown file: $f"; fail=1; continue; }
+  dir=$(dirname "$f")
+  # inline links: ](target) — capture the target up to the closing paren
+  links=$(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//' || true)
+  while IFS= read -r link; do
+    [ -n "$link" ] || continue
+    # strip an optional markdown link title: [x](target "title")
+    link=$(printf '%s' "$link" | sed -E 's/[[:space:]]+"[^"]*"$//')
+    # strip optional angle brackets: [x](<target>)
+    case "$link" in
+      '<'*'>') link=${link#<}; link=${link%>} ;;
+    esac
+    case "$link" in
+      http://*|https://*|mailto:*) continue ;;  # external
+      '#'*) continue ;;                          # in-page anchor
+    esac
+    target=${link%%#*}                           # strip anchor
+    [ -n "$target" ] || continue
+    if [ ! -e "$dir/$target" ] && [ ! -e "$target" ]; then
+      echo "$f: broken relative link: $link"
+      fail=1
+    fi
+  done <<EOF
+$links
+EOF
+done
+if [ "$fail" -ne 0 ]; then
+  echo "markdown link check failed"
+  exit 1
+fi
+echo "markdown link check passed"
