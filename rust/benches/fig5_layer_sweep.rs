@@ -69,7 +69,7 @@ fn main() {
                 step_sparse(&f, &ExactTopK, budget, &mut sc, &mut out);
             });
             let loki = bench("loki", 1, iters, || {
-                step_sparse(&f, &LokiSelector, budget, &mut sc, &mut out);
+                step_sparse(&f, &LokiSelector { channels: dh / 4 }, budget, &mut sc, &mut out);
             });
             let quest = bench("quest", 1, iters, || {
                 step_sparse(&f, &QuestSelector, budget, &mut sc, &mut out);

@@ -16,8 +16,8 @@ use std::time::Instant;
 use hata::config::{preset, ExecMode, Method, ServeConfig};
 use hata::kvcache::{MethodAux, SeqKvCache};
 use hata::model::{
-    make_selector, sel_ref, weights::Weights, DecodeItem, DecodeScratch, Model, PrefillItem,
-    SeqState, WorkerScratch,
+    make_selector, sel_ref, weights::Weights, DecodeGraphCache, DecodeItem, DecodeScratch, Model,
+    PrefillItem, SeqState, WorkerScratch,
 };
 use hata::tensor::ops::argmax;
 use hata::util::rng::Rng;
@@ -71,6 +71,7 @@ fn run_decode(
         model.prefill_batch(&mut items, serve, pool, workers);
     }
     let mut next: Vec<u32> = scratches.iter().map(|sc| argmax(&sc.logits) as u32).collect();
+    let mut graph_cache = DecodeGraphCache::new();
     let mut trace: Vec<f32> = Vec::new();
     let t0 = Instant::now();
     for step in 0..steps {
@@ -87,7 +88,7 @@ fn run_decode(
                 scratch,
             })
             .collect();
-        model.decode_batch(&mut items, serve, sel_ref(&sel), pool, workers);
+        model.decode_batch(&mut items, serve, sel_ref(&sel), pool, workers, &mut graph_cache);
         drop(items);
         for (i, n) in next.iter_mut().enumerate() {
             *n = argmax(&scratches[i].logits) as u32;

@@ -1,0 +1,188 @@
+//! Steady-state decode fast path: graph-cache amortization sweep.
+//!
+//! The queue executor's task graph used to be rebuilt every token —
+//! one `children` vec per edge, ~batch × layers × (2 + kv_heads) nodes
+//! per step. `--graph-cache` (on by default) builds it once per batch
+//! shape and only rebinds payloads per step. This bench sweeps
+//! layers × batch and reports per-step decode latency with the cache
+//! off (rebuild per token, the pre-cache reference) vs on, plus the
+//! graph-builds-per-step accounting: cached mode must show builds/step
+//! → 0 after the first step, and every cell asserts the full per-step
+//! logits trace is bit-identical between the two modes.
+//!
+//! The rebuild cost scales with the graph size (layers × batch), so
+//! the speedup column grows toward real model layer counts — the
+//! "orchestration must be nearly free" argument from the paper's
+//! overhead analysis, applied to our own executor.
+//!
+//! Env: HATA_BENCH_ITERS (default 1), HATA_FIG8_CTX (default 128),
+//! HATA_FIG8_STEPS (default 32), HATA_FIG8_LAYERS (default 2,4,8,16),
+//! HATA_FIG8_BATCHES (default 1,4,8).
+
+use std::time::Instant;
+
+use hata::config::{preset, Method, ServeConfig};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{
+    make_selector, sel_ref, weights::Weights, DecodeGraphCache, DecodeItem, DecodeScratch, Model,
+    SeqState, WorkerScratch,
+};
+use hata::tensor::ops::argmax;
+use hata::util::rng::Rng;
+use hata::util::threadpool::ThreadPool;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+/// `steps` decode steps after a shared prefill; returns (wall seconds,
+/// graph builds, flattened per-step logits trace).
+fn run_decode(
+    model: &Model,
+    serve: &ServeConfig,
+    prompts: &[Vec<u32>],
+    steps: usize,
+    pool: &ThreadPool,
+    workers: &mut [WorkerScratch],
+) -> (f64, u64, Vec<f32>) {
+    let sel = make_selector(serve);
+    let mut caches: Vec<SeqKvCache> = prompts
+        .iter()
+        .map(|p| {
+            let mut c = SeqKvCache::new(&model.cfg, serve);
+            c.reserve(p.len() + steps + 1);
+            c
+        })
+        .collect();
+    let mut states: Vec<SeqState> = prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+    let mut scratches: Vec<DecodeScratch> =
+        prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        model.prefill(p, &mut caches[i], &mut states[i], serve, &mut scratches[i]);
+    }
+    let mut next: Vec<u32> = scratches.iter().map(|sc| argmax(&sc.logits) as u32).collect();
+    let mut graph_cache = DecodeGraphCache::new();
+    let mut builds = 0u64;
+    let mut trace: Vec<f32> = Vec::new();
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let mut items: Vec<DecodeItem> = caches
+            .iter_mut()
+            .zip(states.iter_mut())
+            .zip(scratches.iter_mut())
+            .enumerate()
+            .map(|(i, ((cache, state), scratch))| DecodeItem {
+                token: next[i],
+                pos: prompts[i].len() + step,
+                cache,
+                state,
+                scratch,
+            })
+            .collect();
+        let stats =
+            model.decode_batch(&mut items, serve, sel_ref(&sel), pool, workers, &mut graph_cache);
+        builds += stats.graph_builds;
+        drop(items);
+        for (i, n) in next.iter_mut().enumerate() {
+            *n = argmax(&scratches[i].logits) as u32;
+        }
+        for sc in &scratches {
+            trace.extend_from_slice(&sc.logits);
+        }
+    }
+    (t0.elapsed().as_secs_f64(), builds, trace)
+}
+
+fn main() {
+    let iters = env_usize("HATA_BENCH_ITERS", 1).max(1);
+    let ctx = env_usize("HATA_FIG8_CTX", 128);
+    let steps = env_usize("HATA_FIG8_STEPS", 32);
+    let layer_counts = env_list("HATA_FIG8_LAYERS", &[2, 4, 8, 16]);
+    let batches = env_list("HATA_FIG8_BATCHES", &[1, 4, 8]);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+    let base_cfg = preset("hata-gqa").unwrap();
+    let serve_base =
+        ServeConfig { method: Method::Hata, budget: 32, threads, ..Default::default() };
+
+    let mut table = hata::bench::report::Table::new(
+        &format!(
+            "Fig 8 steady-state: {steps} decode steps after a {ctx}-token prefill, \
+             graph cache off vs on (hata-gqa shape × layers, threads={threads}, min of {iters})"
+        ),
+        &[
+            "layers",
+            "batch",
+            "off_ms_per_step",
+            "on_ms_per_step",
+            "speedup",
+            "builds_per_step_off",
+            "builds_per_step_on",
+            "bitwise_equal",
+        ],
+    );
+    for &n_layers in &layer_counts {
+        let mut cfg = base_cfg.clone();
+        cfg.name = format!("hata-gqa-l{n_layers}");
+        cfg.n_layers = n_layers;
+        let mut rng = Rng::new(13);
+        let weights = Weights::random(&cfg, &mut rng);
+        let aux = MethodAux::build(&cfg, &serve_base, None, 1);
+        let model = Model::new(cfg, weights, aux);
+        for &batch in &batches {
+            let prompts: Vec<Vec<u32>> = (0..batch)
+                .map(|s| (0..ctx).map(|i| 32 + ((i + s * 7) as u32 % 64)).collect())
+                .collect();
+            let pool = ThreadPool::new(threads);
+            let mut workers: Vec<WorkerScratch> =
+                (0..threads).map(|_| WorkerScratch::default()).collect();
+            let mut cell = |graph_cache: bool| -> (f64, u64, Vec<f32>) {
+                let serve = ServeConfig { graph_cache, ..serve_base.clone() };
+                let mut best = f64::INFINITY;
+                let mut builds = 0;
+                let mut trace = Vec::new();
+                for _ in 0..iters {
+                    let (secs, b, t) =
+                        run_decode(&model, &serve, &prompts, steps, &pool, &mut workers);
+                    best = best.min(secs);
+                    builds = b;
+                    trace = t;
+                }
+                (best, builds, trace)
+            };
+            let (off_s, off_builds, off_trace) = cell(false);
+            let (on_s, on_builds, on_trace) = cell(true);
+            assert_eq!(
+                off_trace, on_trace,
+                "graph cache changed decode logits (layers={n_layers}, batch={batch})"
+            );
+            assert_eq!(
+                off_builds, steps as u64,
+                "cache-off must rebuild every step (layers={n_layers}, batch={batch})"
+            );
+            assert_eq!(
+                on_builds, 1,
+                "cache-on must build exactly once (layers={n_layers}, batch={batch})"
+            );
+            table.row(vec![
+                n_layers.to_string(),
+                batch.to_string(),
+                hata::bench::report::fmt(off_s / steps as f64 * 1e3),
+                hata::bench::report::fmt(on_s / steps as f64 * 1e3),
+                hata::bench::report::fmt(off_s / on_s),
+                hata::bench::report::fmt(off_builds as f64 / steps as f64),
+                hata::bench::report::fmt(on_builds as f64 / steps as f64),
+                "yes".into(),
+            ]);
+            eprintln!("[fig8] layers={n_layers} batch={batch} done");
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv("bench_results", "fig8_steady_state").unwrap();
+}

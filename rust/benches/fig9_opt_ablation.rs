@@ -25,6 +25,7 @@ fn main() {
     let f = LayerFixture::new(s, dh, 1, rbit, 7);
     let mut iscores: Vec<i32> = Vec::new();
     let mut idx: Vec<u32> = Vec::new();
+    let mut hist: Vec<u32> = Vec::new();
     let (mut kb, mut vb, mut probs) = (Vec::new(), Vec::new(), Vec::new());
     let mut out = vec![0.0f32; dh];
     let mut qc: Vec<u64> = Vec::new();
@@ -53,7 +54,7 @@ fn main() {
             } else {
                 scores_scalar(&qc, &f.codes, rbit, &mut iscores);
             }
-            topk_counting(&iscores, rbit as i32, budget, &mut idx);
+            topk_counting(&iscores, rbit as i32, budget, &mut hist, &mut idx);
             let inp = f.inputs();
             if attn {
                 sparse_attention_fused(&inp, &idx, &mut probs, &mut out);

@@ -64,17 +64,19 @@ fn main() {
     table.row(vec!["encode_fused_blocked".into(), fmt(r.mean_s * 1e3), "-".into()]);
 
     let mut idx = Vec::new();
+    let mut perm = Vec::new();
+    let mut hist = Vec::new();
     scores_word(&q, &codes, rbit, &mut iscores);
     let r = bench("topk heap (f32)", 2, iters, || {
         topk_heap(&fscores, budget, &mut idx);
     });
     table.row(vec!["topk_heap".into(), fmt(r.mean_s * 1e3), fmt(s as f64 / r.mean_s / 1e6)]);
     let r = bench("topk quickselect (f32)", 2, iters, || {
-        topk_quickselect(&fscores, budget, &mut idx);
+        topk_quickselect(&fscores, budget, &mut perm, &mut idx);
     });
     table.row(vec!["topk_quickselect".into(), fmt(r.mean_s * 1e3), fmt(s as f64 / r.mean_s / 1e6)]);
     let r = bench("topk counting (i32 hamming)", 2, iters, || {
-        topk_counting(&iscores, rbit as i32, budget, &mut idx);
+        topk_counting(&iscores, rbit as i32, budget, &mut hist, &mut idx);
     });
     table.row(vec!["topk_counting".into(), fmt(r.mean_s * 1e3), fmt(s as f64 / r.mean_s / 1e6)]);
 

@@ -64,7 +64,6 @@ pub fn encode_unfused(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64>) {
 /// Column-major-friendly fused variant: iterates W by column blocks of 64
 /// with the accumulators held in registers; the §Perf winner for dh <= 32.
 pub fn encode_fused_blocked(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64>) {
-    let dh = x.len();
     for word in 0..words64(rbit) {
         let base = word * 64;
         let mut acc = [0.0f32; 64];
@@ -79,7 +78,6 @@ pub fn encode_fused_blocked(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64
             packed |= ((a >= 0.0) as u64) << b;
         }
         out.push(packed);
-        let _ = dh;
     }
 }
 

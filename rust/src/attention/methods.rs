@@ -14,7 +14,7 @@
 
 use super::compute::exact_group_scores;
 use super::hamming::scores_group;
-use super::hashenc::{encode_fused_blocked, words64};
+use super::hashenc::encode_fused_blocked;
 use super::topk::{topk_counting, topk_quickselect};
 use super::{AttnInputs, MethodState, Scratch, Selector};
 use crate::tensor::ops::dot;
@@ -36,8 +36,7 @@ impl Selector for HataSelector {
         }
         scores_group(&sc.qcodes, inp.group, &inp.codes[..inp.s * inp.words], inp.rbit, &mut sc.iscores);
         let max_score = (inp.group * inp.rbit) as i32;
-        topk_counting(&sc.iscores, max_score, budget, &mut sc.indices);
-        let _ = words64(inp.rbit);
+        topk_counting(&sc.iscores, max_score, budget, &mut sc.hist, &mut sc.indices);
     }
 
     fn name(&self) -> &'static str {
@@ -58,7 +57,7 @@ pub struct ExactTopK;
 impl Selector for ExactTopK {
     fn select(&self, inp: &AttnInputs, _st: &mut MethodState, budget: usize, sc: &mut Scratch) {
         exact_group_scores(inp, &mut sc.scores);
-        topk_quickselect(&sc.scores, budget, &mut sc.indices);
+        topk_quickselect(&sc.scores, budget, &mut sc.perm, &mut sc.indices);
     }
 
     fn name(&self) -> &'static str {
@@ -75,7 +74,12 @@ impl Selector for ExactTopK {
 /// Loki (Singhania et al. 2024): score with the first `channels` PCA
 /// dimensions of queries and keys; top-k on the approximate scores.
 #[derive(Clone, Copy, Debug)]
-pub struct LokiSelector;
+pub struct LokiSelector {
+    /// Retained low-rank channels (`serve.loki_channels`); drives the
+    /// per-token score traffic this method reports. Selection itself
+    /// reads the per-head channel count from `AttnInputs::side`.
+    pub channels: usize,
+}
 
 impl Selector for LokiSelector {
     fn select(&self, inp: &AttnInputs, _st: &mut MethodState, budget: usize, sc: &mut Scratch) {
@@ -105,7 +109,7 @@ impl Selector for LokiSelector {
             }
             sc.scores[t] = acc;
         }
-        topk_quickselect(&sc.scores, budget, &mut sc.indices);
+        topk_quickselect(&sc.scores, budget, &mut sc.perm, &mut sc.indices);
     }
 
     fn name(&self) -> &'static str {
@@ -113,8 +117,9 @@ impl Selector for LokiSelector {
     }
 
     fn score_bytes_per_token(&self, _dh: usize, _rbit: usize) -> usize {
-        // channels f32 per token; reported for default 25% channel ratio
-        0 // refined by caller with actual channels; see simulator/hbm.rs
+        // `channels` projected f32 per cached token — the value the
+        // traffic model (simulator/hbm.rs) consumes directly.
+        self.channels * 4
     }
 }
 
@@ -147,10 +152,9 @@ impl Selector for QuestSelector {
             sc.scores[blk] = acc;
         }
         let want_blocks = (budget + b - 1) / b;
-        let mut blocks = Vec::new();
-        topk_quickselect(&sc.scores, want_blocks, &mut blocks);
+        topk_quickselect(&sc.scores, want_blocks, &mut sc.perm, &mut sc.idxbuf);
         sc.indices.clear();
-        for &blk in &blocks {
+        for &blk in &sc.idxbuf {
             let start = blk as usize * b;
             let end = (start + b).min(inp.s);
             sc.indices.extend(start as u32..end as u32);
@@ -189,15 +193,17 @@ impl Selector for MagicPigSelector {
                 *a += b;
             }
         }
-        // query signatures per table
-        let mut qsig = vec![0u16; l];
+        // query signatures per table (scratch-resident: the decode hot
+        // path must not allocate)
+        sc.sigbuf.clear();
+        sc.sigbuf.resize(l, 0);
         for t in 0..l {
             let mut sig = 0u16;
             for bit in 0..k {
                 let plane = &inp.side.mp_planes[(t * k + bit) * inp.dh..(t * k + bit + 1) * inp.dh];
                 sig |= ((dot(&sc.fbuf, plane) >= 0.0) as u16) << bit;
             }
-            qsig[t] = sig;
+            sc.sigbuf[t] = sig;
         }
         sc.iscores.clear();
         sc.iscores.resize(inp.s, 0);
@@ -205,11 +211,11 @@ impl Selector for MagicPigSelector {
             let sigs = &inp.side.mp_sigs[tok * l..(tok + 1) * l];
             let mut c = 0i32;
             for t in 0..l {
-                c += (sigs[t] == qsig[t]) as i32;
+                c += (sigs[t] == sc.sigbuf[t]) as i32;
             }
             sc.iscores[tok] = c;
         }
-        topk_counting(&sc.iscores, l as i32, budget, &mut sc.indices);
+        topk_counting(&sc.iscores, l as i32, budget, &mut sc.hist, &mut sc.indices);
     }
 
     fn name(&self) -> &'static str {
@@ -269,10 +275,9 @@ impl Selector for H2oSelector {
         // heavy hitters among the non-recent region
         sc.scores.clear();
         sc.scores.extend_from_slice(&st.h2o_cum[..recent_start]);
-        let mut heavies = Vec::new();
-        topk_quickselect(&sc.scores, heavy.min(recent_start), &mut heavies);
+        topk_quickselect(&sc.scores, heavy.min(recent_start), &mut sc.perm, &mut sc.idxbuf);
         sc.indices.clear();
-        sc.indices.extend(heavies);
+        sc.indices.extend_from_slice(&sc.idxbuf);
         sc.indices.extend(recent_start as u32..inp.s as u32);
         sc.indices.sort_unstable();
         sc.indices.dedup();
@@ -333,7 +338,9 @@ impl Selector for SnapKvSelector {
 
 /// Engine hook at prefill end: rank prefix tokens by the mean attention
 /// they received from the last `window` queries; store the full ranking
-/// (the selector trims to budget).
+/// (the selector trims to budget). Temporaries live in `scratch`
+/// (`fbuf` for per-query logits, `perm`/`idxbuf` for the ranking) so
+/// the pass reuses warmed buffers like every other selector routine.
 pub fn snapkv_prefill(
     st: &mut MethodState,
     inp: &AttnInputs,
@@ -343,10 +350,13 @@ pub fn snapkv_prefill(
     let s = inp.s;
     let w = window.min(s);
     let scale = 1.0 / (inp.dh as f32).sqrt();
-    scratch.scores.clear();
-    scratch.scores.resize(s, 0.0);
+    let Scratch { scores, fbuf, perm, idxbuf, .. } = scratch;
+    scores.clear();
+    scores.resize(s, 0.0);
     // mean softmax attention from each of the last w positions
-    let mut logits = vec![0.0f32; s];
+    let logits = fbuf;
+    logits.clear();
+    logits.resize(s, 0.0);
     for qi in s - w..s {
         for g in 0..inp.group {
             // the observation query at position qi for head-group g: we
@@ -368,20 +378,22 @@ pub fn snapkv_prefill(
                 denom += *l;
             }
             for (t, l) in logits.iter().enumerate().take(causal_end) {
-                scratch.scores[t] += l / denom;
+                scores[t] += l / denom;
             }
         }
     }
-    let mut ranked = Vec::new();
-    topk_quickselect(&scratch.scores, s, &mut ranked);
-    // ranked is index-sorted; we want score-sorted order for trimming
-    let mut by_score: Vec<u32> = ranked;
-    by_score.sort_by(|&a, &b| {
-        scratch.scores[b as usize]
-            .partial_cmp(&scratch.scores[a as usize])
+    topk_quickselect(scores, s, perm, idxbuf);
+    // idxbuf is index-sorted; we want score-sorted order for trimming.
+    // The (score desc, index asc) key reproduces exactly what the old
+    // stable sort over index-sorted input produced.
+    idxbuf.sort_unstable_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
             .unwrap()
+            .then(a.cmp(&b))
     });
-    st.snapkv_keep = by_score;
+    st.snapkv_keep.clear();
+    st.snapkv_keep.extend_from_slice(idxbuf);
 }
 
 #[cfg(test)]
@@ -621,9 +633,82 @@ mod tests {
         inp.side.loki_channels = dh;
         let mut st = MethodState::default();
         let mut sc = Scratch::default();
-        LokiSelector.select(&inp, &mut st, 12, &mut sc);
+        LokiSelector { channels: dh }.select(&inp, &mut st, 12, &mut sc);
         let loki_sel = sc.indices.clone();
         ExactTopK.select(&inp, &mut st, 12, &mut sc);
         assert_eq!(loki_sel, sc.indices);
+    }
+
+    #[test]
+    fn loki_reports_channel_score_bytes() {
+        // used by the HBM traffic model: channels f32 per cached token
+        assert_eq!(LokiSelector { channels: 4 }.score_bytes_per_token(16, 128), 16);
+        assert_eq!(LokiSelector { channels: 32 }.score_bytes_per_token(128, 128), 128);
+    }
+
+    #[test]
+    fn scratch_reuse_across_selectors_leaves_no_stale_state() {
+        // One Scratch arena cycled through every selector family (the
+        // worker-arena situation when an engine switches methods, and
+        // the per-worker situation inside one mixed bench process): each
+        // selector's output must equal what a fresh scratch produces.
+        let dh = 16;
+        let rbit = 128;
+        let s = 120;
+        let budget = 12;
+        let mut rng = Rng::new(77);
+        let k = rng.normal_vec(s * dh);
+        let q = rng.normal_vec(dh);
+        let v = vec![0.0; s * dh];
+        let hash_w = rng.normal_vec(dh * rbit);
+        let codes = encode_rows(&k, dh, &hash_w, rbit);
+        // MagicPIG side data
+        let (kbits, l) = (6usize, 30usize);
+        let planes = rng.normal_vec(l * kbits * dh);
+        let mut sigs = vec![0u16; s * l];
+        for t in 0..s {
+            for table in 0..l {
+                let mut sig = 0u16;
+                for bit in 0..kbits {
+                    let p = &planes[(table * kbits + bit) * dh..(table * kbits + bit + 1) * dh];
+                    sig |= ((dot(&k[t * dh..(t + 1) * dh], p) >= 0.0) as u16) << bit;
+                }
+                sigs[t * l + table] = sig;
+            }
+        }
+        let mut inp = base_inputs(&q, &k, &v, 1, dh, s);
+        inp.codes = &codes;
+        inp.words = rbit / 64;
+        inp.rbit = rbit;
+        inp.side.hash_w = &hash_w;
+        inp.side.mp_sigs = &sigs;
+        inp.side.mp_planes = &planes;
+        inp.side.mp_k = kbits;
+        inp.side.mp_l = l;
+        let selectors: Vec<Box<dyn Selector>> = vec![
+            Box::new(HataSelector),
+            Box::new(ExactTopK),
+            Box::new(MagicPigSelector),
+            Box::new(StreamingLlm { sinks: 4 }),
+            Box::new(H2oSelector),
+        ];
+        let mut shared = Scratch::default();
+        // two full rounds: round 2 runs every selector on a scratch that
+        // every OTHER selector has already dirtied
+        let h2o_state = || MethodState {
+            h2o_cum: (0..s).map(|t| (t % 7) as f32).collect(),
+            ..Default::default()
+        };
+        for round in 0..2 {
+            for sel in &selectors {
+                let mut st = h2o_state();
+                sel.select(&inp, &mut st, budget, &mut shared);
+                let got = shared.indices.clone();
+                let mut fresh = Scratch::default();
+                let mut st2 = h2o_state();
+                sel.select(&inp, &mut st2, budget, &mut fresh);
+                assert_eq!(got, fresh.indices, "{} round {round}", sel.name());
+            }
+        }
     }
 }

@@ -109,6 +109,14 @@ impl<'a> AttnInputs<'a> {
 }
 
 /// Reusable per-thread scratch so the decode loop never allocates.
+///
+/// Every selector temporary lives here — including the top-k working
+/// buffers (`hist`, `perm`) and the per-method staging buffers (`idxbuf`,
+/// `sigbuf`) — so a warmed-up steady-state decode step performs zero
+/// heap allocations (enforced by rust/tests/alloc.rs). Each buffer is
+/// fully overwritten (clear/resize + write) before it is read, so
+/// switching selectors on a shared scratch can never leak state between
+/// methods.
 #[derive(Default)]
 pub struct Scratch {
     /// Float selection scores, one per candidate.
@@ -123,6 +131,15 @@ pub struct Scratch {
     pub qcodes: Vec<u64>,
     /// Generic float staging (Loki projections, MagicPIG mean query).
     pub fbuf: Vec<f32>,
+    /// Counting-select histogram ([`topk::topk_counting`]).
+    pub hist: Vec<u32>,
+    /// Quickselect index permutation ([`topk::topk_quickselect`]).
+    pub perm: Vec<u32>,
+    /// Secondary index staging (Quest block picks, H2O heavy hitters,
+    /// SnapKV prefill ranking).
+    pub idxbuf: Vec<u32>,
+    /// MagicPIG per-table query signatures.
+    pub sigbuf: Vec<u16>,
 }
 
 /// Per-sequence, per-(layer, kv-head) method state that outlives a step

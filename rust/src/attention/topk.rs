@@ -7,6 +7,11 @@
 //!
 //! Ties broken toward lower indices (stable across both algorithms so the
 //! accuracy evals are implementation-independent).
+//!
+//! The hot-path variants ([`topk_quickselect`], [`topk_counting`]) take
+//! their working buffer (index permutation / histogram) from the caller —
+//! in the engine, fields of [`crate::attention::Scratch`] — so the
+//! steady-state decode step never allocates here (rust/tests/alloc.rs).
 
 /// Min-heap over (score, index) keyed by score then reverse index.
 pub fn topk_heap(scores: &[f32], k: usize, out: &mut Vec<u32>) {
@@ -52,8 +57,11 @@ pub fn topk_heap(scores: &[f32], k: usize, out: &mut Vec<u32>) {
     out.sort_unstable();
 }
 
-/// Expected-linear selection: partition a (score, index) working buffer.
-pub fn topk_quickselect(scores: &[f32], k: usize, out: &mut Vec<u32>) {
+/// Expected-linear selection: partition a caller-provided (score, index)
+/// permutation buffer (`perm`, cleared and refilled here — pass a
+/// [`crate::attention::Scratch`] field on the hot path so no allocation
+/// happens once warmed).
+pub fn topk_quickselect(scores: &[f32], k: usize, perm: &mut Vec<u32>, out: &mut Vec<u32>) {
     out.clear();
     let n = scores.len();
     let k = k.min(n);
@@ -64,14 +72,16 @@ pub fn topk_quickselect(scores: &[f32], k: usize, out: &mut Vec<u32>) {
         out.extend(0..n as u32);
         return;
     }
-    // Work on index permutation; compare by (score desc, index asc).
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Work on an index permutation; compare by (score desc, index asc).
+    perm.clear();
+    perm.extend(0..n as u32);
+    let idx = perm;
     let better = |a: u32, b: u32| -> bool {
         let (sa, sb) = (scores[a as usize], scores[b as usize]);
         sa > sb || (sa == sb && a < b)
     };
     let (mut lo, mut hi) = (0usize, n);
-    let mut target = k;
+    let target = k;
     // invariant: the final top-k occupy idx[..k] when lo >= target
     let mut seed = 0x9E3779B97F4A7C15u64;
     while hi - lo > 1 {
@@ -99,7 +109,6 @@ pub fn topk_quickselect(scores: &[f32], k: usize, out: &mut Vec<u32>) {
         } else {
             lo = store;
         }
-        let _ = &mut target;
         if lo >= target {
             break;
         }
@@ -109,8 +118,16 @@ pub fn topk_quickselect(scores: &[f32], k: usize, out: &mut Vec<u32>) {
 }
 
 /// Integer-score variant used by the Hamming path (scores in [0, rbit]):
-/// counting-select in O(s + rbit), no comparisons at all.
-pub fn topk_counting(scores: &[i32], max_score: i32, k: usize, out: &mut Vec<u32>) {
+/// counting-select in O(s + rbit), no comparisons at all. `hist` is the
+/// caller-provided histogram buffer (one slot per score value, cleared
+/// and refilled here).
+pub fn topk_counting(
+    scores: &[i32],
+    max_score: i32,
+    k: usize,
+    hist: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) {
     out.clear();
     let n = scores.len();
     let k = k.min(n);
@@ -118,7 +135,8 @@ pub fn topk_counting(scores: &[i32], max_score: i32, k: usize, out: &mut Vec<u32
         return;
     }
     let m = (max_score + 1) as usize;
-    let mut hist = vec![0u32; m];
+    hist.clear();
+    hist.resize(m, 0);
     for &s in scores {
         hist[s.clamp(0, max_score) as usize] += 1;
     }
@@ -144,8 +162,8 @@ pub fn topk_counting(scores: &[i32], max_score: i32, k: usize, out: &mut Vec<u32
             at_thr += 1;
         }
         if out.len() == k {
-            // keep scanning only if we could still replace nothing — we
-            // can stop: all remaining are <= thr and thr quota is filled.
+            // all remaining candidates score <= thr and the thr quota is
+            // filled — nothing left to take, stop scanning.
             break;
         }
     }
@@ -189,8 +207,9 @@ mod tests {
             let n = 1 + rng.below(300);
             let k = rng.below(n + 1);
             let scores: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut perm = Vec::new();
             let mut out = Vec::new();
-            topk_quickselect(&scores, k, &mut out);
+            topk_quickselect(&scores, k, &mut perm, &mut out);
             let want = reference_topk(&scores, k);
             prop_assert(out.len() == want.len(), "wrong k")?;
             // same multiset of scores (ties may pick different indices)
@@ -209,20 +228,45 @@ mod tests {
             let k = rng.below(n + 1);
             let scores: Vec<i32> = (0..n).map(|_| rng.below(129) as i32).collect();
             let fscores: Vec<f32> = scores.iter().map(|&s| s as f32).collect();
+            let mut hist = Vec::new();
             let mut out = Vec::new();
-            topk_counting(&scores, 128, k, &mut out);
+            topk_counting(&scores, 128, k, &mut hist, &mut out);
             let want = reference_topk(&fscores, k);
             prop_assert(out == want, "counting != reference")
         });
     }
 
     #[test]
+    fn counting_tie_quota_stops_at_k_with_equal_scores_remaining() {
+        // k fills exactly at the threshold score while later candidates
+        // share that same score: the quota must admit the LOWEST-index
+        // ties only, and the early break must not truncate the result
+        let scores = [5, 9, 5, 9, 5, 5, 9, 5];
+        // threshold is 5 (three 9s, then 5s fill the rest); k = 5 takes
+        // all 9s plus the first two 5s — indices 0 and 2 — leaving three
+        // equal-score candidates (4, 5, 7) unselected past the break
+        let mut hist = Vec::new();
+        let mut out = Vec::new();
+        topk_counting(&scores, 16, 5, &mut hist, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 6]);
+        // exact-k boundary: k equals the count of strictly-above-threshold
+        // scores, so the tie quota is zero and no 5 may slip in
+        topk_counting(&scores, 16, 3, &mut hist, &mut out);
+        assert_eq!(out, vec![1, 3, 6]);
+        // reused histogram must not leak the previous call's counts
+        let shifted = [2, 2, 2, 2];
+        topk_counting(&shifted, 16, 2, &mut hist, &mut out);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
     fn k_zero_and_k_full() {
         let scores = [3.0, 1.0, 2.0];
+        let mut perm = Vec::new();
         let mut out = Vec::new();
         topk_heap(&scores, 0, &mut out);
         assert!(out.is_empty());
-        topk_quickselect(&scores, 3, &mut out);
+        topk_quickselect(&scores, 3, &mut perm, &mut out);
         assert_eq!(out, vec![0, 1, 2]);
         topk_heap(&scores, 10, &mut out);
         assert_eq!(out, vec![0, 1, 2]);
@@ -234,8 +278,9 @@ mod tests {
         let mut out = Vec::new();
         topk_heap(&scores, 3, &mut out);
         assert_eq!(out, vec![0, 1, 2]);
+        let mut hist = Vec::new();
         let mut out2 = Vec::new();
-        topk_counting(&[7; 10], 128, 3, &mut out2);
+        topk_counting(&[7; 10], 128, 3, &mut hist, &mut out2);
         assert_eq!(out2, vec![0, 1, 2]);
     }
 }

@@ -119,7 +119,7 @@ pub fn fidelity(
             // truth: exact aggregated scores top-k
             let mut truth = Vec::new();
             exact_group_scores(&inp, &mut sel_scratch.scores);
-            topk_quickselect(&sel_scratch.scores, budget, &mut truth);
+            topk_quickselect(&sel_scratch.scores, budget, &mut sel_scratch.perm, &mut truth);
             // method selection
             let mut st = MethodState::default();
             // H2O/SnapKV need engine-maintained state: reuse actual state

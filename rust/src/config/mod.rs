@@ -318,6 +318,13 @@ pub struct ServeConfig {
     /// barrier-per-stage scatter reference path. Bit-identical outputs
     /// either way — this knob only trades synchronization overhead.
     pub exec_mode: ExecMode,
+    /// Cache the decode task graph across steps (`--graph-cache`, on by
+    /// default): the graph's shape depends only on (batch size, layers,
+    /// kv heads), so steady-state decode steps reuse the cached
+    /// structure and only rebind task payloads — the zero-allocation
+    /// fast path. Off = rebuild the graph every token (the pre-cache
+    /// reference behavior). Bit-identical outputs either way.
+    pub graph_cache: bool,
     /// Softmax sampling temperature; 0 = greedy (argmax), the default so
     /// serving stays deterministic.
     pub temperature: f32,
@@ -343,6 +350,7 @@ impl Default for ServeConfig {
             snapkv_window: 16,
             threads: 1,
             exec_mode: ExecMode::Queue,
+            graph_cache: true,
             temperature: 0.0,
             seed: 0,
         }

@@ -24,14 +24,15 @@ use crate::kvcache::pool::KvPool;
 use crate::kvcache::SeqKvCache;
 use crate::model::sampler::Sampler;
 use crate::model::{
-    make_selector, sel_ref, DecodeItem, DecodeScratch, Model, PrefillItem, SeqState, WorkerScratch,
+    make_selector, sel_ref, DecodeGraphCache, DecodeItem, DecodeScratch, Model, PrefillItem,
+    SeqState, WorkerScratch,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, Response};
-use super::scheduler::{Scheduler, SeqTicket};
+use super::scheduler::{Scheduler, SeqTicket, StepPlan};
 
 /// Consecutive zero-progress steps before the engine declares a stall
 /// (stuck scheduler or unsatisfiable admission), surfaces it through
@@ -81,6 +82,16 @@ pub struct Engine {
     worker_scratch: Vec<WorkerScratch>,
     /// per-batch-slot activation buffers, grown on demand
     seq_scratch: Vec<DecodeScratch>,
+    /// cached decode task graph + payload arena (`--graph-cache`):
+    /// rebuilt only when the batch shape changes, rebound per step
+    graph_cache: DecodeGraphCache,
+    /// recycled step plan: the scheduler refills its DecodeWork /
+    /// PrefillWork vectors in place instead of reallocating per token
+    plan: StepPlan,
+    /// recycled (id, token, pos) decode feed for the current step
+    decode_feed: Vec<(u64, u32, usize)>,
+    /// recycled end-of-step completion list
+    finished: Vec<(u64, FinishReason)>,
     sampler: Sampler,
     /// Latency/throughput counters, updated every step.
     pub metrics: Metrics,
@@ -106,6 +117,10 @@ impl Engine {
             workers: ThreadPool::new(threads),
             worker_scratch: (0..threads).map(|_| WorkerScratch::default()).collect(),
             seq_scratch: Vec::new(),
+            graph_cache: DecodeGraphCache::new(),
+            plan: StepPlan::default(),
+            decode_feed: Vec::new(),
+            finished: Vec::new(),
             sampler,
             metrics: Metrics::new(),
             clock: Instant::now(),
@@ -134,10 +149,14 @@ impl Engine {
         // per-request sampling stream: deterministic in (seed, id), so
         // results are independent of thread count and arrival order
         let rng = Rng::new(self.serve.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
+        // reserve the whole request's cache up front (prompt + budget),
+        // so steady-state decode appends never reallocate
+        let mut cache = SeqKvCache::new(&self.model.cfg, &self.serve);
+        cache.reserve(req.prompt.len() + req.max_new_tokens + 1);
         self.seqs.insert(
             req.id,
             LiveSeq {
-                cache: SeqKvCache::new(&self.model.cfg, &self.serve),
+                cache,
                 state: SeqState::new(&self.model.cfg),
                 out: Vec::new(),
                 next_token: None,
@@ -161,22 +180,31 @@ impl Engine {
     /// One engine step: decode every running sequence once (batched
     /// across the threadpool), advance prefill chunks, admit from the
     /// queue. Returns what got done.
+    ///
+    /// Steady-state bookkeeping is recycled across steps: the plan's
+    /// work vectors, the decode feed, the completion list, the
+    /// per-slot scratch and the decode graph cache are all engine
+    /// fields refilled in place. (The per-step `by_id` borrow maps and
+    /// item vectors are still rebuilt — they carry `&mut` borrows that
+    /// cannot outlive the step; the zero-allocation guarantee applies
+    /// to the model's decode step itself, see rust/tests/alloc.rs.)
     pub fn step(&mut self) -> StepOutcome {
         let t0 = Instant::now();
         let sampler = self.sampler;
-        let plan = self.scheduler.plan(&mut self.pool);
-        let mut outcome = StepOutcome { admitted: plan.admitted.len(), ..Default::default() };
-        let slots = plan.prefill.len().max(plan.decode.len());
+        self.scheduler.plan_into(&mut self.pool, &mut self.plan);
+        let mut outcome =
+            StepOutcome { admitted: self.plan.admitted.len(), ..Default::default() };
+        let slots = self.plan.prefill.len().max(self.plan.decode.len());
         while self.seq_scratch.len() < slots {
             self.seq_scratch.push(DecodeScratch::new(&self.model.cfg));
         }
         // ---- batched prefill chunks
-        if !plan.prefill.is_empty() {
+        if !self.plan.prefill.is_empty() {
             {
                 let mut by_id: HashMap<u64, &mut LiveSeq> =
                     self.seqs.iter_mut().map(|(id, s)| (*id, s)).collect();
-                let mut items: Vec<PrefillItem> = Vec::with_capacity(plan.prefill.len());
-                for (w, scratch) in plan.prefill.iter().zip(self.seq_scratch.iter_mut()) {
+                let mut items: Vec<PrefillItem> = Vec::with_capacity(self.plan.prefill.len());
+                for (w, scratch) in self.plan.prefill.iter().zip(self.seq_scratch.iter_mut()) {
                     let seq = by_id.remove(&w.id).expect("live seq");
                     let LiveSeq { req, cache, state, .. } = seq;
                     items.push(PrefillItem {
@@ -197,7 +225,7 @@ impl Engine {
                 );
                 self.metrics.on_prefill_exec(exec);
             }
-            for (slot, w) in plan.prefill.iter().enumerate() {
+            for (slot, w) in self.plan.prefill.iter().enumerate() {
                 self.scheduler.on_prefilled(w.id, w.range.len());
                 outcome.prefilled += w.range.len();
                 if w.is_final {
@@ -207,7 +235,8 @@ impl Engine {
                 }
             }
             // degenerate max_new_tokens == 0: complete right after prefill
-            let zero_new: Vec<u64> = plan
+            let zero_new: Vec<u64> = self
+                .plan
                 .prefill
                 .iter()
                 .filter(|w| w.is_final && self.seqs[&w.id].req.max_new_tokens == 0)
@@ -218,11 +247,11 @@ impl Engine {
             }
         }
         // ---- batched decode: one token per running sequence
-        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        self.finished.clear();
         // commit the sampled token to each stream; stop-token sequences
         // drop out of the batch before the model runs
-        let mut work: Vec<(u64, u32, usize)> = Vec::with_capacity(plan.decode.len());
-        for w in &plan.decode {
+        self.decode_feed.clear();
+        for w in &self.plan.decode {
             let seq = self.seqs.get_mut(&w.id).expect("live seq");
             let tok = seq.next_token.expect("prefill completed");
             seq.out.push(tok);
@@ -232,17 +261,19 @@ impl Engine {
                 self.metrics.on_first_token(at - seq.req.arrival);
             }
             if seq.req.stop_token == Some(tok) {
-                finished.push((w.id, FinishReason::StopToken));
+                self.finished.push((w.id, FinishReason::StopToken));
                 continue;
             }
-            work.push((w.id, tok, w.pos));
+            self.decode_feed.push((w.id, tok, w.pos));
         }
-        if !work.is_empty() {
+        if !self.decode_feed.is_empty() {
             {
                 let mut by_id: HashMap<u64, &mut LiveSeq> =
                     self.seqs.iter_mut().map(|(id, s)| (*id, s)).collect();
-                let mut items: Vec<DecodeItem> = Vec::with_capacity(work.len());
-                for ((id, tok, pos), scratch) in work.iter().zip(self.seq_scratch.iter_mut()) {
+                let mut items: Vec<DecodeItem> = Vec::with_capacity(self.decode_feed.len());
+                for ((id, tok, pos), scratch) in
+                    self.decode_feed.iter().zip(self.seq_scratch.iter_mut())
+                {
                     let seq = by_id.remove(id).expect("live seq");
                     let LiveSeq { cache, state, .. } = seq;
                     items.push(DecodeItem { token: *tok, pos: *pos, cache, state, scratch });
@@ -253,10 +284,11 @@ impl Engine {
                     sel_ref(&self.selector),
                     &self.workers,
                     &mut self.worker_scratch,
+                    &mut self.graph_cache,
                 );
                 self.metrics.on_decode_exec(exec);
             }
-            for (slot, (id, _, _)) in work.iter().enumerate() {
+            for (slot, (id, _, _)) in self.decode_feed.iter().enumerate() {
                 let logits = &self.seq_scratch[slot].logits;
                 let seq = self.seqs.get_mut(id).expect("live seq");
                 seq.next_token = Some(sampler.sample(logits, &mut seq.rng));
@@ -264,13 +296,15 @@ impl Engine {
                 self.scheduler.on_decoded(*id);
                 outcome.decoded += 1;
                 if done {
-                    finished.push((*id, FinishReason::MaxTokens));
+                    self.finished.push((*id, FinishReason::MaxTokens));
                 }
             }
         }
-        for (id, reason) in finished {
+        let mut finished = std::mem::take(&mut self.finished);
+        for (id, reason) in finished.drain(..) {
             self.finish(id, reason);
         }
+        self.finished = finished;
         self.metrics.on_step(t0.elapsed().as_secs_f64(), outcome.decoded);
         outcome
     }

@@ -113,6 +113,15 @@ impl Metrics {
                 ));
             }
         }
+        // decode graph cache effectiveness: builds should plateau while
+        // hits keep growing once the batch composition settles
+        let d = &self.decode_exec;
+        if d.graph_builds + d.graph_hits > 0 {
+            line.push_str(&format!(
+                " graph_cache[builds={} hits={}]",
+                d.graph_builds, d.graph_hits
+            ));
+        }
         line
     }
 }
@@ -138,14 +147,36 @@ mod tests {
     fn queue_counters_accumulate_and_report() {
         let mut m = Metrics::new();
         assert!(!m.report().contains("q_decode"), "no queue runs yet");
-        m.on_decode_exec(QueueStats { runs: 1, inline_runs: 0, tasks: 13, idle_waits: 2 });
-        m.on_decode_exec(QueueStats { runs: 1, inline_runs: 1, tasks: 7, idle_waits: 0 });
-        m.on_prefill_exec(QueueStats { runs: 1, inline_runs: 0, tasks: 40, idle_waits: 5 });
+        assert!(!m.report().contains("graph_cache"), "no graph runs yet");
+        m.on_decode_exec(QueueStats {
+            runs: 1,
+            inline_runs: 0,
+            tasks: 13,
+            idle_waits: 2,
+            graph_builds: 1,
+            graph_hits: 0,
+        });
+        m.on_decode_exec(QueueStats {
+            runs: 1,
+            inline_runs: 1,
+            tasks: 7,
+            idle_waits: 0,
+            graph_builds: 0,
+            graph_hits: 1,
+        });
+        m.on_prefill_exec(QueueStats {
+            runs: 1,
+            inline_runs: 0,
+            tasks: 40,
+            idle_waits: 5,
+            ..Default::default()
+        });
         assert_eq!(m.decode_exec.tasks, 20);
         assert_eq!(m.decode_exec.runs, 2);
         assert_eq!(m.prefill_exec.idle_waits, 5);
         let r = m.report();
         assert!(r.contains("q_decode[runs=2 tasks=20 idle_waits=2]"), "{r}");
         assert!(r.contains("q_prefill[runs=1 tasks=40 idle_waits=5]"), "{r}");
+        assert!(r.contains("graph_cache[builds=1 hits=1]"), "{r}");
     }
 }

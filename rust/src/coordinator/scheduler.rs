@@ -151,6 +151,19 @@ impl Scheduler {
     /// Plan the next engine step.
     pub fn plan(&mut self, pool: &mut KvPool) -> StepPlan {
         let mut plan = StepPlan::default();
+        self.plan_into(pool, &mut plan);
+        plan
+    }
+
+    /// Plan the next engine step into a caller-owned [`StepPlan`],
+    /// clearing and refilling its work vectors in place. The engine
+    /// keeps one plan across steps so steady-state planning reuses the
+    /// `DecodeWork`/`PrefillWork` allocations instead of rebuilding
+    /// them every token.
+    pub fn plan_into(&mut self, pool: &mut KvPool, plan: &mut StepPlan) {
+        plan.decode.clear();
+        plan.prefill.clear();
+        plan.admitted.clear();
         // 1. admit while there is room
         while self.live.len() < self.max_batch {
             let Some(front) = self.queue.front() else { break };
@@ -191,7 +204,6 @@ impl Scheduler {
                 }
             }
         }
-        plan
     }
 }
 
@@ -307,6 +319,34 @@ mod tests {
         s.finish(1, &mut pool);
         assert_eq!(s.live_len(), 0);
         assert_eq!(pool.active_seqs(), 0);
+    }
+
+    #[test]
+    fn plan_into_reuse_matches_fresh_plans() {
+        // the engine's recycled StepPlan must see exactly what a fresh
+        // plan() would produce, step after step
+        let mut fresh = scheduler(4, 64);
+        let mut reusing = scheduler(4, 64);
+        let mut pool_a = KvPool::new(100 * PAGE_TOKENS);
+        let mut pool_b = KvPool::new(100 * PAGE_TOKENS);
+        for s in [&mut fresh, &mut reusing] {
+            s.submit(mk(1, 150, 2));
+            s.submit(mk(2, 40, 2));
+        }
+        let mut plan = StepPlan::default();
+        for _ in 0..6 {
+            let want = fresh.plan(&mut pool_a);
+            reusing.plan_into(&mut pool_b, &mut plan);
+            assert_eq!(want, plan);
+            for w in &want.prefill {
+                fresh.on_prefilled(w.id, w.range.len());
+                reusing.on_prefilled(w.id, w.range.len());
+            }
+            for w in &want.decode {
+                fresh.on_decoded(w.id);
+                reusing.on_decoded(w.id);
+            }
+        }
     }
 
     #[test]

@@ -368,6 +368,58 @@ impl SeqKvCache {
             .collect()
     }
 
+    /// Raw handle to a single (layer, kv) head region — the
+    /// one-at-a-time variant of [`Self::head_handles`], used by the
+    /// cached decode graph's per-step payload rebind
+    /// (`Model::bind_decode_tasks`) so the steady-state path never
+    /// allocates a handle vector. Same validity contract as
+    /// [`Self::head_handles`].
+    pub fn head_handle(&mut self, layer: usize, kv: usize) -> HeadHandle {
+        let h = self.head_index(layer, kv);
+        HeadHandle {
+            head: h,
+            dh: self.dh,
+            quest_block: self.quest_block,
+            loki_channels: self.loki_channels,
+            mp_k: self.mp_k,
+            mp_l: self.mp_l,
+            hc: &mut self.heads[h],
+        }
+    }
+
+    /// Pre-reserve every head region's buffers (K/V rows, packed code
+    /// words, and whichever side structures are enabled) for a total of
+    /// `tokens` cached tokens, so steady-state appends up to that length
+    /// never reallocate. Useful for callers that know a sequence's
+    /// prompt + generation budget up front — and required by the
+    /// zero-allocation decode-step guarantee (rust/tests/alloc.rs).
+    pub fn reserve(&mut self, tokens: usize) {
+        fn reserve_total<T>(v: &mut Vec<T>, total: usize) {
+            if v.capacity() < total {
+                // capacity < total implies len <= capacity < total, so
+                // the subtraction cannot underflow
+                v.reserve(total - v.len());
+            }
+        }
+        let dh = self.dh;
+        for hc in &mut self.heads {
+            reserve_total(&mut hc.k, tokens * dh);
+            reserve_total(&mut hc.v, tokens * dh);
+            reserve_total(&mut hc.codes, tokens * self.words);
+            if self.quest_block > 0 {
+                let blocks = tokens.div_ceil(self.quest_block);
+                reserve_total(&mut hc.quest_min, blocks * dh);
+                reserve_total(&mut hc.quest_max, blocks * dh);
+            }
+            if self.loki_channels > 0 {
+                reserve_total(&mut hc.loki_kproj, tokens * self.loki_channels);
+            }
+            if self.mp_l > 0 {
+                reserve_total(&mut hc.mp_sigs, tokens * self.mp_l);
+            }
+        }
+    }
+
     /// Record one fully-appended token (call once after all layers/heads
     /// of a step appended through [`Self::head_mut`]/[`Self::layer_heads_mut`]).
     pub fn advance_len(&mut self) {
@@ -562,6 +614,52 @@ mod tests {
         append_token(&mut c2, &cfg, &aux2, &[], 1.5);
         assert_eq!(c1.side(0, 0, &[], &aux).mp_sigs, c2.side(0, 0, &[], &aux2).mp_sigs);
         assert_eq!(c1.side(0, 0, &[], &aux).mp_sigs.len(), serve.magicpig_l);
+    }
+
+    #[test]
+    fn reserve_prevents_append_reallocation() {
+        for method in [Method::Hata, Method::Quest, Method::Loki, Method::MagicPig] {
+            let (cfg, serve) = cfg_serve(method);
+            let aux = MethodAux::build(&cfg, &serve, None, 0);
+            let hash_w = vec![0.5; cfg.head_dim * cfg.rbit];
+            let mut plain = SeqKvCache::new(&cfg, &serve);
+            let mut reserved = SeqKvCache::new(&cfg, &serve);
+            let tokens = 40;
+            reserved.reserve(tokens);
+            // snapshot pointers: appends within the reservation must not move
+            let k_ptr = reserved.heads[0].k.as_ptr();
+            for t in 0..tokens {
+                append_token(&mut plain, &cfg, &aux, &hash_w, t as f32);
+                append_token(&mut reserved, &cfg, &aux, &hash_w, t as f32);
+            }
+            assert_eq!(reserved.heads[0].k.as_ptr(), k_ptr, "{method:?} reallocated");
+            for layer in 0..cfg.n_layers {
+                for kv in 0..cfg.n_kv_heads {
+                    assert_eq!(plain.k_slice(layer, kv), reserved.k_slice(layer, kv), "{method:?}");
+                    assert_eq!(
+                        plain.codes_slice(layer, kv),
+                        reserved.codes_slice(layer, kv),
+                        "{method:?}"
+                    );
+                }
+            }
+            assert_eq!(plain.len(), reserved.len());
+        }
+    }
+
+    #[test]
+    fn single_head_handle_matches_bulk_handles() {
+        let (cfg, serve) = cfg_serve(Method::Hata);
+        let mut cache = SeqKvCache::new(&cfg, &serve);
+        let bulk = cache.head_handles();
+        for layer in 0..cfg.n_layers {
+            for kv in 0..cfg.n_kv_heads {
+                let one = cache.head_handle(layer, kv);
+                let h = layer * cfg.n_kv_heads + kv;
+                assert_eq!(one.index(), bulk[h].index());
+                assert_eq!(one.hc, bulk[h].hc, "same region address");
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
-    "exec",
+    "exec", "graph-cache",
 ];
 
 fn main() {
@@ -77,6 +77,10 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
   --exec MODE       step executor: queue (dependency-driven work queue,
                     default) | barrier (scatter-per-stage reference);
                     outputs are bit-identical either way
+  --graph-cache V   on (default) caches the decode task graph across
+                    steps (rebuild only on batch-shape change; the
+                    zero-allocation steady-state fast path) | off
+                    rebuilds it every token; bit-identical either way
   --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
@@ -110,17 +114,29 @@ fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
     Ok(Model::new(cfg, weights, aux))
 }
 
+/// Parse an on/off CLI value (accepts true/false and 1/0 aliases).
+fn parse_on_off(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Some(true),
+        "off" | "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let method = Method::parse(&args.str("method", "hata")).context("bad --method")?;
     let base = ServeConfig::default();
     let exec_mode =
         ExecMode::parse(&args.str("exec", base.exec_mode.name())).context("bad --exec")?;
+    let graph_cache = parse_on_off(&args.str("graph-cache", "on"))
+        .context("bad --graph-cache (expected on|off)")?;
     Ok(ServeConfig {
         method,
         budget: args.usize("budget", 64)?,
         threads: args.usize("threads", 1)?,
         prefill_tile: args.usize("prefill-tile", base.prefill_tile)?,
         exec_mode,
+        graph_cache,
         temperature: args.f64("temperature", 0.0)? as f32,
         seed: args.u64("seed", 0)?,
         ..base

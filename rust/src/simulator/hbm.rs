@@ -7,6 +7,8 @@
 //! *modeled* GPU-side speedup next to measured CPU wall time, and the
 //! roofline module can translate to any device bandwidth.
 
+use crate::attention::methods::LokiSelector;
+use crate::attention::Selector;
 use crate::config::{Method, ModelConfig, ServeConfig};
 
 /// Bytes touched by one decode step of one sequence at context length `s`
@@ -61,7 +63,12 @@ pub fn decode_traffic(cfg: &ModelConfig, serve: &ServeConfig, s: usize, budget: 
         // exact top-k reads all keys to score, then gathers k rows of K+V
         Method::ExactTopK => mk(row, true),
         Method::Hata => mk((cfg.rbit / 8) as u64, true),
-        Method::Loki => mk((serve.loki_channels * 4) as u64, true),
+        // the selector itself reports its score traffic (channels * 4 B
+        // per token) — no special-casing here
+        Method::Loki => {
+            let sel = LokiSelector { channels: serve.loki_channels };
+            mk(sel.score_bytes_per_token(cfg.head_dim, cfg.rbit) as u64, true)
+        }
         Method::Quest => {
             // block summaries: 2*dh f32 per block => amortized per token
             let per_tok = (2 * cfg.head_dim * 4) as u64 / serve.quest_block as u64;

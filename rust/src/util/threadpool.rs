@@ -13,53 +13,106 @@
 //! arena. Two executors drive that fan-out: [`ThreadPool::scatter`]
 //! (one stage at a time, full-pool barrier per stage — the `--exec
 //! barrier` reference path) and the dependency-driven
-//! [`crate::util::workqueue::TaskGraph`] (`--exec queue`, the default),
-//! which runs on the same pool via [`ThreadPool::execute`].
-//! [`ThreadPool::for_each_index`] remains for borrowed one-shot fan-outs
-//! that do not need worker-local state.
+//! [`crate::util::workqueue::TaskGraph`] (`--exec queue`, the default).
+//! Both now dispatch through [`ThreadPool::broadcast`], which hands one
+//! shared borrowed closure to the first `width` workers **without any
+//! heap allocation** — no boxed jobs, no channel nodes — which is what
+//! lets a warmed-up steady-state decode step run allocation-free (see
+//! rust/tests/alloc.rs). [`ThreadPool::for_each_index`] remains for
+//! borrowed one-shot fan-outs that do not need worker-local state, and
+//! [`ThreadPool::execute`] for fire-and-forget boxed jobs off the hot
+//! path.
 
+use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed-width pool of persistent worker threads fed over one shared
-/// channel; see the module docs for the fan-out patterns it backs.
-pub struct ThreadPool {
-    workers: Vec<std::thread::JoinHandle<()>>,
-    tx: Option<mpsc::Sender<Job>>,
+/// One pending broadcast: a type-erased pointer to the caller's closure
+/// plus the monomorphized trampoline that re-types and invokes it with
+/// the worker's id. Plain data — posting it allocates nothing.
+#[derive(Clone, Copy)]
+struct BcastJob {
+    /// `&F` erased to an address (valid until the broadcast completes —
+    /// the caller blocks until every participant has finished).
+    data: usize,
+    /// `trampoline::<F>`: re-types `data` and calls `(*data)(worker)`.
+    call: unsafe fn(usize, usize),
 }
 
-/// Completion latch shared between one `scatter` call's jobs.
-struct Latch {
-    next: AtomicUsize,
-    remaining: AtomicUsize,
-    panicked: AtomicBool,
-    done: Mutex<bool>,
-    cv: Condvar,
+/// Re-type the erased closure address and invoke it for one worker.
+///
+/// # Safety
+/// `data` must be a live `&F` for the duration of the call — guaranteed
+/// by [`ThreadPool::broadcast`] blocking until every participant exits.
+unsafe fn trampoline<F: Fn(usize) + Sync>(data: usize, worker: usize) {
+    (*(data as *const F))(worker)
+}
+
+/// Worker-visible pool state behind the shared mutex.
+struct PoolState {
+    /// Fire-and-forget boxed jobs ([`ThreadPool::execute`]).
+    jobs: VecDeque<Job>,
+    /// Bumped once per broadcast; workers run the current broadcast job
+    /// at most once by comparing against their last-seen epoch.
+    epoch: u64,
+    /// Workers with id < width participate in the current broadcast.
+    width: usize,
+    /// The current broadcast job (stale after completion; never re-run
+    /// because the epoch only matches once per worker).
+    bcast: Option<BcastJob>,
+    /// Participants that have not finished the current broadcast yet.
+    remaining: usize,
+    /// A broadcast participant panicked (re-raised on the caller).
+    panicked: bool,
+    /// Pool is shutting down; workers exit once the queue drains.
+    shutdown: bool,
+}
+
+/// State + condvars shared between the pool handle and its workers.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes workers when jobs or a broadcast arrive.
+    work_cv: Condvar,
+    /// Wakes the broadcast caller when the last participant finishes.
+    done_cv: Condvar,
+}
+
+/// Fixed-width pool of persistent worker threads with stable worker ids;
+/// see the module docs for the fan-out patterns it backs.
+pub struct ThreadPool {
+    workers: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<PoolShared>,
+    /// Serializes whole broadcasts (one fan-out at a time per pool).
+    bcast_lock: Mutex<()>,
 }
 
 impl ThreadPool {
     /// Spawn a pool of `threads.max(1)` persistent workers.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: VecDeque::new(),
+                epoch: 0,
+                width: 0,
+                bcast: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         let workers = (0..threads)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                std::thread::spawn(move || loop {
-                    let job = rx.lock().unwrap().recv();
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break,
-                    }
-                })
+            .map(|id| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, id))
             })
             .collect();
-        ThreadPool { workers, tx: Some(tx) }
+        ThreadPool { workers, shared, bcast_lock: Mutex::new(()) }
     }
 
     /// Pool sized from `std::thread::available_parallelism`.
@@ -73,16 +126,64 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Queue one fire-and-forget job on the pool.
+    /// Queue one fire-and-forget boxed job on the pool (not part of the
+    /// allocation-free hot path — use [`ThreadPool::broadcast`] there).
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.as_ref().unwrap().send(Box::new(job)).expect("pool closed");
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Run `f(worker_id)` exactly once on each of the first
+    /// `width.min(size)` workers and block until all of them return.
+    /// The closure is passed by reference and invoked through a
+    /// monomorphized trampoline, so posting the fan-out performs **no
+    /// heap allocation** — the property the steady-state decode step's
+    /// zero-allocation guarantee (rust/tests/alloc.rs) rests on.
+    ///
+    /// Worker ids are stable for the pool's lifetime, so `f` can index a
+    /// per-worker arena slice with them. Broadcasts are serialized per
+    /// pool; concurrent callers take turns. Panics in `f` are caught on
+    /// the worker, the fan-out drains, and the panic is re-raised here.
+    ///
+    /// Must not be called from a pool worker thread (e.g. from inside an
+    /// [`ThreadPool::execute`] job or another broadcast): the calling
+    /// worker would be a required participant of its own fan-out and the
+    /// call would deadlock. Guarded by a debug assertion.
+    pub fn broadcast<F: Fn(usize) + Sync>(&self, width: usize, f: &F) {
+        debug_assert!(
+            !IN_POOL_WORKER.with(|w| w.get()),
+            "ThreadPool::broadcast called from a pool worker thread (would deadlock)"
+        );
+        let width = width.min(self.size());
+        if width == 0 {
+            return;
+        }
+        let _turn = self.bcast_lock.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        st.epoch = st.epoch.wrapping_add(1);
+        st.width = width;
+        st.bcast = Some(BcastJob { data: f as *const F as usize, call: trampoline::<F> });
+        st.remaining = width;
+        st.panicked = false;
+        self.shared.work_cv.notify_all();
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("ThreadPool::broadcast: a worker job panicked");
+        }
     }
 
     /// Run `f(i)` for i in 0..n in parallel and wait for completion.
     ///
-    /// Uses `std::thread::scope` (not the pool's queue) so borrowed
-    /// closures work without `'static` bounds; the pool's size only
-    /// decides the fan-out. Degenerates to inline execution on one core.
+    /// Uses `std::thread::scope` (not the pool's workers) so borrowed
+    /// closures work without worker-arena bookkeeping; the pool's size
+    /// only decides the fan-out. Degenerates to inline execution on one
+    /// core.
     pub fn for_each_index<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -140,66 +241,104 @@ impl ThreadPool {
             }
             return;
         }
-        let latch = Latch {
-            next: AtomicUsize::new(0),
-            remaining: AtomicUsize::new(width),
-            panicked: AtomicBool::new(false),
-            done: Mutex::new(false),
-            cv: Condvar::new(),
-        };
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
         let items_addr = items.as_mut_ptr() as usize;
         let states_addr = states.as_mut_ptr() as usize;
-        let latch_ref = &latch;
         let f_ref = &f;
-        for w in 0..width {
-            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                // SAFETY: `w` is unique per job, so this is the only
-                // &mut into states[w] for the whole fan-out.
-                let s = unsafe { &mut *(states_addr as *mut S).add(w) };
-                loop {
-                    let i = latch_ref.next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    // SAFETY: the atomic counter yields each index to
-                    // exactly one worker, so this &mut aliases nothing.
-                    let t = unsafe { &mut *(items_addr as *mut T).add(i) };
-                    let guarded = AssertUnwindSafe(|| f_ref(i, t, &mut *s));
-                    if std::panic::catch_unwind(guarded).is_err() {
-                        latch_ref.panicked.store(true, Ordering::SeqCst);
-                        break;
-                    }
+        // SAFETY notes for the worker closure: `w` is unique per
+        // participant, so states[w] has exactly one &mut for the whole
+        // fan-out, and the atomic counter yields each item index to
+        // exactly one worker. `broadcast` blocks until every participant
+        // returns, so the borrows of `f`, the counter and both slices
+        // outlive every use.
+        self.broadcast(width, &|w: usize| {
+            let s = unsafe { &mut *(states_addr as *mut S).add(w) };
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
-                if latch_ref.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    // notify while holding the lock: the waiter may only
-                    // observe done=true (and then destroy the latch) after
-                    // this worker's final access to it
-                    let mut done = latch_ref.done.lock().unwrap();
-                    *done = true;
-                    latch_ref.cv.notify_all();
+                let t = unsafe { &mut *(items_addr as *mut T).add(i) };
+                let guarded = AssertUnwindSafe(|| f_ref(i, t, &mut *s));
+                if std::panic::catch_unwind(guarded).is_err() {
+                    panicked.store(true, Ordering::SeqCst);
+                    break;
                 }
-            });
-            // SAFETY: the job borrows `f`, `latch` and the item/state
-            // slices, all of which outlive this call: we block on the
-            // latch below until every job has signalled completion, so
-            // the 'static erasure can never be observed.
-            let job: Job = unsafe { std::mem::transmute(job) };
-            self.tx.as_ref().unwrap().send(job).expect("pool closed");
-        }
-        let mut done = latch.done.lock().unwrap();
-        while !*done {
-            done = latch.cv.wait(done).unwrap();
-        }
-        drop(done);
-        if latch.panicked.load(Ordering::SeqCst) {
+            }
+        });
+        if panicked.load(Ordering::SeqCst) {
             panic!("ThreadPool::scatter: a worker job panicked");
+        }
+    }
+}
+
+thread_local! {
+    /// True on pool worker threads — lets [`ThreadPool::broadcast`]
+    /// debug-assert against the self-deadlocking reentrant case.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// What a woken worker decided to do next.
+enum Step {
+    Bcast(BcastJob),
+    Job(Job),
+    Exit,
+}
+
+/// Persistent worker: interleave broadcast participation (when this
+/// worker's id is within the broadcast width) with boxed-job draining.
+fn worker_loop(shared: &PoolShared, id: usize) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    let mut seen = 0u64;
+    loop {
+        let step = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if id < st.width {
+                        break Step::Bcast(st.bcast.expect("broadcast job set with epoch"));
+                    }
+                    // not a participant in this epoch: fall through
+                }
+                if let Some(j) = st.jobs.pop_front() {
+                    break Step::Job(j);
+                }
+                if st.shutdown {
+                    break Step::Exit;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        match step {
+            Step::Bcast(b) => {
+                // SAFETY: the broadcast caller blocks until `remaining`
+                // hits zero, so the closure behind `b.data` is live.
+                let guarded = AssertUnwindSafe(|| unsafe { (b.call)(b.data, id) });
+                let ok = std::panic::catch_unwind(guarded).is_ok();
+                let mut st = shared.state.lock().unwrap();
+                if !ok {
+                    st.panicked = true;
+                }
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    shared.done_cv.notify_all();
+                }
+            }
+            Step::Job(j) => j(),
+            Step::Exit => return,
         }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -210,6 +349,7 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
 
     #[test]
     fn executes_all_jobs() {
@@ -228,6 +368,59 @@ mod tests {
             rx.recv().unwrap();
         }
         assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn broadcast_runs_once_per_participant() {
+        let pool = ThreadPool::new(4);
+        for width in [1usize, 2, 4, 9] {
+            let hits: Vec<AtomicUsize> = (0..pool.size()).map(|_| AtomicUsize::new(0)).collect();
+            pool.broadcast(width, &|w| {
+                hits[w].fetch_add(1, Ordering::SeqCst);
+            });
+            let expect = width.min(pool.size());
+            for (w, h) in hits.iter().enumerate() {
+                let want = usize::from(w < expect);
+                assert_eq!(h.load(Ordering::SeqCst), want, "width {width} worker {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_serializes_and_repeats() {
+        // back-to-back broadcasts must each run exactly once per worker,
+        // including workers that skipped a narrower earlier epoch
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        pool.broadcast(1, &|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.broadcast(3, &|_| {
+            total.fetch_add(10, Ordering::SeqCst);
+        });
+        pool.broadcast(2, &|_| {
+            total.fetch_add(100, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 1 + 30 + 200);
+    }
+
+    #[test]
+    fn broadcast_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.broadcast(2, &|w| {
+                if w == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "broadcast must re-raise worker panics");
+        // pool still works afterwards
+        let ran = AtomicUsize::new(0);
+        pool.broadcast(2, &|_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
     }
 
     #[test]
@@ -284,6 +477,21 @@ mod tests {
         let mut states = vec![0usize; 2];
         pool.scatter(&mut items, &mut states, |_, _, s| *s += 1);
         assert_eq!(states, vec![0, 0]);
+    }
+
+    #[test]
+    fn scatter_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        let mut items = vec![0usize; 8];
+        let mut states = vec![(); 2];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter(&mut items, &mut states, |i, _, _| {
+                if i == 3 {
+                    panic!("scatter boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
     }
 
     #[test]

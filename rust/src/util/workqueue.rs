@@ -12,6 +12,23 @@
 //! sequence B is still in QKV, and sequence A's layer 2 can start before
 //! sequence B has finished layer 0.
 //!
+//! # Steady-state reuse
+//!
+//! A graph is a *reusable* object, not a per-step throwaway. Two levels
+//! of reuse keep the warmed-up decode step allocation-free
+//! (rust/tests/alloc.rs):
+//!
+//! * **Structure** — [`TaskGraph::clear`] resets the task list while
+//!   keeping every edge list's capacity, so re-deriving the same shape
+//!   re-allocates nothing; and when the shape is unchanged the caller
+//!   can skip the rebuild entirely and re-run the cached structure
+//!   (the decode graph cache, `--graph-cache`).
+//! * **Run state** — pending counters, the ready queue, and the
+//!   executor condvars live *in* the graph and are reset (not
+//!   re-allocated) by every [`TaskGraph::run`]; the fan-out itself goes
+//!   through [`crate::util::threadpool::ThreadPool::broadcast`], which
+//!   posts one borrowed closure instead of boxing per-worker jobs.
+//!
 //! # Graph invariants
 //!
 //! The executor relies on four invariants; the first two are enforced by
@@ -112,15 +129,42 @@ enum Poison {
     Underflow,
 }
 
-/// Dependency graph of work items, built once per batch step and executed
-/// with [`TaskGraph::run`]. Task ids double as indices into the payload
-/// slice handed to `run`, so the graph itself stores only structure.
+/// Ready-queue state guarded by the run mutex. Reused (cleared, not
+/// re-allocated) across runs.
+#[derive(Default)]
+struct Ready {
+    ready: VecDeque<usize>,
+    finished: bool,
+    poison: Option<Poison>,
+}
+
+/// Dependency graph of work items, executed with [`TaskGraph::run`].
+/// Task ids double as indices into the payload slice handed to `run`.
+///
+/// Built once with [`TaskGraph::add`], runnable any number of times:
+/// the executor's per-run state (pending counters, ready queue) is
+/// embedded and reset in place, so repeated runs of a warmed graph
+/// allocate nothing. [`TaskGraph::clear`] resets the structure while
+/// keeping all buffer capacity for an in-place rebuild.
 #[derive(Default)]
 pub struct TaskGraph {
     /// Dependency count per task (pending-counter initial values).
     deps: Vec<usize>,
-    /// Forward edges: tasks to notify when task `i` completes.
+    /// Forward edges: tasks to notify when task `i` completes. May hold
+    /// more entries than `deps` after a [`TaskGraph::clear`] + smaller
+    /// rebuild; only the first `deps.len()` are live.
     children: Vec<Vec<usize>>,
+    // ---- reusable executor state, reset by every `run` ----
+    /// Atomic pending counters, one per task (grown on demand).
+    pending: Vec<AtomicUsize>,
+    /// Shared ready queue + finished/poison flags.
+    queue: Mutex<Ready>,
+    /// Wakes workers when tasks become ready (or the run finishes).
+    cv: Condvar,
+    /// Completed-task count for the current run.
+    completed: AtomicUsize,
+    /// Times a worker found the ready queue empty this run.
+    idle_waits: AtomicUsize,
 }
 
 impl TaskGraph {
@@ -131,7 +175,19 @@ impl TaskGraph {
 
     /// Empty graph with room for `n` tasks.
     pub fn with_capacity(n: usize) -> Self {
-        TaskGraph { deps: Vec::with_capacity(n), children: Vec::with_capacity(n) }
+        TaskGraph {
+            deps: Vec::with_capacity(n),
+            children: Vec::with_capacity(n),
+            ..TaskGraph::default()
+        }
+    }
+
+    /// Reset the graph to empty while keeping every allocation — the
+    /// outer task list, each task's edge list, and the executor's
+    /// counters — so rebuilding a same-shaped (or smaller) graph
+    /// performs no heap allocation.
+    pub fn clear(&mut self) {
+        self.deps.clear();
     }
 
     /// Add one task that may start once every task in `deps` has
@@ -143,21 +199,26 @@ impl TaskGraph {
     /// construction.
     pub fn add(&mut self, deps: &[TaskId]) -> TaskId {
         let id = self.deps.len();
+        if id < self.children.len() {
+            self.children[id].clear();
+        } else {
+            self.children.push(Vec::new());
+        }
         for d in deps {
             assert!(d.0 < id, "workqueue: dependency {} of task {id} not added yet", d.0);
             self.children[d.0].push(id);
         }
         self.deps.push(deps.len());
-        self.children.push(Vec::new());
         TaskId(id)
     }
 
-    /// Number of tasks added so far.
+    /// Number of tasks added since the last [`TaskGraph::clear`].
     pub fn len(&self) -> usize {
         self.deps.len()
     }
 
-    /// True before the first [`TaskGraph::add`].
+    /// True before the first [`TaskGraph::add`] (or right after a
+    /// [`TaskGraph::clear`]).
     pub fn is_empty(&self) -> bool {
         self.deps.is_empty()
     }
@@ -177,10 +238,15 @@ impl TaskGraph {
     /// is unspecified; under the module-level invariants it cannot
     /// affect results.
     ///
+    /// Takes `&mut self` to reset the embedded run state in place; a
+    /// warmed graph can be re-run any number of times without allocating
+    /// (the dispatch itself goes through the pool's allocation-free
+    /// [`broadcast`](crate::util::threadpool::ThreadPool::broadcast)).
+    ///
     /// Panics if a task panicked (after the fan-out drains — the pool is
     /// not poisoned) or on a dependency-counter underflow.
     pub fn run<T, S, F>(
-        &self,
+        &mut self,
         pool: &ThreadPool,
         items: &mut [T],
         states: &mut [S],
@@ -208,116 +274,59 @@ impl TaskGraph {
             stats.inline_runs = 1;
             return stats;
         }
-        let shared = Shared {
-            queue: Mutex::new(Ready {
-                ready: self
-                    .deps
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, &d)| d == 0)
-                    .map(|(i, _)| i)
-                    .collect(),
-                finished: false,
-                poison: None,
-            }),
-            cv: Condvar::new(),
-            pending: self.deps.iter().map(|&d| AtomicUsize::new(d)).collect(),
-            completed: AtomicUsize::new(0),
-            idle_waits: AtomicUsize::new(0),
-            exited: Mutex::new(width),
-            exit_cv: Condvar::new(),
-        };
+        // ---- reset the embedded run state in place (no allocation once
+        // the graph has run at this size before)
+        if self.pending.len() < n {
+            let grow = n - self.pending.len();
+            self.pending.reserve(grow);
+            for _ in 0..grow {
+                self.pending.push(AtomicUsize::new(0));
+            }
+        }
+        for (p, &d) in self.pending.iter().zip(self.deps.iter()) {
+            p.store(d, Ordering::Relaxed);
+        }
+        {
+            let q = self.queue.get_mut().unwrap();
+            q.ready.clear();
+            // capacity for the worst case (every task ready at once) up
+            // front: ready-queue growth must never depend on scheduling
+            // jitter, or the zero-allocation guarantee would be flaky
+            if q.ready.capacity() < n {
+                q.ready.reserve(n);
+            }
+            q.ready.extend(self.deps.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i));
+            q.finished = false;
+            q.poison = None;
+        }
+        self.completed.store(0, Ordering::Relaxed);
+        self.idle_waits.store(0, Ordering::Relaxed);
+        let this: &TaskGraph = &*self;
         let items_addr = items.as_mut_ptr() as usize;
         let states_addr = states.as_mut_ptr() as usize;
-        let shared_ref = &shared;
-        let children = &self.children;
         let f_ref = &f;
-        for w in 0..width {
-            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                // SAFETY: `w` is unique per job, so this is the only
-                // &mut into states[w] for the whole run.
-                let s = unsafe { &mut *(states_addr as *mut S).add(w) };
-                shared_ref.drain(n, children, |i| {
-                    // SAFETY: the ready queue yields each task id exactly
-                    // once, so this &mut aliases no other task's payload.
-                    let t = unsafe { &mut *(items_addr as *mut T).add(i) };
-                    let guarded = AssertUnwindSafe(|| f_ref(i, t, &mut *s));
-                    std::panic::catch_unwind(guarded).is_ok()
-                });
-                let mut left = shared_ref.exited.lock().unwrap();
-                *left -= 1;
-                if *left == 0 {
-                    shared_ref.exit_cv.notify_all();
-                }
+        // `broadcast` blocks until every participant returns, so all the
+        // borrows the closure captures outlive every use on the workers.
+        pool.broadcast(width, &|w: usize| {
+            // SAFETY: `w` is unique per participant, so this is the only
+            // &mut into states[w] for the whole run.
+            let s = unsafe { &mut *(states_addr as *mut S).add(w) };
+            this.drain(n, |i| {
+                // SAFETY: the ready queue yields each task id exactly
+                // once, so this &mut aliases no other task's payload.
+                let t = unsafe { &mut *(items_addr as *mut T).add(i) };
+                let guarded = AssertUnwindSafe(|| f_ref(i, t, &mut *s));
+                std::panic::catch_unwind(guarded).is_ok()
             });
-            // SAFETY: the job borrows `f`, `shared`, the graph and the
-            // item/state slices, all of which outlive this call: we block
-            // below until every job has signalled its exit, so the
-            // 'static erasure can never be observed.
-            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
-            pool.execute(job);
-        }
-        let mut left = shared.exited.lock().unwrap();
-        while *left > 0 {
-            left = shared.exit_cv.wait(left).unwrap();
-        }
-        drop(left);
-        stats.idle_waits = shared.idle_waits.load(Ordering::Relaxed) as u64;
-        match shared.queue.lock().unwrap().poison {
+        });
+        stats.idle_waits = self.idle_waits.load(Ordering::Relaxed) as u64;
+        match self.queue.get_mut().unwrap().poison {
             Some(Poison::TaskPanic) => panic!("workqueue: a task panicked"),
             Some(Poison::Underflow) => panic!("workqueue: dependency counter underflow"),
             None => stats,
         }
     }
-}
 
-/// Executor counters from one or more [`TaskGraph::run`] calls — the
-/// "how busy were the workers" signal the engine surfaces through
-/// `coordinator::metrics`. Merge runs with [`QueueStats::merge`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct QueueStats {
-    /// Graph executions.
-    pub runs: u64,
-    /// Runs that degenerated to inline execution (single worker/arena).
-    pub inline_runs: u64,
-    /// Tasks executed across all runs.
-    pub tasks: u64,
-    /// Times a worker found the ready queue empty and blocked waiting
-    /// for a dependency to resolve — the straggler/idle signal. High
-    /// values relative to `tasks` mean the graph is starving the pool
-    /// (batch too small, or one stage dominates).
-    pub idle_waits: u64,
-}
-
-impl QueueStats {
-    /// Accumulate another run's counters into this one.
-    pub fn merge(&mut self, other: QueueStats) {
-        self.runs += other.runs;
-        self.inline_runs += other.inline_runs;
-        self.tasks += other.tasks;
-        self.idle_waits += other.idle_waits;
-    }
-}
-
-/// Ready-queue state guarded by the run mutex.
-struct Ready {
-    ready: VecDeque<usize>,
-    finished: bool,
-    poison: Option<Poison>,
-}
-
-/// One run's shared executor state (lives on the caller's stack).
-struct Shared {
-    queue: Mutex<Ready>,
-    cv: Condvar,
-    pending: Vec<AtomicUsize>,
-    completed: AtomicUsize,
-    idle_waits: AtomicUsize,
-    exited: Mutex<usize>,
-    exit_cv: Condvar,
-}
-
-impl Shared {
     /// Mark the run finished (success or poison) and wake everyone.
     fn finish(&self, poison: Option<Poison>) {
         let mut q = self.queue.lock().unwrap();
@@ -330,7 +339,7 @@ impl Shared {
 
     /// Worker loop: pull ready tasks, run them via `exec` (returns false
     /// on panic), resolve dependents. Returns when the run finishes.
-    fn drain(&self, n: usize, children: &[Vec<usize>], mut exec: impl FnMut(usize) -> bool) {
+    fn drain(&self, n: usize, mut exec: impl FnMut(usize) -> bool) {
         loop {
             let task = {
                 let mut q = self.queue.lock().unwrap();
@@ -352,7 +361,7 @@ impl Shared {
                 self.finish(Some(Poison::TaskPanic));
                 return;
             }
-            for &c in &children[i] {
+            for &c in &self.children[i] {
                 // AcqRel: the zero-observing worker must see everything
                 // every dependency wrote before its decrement.
                 let prev = self.pending[c].fetch_sub(1, Ordering::AcqRel);
@@ -374,6 +383,43 @@ impl Shared {
                 return;
             }
         }
+    }
+}
+
+/// Executor counters from one or more [`TaskGraph::run`] calls — the
+/// "how busy were the workers" signal the engine surfaces through
+/// `coordinator::metrics`. Merge runs with [`QueueStats::merge`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Graph executions.
+    pub runs: u64,
+    /// Runs that degenerated to inline execution (single worker/arena).
+    pub inline_runs: u64,
+    /// Tasks executed across all runs.
+    pub tasks: u64,
+    /// Times a worker found the ready queue empty and blocked waiting
+    /// for a dependency to resolve — the straggler/idle signal. High
+    /// values relative to `tasks` mean the graph is starving the pool
+    /// (batch too small, or one stage dominates).
+    pub idle_waits: u64,
+    /// Decode-graph structure (re)builds — batch shape changed, or the
+    /// graph cache is off. Steady-state serving should see this stay
+    /// flat while `graph_hits` grows.
+    pub graph_builds: u64,
+    /// Decode steps that reused the cached graph structure and only
+    /// rebound task payloads in place (`--graph-cache on`).
+    pub graph_hits: u64,
+}
+
+impl QueueStats {
+    /// Accumulate another run's counters into this one.
+    pub fn merge(&mut self, other: QueueStats) {
+        self.runs += other.runs;
+        self.inline_runs += other.inline_runs;
+        self.tasks += other.tasks;
+        self.idle_waits += other.idle_waits;
+        self.graph_builds += other.graph_builds;
+        self.graph_hits += other.graph_hits;
     }
 }
 
@@ -440,13 +486,61 @@ mod tests {
     }
 
     #[test]
+    fn rerun_without_rebuild_matches_first_run() {
+        // a warmed graph must be re-runnable in place: same structure,
+        // fresh payloads, identical dependency behaviour every time
+        let mut g = TaskGraph::new();
+        let mut prev: Option<TaskId> = None;
+        for _ in 0..6 {
+            prev = Some(match prev {
+                Some(p) => g.add(&[p]),
+                None => g.add(&[]),
+            });
+        }
+        let pool = ThreadPool::new(4);
+        let mut states = vec![(); 4];
+        for round in 0..5u64 {
+            let mut items: Vec<u64> = vec![round; 6];
+            let stats = g.run(&pool, &mut items, &mut states, |i, it, _| *it += i as u64);
+            let want: Vec<u64> = (0..6).map(|i| round + i).collect();
+            assert_eq!(items, want, "round {round}");
+            assert_eq!(stats.tasks, 6);
+        }
+    }
+
+    #[test]
+    fn clear_and_rebuild_reuses_structure() {
+        let mut g = TaskGraph::new();
+        let a = g.add(&[]);
+        let _ = g.add(&[a]);
+        let _ = g.add(&[a]);
+        assert_eq!(g.len(), 3);
+        g.clear();
+        assert!(g.is_empty());
+        // rebuild a smaller graph; stale children of the old shape must
+        // not leak into the new one
+        let x = g.add(&[]);
+        let y = g.add(&[x]);
+        assert_eq!(g.len(), 2);
+        let pool = ThreadPool::new(3);
+        let mut states = vec![(); 3];
+        let clock = AtomicU64::new(1);
+        let mut when = vec![0u64; 2];
+        let stats = g.run(&pool, &mut when, &mut states, |_, w, _| {
+            *w = clock.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(stats.tasks, 2);
+        assert!(when[y.index()] > when[x.index()]);
+    }
+
+    #[test]
     fn inline_when_single_worker_matches_pooled_results() {
         let mut g = TaskGraph::new();
         let mut prev = g.add(&[]);
         for _ in 0..9 {
             prev = g.add(&[prev]);
         }
-        let run = |threads: usize| {
+        let mut run = |threads: usize| {
             let pool = ThreadPool::new(threads);
             let mut states = vec![0u64; threads];
             let mut items: Vec<u64> = (0..10).collect();
@@ -532,12 +626,38 @@ mod tests {
 
     #[test]
     fn empty_graph_is_noop() {
-        let g = TaskGraph::new();
+        let mut g = TaskGraph::new();
         let pool = ThreadPool::new(2);
         let mut items: Vec<usize> = Vec::new();
         let mut states = vec![(); 2];
         let stats = g.run(&pool, &mut items, &mut states, |_, _, _| {});
         assert_eq!(stats.tasks, 0);
         assert!(g.is_empty());
+    }
+
+    #[test]
+    fn stats_merge_accumulates_all_fields() {
+        let mut a = QueueStats {
+            runs: 1,
+            inline_runs: 0,
+            tasks: 10,
+            idle_waits: 2,
+            graph_builds: 1,
+            graph_hits: 0,
+        };
+        a.merge(QueueStats {
+            runs: 1,
+            inline_runs: 1,
+            tasks: 5,
+            idle_waits: 0,
+            graph_builds: 0,
+            graph_hits: 1,
+        });
+        assert_eq!(a.runs, 2);
+        assert_eq!(a.inline_runs, 1);
+        assert_eq!(a.tasks, 15);
+        assert_eq!(a.idle_waits, 2);
+        assert_eq!(a.graph_builds, 1);
+        assert_eq!(a.graph_hits, 1);
     }
 }

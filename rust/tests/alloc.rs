@@ -1,0 +1,229 @@
+//! Zero-allocation steady-state decode enforcement.
+//!
+//! A counting global allocator wraps `System` and tallies every
+//! `alloc`/`alloc_zeroed`/`realloc` while a flag is armed. The test
+//! warms up a batched decode loop (queue executor, graph cache on),
+//! pre-reserves every buffer that legitimately grows with context
+//! (KV caches via [`SeqKvCache::reserve`], worker scratch arenas), arms
+//! the counter, runs further decode steps, and asserts the count is
+//! **zero** for every method × thread-count cell.
+//!
+//! If any hot-path temporary (a selector `Vec::new`, a rebuilt task
+//! graph, a boxed pool job) is reintroduced, this test fails — that is
+//! its entire purpose. A negative control with `--graph-cache off`
+//! (which intentionally rebuilds the graph every step) verifies the
+//! counter actually observes the hot path.
+//!
+//! Everything lives in ONE `#[test]` so no sibling test thread can
+//! allocate while the counter is armed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use hata::config::{preset, ExecMode, Method, ModelConfig, ServeConfig};
+use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::model::{
+    make_selector, sel_ref, weights::Weights, DecodeGraphCache, DecodeItem, DecodeScratch, Model,
+    SeqState, WorkerScratch,
+};
+use hata::tensor::ops::argmax;
+use hata::util::rng::Rng;
+use hata::util::threadpool::ThreadPool;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// `System` allocator wrapper that counts allocation events (from any
+/// thread) while `COUNTING` is armed. Deallocations are free.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Grow a vector's capacity to at least `total` without changing its
+/// length-semantics (contents are overwritten by every consumer).
+fn prewarm<T>(v: &mut Vec<T>, total: usize) {
+    if v.capacity() < total {
+        v.reserve(total - v.len());
+    }
+}
+
+/// Pre-size every selection/attention buffer a worker arena might need
+/// up to context length `max_s`. Task→worker placement is
+/// nondeterministic under threads > 1, so a worker may first see the
+/// longest sequence inside the measured window — warming by running is
+/// not deterministic, reserving explicitly is. Sizes are derived from
+/// the config so raising `rbit`/`magicpig_l`/group later cannot turn a
+/// harness shortfall into a false hot-path failure.
+fn prewarm_worker(ws: &mut WorkerScratch, max_s: usize, cfg: &ModelConfig, serve: &ServeConfig) {
+    let dh = cfg.head_dim;
+    let group = cfg.group();
+    let sc = &mut ws.sel;
+    prewarm(&mut sc.scores, max_s);
+    prewarm(&mut sc.iscores, max_s);
+    prewarm(&mut sc.indices, max_s);
+    prewarm(&mut sc.probs, max_s);
+    prewarm(&mut sc.qcodes, max_s.max(group * (cfg.rbit / 64)));
+    prewarm(&mut sc.fbuf, max_s);
+    // counting-select histograms: one slot per score value — Hamming
+    // scores reach group*rbit, MagicPIG collision counts reach mp_l
+    prewarm(&mut sc.hist, group * cfg.rbit + 1 + serve.magicpig_l);
+    prewarm(&mut sc.perm, max_s);
+    prewarm(&mut sc.idxbuf, max_s);
+    prewarm(&mut sc.sigbuf, serve.magicpig_l);
+    prewarm(&mut ws.kgather, max_s * dh);
+    prewarm(&mut ws.vgather, max_s * dh);
+}
+
+const WARM_STEPS: usize = 12;
+const MEASURED_STEPS: usize = 4;
+
+/// Run prefill + WARM_STEPS decode steps cold, then MEASURED_STEPS with
+/// the allocation counter armed around each `decode_batch` call (the
+/// "decode step" under test). Returns the armed-window event count.
+fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool) -> u64 {
+    let cfg: ModelConfig = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        threads,
+        exec_mode: ExecMode::Queue,
+        graph_cache,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(5);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let model = Model::new(cfg, weights, aux);
+    let sel = make_selector(&serve);
+    let pool = ThreadPool::new(threads);
+    let mut workers: Vec<WorkerScratch> = (0..threads).map(|_| WorkerScratch::default()).collect();
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|s| (0..(48 + s * 11)).map(|i| 32 + (i as u32 % 64)).collect())
+        .collect();
+    let total_steps = WARM_STEPS + MEASURED_STEPS;
+    let max_s = prompts.iter().map(|p| p.len()).max().unwrap() + total_steps + 1;
+    for w in workers.iter_mut() {
+        prewarm_worker(w, max_s, &model.cfg, &serve);
+    }
+    let mut caches: Vec<SeqKvCache> = prompts
+        .iter()
+        .map(|_| {
+            let mut c = SeqKvCache::new(&model.cfg, &serve);
+            c.reserve(max_s);
+            c
+        })
+        .collect();
+    let mut states: Vec<SeqState> = prompts.iter().map(|_| SeqState::new(&model.cfg)).collect();
+    // H2O's cumulative-mass vectors grow one slot per token; pre-size
+    // them so steady-state resizes stay within capacity regardless of
+    // the allocator's growth policy
+    for st in states.iter_mut() {
+        for h in st.per_head.iter_mut() {
+            prewarm(&mut h.h2o_cum, max_s);
+        }
+    }
+    let mut scratches: Vec<DecodeScratch> =
+        prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
+    let mut next: Vec<u32> = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        model.prefill(p, &mut caches[i], &mut states[i], &serve, &mut scratches[i]);
+        next.push(argmax(&scratches[i].logits) as u32);
+    }
+    let mut graph_cache_state = DecodeGraphCache::new();
+    ALLOCS.store(0, Ordering::SeqCst);
+    for step in 0..total_steps {
+        let mut items: Vec<DecodeItem> = caches
+            .iter_mut()
+            .zip(states.iter_mut())
+            .zip(scratches.iter_mut())
+            .enumerate()
+            .map(|(i, ((cache, state), scratch))| DecodeItem {
+                token: next[i],
+                pos: prompts[i].len() + step,
+                cache,
+                state,
+                scratch,
+            })
+            .collect();
+        let armed = step >= WARM_STEPS;
+        if armed {
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        model.decode_batch(
+            &mut items,
+            &serve,
+            sel_ref(&sel),
+            &pool,
+            &mut workers,
+            &mut graph_cache_state,
+        );
+        if armed {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        drop(items);
+        for (i, n) in next.iter_mut().enumerate() {
+            *n = argmax(&scratches[i].logits) as u32;
+        }
+    }
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// The whole matrix in one test so no sibling test thread can allocate
+/// while the counter is armed.
+#[test]
+fn warmed_decode_step_is_allocation_free() {
+    let methods = [
+        Method::Dense,
+        Method::ExactTopK,
+        Method::Hata,
+        Method::Loki,
+        Method::Quest,
+        Method::MagicPig,
+        Method::StreamingLlm,
+        Method::H2o,
+        Method::SnapKv,
+    ];
+    for method in methods {
+        for threads in [1usize, 2, 8] {
+            let n = steady_state_allocs(method, threads, true);
+            assert_eq!(
+                n, 0,
+                "{method:?} threads={threads}: {n} allocation(s) in a warmed \
+                 steady-state decode step (queue exec, graph cache on)"
+            );
+        }
+    }
+    // negative control: with the graph cache off every step rebuilds the
+    // task graph, which MUST register as allocations — proving the
+    // counter actually observes the decode hot path.
+    let n = steady_state_allocs(Method::Hata, 2, false);
+    assert!(n > 0, "counter saw nothing with graph cache off — harness is broken");
+}

@@ -13,7 +13,8 @@ use hata::coordinator::engine::Engine;
 use hata::coordinator::request::Request;
 use hata::kvcache::{MethodAux, SeqKvCache};
 use hata::model::{
-    weights::Weights, DecodeItem, DecodeScratch, Model, PrefillItem, SeqState, WorkerScratch,
+    weights::Weights, DecodeGraphCache, DecodeItem, DecodeScratch, Model, PrefillItem, SeqState,
+    WorkerScratch,
 };
 use hata::util::rng::Rng;
 use hata::util::threadpool::ThreadPool;
@@ -201,12 +202,13 @@ fn tiled_prefill_engine_identical_across_threads_and_tiles() {
 
 /// Engine-level executor determinism: identical token streams from the
 /// full serving loop (chunked prefill + batched decode) under `--exec
-/// queue` and `--exec barrier`.
+/// queue` and `--exec barrier`, with the decode graph cache on or off.
 fn run_exec(
     method: Method,
     threads: usize,
     tile: usize,
     exec_mode: ExecMode,
+    graph_cache: bool,
 ) -> Vec<(u64, Vec<u32>)> {
     let cfg = preset("hata-gqa").unwrap();
     let serve = ServeConfig {
@@ -217,6 +219,7 @@ fn run_exec(
         prefill_tile: tile,
         threads,
         exec_mode,
+        graph_cache,
         ..Default::default()
     };
     let mut rng = Rng::new(42);
@@ -239,29 +242,41 @@ fn run_exec(
     out
 }
 
-/// The acceptance matrix: `--exec queue` ≡ `--exec barrier` for every
-/// (threads ∈ {1, 2, 8}) × (tile ∈ {1, 16}) × (Dense/Hata/Quest) cell.
+/// The acceptance matrix: `--graph-cache on|off` × `--exec queue` ≡
+/// `--exec barrier` for every (threads ∈ {1, 2, 8}) × (tile ∈ {1, 16})
+/// × (Dense/Hata/Quest) cell. The barrier path ignores the cache, so it
+/// is the common reference both queue variants must match bit-for-bit.
 #[test]
 fn queue_exec_engine_identical_to_barrier() {
     for method in [Method::Dense, Method::Hata, Method::Quest] {
         for threads in [1usize, 2, 8] {
             for tile in [1usize, 16] {
-                let barrier = run_exec(method, threads, tile, ExecMode::Barrier);
-                let queue = run_exec(method, threads, tile, ExecMode::Queue);
-                assert_eq!(barrier, queue, "{method:?} threads={threads} tile={tile}");
+                let barrier = run_exec(method, threads, tile, ExecMode::Barrier, true);
+                for graph_cache in [true, false] {
+                    let queue = run_exec(method, threads, tile, ExecMode::Queue, graph_cache);
+                    assert_eq!(
+                        barrier, queue,
+                        "{method:?} threads={threads} tile={tile} cache={graph_cache}"
+                    );
+                }
             }
         }
     }
 }
 
 /// H2O keeps its serial prefill under both executors (query-order
-/// cumulative state), so the modes must still agree end to end.
+/// cumulative state), so the modes must still agree end to end — with
+/// the decode graph cache on or off.
 #[test]
 fn queue_exec_matches_barrier_for_h2o() {
-    assert_eq!(
-        run_exec(Method::H2o, 4, 16, ExecMode::Barrier),
-        run_exec(Method::H2o, 4, 16, ExecMode::Queue),
-    );
+    let barrier = run_exec(Method::H2o, 4, 16, ExecMode::Barrier, true);
+    for graph_cache in [true, false] {
+        assert_eq!(
+            barrier,
+            run_exec(Method::H2o, 4, 16, ExecMode::Queue, graph_cache),
+            "cache={graph_cache}"
+        );
+    }
 }
 
 /// SnapKV reads the final-layer queries out of `scratch.block.q` after a
@@ -270,10 +285,14 @@ fn queue_exec_matches_barrier_for_h2o() {
 /// byte-identical across executors (engine streams too).
 #[test]
 fn queue_exec_matches_barrier_for_snapkv() {
-    assert_eq!(
-        run_exec(Method::SnapKv, 4, 16, ExecMode::Barrier),
-        run_exec(Method::SnapKv, 4, 16, ExecMode::Queue),
-    );
+    let barrier = run_exec(Method::SnapKv, 4, 16, ExecMode::Barrier, true);
+    for graph_cache in [true, false] {
+        assert_eq!(
+            barrier,
+            run_exec(Method::SnapKv, 4, 16, ExecMode::Queue, graph_cache),
+            "cache={graph_cache}"
+        );
+    }
     // model level: whole-prompt prefill_batch, then compare snapkv_keep
     // rankings and logits bit-for-bit
     let mk_serve = |exec_mode: ExecMode| ServeConfig {
@@ -327,18 +346,20 @@ fn queue_exec_matches_barrier_for_snapkv() {
 
 /// Model-level bit-identity: queue-mode `prefill_batch` + `decode_batch`
 /// must leave byte-identical KV caches, hash codes, side structures and
-/// logits to barrier mode — not just the same argmax tokens.
+/// logits to barrier mode — not just the same argmax tokens — with the
+/// decode graph cache on and off.
 #[test]
 fn queue_exec_bit_identical_caches_and_logits() {
     for method in [Method::Dense, Method::Hata, Method::Quest] {
-        let mk_serve = |exec_mode: ExecMode| ServeConfig {
+        let mk_serve = |exec_mode: ExecMode, graph_cache: bool| ServeConfig {
             method,
             budget: 16,
             prefill_tile: 8,
             exec_mode,
+            graph_cache,
             ..Default::default()
         };
-        let model = model_for(method, &mk_serve(ExecMode::Barrier));
+        let model = model_for(method, &mk_serve(ExecMode::Barrier, true));
         let pool = ThreadPool::new(4);
         let prompts: Vec<Vec<u32>> = (0..3)
             .map(|s| (0..(70 + s * 23)).map(|i| 32 + (i as u32 % 64)).collect())
@@ -376,6 +397,7 @@ fn queue_exec_bit_identical_caches_and_logits() {
                 .iter()
                 .map(|sc| hata::tensor::ops::argmax(&sc.logits) as u32)
                 .collect();
+            let mut graph_cache = DecodeGraphCache::new();
             let mut logit_trace: Vec<Vec<f32>> = Vec::new();
             for step in 0..4 {
                 let mut items: Vec<DecodeItem> = caches
@@ -392,7 +414,7 @@ fn queue_exec_bit_identical_caches_and_logits() {
                     })
                     .collect();
                 let sel = hata::model::sel_ref(&sel);
-                model.decode_batch(&mut items, serve, sel, &pool, &mut workers);
+                model.decode_batch(&mut items, serve, sel, &pool, &mut workers, &mut graph_cache);
                 drop(items);
                 for (i, n) in next.iter_mut().enumerate() {
                     *n = hata::tensor::ops::argmax(&scratches[i].logits) as u32;
@@ -401,27 +423,29 @@ fn queue_exec_bit_identical_caches_and_logits() {
             }
             (caches, logit_trace)
         };
-        let (c1, l1) = run(&mk_serve(ExecMode::Barrier));
-        let (c2, l2) = run(&mk_serve(ExecMode::Queue));
-        assert_eq!(l1, l2, "{method:?} logits");
-        for (s, (a, b)) in c1.iter().zip(&c2).enumerate() {
-            assert_eq!(a.len(), b.len(), "{method:?} seq {s}");
-            for li in 0..model.cfg.n_layers {
-                for kv in 0..model.cfg.n_kv_heads {
-                    assert_eq!(a.k_slice(li, kv), b.k_slice(li, kv), "{method:?} seq {s} k");
-                    assert_eq!(a.v_slice(li, kv), b.v_slice(li, kv), "{method:?} seq {s} v");
-                    assert_eq!(
-                        a.codes_slice(li, kv),
-                        b.codes_slice(li, kv),
-                        "{method:?} seq {s} codes"
-                    );
-                    let sa = a.side(li, kv, &[], &model.aux);
-                    let sb = b.side(li, kv, &[], &model.aux);
-                    assert_eq!(sa.quest_min, sb.quest_min, "{method:?} seq {s}");
-                    assert_eq!(sa.quest_max, sb.quest_max, "{method:?} seq {s}");
+        let (c1, l1) = run(&mk_serve(ExecMode::Barrier, true));
+        for graph_cache in [true, false] {
+            let (c2, l2) = run(&mk_serve(ExecMode::Queue, graph_cache));
+            assert_eq!(l1, l2, "{method:?} logits cache={graph_cache}");
+            for (s, (a, b)) in c1.iter().zip(&c2).enumerate() {
+                assert_eq!(a.len(), b.len(), "{method:?} seq {s}");
+                for li in 0..model.cfg.n_layers {
+                    for kv in 0..model.cfg.n_kv_heads {
+                        assert_eq!(a.k_slice(li, kv), b.k_slice(li, kv), "{method:?} seq {s} k");
+                        assert_eq!(a.v_slice(li, kv), b.v_slice(li, kv), "{method:?} seq {s} v");
+                        assert_eq!(
+                            a.codes_slice(li, kv),
+                            b.codes_slice(li, kv),
+                            "{method:?} seq {s} codes"
+                        );
+                        let sa = a.side(li, kv, &[], &model.aux);
+                        let sb = b.side(li, kv, &[], &model.aux);
+                        assert_eq!(sa.quest_min, sb.quest_min, "{method:?} seq {s}");
+                        assert_eq!(sa.quest_max, sb.quest_max, "{method:?} seq {s}");
+                    }
                 }
+                assert_eq!(a.bytes(), b.bytes(), "{method:?} seq {s}");
             }
-            assert_eq!(a.bytes(), b.bytes(), "{method:?} seq {s}");
         }
     }
 }
