@@ -14,6 +14,7 @@ use hata::bench::harness::{bench, LayerFixture};
 use hata::bench::report::{fmt, Table};
 use hata::config::{preset, Method, ServeConfig};
 use hata::simulator::hbm::modeled_speedup;
+use hata::tensor::simd::KernelMode;
 use hata::util::threadpool::ThreadPool;
 
 fn step_sparse(
@@ -27,7 +28,7 @@ fn step_sparse(
     let mut st = MethodState::default();
     sel.select(&inp, &mut st, budget, sc);
     let idx = std::mem::take(&mut sc.indices);
-    sparse_attention_fused(&inp, &idx, &mut sc.probs, out);
+    sparse_attention_fused(KernelMode::default(), &inp, &idx, &mut sc.probs, out);
     sc.indices = idx;
 }
 
@@ -63,7 +64,7 @@ fn main() {
             let mut sc = Scratch::default();
             let mut out = vec![0.0f32; group * dh];
             let dense = bench("dense", 1, iters, || {
-                dense_attention(&f.inputs(), &mut sc.probs, &mut out);
+                dense_attention(KernelMode::default(), &f.inputs(), &mut sc.probs, &mut out);
             });
             let topk = bench("topk", 1, iters, || {
                 step_sparse(&f, &ExactTopK, budget, &mut sc, &mut out);

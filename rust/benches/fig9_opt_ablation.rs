@@ -7,13 +7,21 @@
 //!   +Score     = packed-u64 POPCNT scoring
 //!   +FusedAttn = gather folded into the attention pass
 //!   +Encode    = fused projection+sign+bitpack
+//!
+//! The four paper rows run the float loops in `KernelMode::Reference` so
+//! the ablation isolates the paper's optimizations; two extra rows then
+//! switch the winning variant to the `Simd` and `SimdFma` kernel tiers
+//! (`--kernels`, docs/PERFORMANCE.md). Every row reports measured GB/s
+//! and GFLOP/s against the `simulator::roofline` CPU bound.
 
 use hata::attention::compute::{sparse_attention_fused, sparse_attention_gather};
 use hata::attention::hamming::{scores_scalar, scores_word};
 use hata::attention::hashenc::{encode_fused_blocked, encode_unfused};
 use hata::attention::topk::topk_counting;
 use hata::bench::harness::{bench, LayerFixture};
-use hata::bench::report::{fmt, Table};
+use hata::bench::report::{fmt, roofline_cells, ROOFLINE_HEADER, Table};
+use hata::simulator::roofline::{float_kernel, Device};
+use hata::tensor::simd::{backend_name, KernelMode};
 
 fn main() {
     let iters: usize =
@@ -30,18 +38,31 @@ fn main() {
     let mut out = vec![0.0f32; dh];
     let mut qc: Vec<u64> = Vec::new();
 
-    let variants: &[(&str, bool, bool, bool)] = &[
-        ("Simple", false, false, false),
-        ("+Score", false, true, false),
-        ("+Score+FusedAttn", false, true, true),
-        ("+Score+FusedAttn+Encode (HATA)", true, true, true),
+    // Step traffic/work for the roofline columns: the code stream and the
+    // score write/re-read dominate bytes; the sparse qk+pv pass and the
+    // one-row query encode dominate flops.
+    let words = rbit / 64;
+    let hbm = (s * words * 8 + s * 8 + 2 * budget * dh * 4) as f64;
+    let flops = (4 * budget * dh + 2 * dh * rbit) as f64;
+    let est = float_kernel(&Device::cpu(), hbm, flops);
+
+    let variants: &[(&str, bool, bool, bool, KernelMode)] = &[
+        ("Simple", false, false, false, KernelMode::Reference),
+        ("+Score", false, true, false, KernelMode::Reference),
+        ("+Score+FusedAttn", false, true, true, KernelMode::Reference),
+        ("+Score+FusedAttn+Encode (HATA)", true, true, true, KernelMode::Reference),
+        ("+Simd kernels", true, true, true, KernelMode::Simd),
+        ("+SimdFma kernels", true, true, true, KernelMode::SimdFma),
     ];
+    let mut header: Vec<&str> = vec!["variant", "ms/step", "speedup_vs_simple"];
+    header.extend_from_slice(&ROOFLINE_HEADER);
     let mut table = Table::new(
         &format!("Fig 9 proxy: optimization ablation (ctx={s}, budget={budget}, dh={dh})"),
-        &["variant", "ms/step", "speedup_vs_simple"],
+        &header,
     );
+    eprintln!("[fig9] simd backend: {}", backend_name());
     let mut base = None;
-    for &(name, enc, score, attn) in variants {
+    for &(name, enc, score, attn, mode) in variants {
         let r = bench(name, 1, iters, || {
             qc.clear();
             if enc {
@@ -57,13 +78,15 @@ fn main() {
             topk_counting(&iscores, rbit as i32, budget, &mut hist, &mut idx);
             let inp = f.inputs();
             if attn {
-                sparse_attention_fused(&inp, &idx, &mut probs, &mut out);
+                sparse_attention_fused(mode, &inp, &idx, &mut probs, &mut out);
             } else {
-                sparse_attention_gather(&inp, &idx, &mut kb, &mut vb, &mut probs, &mut out);
+                sparse_attention_gather(mode, &inp, &idx, &mut kb, &mut vb, &mut probs, &mut out);
             }
         });
         let b = *base.get_or_insert(r.mean_s);
-        table.row(vec![name.to_string(), fmt(r.mean_s * 1e3), fmt(b / r.mean_s)]);
+        let mut row = vec![name.to_string(), fmt(r.mean_s * 1e3), fmt(b / r.mean_s)];
+        row.extend(roofline_cells(&est, r.mean_s));
+        table.row(row);
         eprintln!("[fig9] {name} done");
     }
     println!("{}", table.render());

@@ -1,12 +1,62 @@
 //! Microbenchmarks of the HATA hot-path primitives — the §Perf working
 //! set (EXPERIMENTS.md §Perf records before/after from this bench).
+//!
+//! Two tables: the integer/code primitives (hamming, encode, top-k), and
+//! the float kernel layer swept across the `--kernels` tiers (Reference /
+//! Simd / SimdFma, tensor/simd.rs) with measured GB/s and GFLOP/s next
+//! to the `simulator::roofline` CPU bound for the same traffic and work.
 
+use hata::attention::compute::{
+    dense_attention, prefill_tile_attention, sparse_attention_fused, PrefillTile,
+};
 use hata::attention::hamming::{scores_group, scores_scalar, scores_word};
 use hata::attention::hashenc::{encode_fused, encode_fused_blocked, encode_unfused};
 use hata::attention::topk::{topk_counting, topk_heap, topk_quickselect};
-use hata::bench::harness::bench;
-use hata::bench::report::{fmt, Table};
+use hata::bench::harness::{bench, LayerFixture};
+use hata::bench::report::{fmt, roofline_cells, ROOFLINE_HEADER, Table};
+use hata::simulator::roofline::{float_kernel, Device, KernelEstimate};
+use hata::tensor::simd::{self, backend_name, KernelMode};
 use hata::util::rng::Rng;
+
+/// The seed-era vecmat with the `xi == 0.0` skip branch, kept here so the
+/// branch-removal win stays measurable against the branch-free kernels.
+fn vecmat_branchy(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a[i * m..(i + 1) * m];
+        for (yy, &aij) in y.iter_mut().zip(row) {
+            *yy += xi * aij;
+        }
+    }
+}
+
+/// Bench one float kernel in all three `--kernels` modes and append a row
+/// per mode: ms, speedup vs Reference, and the shared roofline columns.
+fn run_modes(
+    table: &mut Table,
+    name: &str,
+    est: &KernelEstimate,
+    iters: usize,
+    mut f: impl FnMut(KernelMode),
+) {
+    let mut ref_s = None;
+    for mode in KernelMode::all() {
+        let r = bench(name, 1, iters, || f(mode));
+        let base = *ref_s.get_or_insert(r.mean_s);
+        let mut row = vec![
+            name.to_string(),
+            mode.name().to_string(),
+            fmt(r.mean_s * 1e3),
+            fmt(base / r.mean_s),
+        ];
+        row.extend(roofline_cells(est, r.mean_s));
+        table.row(row);
+    }
+    eprintln!("[microbench] {name} done");
+}
 
 fn main() {
     let iters: usize =
@@ -82,4 +132,127 @@ fn main() {
 
     println!("{}", table.render());
     table.write_csv("bench_results", "microbench").unwrap();
+
+    // ---- float kernel layer x --kernels modes, with roofline columns
+    let dev = Device::cpu();
+    let mut header: Vec<&str> = vec!["kernel", "mode", "ms", "speedup_vs_ref"];
+    header.extend_from_slice(&ROOFLINE_HEADER);
+    let mut ft = Table::new(
+        &format!("float kernels x --kernels mode (simd backend: {})", backend_name()),
+        &header,
+    );
+
+    // vecmat at the decode projection shape (hidden x hidden row-major)
+    let (n, m) = (1024usize, 1024usize);
+    let xv = rng.normal_vec(n);
+    let wv = rng.normal_vec(n * m);
+    let mut yv = vec![0.0f32; m];
+    let est = float_kernel(&dev, ((n * m + n + m) * 4) as f64, (2 * n * m) as f64);
+    let r = bench("vecmat branchy", 1, iters, || {
+        vecmat_branchy(&xv, &wv, m, &mut yv);
+    });
+    let mut row =
+        vec!["vecmat_1024x1024".into(), "branchy-seed".into(), fmt(r.mean_s * 1e3), "-".into()];
+    row.extend(roofline_cells(&est, r.mean_s));
+    ft.row(row);
+    run_modes(&mut ft, "vecmat_1024x1024", &est, iters, |mode| {
+        simd::vecmat(mode, &xv, &wv, m, &mut yv);
+    });
+
+    // long dot product (memory-streaming shape)
+    let nbig = 1 << 20;
+    let av = rng.normal_vec(nbig);
+    let bv = rng.normal_vec(nbig);
+    let est = float_kernel(&dev, (2 * nbig * 4) as f64, (2 * nbig) as f64);
+    run_modes(&mut ft, "dot_1M", &est, iters, |mode| {
+        std::hint::black_box(simd::dot(mode, &av, &bv));
+    });
+
+    // decode attention kernels at dh=128 over a 4K context
+    let sa = 4096usize;
+    let fx = LayerFixture::new(sa, dh, 1, rbit, 11);
+    let mut probs = Vec::new();
+    let mut aout = vec![0.0f32; dh];
+    let est = float_kernel(&dev, (2 * sa * dh * 4) as f64, (4 * sa * dh) as f64);
+    run_modes(&mut ft, "dense_attn_s4096", &est, iters, |mode| {
+        dense_attention(mode, &fx.inputs(), &mut probs, &mut aout);
+    });
+
+    let k = 256usize;
+    let sel: Vec<u32> = (0..sa as u32).step_by(sa / k).collect();
+    let est = float_kernel(&dev, (2 * k * dh * 4) as f64, (4 * k * dh) as f64);
+    run_modes(&mut ft, "sparse_fused_k256", &est, iters, |mode| {
+        sparse_attention_fused(mode, &fx.inputs(), &sel, &mut probs, &mut aout);
+    });
+
+    // prefill tile: 32 query rows attending causally over a ~4K prefix
+    let rows = 32usize;
+    let start = sa - rows;
+    let qt = rng.normal_vec(rows * dh);
+    let mut tout = vec![0.0f32; rows * dh];
+    let macs: usize = (0..rows).map(|r| start + r + 1).sum();
+    let est = float_kernel(&dev, (2 * macs * dh * 4) as f64, (4 * macs * dh) as f64);
+    run_modes(&mut ft, "prefill_tile_32rows", &est, iters, |mode| {
+        let tile = PrefillTile {
+            q: &qt,
+            k: &fx.k,
+            v: &fx.v,
+            group: 1,
+            dh,
+            qstride: dh,
+            qoff: 0,
+            t0: 0,
+            start,
+            kernels: mode,
+        };
+        prefill_tile_attention(&tile, &mut probs, &mut tout);
+    });
+
+    // elementwise kernels at the model hidden width, batched x64
+    let gn = rng.normal_vec(1024);
+    let xr = rng.normal_vec(1024);
+    let mut yr = vec![0.0f32; 1024];
+    let est = float_kernel(&dev, (64 * 3 * 1024 * 4) as f64, (64 * 3 * 1024) as f64);
+    run_modes(&mut ft, "rms_norm_1024x64", &est, iters, |mode| {
+        for _ in 0..64 {
+            simd::rms_norm(mode, &xr, &gn, &mut yr, 1e-5);
+        }
+    });
+
+    let mut sm = rng.normal_vec(4096);
+    let est = float_kernel(&dev, (16 * 4096 * 8) as f64, (16 * 4096 * 8) as f64);
+    run_modes(&mut ft, "softmax_4096x16", &est, iters, |mode| {
+        for _ in 0..16 {
+            simd::softmax(mode, &mut sm);
+        }
+    });
+
+    let upv = rng.normal_vec(1024);
+    let mut gate = rng.normal_vec(1024);
+    let est = float_kernel(&dev, (64 * 3 * 1024 * 4) as f64, (64 * 6 * 1024) as f64);
+    run_modes(&mut ft, "silu_mul_1024x64", &est, iters, |mode| {
+        for _ in 0..64 {
+            simd::silu_mul(mode, &mut gate, &upv);
+        }
+    });
+
+    // in-bench guarantees: Simd is bit-identical to Reference; SimdFma
+    // stays within fast-math tolerance (tensor/simd.rs tests bound ULPs)
+    let mut o_ref = vec![0.0f32; dh];
+    let mut o_simd = vec![0.0f32; dh];
+    let mut o_fma = vec![0.0f32; dh];
+    dense_attention(KernelMode::Reference, &fx.inputs(), &mut probs, &mut o_ref);
+    dense_attention(KernelMode::Simd, &fx.inputs(), &mut probs, &mut o_simd);
+    dense_attention(KernelMode::SimdFma, &fx.inputs(), &mut probs, &mut o_fma);
+    assert!(
+        o_ref.iter().zip(&o_simd).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "Simd must be bit-identical to Reference"
+    );
+    assert!(
+        o_ref.iter().zip(&o_fma).all(|(a, b)| (a - b).abs() <= 1e-4 * a.abs().max(1.0)),
+        "SimdFma drifted past fast-math tolerance"
+    );
+
+    println!("{}", ft.render());
+    ft.write_csv("bench_results", "microbench_kernels").unwrap();
 }

@@ -21,44 +21,53 @@
 
 use super::AttnInputs;
 use crate::tensor::ops::dot;
+use crate::tensor::simd::{self, KernelMode};
 
 /// Dense attention over the full cache: out[g] = softmax(q_g K^T / sqrt(d)) V.
-pub fn dense_attention(inp: &AttnInputs, probs: &mut Vec<f32>, out: &mut [f32]) {
+///
+/// The kernel is staged onto the mode-dispatched primitives in
+/// [`crate::tensor::simd`]: a [`simd::dot`] score pass with a scalar
+/// streaming max, then a fused exp/accumulate pass that dispatches the
+/// dominant `o += p * v` row update through [`simd::axpy`] (the scalar
+/// `exp` is 1/dh of the MAC work and keeps `probs` holding the raw
+/// scores, which the H2O accumulator reads after the call), and a final
+/// [`simd::scale`]. For `Reference` and `Simd` every per-element
+/// operation happens in the same order as the historical fused scalar
+/// loop, so the result is bit-identical across all three of {old scalar
+/// kernel, `Reference`, `Simd`}; `SimdFma` is the documented fast-math
+/// tier (FMA contractions in `dot`/`axpy`).
+pub fn dense_attention(mode: KernelMode, inp: &AttnInputs, probs: &mut Vec<f32>, out: &mut [f32]) {
     let scale = 1.0 / (inp.dh as f32).sqrt();
     probs.clear();
     probs.resize(inp.s, 0.0);
     for g in 0..inp.group {
         let q = inp.q_row(g);
-        // score pass
+        // score pass (scalar streaming max: trivial cost, fixed order)
         let mut max = f32::NEG_INFINITY;
         for t in 0..inp.s {
-            let s = dot(q, inp.k_row(t)) * scale;
+            let s = simd::dot(mode, q, inp.k_row(t)) * scale;
             probs[t] = s;
             if s > max {
                 max = s;
             }
         }
-        // softmax + weighted sum fused (single pass over V)
+        // softmax + weighted sum fused: scalar exp per token, then one
+        // lane-parallel row update (probs keeps the raw scores)
         let o = &mut out[g * inp.dh..(g + 1) * inp.dh];
         o.fill(0.0);
         let mut denom = 0.0f32;
         for t in 0..inp.s {
             let p = (probs[t] - max).exp();
             denom += p;
-            let v = &inp.v[t * inp.dh..(t + 1) * inp.dh];
-            for (oj, &vj) in o.iter_mut().zip(v) {
-                *oj += p * vj;
-            }
+            simd::axpy(mode, p, &inp.v[t * inp.dh..(t + 1) * inp.dh], o);
         }
-        let inv = 1.0 / denom;
-        for oj in o.iter_mut() {
-            *oj *= inv;
-        }
+        simd::scale(mode, o, 1.0 / denom);
     }
 }
 
 /// 'Simple' sparse: explicit gather into scratch buffers, then attend.
 pub fn sparse_attention_gather(
+    mode: KernelMode,
     inp: &AttnInputs,
     indices: &[u32],
     kbuf: &mut Vec<f32>,
@@ -89,12 +98,17 @@ pub fn sparse_attention_gather(
         pos: inp.pos,
         side: super::Side::default(),
     };
-    dense_attention(&gathered, probs, out);
+    dense_attention(mode, &gathered, probs, out);
 }
 
 /// Fused gather + attention: selected K/V rows stream through the score
-/// and accumulate passes without an intermediate copy.
+/// and accumulate passes without an intermediate copy. Staged onto the
+/// same mode-dispatched primitives as [`dense_attention`] (and with the
+/// same bit-identity guarantee for `Reference`/`Simd`): the gather is a
+/// per-row indirection, but each gathered row is contiguous, so the
+/// lane kernels read contiguous memory.
 pub fn sparse_attention_fused(
+    mode: KernelMode,
     inp: &AttnInputs,
     indices: &[u32],
     probs: &mut Vec<f32>,
@@ -108,7 +122,7 @@ pub fn sparse_attention_fused(
         let q = inp.q_row(g);
         let mut max = f32::NEG_INFINITY;
         for (j, &t) in indices.iter().enumerate() {
-            let s = dot(q, inp.k_row(t as usize)) * scale;
+            let s = simd::dot(mode, q, inp.k_row(t as usize)) * scale;
             probs[j] = s;
             if s > max {
                 max = s;
@@ -121,14 +135,9 @@ pub fn sparse_attention_fused(
             let p = (probs[j] - max).exp();
             denom += p;
             let v = &inp.v[t as usize * inp.dh..(t as usize + 1) * inp.dh];
-            for (oj, &vj) in o.iter_mut().zip(v) {
-                *oj += p * vj;
-            }
+            simd::axpy(mode, p, v, o);
         }
-        let inv = 1.0 / denom;
-        for oj in o.iter_mut() {
-            *oj *= inv;
-        }
+        simd::scale(mode, o, 1.0 / denom);
     }
 }
 
@@ -154,6 +163,8 @@ pub struct PrefillTile<'a> {
     pub t0: usize,
     /// Absolute position of block row 0.
     pub start: usize,
+    /// Kernel tier to run the per-row [`dense_attention`] in.
+    pub kernels: KernelMode,
 }
 
 /// Causally-masked attention for one query tile: row `r` (block index
@@ -185,7 +196,7 @@ pub fn prefill_tile_attention(tile: &PrefillTile, probs: &mut Vec<f32>, out: &mu
             pos,
             side: super::Side::default(),
         };
-        dense_attention(&inp, probs, &mut out[r * ghd..(r + 1) * ghd]);
+        dense_attention(tile.kernels, &inp, probs, &mut out[r * ghd..(r + 1) * ghd]);
     }
 }
 
@@ -267,12 +278,14 @@ mod tests {
             let v = rng.normal_vec(s * dh);
             let inp = make_inputs(&q, &k, &v, group, dh, s);
             let mut probs = Vec::new();
-            let mut out = vec![0.0; group * dh];
-            dense_attention(&inp, &mut probs, &mut out);
-            for g in 0..group {
-                let want = reference(&q[g * dh..(g + 1) * dh], &k, &v, dh, s);
-                for (a, b) in out[g * dh..(g + 1) * dh].iter().zip(&want) {
-                    prop_close(*a, *b, 1e-4, "dense out")?;
+            for mode in KernelMode::all() {
+                let mut out = vec![0.0; group * dh];
+                dense_attention(mode, &inp, &mut probs, &mut out);
+                for g in 0..group {
+                    let want = reference(&q[g * dh..(g + 1) * dh], &k, &v, dh, s);
+                    for (a, b) in out[g * dh..(g + 1) * dh].iter().zip(&want) {
+                        prop_close(*a, *b, 1e-4, "dense out")?;
+                    }
                 }
             }
             Ok(())
@@ -294,8 +307,9 @@ mod tests {
             let (mut kb, mut vb, mut p1, mut p2) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
             let mut out_g = vec![0.0; group * dh];
             let mut out_f = vec![0.0; group * dh];
-            sparse_attention_gather(&inp, &idx, &mut kb, &mut vb, &mut p1, &mut out_g);
-            sparse_attention_fused(&inp, &idx, &mut p2, &mut out_f);
+            let mode = KernelMode::Simd;
+            sparse_attention_gather(mode, &inp, &idx, &mut kb, &mut vb, &mut p1, &mut out_g);
+            sparse_attention_fused(mode, &inp, &idx, &mut p2, &mut out_f);
             for (a, b) in out_g.iter().zip(&out_f) {
                 prop_close(*a, *b, 1e-5, "gather vs fused")?;
             }
@@ -315,8 +329,8 @@ mod tests {
         let mut probs = Vec::new();
         let mut a = vec![0.0; group * dh];
         let mut b = vec![0.0; group * dh];
-        dense_attention(&inp, &mut probs, &mut a);
-        sparse_attention_fused(&inp, &idx, &mut probs, &mut b);
+        dense_attention(KernelMode::Simd, &inp, &mut probs, &mut a);
+        sparse_attention_fused(KernelMode::Simd, &inp, &idx, &mut probs, &mut b);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-5);
         }
@@ -332,7 +346,7 @@ mod tests {
         let inp = make_inputs(&q, &k, &v, 1, dh, s);
         let mut probs = Vec::new();
         let mut out = vec![0.0; dh];
-        sparse_attention_fused(&inp, &[7], &mut probs, &mut out);
+        sparse_attention_fused(KernelMode::Simd, &inp, &[7], &mut probs, &mut out);
         for (a, b) in out.iter().zip(&v[7 * dh..8 * dh]) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -347,10 +361,46 @@ mod tests {
         let v = vec![1.0; s * dh];
         let inp = make_inputs(&q, &k, &v, 1, dh, s);
         let mut probs = Vec::new();
-        let mut out = vec![0.0; dh];
-        dense_attention(&inp, &mut probs, &mut out);
-        assert!(out.iter().all(|x| x.is_finite()));
-        assert!((out[0] - 1.0).abs() < 1e-5);
+        for mode in KernelMode::all() {
+            let mut out = vec![0.0; dh];
+            dense_attention(mode, &inp, &mut probs, &mut out);
+            assert!(out.iter().all(|x| x.is_finite()), "{}", mode.name());
+            assert!((out[0] - 1.0).abs() < 1e-5, "{}", mode.name());
+        }
+    }
+
+    /// The tentpole invariant at the attention level: `Simd` output is
+    /// bitwise equal to `Reference` for the dense and fused-sparse
+    /// kernels, at the real head dim (dh = 128) and with ragged index
+    /// sets exercising every lane tail.
+    #[test]
+    fn simd_mode_bit_identical_dense_and_sparse() {
+        check(20, |rng: &mut Rng| {
+            let dh = 128;
+            let s = 1 + rng.below(60);
+            let group = 1 + rng.below(4);
+            let q = rng.normal_vec(group * dh);
+            let k = rng.normal_vec(s * dh);
+            let v = rng.normal_vec(s * dh);
+            let inp = make_inputs(&q, &k, &v, group, dh, s);
+            let mut probs = Vec::new();
+            let mut a = vec![0.0f32; group * dh];
+            let mut b = vec![0.0f32; group * dh];
+            dense_attention(KernelMode::Reference, &inp, &mut probs, &mut a);
+            dense_attention(KernelMode::Simd, &inp, &mut probs, &mut b);
+            prop_assert(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "dense simd bits",
+            )?;
+            let n = 1 + rng.below(s);
+            let idx: Vec<u32> = rng.choose_distinct(s, n).iter().map(|&i| i as u32).collect();
+            sparse_attention_fused(KernelMode::Reference, &inp, &idx, &mut probs, &mut a);
+            sparse_attention_fused(KernelMode::Simd, &inp, &idx, &mut probs, &mut b);
+            prop_assert(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused simd bits",
+            )
+        });
     }
 
     #[test]
@@ -381,6 +431,7 @@ mod tests {
                 qoff: kv * group * dh,
                 t0,
                 start,
+                kernels: KernelMode::Simd,
             };
             let mut probs = Vec::new();
             let mut got = vec![0.0f32; rows * group * dh];
@@ -397,7 +448,7 @@ mod tests {
                     s,
                 );
                 let mut want = vec![0.0f32; group * dh];
-                dense_attention(&inp, &mut probs, &mut want);
+                dense_attention(KernelMode::Reference, &inp, &mut probs, &mut want);
                 prop_assert(
                     got[r * group * dh..(r + 1) * group * dh] == want[..],
                     "tile row differs from per-token dense",

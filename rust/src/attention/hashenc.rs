@@ -13,10 +13,11 @@
 
 use crate::tensor::ops::dot;
 
-/// Packed code words per rbit.
+/// Packed code words per rbit. `rbit` need not be a multiple of 64: the
+/// last word is then partial, and every encoder leaves its high padding
+/// bits zero (so padded codes XOR/popcount cleanly in the hamming path).
 pub fn words64(rbit: usize) -> usize {
-    debug_assert!(rbit % 64 == 0, "rbit must be a multiple of 64");
-    rbit / 64
+    rbit.div_ceil(64)
 }
 
 /// Fused: project+sign+pack one vector `x` [dh] with `w` [dh, rbit]
@@ -27,7 +28,7 @@ pub fn encode_fused(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64>) {
     for word in 0..words64(rbit) {
         let mut packed = 0u64;
         let base = word * 64;
-        for bit in 0..64 {
+        for bit in 0..(rbit - base).min(64) {
             let col = base + bit;
             // y = sum_i x[i] * w[i, col]; sign >= 0 -> bit set
             let mut y = 0.0f32;
@@ -54,7 +55,7 @@ pub fn encode_unfused(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64>) {
     let bits: Vec<bool> = proj.iter().map(|&y| y >= 0.0).collect();
     for word in 0..words64(rbit) {
         let mut packed = 0u64;
-        for bit in 0..64 {
+        for bit in 0..(rbit - word * 64).min(64) {
             packed |= (bits[word * 64 + bit] as u64) << bit;
         }
         out.push(packed);
@@ -66,15 +67,16 @@ pub fn encode_unfused(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64>) {
 pub fn encode_fused_blocked(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64>) {
     for word in 0..words64(rbit) {
         let base = word * 64;
+        let width = (rbit - base).min(64);
         let mut acc = [0.0f32; 64];
         for (i, &xi) in x.iter().enumerate() {
-            let row = &w[i * rbit + base..i * rbit + base + 64];
-            for b in 0..64 {
-                acc[b] += xi * row[b];
+            let row = &w[i * rbit + base..i * rbit + base + width];
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a += xi * r;
             }
         }
         let mut packed = 0u64;
-        for (b, &a) in acc.iter().enumerate() {
+        for (b, &a) in acc.iter().take(width).enumerate() {
             packed |= ((a >= 0.0) as u64) << b;
         }
         out.push(packed);
@@ -126,6 +128,32 @@ mod tests {
             prop_assert(unpack(&a, rbit) == want, "fused mismatch")?;
             prop_assert(a == b, "unfused differs from fused")?;
             prop_assert(a == c, "blocked differs from fused")
+        });
+    }
+
+    #[test]
+    fn fused_equals_unfused_any_rbit_and_padding_is_zero() {
+        // rbit sweep includes non-multiples of 64: the last word is then
+        // partial and its high padding bits must stay zero everywhere.
+        check(80, |rng: &mut Rng| {
+            let dh = [8, 16, 24, 32][rng.below(4)];
+            let rbit = [64, 128, 192, 256, 40, 100, 130, 200][rng.below(8)];
+            let x = rng.normal_vec(dh);
+            let w = rng.normal_vec(dh * rbit);
+            let want = reference_bits(&x, &w, rbit);
+            let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+            encode_fused(&x, &w, rbit, &mut a);
+            encode_unfused(&x, &w, rbit, &mut b);
+            encode_fused_blocked(&x, &w, rbit, &mut c);
+            prop_assert(a.len() == rbit.div_ceil(64), "word count")?;
+            prop_assert(unpack(&a, rbit) == want, "fused mismatch vs reference")?;
+            prop_assert(a == b, "unfused differs from fused")?;
+            prop_assert(a == c, "blocked differs from fused")?;
+            if rbit % 64 != 0 {
+                let pad = a[a.len() - 1] >> (rbit % 64);
+                prop_assert(pad == 0, "padding bits of the partial last word set")?;
+            }
+            Ok(())
         });
     }
 

@@ -137,8 +137,8 @@ pub fn fidelity(
             let mut dense_out = vec![0.0f32; group * cfg.head_dim];
             let mut sparse_out = vec![0.0f32; group * cfg.head_dim];
             let mut probs = Vec::new();
-            dense_attention(&inp, &mut probs, &mut dense_out);
-            sparse_attention_fused(&inp, &indices, &mut probs, &mut sparse_out);
+            dense_attention(model.kernels, &inp, &mut probs, &mut dense_out);
+            sparse_attention_fused(model.kernels, &inp, &indices, &mut probs, &mut sparse_out);
             let num: f32 = dense_out
                 .iter()
                 .zip(&sparse_out)

@@ -67,6 +67,26 @@ impl Table {
     }
 }
 
+/// Header labels matching the cells produced by [`roofline_cells`].
+pub const ROOFLINE_HEADER: [&str; 5] = ["GB/s", "roof_GB/s", "GFLOP/s", "roof_GFLOP/s", "%roof"];
+
+/// Shared roofline columns for the float kernel benches (microbench,
+/// fig9): measured GB/s and GFLOP/s for the kernel's known traffic and
+/// work, the `simulator::roofline` bound for the same counts, and the
+/// fraction of that bound achieved. Keeps every bench printing bounds
+/// from the one model instead of hand-rolled constants.
+pub fn roofline_cells(
+    est: &crate::simulator::roofline::KernelEstimate,
+    measured_s: f64,
+) -> Vec<String> {
+    let gbs = est.hbm_bytes / measured_s / 1e9;
+    let gflops = est.flops / measured_s / 1e9;
+    let roof_gbs = est.hbm_bytes / est.seconds / 1e9;
+    let roof_gflops = est.flops / est.seconds / 1e9;
+    let pct = 100.0 * est.seconds / measured_s;
+    vec![fmt(gbs), fmt(roof_gbs), fmt(gflops), fmt(roof_gflops), fmt(pct)]
+}
+
 /// Format a float with sensible precision for table cells.
 pub fn fmt(v: f64) -> String {
     if v.is_nan() {
@@ -113,6 +133,21 @@ mod tests {
         let body = std::fs::read_to_string(dir.join("t.csv")).unwrap();
         assert_eq!(body, "a,b\n1,2\n");
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn roofline_cells_match_header_and_bound() {
+        let dev = crate::simulator::roofline::Device::cpu();
+        // 1 GB of traffic, trivial flops: bound = bandwidth time
+        let est = crate::simulator::roofline::float_kernel(&dev, 1e9, 1.0);
+        // measured at exactly the bound -> GB/s equals roof, %roof = 100
+        let cells = roofline_cells(&est, est.seconds);
+        assert_eq!(cells.len(), ROOFLINE_HEADER.len());
+        assert_eq!(cells[0], cells[1]);
+        assert_eq!(cells[4], "100");
+        // measured 2x slower -> half the roof
+        let slow = roofline_cells(&est, est.seconds * 2.0);
+        assert_eq!(slow[4], "50.00");
     }
 
     #[test]

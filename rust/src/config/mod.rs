@@ -330,6 +330,10 @@ pub struct ServeConfig {
     pub temperature: f32,
     /// Base seed for per-request sampling RNG streams.
     pub seed: u64,
+    /// f32 kernel tier (`--kernels`): scalar `Reference`, the
+    /// bit-identical vectorized `Simd` default, or the `SimdFma`
+    /// fast-math tier (see docs/PERFORMANCE.md §--kernels).
+    pub kernels: crate::tensor::simd::KernelMode,
 }
 
 impl Default for ServeConfig {
@@ -353,6 +357,7 @@ impl Default for ServeConfig {
             graph_cache: true,
             temperature: 0.0,
             seed: 0,
+            kernels: crate::tensor::simd::KernelMode::default(),
         }
     }
 }

@@ -21,6 +21,7 @@ use hata::coordinator::request::Request;
 use hata::coordinator::router::{Policy, Router};
 use hata::kvcache::MethodAux;
 use hata::model::{tokenizer, weights::Weights, Model};
+use hata::tensor::simd::KernelMode;
 use hata::util::cli::Args;
 use hata::util::rng::Rng;
 
@@ -28,7 +29,7 @@ const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
-    "exec", "graph-cache",
+    "exec", "graph-cache", "kernels",
 ];
 
 fn main() {
@@ -81,6 +82,10 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
                     steps (rebuild only on batch-shape change; the
                     zero-allocation steady-state fast path) | off
                     rebuilds it every token; bit-identical either way
+  --kernels MODE    f32 kernel tier: reference (scalar) | simd (default,
+                    runtime AVX2/NEON dispatch, bit-identical to
+                    reference) | simd-fma (fast-math FMA + poly exp,
+                    ULP-bounded; see docs/PERFORMANCE.md)
   --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
@@ -102,7 +107,9 @@ fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
                     bail!("no trained hash weights for rbit={rbit}");
                 }
                 let aux = MethodAux::build(&cfg, serve, None, 7);
-                return Ok(Model::new(cfg, weights, aux));
+                let mut model = Model::new(cfg, weights, aux);
+                model.kernels = serve.kernels;
+                return Ok(model);
             }
         }
         eprintln!("note: artifacts not found; falling back to random weights");
@@ -111,7 +118,9 @@ fn load_model(args: &Args, serve: &ServeConfig) -> Result<Model> {
     let mut rng = Rng::new(0);
     let weights = Weights::random(&cfg, &mut rng);
     let aux = MethodAux::build(&cfg, serve, None, 7);
-    Ok(Model::new(cfg, weights, aux))
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    Ok(model)
 }
 
 /// Parse an on/off CLI value (accepts true/false and 1/0 aliases).
@@ -130,6 +139,8 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         ExecMode::parse(&args.str("exec", base.exec_mode.name())).context("bad --exec")?;
     let graph_cache = parse_on_off(&args.str("graph-cache", "on"))
         .context("bad --graph-cache (expected on|off)")?;
+    let kernels =
+        KernelMode::parse(&args.str("kernels", base.kernels.name())).context("bad --kernels")?;
     Ok(ServeConfig {
         method,
         budget: args.usize("budget", 64)?,
@@ -139,6 +150,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         graph_cache,
         temperature: args.f64("temperature", 0.0)? as f32,
         seed: args.u64("seed", 0)?,
+        kernels,
         ..base
     })
 }

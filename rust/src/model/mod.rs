@@ -102,7 +102,8 @@ use crate::attention::methods::h2o_accumulate;
 use crate::attention::{AttnInputs, MethodState, Scratch, Selector};
 use crate::config::{ExecMode, Method, ModelConfig, ServeConfig};
 use crate::kvcache::{HeadHandle, HeadMut, MethodAux, SeqKvCache};
-use crate::tensor::ops::{rms_norm, rope_inplace, silu, vecmat};
+use crate::tensor::ops::rope_inplace;
+use crate::tensor::simd::{self, KernelMode};
 use crate::util::threadpool::ThreadPool;
 use crate::util::workqueue::{QueueStats, TaskGraph, TaskId};
 use weights::Weights;
@@ -546,12 +547,21 @@ pub struct Model {
     pub aux: MethodAux,
     /// Which sparse-attention compute variant decode uses.
     pub sparse_kernel: SparseKernel,
+    /// Which f32 kernel tier every float loop runs in (`--kernels`).
+    /// `Simd` (the default) is bit-identical to `Reference`.
+    pub kernels: KernelMode,
 }
 
 impl Model {
-    /// Assemble a model (fused sparse kernel by default).
+    /// Assemble a model (fused sparse kernel, SIMD kernels by default).
     pub fn new(cfg: ModelConfig, weights: Weights, aux: MethodAux) -> Self {
-        Model { cfg, weights, aux, sparse_kernel: SparseKernel::Fused }
+        Model {
+            cfg,
+            weights,
+            aux,
+            sparse_kernel: SparseKernel::Fused,
+            kernels: KernelMode::default(),
+        }
     }
 
     /// Attention block input: rms-norm + q/k/v projections + RoPE, into
@@ -559,10 +569,11 @@ impl Model {
     fn layer_qkv(&self, li: usize, pos: usize, sc: &mut DecodeScratch) {
         let cfg = &self.cfg;
         let lw = &self.weights.layers[li];
-        rms_norm(&sc.x, lw.attn_norm.data(), &mut sc.h, 1e-5);
-        vecmat(&sc.h, lw.wq.data(), cfg.n_heads * cfg.head_dim, &mut sc.q);
-        vecmat(&sc.h, lw.wk.data(), cfg.n_kv_heads * cfg.head_dim, &mut sc.k);
-        vecmat(&sc.h, lw.wv.data(), cfg.n_kv_heads * cfg.head_dim, &mut sc.v);
+        let km = self.kernels;
+        simd::rms_norm(km, &sc.x, lw.attn_norm.data(), &mut sc.h, 1e-5);
+        simd::vecmat(km, &sc.h, lw.wq.data(), cfg.n_heads * cfg.head_dim, &mut sc.q);
+        simd::vecmat(km, &sc.h, lw.wk.data(), cfg.n_kv_heads * cfg.head_dim, &mut sc.k);
+        simd::vecmat(km, &sc.h, lw.wv.data(), cfg.n_kv_heads * cfg.head_dim, &mut sc.v);
         for hh in 0..cfg.n_heads {
             let row = &mut sc.q[hh * cfg.head_dim..(hh + 1) * cfg.head_dim];
             rope_inplace(row, pos, cfg.rope_theta);
@@ -577,17 +588,16 @@ impl Model {
     fn layer_mlp(&self, li: usize, sc: &mut DecodeScratch) {
         let cfg = &self.cfg;
         let lw = &self.weights.layers[li];
-        vecmat(&sc.attn, lw.wo.data(), cfg.d_model, &mut sc.h);
+        let km = self.kernels;
+        simd::vecmat(km, &sc.attn, lw.wo.data(), cfg.d_model, &mut sc.h);
         for (x, &h) in sc.x.iter_mut().zip(&sc.h) {
             *x += h;
         }
-        rms_norm(&sc.x, lw.mlp_norm.data(), &mut sc.h, 1e-5);
-        vecmat(&sc.h, lw.w_gate.data(), cfg.ffn_hidden, &mut sc.gate);
-        vecmat(&sc.h, lw.w_up.data(), cfg.ffn_hidden, &mut sc.up);
-        for (g, &u) in sc.gate.iter_mut().zip(&sc.up) {
-            *g = silu(*g) * u;
-        }
-        vecmat(&sc.gate, lw.w_down.data(), cfg.d_model, &mut sc.mlp);
+        simd::rms_norm(km, &sc.x, lw.mlp_norm.data(), &mut sc.h, 1e-5);
+        simd::vecmat(km, &sc.h, lw.w_gate.data(), cfg.ffn_hidden, &mut sc.gate);
+        simd::vecmat(km, &sc.h, lw.w_up.data(), cfg.ffn_hidden, &mut sc.up);
+        simd::silu_mul(km, &mut sc.gate, &sc.up);
+        simd::vecmat(km, &sc.gate, lw.w_down.data(), cfg.d_model, &mut sc.mlp);
         for (x, &m) in sc.x.iter_mut().zip(&sc.mlp) {
             *x += m;
         }
@@ -595,8 +605,9 @@ impl Model {
 
     /// Final norm + LM head into `sc.logits`.
     fn lm_head(&self, sc: &mut DecodeScratch) {
-        rms_norm(&sc.x, self.weights.final_norm.data(), &mut sc.h, 1e-5);
-        vecmat(&sc.h, self.weights.lm_head.data(), self.cfg.vocab, &mut sc.logits);
+        let km = self.kernels;
+        simd::rms_norm(km, &sc.x, self.weights.final_norm.data(), &mut sc.h, 1e-5);
+        simd::vecmat(km, &sc.h, self.weights.lm_head.data(), self.cfg.vocab, &mut sc.logits);
     }
 
     /// One (sequence, kv-head) attention unit (paper Alg. 3 l.3-12):
@@ -634,8 +645,9 @@ impl Model {
             || w.layer < cfg.dense_layers
             || serve.budget == 0
             || serve.budget >= s_now;
+        let km = self.kernels;
         if use_dense {
-            dense_attention(&inp, &mut sel.probs, &mut *w.out);
+            dense_attention(km, &inp, &mut sel.probs, &mut *w.out);
             // H2O needs cumulative mass even during dense steps
             if serve.method == Method::H2o {
                 w.st.h2o_cum.resize(s_now, 0.0);
@@ -650,9 +662,10 @@ impl Model {
             let indices = std::mem::take(&mut sel.indices);
             match self.sparse_kernel {
                 SparseKernel::Fused => {
-                    sparse_attention_fused(&inp, &indices, &mut sel.probs, &mut *w.out)
+                    sparse_attention_fused(km, &inp, &indices, &mut sel.probs, &mut *w.out)
                 }
                 SparseKernel::Gather => sparse_attention_gather(
+                    km,
                     &inp,
                     &indices,
                     &mut *kgather,
@@ -1308,6 +1321,7 @@ impl Model {
                                 qoff: kv * ghd,
                                 t0: ti * tile,
                                 start,
+                                kernels: self.kernels,
                             },
                             out,
                         });
@@ -1531,6 +1545,7 @@ impl Model {
                     qoff: *qoff,
                     t0: *t0,
                     start: *start,
+                    kernels: self.kernels,
                 };
                 prefill_tile_attention(&tile, &mut ws.sel.probs, unsafe { out.get() });
             }
@@ -1572,14 +1587,15 @@ impl Model {
         let dh = cfg.head_dim;
         let qrow = cfg.n_heads * dh;
         let krow = cfg.n_kv_heads * dh;
+        let km = self.kernels;
         ws.h.resize(dm, 0.0);
         for (r, xs) in t.x.chunks(dm).enumerate() {
             let pos = t.pos0 + r;
-            rms_norm(xs, lw.attn_norm.data(), &mut ws.h, 1e-5);
+            simd::rms_norm(km, xs, lw.attn_norm.data(), &mut ws.h, 1e-5);
             let q = &mut t.q[r * qrow..(r + 1) * qrow];
-            vecmat(&ws.h, lw.wq.data(), qrow, q);
-            vecmat(&ws.h, lw.wk.data(), krow, &mut t.k[r * krow..(r + 1) * krow]);
-            vecmat(&ws.h, lw.wv.data(), krow, &mut t.v[r * krow..(r + 1) * krow]);
+            simd::vecmat(km, &ws.h, lw.wq.data(), qrow, q);
+            simd::vecmat(km, &ws.h, lw.wk.data(), krow, &mut t.k[r * krow..(r + 1) * krow]);
+            simd::vecmat(km, &ws.h, lw.wv.data(), krow, &mut t.v[r * krow..(r + 1) * krow]);
             for hh in 0..cfg.n_heads {
                 rope_inplace(&mut q[hh * dh..(hh + 1) * dh], pos, cfg.rope_theta);
             }
@@ -1602,6 +1618,7 @@ impl Model {
         let dm = cfg.d_model;
         let ghd = cfg.group() * cfg.head_dim;
         let arow = cfg.n_heads * cfg.head_dim;
+        let km = self.kernels;
         ws.attn_row.resize(arow, 0.0);
         ws.h.resize(dm, 0.0);
         ws.gate.resize(cfg.ffn_hidden, 0.0);
@@ -1613,17 +1630,15 @@ impl Model {
                 let at = (kv * t.len + row) * ghd;
                 ws.attn_row[kv * ghd..(kv + 1) * ghd].copy_from_slice(&t.attn[at..at + ghd]);
             }
-            vecmat(&ws.attn_row, lw.wo.data(), dm, &mut ws.h);
+            simd::vecmat(km, &ws.attn_row, lw.wo.data(), dm, &mut ws.h);
             for (x, &h) in xs.iter_mut().zip(&ws.h) {
                 *x += h;
             }
-            rms_norm(xs, lw.mlp_norm.data(), &mut ws.h, 1e-5);
-            vecmat(&ws.h, lw.w_gate.data(), cfg.ffn_hidden, &mut ws.gate);
-            vecmat(&ws.h, lw.w_up.data(), cfg.ffn_hidden, &mut ws.up);
-            for (g, &u) in ws.gate.iter_mut().zip(&ws.up) {
-                *g = silu(*g) * u;
-            }
-            vecmat(&ws.gate, lw.w_down.data(), dm, &mut ws.mlp);
+            simd::rms_norm(km, xs, lw.mlp_norm.data(), &mut ws.h, 1e-5);
+            simd::vecmat(km, &ws.h, lw.w_gate.data(), cfg.ffn_hidden, &mut ws.gate);
+            simd::vecmat(km, &ws.h, lw.w_up.data(), cfg.ffn_hidden, &mut ws.up);
+            simd::silu_mul(km, &mut ws.gate, &ws.up);
+            simd::vecmat(km, &ws.gate, lw.w_down.data(), dm, &mut ws.mlp);
             for (x, &m) in xs.iter_mut().zip(&ws.mlp) {
                 *x += m;
             }

@@ -7,6 +7,7 @@
 
 pub mod io;
 pub mod ops;
+pub mod simd;
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

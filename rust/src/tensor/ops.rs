@@ -1,10 +1,28 @@
-//! Numeric primitives shared by the native transformer and baselines.
+//! Scalar reference implementations of the numeric primitives shared by
+//! the native transformer and baselines.
 //!
 //! These run on raw slices so the decode loop allocates nothing; see
-//! EXPERIMENTS.md §Perf for the optimization history.
+//! EXPERIMENTS.md §Perf for the optimization history. They are also the
+//! *bit-exact reference* for the runtime-dispatched SIMD backends in
+//! [`crate::tensor::simd`]: every reduction here follows a canonical
+//! lane decomposition (16-element blocks split into two 8-lane
+//! accumulator groups, merged lane-wise and summed in a fixed order)
+//! that the vector paths reproduce instruction for instruction, so
+//! `KernelMode::Simd` output is bitwise equal to these loops.
+
+/// Lane-parallel block width shared with the SIMD backends: 16 elements
+/// = two 8-lane (AVX2-width) accumulator groups.
+pub(crate) const BLOCK: usize = 16;
 
 /// y += A[row] dot products: `y[j] = sum_i x[i] * a[i, j]` for A [n, m].
 /// (vector–matrix product, the decode-time projection shape x @ W).
+///
+/// Each output element `y[j]` is an independent sequential accumulation
+/// over rows `i`, which makes any lane-width vectorization of the inner
+/// loop bit-identical to this scalar form. The historical
+/// `if xi == 0.0 { continue; }` sparsity skip was removed: it cost a
+/// branch per row on dense inputs and blocked straight-line
+/// vectorization (microbench table in docs/PERFORMANCE.md §--kernels).
 pub fn vecmat(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
     let n = x.len();
     debug_assert_eq!(a.len(), n * m);
@@ -12,9 +30,6 @@ pub fn vecmat(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
     y.fill(0.0);
     // row-major A: accumulate row-by-row, which is sequential in memory.
     for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
         let row = &a[i * m..(i + 1) * m];
         for (yj, &aij) in y.iter_mut().zip(row) {
             *yj += xi * aij;
@@ -22,42 +37,48 @@ pub fn vecmat(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
     }
 }
 
-/// C = A @ B for row-major A [n, k], B [k, m] -> C [n, m] (ikj order).
+/// C = A @ B for row-major A [n, k], B [k, m] -> C [n, m] (ikj order —
+/// one [`vecmat`] per output row, same per-element accumulation order).
 pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, c: &mut [f32]) {
     debug_assert_eq!(a.len(), n * k);
     debug_assert_eq!(b.len(), k * m);
     debug_assert_eq!(c.len(), n * m);
-    c.fill(0.0);
     for i in 0..n {
-        for p in 0..k {
-            let aip = a[i * k + p];
-            if aip == 0.0 {
-                continue;
-            }
-            let brow = &b[p * m..(p + 1) * m];
-            let crow = &mut c[i * m..(i + 1) * m];
-            for (cj, &bj) in crow.iter_mut().zip(brow) {
-                *cj += aip * bj;
-            }
-        }
+        vecmat(&a[i * k..(i + 1) * k], b, m, &mut c[i * m..(i + 1) * m]);
     }
 }
 
-/// dot(a, b) with 4-way unrolling (autovectorizes well).
+/// dot(a, b) in the canonical lane-decomposed order: 16-element blocks
+/// into a 16-wide accumulator array (autovectorizes well), two 8-lane
+/// halves merged element-wise, an ordered left-to-right horizontal sum,
+/// then the scalar tail. The SIMD backends perform exactly this
+/// sequence with two 8-lane vector accumulators, so their result is
+/// bit-identical.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let (x, y) = (&a[i * 4..i * 4 + 4], &b[i * 4..i * 4 + 4]);
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
+    let n = a.len();
+    let blocks = n / BLOCK;
+    let mut acc = [0.0f32; BLOCK];
+    for i in 0..blocks {
+        let x = &a[i * BLOCK..i * BLOCK + BLOCK];
+        let y = &b[i * BLOCK..i * BLOCK + BLOCK];
+        for ((av, &xv), &yv) in acc.iter_mut().zip(x).zip(y) {
+            *av += xv * yv;
+        }
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
+    // lane merge (acc0 + acc1 in the vector paths) ...
+    let mut lane = [0.0f32; BLOCK / 2];
+    let (lo, hi) = acc.split_at(BLOCK / 2);
+    for ((l, &a0), &a1) in lane.iter_mut().zip(lo).zip(hi) {
+        *l = a0 + a1;
+    }
+    // ... then the ordered horizontal reduction and the scalar tail.
+    let mut s = lane[0];
+    for &l in &lane[1..] {
+        s += l;
+    }
+    for i in blocks * BLOCK..n {
         s += a[i] * b[i];
     }
     s
@@ -80,10 +101,11 @@ pub fn softmax(x: &mut [f32]) {
     }
 }
 
-/// RMSNorm: y = x / rms(x) * g.
+/// RMSNorm: y = x / rms(x) * g. The mean square reuses the canonical
+/// [`dot`] reduction (`dot(x, x)`) so the SIMD path matches bitwise.
 pub fn rms_norm(x: &[f32], g: &[f32], y: &mut [f32], eps: f32) {
     let n = x.len() as f32;
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / n;
+    let ms = dot(x, x) / n;
     let inv = 1.0 / (ms + eps).sqrt();
     for ((yi, &xi), &gi) in y.iter_mut().zip(x).zip(g) {
         *yi = xi * inv * gi;
@@ -148,10 +170,13 @@ mod tests {
 
     #[test]
     fn dot_matches_reference() {
-        let a: Vec<f32> = (0..13).map(|x| x as f32).collect();
-        let b: Vec<f32> = (0..13).map(|x| (x * 2) as f32).collect();
-        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot(&a, &b) - want).abs() < 1e-3);
+        for n in [3, 13, 16, 17, 32, 100] {
+            let a: Vec<f32> = (0..n).map(|x| x as f32 * 0.25).collect();
+            let b: Vec<f32> = (0..n).map(|x| (x * 2) as f32 * 0.5).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - want).abs() <= 1e-3 * want.abs().max(1.0), "n={n}: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1020 @@
+//! Runtime-dispatched SIMD f32 kernels (`--kernels`, ROADMAP item 3).
+//!
+//! Every primitive here comes in three tiers selected by [`KernelMode`]:
+//!
+//! * `Reference` — the scalar loops in [`crate::tensor::ops`], which fix
+//!   the canonical accumulation order (16-element blocks, two 8-lane
+//!   accumulator groups, ordered horizontal sum).
+//! * `Simd` (default) — explicit 8-lane AVX2 (x86_64) or 4-lane NEON
+//!   (aarch64) kernels that replay the *same* per-element operation
+//!   sequence: lane-parallel multiply-then-add with the reference's
+//!   lane merge and ordered horizontal reduction, never a fused
+//!   multiply-add and never a reassociated sum. Output is bit-identical
+//!   to `Reference` on every input (asserted across the whole engine
+//!   matrix in `rust/tests/parallel.rs`).
+//! * `SimdFma` — the documented fast-math tier: fused multiply-add
+//!   contractions and a vectorized polynomial `exp`. Results differ
+//!   from the reference by bounded ULPs (FMA keeps the intermediate
+//!   product in full precision, so reductions are *more* accurate, and
+//!   the degree-6 `exp` polynomial is within a few ULP of libm); the
+//!   equivalence tests below bound the error against f64 accumulation.
+//!
+//! Dispatch is resolved once per process from CPU features
+//! (`is_x86_feature_detected!`) and cached; `HATA_SIMD=scalar` in the
+//! environment forces the scalar fallback so both dispatch paths stay
+//! testable on any host (the CI matrix runs one leg this way). When no
+//! vector backend is available, `Simd` and `SimdFma` silently fall back
+//! to the reference loops — `Simd` is bit-identical anyway, and the
+//! fallback keeps aarch64-without-NEON and other targets correct.
+
+use crate::tensor::ops;
+
+/// Which f32 kernel implementation tier the engine uses (`--kernels`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Scalar canonical-order reference loops ([`crate::tensor::ops`]).
+    Reference,
+    /// Explicit-lane SIMD, bit-identical to `Reference` (the default).
+    #[default]
+    Simd,
+    /// SIMD with fused multiply-add and polynomial `exp`: fast-math
+    /// tier, ULP-bounded (not bitwise) equivalence to `Reference`.
+    SimdFma,
+}
+
+impl KernelMode {
+    /// Parse a CLI value (`reference` | `simd` | `simd-fma`).
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "reference" | "ref" | "scalar" => KernelMode::Reference,
+            "simd" => KernelMode::Simd,
+            "simd-fma" | "simdfma" | "fma" => KernelMode::SimdFma,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name (CLI value, bench row label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Reference => "reference",
+            KernelMode::Simd => "simd",
+            KernelMode::SimdFma => "simd-fma",
+        }
+    }
+
+    /// All modes, for bench/test sweeps.
+    pub fn all() -> [KernelMode; 3] {
+        [KernelMode::Reference, KernelMode::Simd, KernelMode::SimdFma]
+    }
+}
+
+/// Vector backend resolved at runtime (one cached probe per process).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2 { fma: bool },
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+fn detect_backend() -> Backend {
+    if let Ok(v) = std::env::var("HATA_SIMD") {
+        let v = v.to_ascii_lowercase();
+        if v == "scalar" || v == "off" || v == "0" {
+            return Backend::Scalar;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Backend::Avx2 { fma: std::arch::is_x86_feature_detected!("fma") };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Backend::Neon;
+    }
+    #[allow(unreachable_code)]
+    Backend::Scalar
+}
+
+fn backend() -> Backend {
+    static CACHE: std::sync::OnceLock<Backend> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(detect_backend)
+}
+
+/// Human-readable name of the active vector backend (bench headers,
+/// `--verbose` logs): `"avx2+fma"`, `"avx2"`, `"neon"` or `"scalar"`.
+pub fn backend_name() -> &'static str {
+    match backend() {
+        Backend::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 { fma: true } => "avx2+fma",
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 { fma: false } => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => "neon",
+    }
+}
+
+/// True when `mode` will actually run the fused-multiply-add polynomial
+/// kernels on this host (SimdFma requested and AVX2+FMA detected).
+#[cfg(target_arch = "x86_64")]
+fn fma_active(mode: KernelMode) -> bool {
+    mode == KernelMode::SimdFma && matches!(backend(), Backend::Avx2 { fma: true })
+}
+
+// ------------------------------------------------------------------ dot
+
+/// Mode-dispatched dot product. `Reference`/`Simd` are bit-identical
+/// (canonical [`ops::dot`] order); `SimdFma` contracts with FMA.
+#[inline]
+pub fn dot(mode: KernelMode, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match mode {
+        KernelMode::Reference => ops::dot(a, b),
+        KernelMode::Simd => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { .. } => unsafe { x86::dot_avx2(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::dot_neon(a, b) },
+            _ => ops::dot(a, b),
+        },
+        KernelMode::SimdFma => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma: true } => unsafe { x86::dot_fma(a, b) },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma: false } => unsafe { x86::dot_avx2(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::dot_fma_neon(a, b) },
+            _ => ops::dot(a, b),
+        },
+    }
+}
+
+// --------------------------------------------------------------- vecmat
+
+/// Mode-dispatched vector–matrix product `y[j] = sum_i x[i] * a[i, j]`
+/// (the decode projection shape). Lane-parallel per output element, so
+/// `Simd` is bit-identical to [`ops::vecmat`] at any lane width.
+pub fn vecmat(mode: KernelMode, x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+    debug_assert_eq!(a.len(), x.len() * m);
+    debug_assert_eq!(y.len(), m);
+    match mode {
+        KernelMode::Reference => ops::vecmat(x, a, m, y),
+        KernelMode::Simd => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { .. } => unsafe { x86::vecmat_avx2(x, a, m, y) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::vecmat_neon(x, a, m, y) },
+            _ => ops::vecmat(x, a, m, y),
+        },
+        KernelMode::SimdFma => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma: true } => unsafe { x86::vecmat_fma(x, a, m, y) },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma: false } => unsafe { x86::vecmat_avx2(x, a, m, y) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::vecmat_fma_neon(x, a, m, y) },
+            _ => ops::vecmat(x, a, m, y),
+        },
+    }
+}
+
+/// Mode-dispatched matmul: one [`vecmat`] per output row (the reference
+/// ikj order), C = A @ B for row-major A [n, k], B [k, m] -> C [n, m].
+pub fn matmul(mode: KernelMode, a: &[f32], b: &[f32], n: usize, k: usize, m: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(c.len(), n * m);
+    for i in 0..n {
+        vecmat(mode, &a[i * k..(i + 1) * k], b, m, &mut c[i * m..(i + 1) * m]);
+    }
+}
+
+// ----------------------------------------------------------------- axpy
+
+/// y += alpha * x (the attention `o += p * v` row update). One
+/// independent multiply-then-add per element, so every lane width is
+/// bit-identical; `SimdFma` contracts to `fmadd`.
+#[inline]
+pub fn axpy(mode: KernelMode, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match mode {
+        KernelMode::Reference => axpy_scalar(alpha, x, y),
+        KernelMode::Simd => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { .. } => unsafe { x86::axpy_avx2(alpha, x, y) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::axpy_neon(alpha, x, y) },
+            _ => axpy_scalar(alpha, x, y),
+        },
+        KernelMode::SimdFma => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma: true } => unsafe { x86::axpy_fma(alpha, x, y) },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma: false } => unsafe { x86::axpy_avx2(alpha, x, y) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::axpy_fma_neon(alpha, x, y) },
+            _ => axpy_scalar(alpha, x, y),
+        },
+    }
+}
+
+fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yj, &xj) in y.iter_mut().zip(x) {
+        *yj += alpha * xj;
+    }
+}
+
+// ---------------------------------------------------------------- scale
+
+/// x *= alpha in place (softmax normalization pass). Lane-parallel,
+/// bit-identical at any width.
+#[inline]
+pub fn scale(mode: KernelMode, x: &mut [f32], alpha: f32) {
+    match mode {
+        KernelMode::Reference => scale_scalar(x, alpha),
+        _ => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { .. } => unsafe { x86::scale_avx2(x, alpha) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::scale_neon(x, alpha) },
+            _ => scale_scalar(x, alpha),
+        },
+    }
+}
+
+fn scale_scalar(x: &mut [f32], alpha: f32) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+// ------------------------------------------------------------- rms_norm
+
+/// Mode-dispatched RMSNorm `y = x / rms(x) * g`. The mean square is the
+/// canonical [`dot`]`(x, x)` reduction; the normalization pass computes
+/// `(x[i] * inv) * g[i]` per element in every tier.
+pub fn rms_norm(mode: KernelMode, x: &[f32], g: &[f32], y: &mut [f32], eps: f32) {
+    let n = x.len() as f32;
+    let ms = dot(mode, x, x) / n;
+    let inv = 1.0 / (ms + eps).sqrt();
+    match mode {
+        KernelMode::Reference => rms_apply_scalar(x, g, y, inv),
+        _ => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { .. } => unsafe { x86::rms_apply_avx2(x, g, y, inv) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { neon::rms_apply_neon(x, g, y, inv) },
+            _ => rms_apply_scalar(x, g, y, inv),
+        },
+    }
+}
+
+fn rms_apply_scalar(x: &[f32], g: &[f32], y: &mut [f32], inv: f32) {
+    for ((yi, &xi), &gi) in y.iter_mut().zip(x).zip(g) {
+        *yi = xi * inv * gi;
+    }
+}
+
+// ------------------------------------------------------------- softmax
+
+/// Streaming-softmax exponential pass: `x[t] = exp(x[t] - max)` in
+/// place, returning the sum of the exponentials (the denominator).
+/// `Reference` and `Simd` run the identical sequential scalar loop —
+/// `exp` stays libm and the sum order is fixed, preserving bit
+/// equality — while `SimdFma` batches a degree-6 polynomial `exp`
+/// across lanes with a reassociated vector sum.
+pub fn softmax_exp(mode: KernelMode, x: &mut [f32], max: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if fma_active(mode) {
+        return unsafe { x86::softmax_exp_fma(x, max) };
+    }
+    let _ = mode;
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    sum
+}
+
+/// Mode-dispatched numerically-stable softmax. The max scan stays
+/// scalar in every tier (it is a trivial fraction of the work and
+/// sidesteps the `f32::max` signed-zero subtlety); see [`softmax_exp`]
+/// and [`scale`] for how the passes dispatch.
+pub fn softmax(mode: KernelMode, x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let sum = softmax_exp(mode, x, max);
+    scale(mode, x, 1.0 / sum);
+}
+
+// ------------------------------------------------------------- silu_mul
+
+/// Fused SwiGLU gate: `gate[i] = silu(gate[i]) * up[i]`. `Reference`
+/// and `Simd` share the scalar loop (libm `exp`, bit-identical);
+/// `SimdFma` vectorizes with the polynomial `exp`.
+pub fn silu_mul(mode: KernelMode, gate: &mut [f32], up: &[f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    #[cfg(target_arch = "x86_64")]
+    if fma_active(mode) {
+        return unsafe { x86::silu_mul_fma(gate, up) };
+    }
+    let _ = mode;
+    for (g, &u) in gate.iter_mut().zip(up) {
+        *g = ops::silu(*g) * u;
+    }
+}
+
+// ===================================================== x86_64 backends
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 / AVX2+FMA kernels. Each non-FMA function replays the
+    //! canonical scalar order of [`crate::tensor::ops`] exactly:
+    //! per-lane multiply then add (`vmulps` + `vaddps`), the reference
+    //! lane merge, an ordered scalar horizontal sum and the identical
+    //! scalar tail — which is what makes `KernelMode::Simd` bit-exact.
+
+    use core::arch::x86_64::*;
+
+    /// Ordered horizontal sum of one 8-lane register: lane 0 + lane 1 +
+    /// ... + lane 7, left to right, matching the scalar reference.
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn hsum_ordered(v: __m256) -> f32 {
+        let mut lane = [0.0f32; 8];
+        _mm256_storeu_ps(lane.as_mut_ptr(), v);
+        let mut s = lane[0];
+        for &l in &lane[1..] {
+            s += l;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n / 16;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for i in 0..blocks {
+            let x0 = _mm256_loadu_ps(pa.add(i * 16));
+            let y0 = _mm256_loadu_ps(pb.add(i * 16));
+            let x1 = _mm256_loadu_ps(pa.add(i * 16 + 8));
+            let y1 = _mm256_loadu_ps(pb.add(i * 16 + 8));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(x0, y0));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(x1, y1));
+        }
+        let mut s = hsum_ordered(_mm256_add_ps(acc0, acc1));
+        for i in blocks * 16..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n / 16;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for i in 0..blocks {
+            let x0 = _mm256_loadu_ps(pa.add(i * 16));
+            let y0 = _mm256_loadu_ps(pb.add(i * 16));
+            let x1 = _mm256_loadu_ps(pa.add(i * 16 + 8));
+            let y1 = _mm256_loadu_ps(pb.add(i * 16 + 8));
+            acc0 = _mm256_fmadd_ps(x0, y0, acc0);
+            acc1 = _mm256_fmadd_ps(x1, y1, acc1);
+        }
+        let mut s = hsum_ordered(_mm256_add_ps(acc0, acc1));
+        for i in blocks * 16..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// One A row accumulated into y over a 16-column block, mul+add.
+    macro_rules! vecmat_body {
+        ($x:ident, $a:ident, $m:ident, $y:ident, $madd:ident) => {{
+            $y.fill(0.0);
+            let n = $x.len();
+            let pa = $a.as_ptr();
+            let py = $y.as_mut_ptr();
+            let mut i = 0;
+            // row pairs: per output element the operation order is
+            // row i then row i+1, exactly the scalar row-major order.
+            while i + 2 <= n {
+                let b0 = _mm256_set1_ps($x[i]);
+                let b1 = _mm256_set1_ps($x[i + 1]);
+                let r0 = pa.add(i * $m);
+                let r1 = pa.add((i + 1) * $m);
+                let mut j = 0;
+                while j + 16 <= $m {
+                    let mut y0 = _mm256_loadu_ps(py.add(j));
+                    let mut y1 = _mm256_loadu_ps(py.add(j + 8));
+                    y0 = $madd(b0, _mm256_loadu_ps(r0.add(j)), y0);
+                    y1 = $madd(b0, _mm256_loadu_ps(r0.add(j + 8)), y1);
+                    y0 = $madd(b1, _mm256_loadu_ps(r1.add(j)), y0);
+                    y1 = $madd(b1, _mm256_loadu_ps(r1.add(j + 8)), y1);
+                    _mm256_storeu_ps(py.add(j), y0);
+                    _mm256_storeu_ps(py.add(j + 8), y1);
+                    j += 16;
+                }
+                while j + 8 <= $m {
+                    let mut y0 = _mm256_loadu_ps(py.add(j));
+                    y0 = $madd(b0, _mm256_loadu_ps(r0.add(j)), y0);
+                    y0 = $madd(b1, _mm256_loadu_ps(r1.add(j)), y0);
+                    _mm256_storeu_ps(py.add(j), y0);
+                    j += 8;
+                }
+                while j < $m {
+                    let mut v = *py.add(j);
+                    v += $x[i] * *r0.add(j);
+                    v += $x[i + 1] * *r1.add(j);
+                    *py.add(j) = v;
+                    j += 1;
+                }
+                i += 2;
+            }
+            if i < n {
+                let b0 = _mm256_set1_ps($x[i]);
+                let r0 = pa.add(i * $m);
+                let mut j = 0;
+                while j + 8 <= $m {
+                    let y0 = $madd(b0, _mm256_loadu_ps(r0.add(j)), _mm256_loadu_ps(py.add(j)));
+                    _mm256_storeu_ps(py.add(j), y0);
+                    j += 8;
+                }
+                while j < $m {
+                    *py.add(j) += $x[i] * *r0.add(j);
+                    j += 1;
+                }
+            }
+        }};
+    }
+
+    /// Multiply-then-add (two rounded ops — bit-matches the scalar
+    /// `y += x * a`).
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn madd_mul_add(a: __m256, b: __m256, c: __m256) -> __m256 {
+        _mm256_add_ps(c, _mm256_mul_ps(a, b))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vecmat_avx2(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+        vecmat_body!(x, a, m, y, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn vecmat_fma(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+        vecmat_body!(x, a, m, y, _mm256_fmadd_ps)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut j = 0;
+        while j + 16 <= n {
+            let y0 = _mm256_add_ps(
+                _mm256_loadu_ps(py.add(j)),
+                _mm256_mul_ps(va, _mm256_loadu_ps(px.add(j))),
+            );
+            let y1 = _mm256_add_ps(
+                _mm256_loadu_ps(py.add(j + 8)),
+                _mm256_mul_ps(va, _mm256_loadu_ps(px.add(j + 8))),
+            );
+            _mm256_storeu_ps(py.add(j), y0);
+            _mm256_storeu_ps(py.add(j + 8), y1);
+            j += 16;
+        }
+        while j + 8 <= n {
+            let y0 = _mm256_add_ps(
+                _mm256_loadu_ps(py.add(j)),
+                _mm256_mul_ps(va, _mm256_loadu_ps(px.add(j))),
+            );
+            _mm256_storeu_ps(py.add(j), y0);
+            j += 8;
+        }
+        while j < n {
+            y[j] += alpha * x[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy_fma(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            let y0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(px.add(j)), _mm256_loadu_ps(py.add(j)));
+            _mm256_storeu_ps(py.add(j), y0);
+            j += 8;
+        }
+        while j < n {
+            y[j] += alpha * x[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_avx2(x: &mut [f32], alpha: f32) {
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let px = x.as_mut_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            _mm256_storeu_ps(px.add(j), _mm256_mul_ps(va, _mm256_loadu_ps(px.add(j))));
+            j += 8;
+        }
+        while j < n {
+            x[j] *= alpha;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn rms_apply_avx2(x: &[f32], g: &[f32], y: &mut [f32], inv: f32) {
+        let n = x.len();
+        let vi = _mm256_set1_ps(inv);
+        let (px, pg) = (x.as_ptr(), g.as_ptr());
+        let py = y.as_mut_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            // (x * inv) * g, same association as the scalar reference
+            let v = _mm256_mul_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(px.add(j)), vi),
+                _mm256_loadu_ps(pg.add(j)),
+            );
+            _mm256_storeu_ps(py.add(j), v);
+            j += 8;
+        }
+        while j < n {
+            y[j] = x[j] * inv * g[j];
+            j += 1;
+        }
+    }
+
+    /// Degree-6 polynomial `exp` for the fast-math tier: clamp,
+    /// range-reduce by `n = round(x * log2(e))` with a two-part ln 2,
+    /// Horner with FMA, then scale by `2^n` via exponent-bit arithmetic.
+    /// Max observed error vs f64 libm is a few ULP (bounded in tests).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp256(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(88.376_26));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-87.336_54));
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        // cvtps rounds to nearest-even (default MXCSR), giving n exactly.
+        let e = _mm256_cvtps_epi32(_mm256_mul_ps(x, log2e));
+        let n = _mm256_cvtepi32_ps(e);
+        let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(0.693_359_4), x);
+        let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(-2.121_944_4e-4), r);
+        let mut p = _mm256_set1_ps(1.0 / 720.0);
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 120.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 24.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 6.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(0.5));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0));
+        let ebits = _mm256_add_epi32(e, _mm256_set1_epi32(127));
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(ebits));
+        _mm256_mul_ps(p, pow2)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn softmax_exp_fma(x: &mut [f32], max: f32) -> f32 {
+        let n = x.len();
+        let vmax = _mm256_set1_ps(max);
+        let px = x.as_mut_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let e = exp256(_mm256_sub_ps(_mm256_loadu_ps(px.add(j)), vmax));
+            _mm256_storeu_ps(px.add(j), e);
+            acc = _mm256_add_ps(acc, e);
+            j += 8;
+        }
+        let mut sum = hsum_ordered(acc);
+        while j < n {
+            x[j] = (x[j] - max).exp();
+            sum += x[j];
+            j += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn silu_mul_fma(gate: &mut [f32], up: &[f32]) {
+        let n = gate.len();
+        let one = _mm256_set1_ps(1.0);
+        let pg = gate.as_mut_ptr();
+        let pu = up.as_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            let g = _mm256_loadu_ps(pg.add(j));
+            let e = exp256(_mm256_sub_ps(_mm256_setzero_ps(), g));
+            let s = _mm256_div_ps(g, _mm256_add_ps(one, e));
+            _mm256_storeu_ps(pg.add(j), _mm256_mul_ps(s, _mm256_loadu_ps(pu.add(j))));
+            j += 8;
+        }
+        while j < n {
+            gate[j] = crate::tensor::ops::silu(gate[j]) * up[j];
+            j += 1;
+        }
+    }
+}
+
+// ==================================================== aarch64 backends
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON kernels. The canonical 16-element block maps to four 4-lane
+    //! registers: accumulators (a0, a1) cover scalar lanes 0..8 and
+    //! (a2, a3) lanes 8..16, so the reference lane merge
+    //! `lane[j] = acc[j] + acc[8 + j]` is `a0+a2` / `a1+a3` and the
+    //! ordered horizontal sum walks the stored lanes left to right.
+
+    use core::arch::aarch64::*;
+
+    #[inline]
+    unsafe fn hsum_ordered2(lo: float32x4_t, hi: float32x4_t) -> f32 {
+        let mut lane = [0.0f32; 8];
+        vst1q_f32(lane.as_mut_ptr(), lo);
+        vst1q_f32(lane.as_mut_ptr().add(4), hi);
+        let mut s = lane[0];
+        for &l in &lane[1..] {
+            s += l;
+        }
+        s
+    }
+
+    macro_rules! dot_neon_body {
+        ($a:ident, $b:ident, $madd:ident) => {{
+            let n = $a.len();
+            let blocks = n / 16;
+            let (pa, pb) = ($a.as_ptr(), $b.as_ptr());
+            let mut a0 = vdupq_n_f32(0.0);
+            let mut a1 = vdupq_n_f32(0.0);
+            let mut a2 = vdupq_n_f32(0.0);
+            let mut a3 = vdupq_n_f32(0.0);
+            for i in 0..blocks {
+                let o = i * 16;
+                a0 = $madd(a0, vld1q_f32(pa.add(o)), vld1q_f32(pb.add(o)));
+                a1 = $madd(a1, vld1q_f32(pa.add(o + 4)), vld1q_f32(pb.add(o + 4)));
+                a2 = $madd(a2, vld1q_f32(pa.add(o + 8)), vld1q_f32(pb.add(o + 8)));
+                a3 = $madd(a3, vld1q_f32(pa.add(o + 12)), vld1q_f32(pb.add(o + 12)));
+            }
+            let mut s = hsum_ordered2(vaddq_f32(a0, a2), vaddq_f32(a1, a3));
+            for i in blocks * 16..n {
+                s += $a[i] * $b[i];
+            }
+            s
+        }};
+    }
+
+    /// Multiply-then-add (two rounded ops, bit-matching the scalar ref).
+    #[inline]
+    unsafe fn madd_mul_add(acc: float32x4_t, x: float32x4_t, y: float32x4_t) -> float32x4_t {
+        vaddq_f32(acc, vmulq_f32(x, y))
+    }
+
+    /// Fused multiply-add for the fast-math tier.
+    #[inline]
+    unsafe fn madd_fused(acc: float32x4_t, x: float32x4_t, y: float32x4_t) -> float32x4_t {
+        vfmaq_f32(acc, x, y)
+    }
+
+    pub(super) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        dot_neon_body!(a, b, madd_mul_add)
+    }
+
+    pub(super) unsafe fn dot_fma_neon(a: &[f32], b: &[f32]) -> f32 {
+        dot_neon_body!(a, b, madd_fused)
+    }
+
+    macro_rules! vecmat_neon_body {
+        ($x:ident, $a:ident, $m:ident, $y:ident, $madd:ident) => {{
+            $y.fill(0.0);
+            let py = $y.as_mut_ptr();
+            for (i, &xi) in $x.iter().enumerate() {
+                let bx = vdupq_n_f32(xi);
+                let row = $a.as_ptr().add(i * $m);
+                let mut j = 0;
+                while j + 4 <= $m {
+                    let v = $madd(vld1q_f32(py.add(j)), bx, vld1q_f32(row.add(j)));
+                    vst1q_f32(py.add(j), v);
+                    j += 4;
+                }
+                while j < $m {
+                    *py.add(j) += xi * *row.add(j);
+                    j += 1;
+                }
+            }
+        }};
+    }
+
+    pub(super) unsafe fn vecmat_neon(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+        vecmat_neon_body!(x, a, m, y, madd_mul_add)
+    }
+
+    pub(super) unsafe fn vecmat_fma_neon(x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
+        vecmat_neon_body!(x, a, m, y, madd_fused)
+    }
+
+    pub(super) unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = vaddq_f32(vld1q_f32(py.add(j)), vmulq_f32(va, vld1q_f32(px.add(j))));
+            vst1q_f32(py.add(j), v);
+            j += 4;
+        }
+        while j < n {
+            y[j] += alpha * x[j];
+            j += 1;
+        }
+    }
+
+    pub(super) unsafe fn axpy_fma_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = vfmaq_f32(vld1q_f32(py.add(j)), va, vld1q_f32(px.add(j)));
+            vst1q_f32(py.add(j), v);
+            j += 4;
+        }
+        while j < n {
+            y[j] += alpha * x[j];
+            j += 1;
+        }
+    }
+
+    pub(super) unsafe fn scale_neon(x: &mut [f32], alpha: f32) {
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let px = x.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            vst1q_f32(px.add(j), vmulq_f32(va, vld1q_f32(px.add(j))));
+            j += 4;
+        }
+        while j < n {
+            x[j] *= alpha;
+            j += 1;
+        }
+    }
+
+    pub(super) unsafe fn rms_apply_neon(x: &[f32], g: &[f32], y: &mut [f32], inv: f32) {
+        let n = x.len();
+        let vi = vdupq_n_f32(inv);
+        let (px, pg) = (x.as_ptr(), g.as_ptr());
+        let py = y.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = vmulq_f32(vmulq_f32(vld1q_f32(px.add(j)), vi), vld1q_f32(pg.add(j)));
+            vst1q_f32(py.add(j), v);
+            j += 4;
+        }
+        while j < n {
+            y[j] = x[j] * inv * g[j];
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pt::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn f64_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in KernelMode::all() {
+            assert_eq!(KernelMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("ref"), Some(KernelMode::Reference));
+        assert_eq!(KernelMode::parse("fma"), Some(KernelMode::SimdFma));
+        assert_eq!(KernelMode::parse("nope"), None);
+        assert_eq!(KernelMode::default(), KernelMode::Simd);
+    }
+
+    #[test]
+    fn backend_name_is_stable() {
+        let n = backend_name();
+        assert!(["scalar", "avx2", "avx2+fma", "neon"].contains(&n), "{n}");
+        assert_eq!(n, backend_name());
+    }
+
+    /// The tentpole invariant: `Simd` output is bitwise equal to the
+    /// scalar reference for every primitive, across lane-remainder
+    /// lengths (tails), unaligned starts, and random data.
+    #[test]
+    fn simd_bit_identical_to_reference() {
+        check(40, |rng: &mut Rng| {
+            let n = 1 + rng.below(200);
+            let m = 1 + rng.below(70);
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            prop_assert(
+                dot(KernelMode::Simd, &a, &b).to_bits() == ops::dot(&a, &b).to_bits(),
+                "dot bits",
+            )?;
+
+            let w = rng.normal_vec(n * m);
+            let mut y_ref = vec![0.0f32; m];
+            let mut y_simd = vec![0.0f32; m];
+            ops::vecmat(&a, &w, m, &mut y_ref);
+            vecmat(KernelMode::Simd, &a, &w, m, &mut y_simd);
+            prop_assert(bits(&y_ref) == bits(&y_simd), "vecmat bits")?;
+
+            let alpha = rng.normal();
+            let mut y2_ref = y_ref.clone();
+            let mut y2_simd = y_ref.clone();
+            axpy_scalar(alpha, &b[..m.min(n)], &mut y2_ref[..m.min(n)]);
+            axpy(KernelMode::Simd, alpha, &b[..m.min(n)], &mut y2_simd[..m.min(n)]);
+            prop_assert(bits(&y2_ref) == bits(&y2_simd), "axpy bits")?;
+
+            let g = rng.normal_vec(n);
+            let mut r_ref = vec![0.0f32; n];
+            let mut r_simd = vec![0.0f32; n];
+            ops::rms_norm(&a, &g, &mut r_ref, 1e-5);
+            rms_norm(KernelMode::Simd, &a, &g, &mut r_simd, 1e-5);
+            prop_assert(bits(&r_ref) == bits(&r_simd), "rms_norm bits")?;
+
+            let mut s_ref = a.clone();
+            let mut s_simd = a.clone();
+            ops::softmax(&mut s_ref);
+            softmax(KernelMode::Simd, &mut s_simd);
+            prop_assert(bits(&s_ref) == bits(&s_simd), "softmax bits")?;
+
+            let mut g_ref = a.clone();
+            let mut g_simd = a.clone();
+            let up = rng.normal_vec(n);
+            silu_mul(KernelMode::Reference, &mut g_ref, &up);
+            silu_mul(KernelMode::Simd, &mut g_simd, &up);
+            prop_assert(bits(&g_ref) == bits(&g_simd), "silu_mul bits")
+        });
+    }
+
+    #[test]
+    fn matmul_modes_match_reference() {
+        let mut rng = Rng::new(9);
+        let (n, k, m) = (5, 33, 17);
+        let a = rng.normal_vec(n * k);
+        let b = rng.normal_vec(k * m);
+        let mut c_ref = vec![0.0f32; n * m];
+        let mut c_simd = vec![0.0f32; n * m];
+        ops::matmul(&a, &b, n, k, m, &mut c_ref);
+        matmul(KernelMode::Simd, &a, &b, n, k, m, &mut c_simd);
+        assert_eq!(bits(&c_ref), bits(&c_simd));
+        let mut c_fma = vec![0.0f32; n * m];
+        matmul(KernelMode::SimdFma, &a, &b, n, k, m, &mut c_fma);
+        for (x, y) in c_ref.iter().zip(&c_fma) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0));
+        }
+    }
+
+    fn bits(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// ULP distance between an f32 and an f64 reference value.
+    fn ulp_err(got: f32, want: f64) -> f64 {
+        let w = want as f32;
+        let ulp = (w.abs().max(f32::MIN_POSITIVE) * f32::EPSILON) as f64;
+        ((got as f64) - want).abs() / ulp
+    }
+
+    /// SimdFma forward-error bounds vs f64 accumulation: FMA reductions
+    /// must stay within C·eps·sum(|terms|) of the f64 result (the
+    /// standard sequential-summation bound with headroom; the canonical
+    /// blocked order keeps the constant small).
+    #[test]
+    fn fma_dot_ulp_bounded_vs_f64() {
+        check(40, |rng: &mut Rng| {
+            let n = 1 + rng.below(600);
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let want = f64_dot(&a, &b);
+            let got = dot(KernelMode::SimdFma, &a, &b) as f64;
+            let mag: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let bound = (f32::EPSILON as f64) * mag * (8.0 + (n as f64) / 2.0);
+            prop_assert((got - want).abs() <= bound, "fma dot exceeds forward-error bound")
+        });
+    }
+
+    #[test]
+    fn fma_vecmat_ulp_bounded_vs_f64() {
+        check(20, |rng: &mut Rng| {
+            let n = 1 + rng.below(120);
+            let m = 1 + rng.below(50);
+            let x = rng.normal_vec(n);
+            let w = rng.normal_vec(n * m);
+            let mut y = vec![0.0f32; m];
+            vecmat(KernelMode::SimdFma, &x, &w, m, &mut y);
+            for j in 0..m {
+                let want: f64 = (0..n).map(|i| x[i] as f64 * w[i * m + j] as f64).sum();
+                let mag: f64 = (0..n).map(|i| (x[i] as f64 * w[i * m + j] as f64).abs()).sum();
+                let bound = (f32::EPSILON as f64) * mag * (8.0 + (n as f64) / 2.0);
+                prop_assert((y[j] as f64 - want).abs() <= bound, "fma vecmat bound")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fma_rms_norm_ulp_bounded_vs_f64() {
+        check(20, |rng: &mut Rng| {
+            let n = 1 + rng.below(300);
+            let x = rng.normal_vec(n);
+            let g = rng.normal_vec(n);
+            let mut y = vec![0.0f32; n];
+            rms_norm(KernelMode::SimdFma, &x, &g, &mut y, 1e-5);
+            let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64;
+            let inv = 1.0 / (ms + 1e-5f64).sqrt();
+            for i in 0..n {
+                let want = x[i] as f64 * inv * g[i] as f64;
+                prop_assert(ulp_err(y[i], want) <= 16.0 + n as f64 / 4.0, "fma rms_norm ulp")?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The polynomial exp inside SimdFma softmax must stay within a few
+    /// ULP of libm, and the resulting distribution within tight ULPs of
+    /// the f64 softmax.
+    #[test]
+    fn fma_softmax_ulp_bounded_vs_f64() {
+        check(20, |rng: &mut Rng| {
+            let n = 1 + rng.below(300);
+            let x = rng.normal_vec(n);
+            let mut got = x.clone();
+            softmax(KernelMode::SimdFma, &mut got);
+            let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let exps: Vec<f64> = x.iter().map(|&v| ((v as f64) - max).exp()).collect();
+            let denom: f64 = exps.iter().sum();
+            let s: f32 = got.iter().sum();
+            prop_assert((s as f64 - 1.0).abs() < 1e-5, "fma softmax sums to one")?;
+            for (i, &e) in exps.iter().enumerate() {
+                let want = e / denom;
+                // poly-exp (few ULP) + reassociated sum (n/8 chain)
+                prop_assert(ulp_err(got[i], want) <= 32.0 + n as f64 / 4.0, "fma softmax ulp")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fma_silu_mul_close_to_reference() {
+        let mut rng = Rng::new(11);
+        let n = 333;
+        let g0 = rng.normal_vec(n);
+        let up = rng.normal_vec(n);
+        let mut g_ref = g0.clone();
+        silu_mul(KernelMode::Reference, &mut g_ref, &up);
+        let mut g_fma = g0.clone();
+        silu_mul(KernelMode::SimdFma, &mut g_fma, &up);
+        for i in 0..n {
+            let want = (g0[i] as f64) / (1.0 + (-(g0[i] as f64)).exp()) * up[i] as f64;
+            assert!(ulp_err(g_fma[i], want) <= 32.0, "silu ulp at {i}");
+            assert!((g_ref[i] - g_fma[i]).abs() <= 1e-5 * g_ref[i].abs().max(1.0));
+        }
+    }
+
+    /// exp edge cases through the softmax path: large negative inputs
+    /// must underflow toward zero without producing NaN/inf, and the
+    /// clamp must keep large positives finite.
+    #[test]
+    fn fma_softmax_extreme_logits_stay_finite() {
+        let mut x = vec![1000.0f32, 1001.0, 999.0, -1000.0, 0.0, -87.0, 12.0, -3.0, 5.5];
+        softmax(KernelMode::SimdFma, &mut x);
+        assert!(x.iter().all(|v| v.is_finite() && *v >= 0.0));
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+}

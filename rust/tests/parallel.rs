@@ -16,6 +16,7 @@ use hata::model::{
     weights::Weights, DecodeGraphCache, DecodeItem, DecodeScratch, Model, PrefillItem, SeqState,
     WorkerScratch,
 };
+use hata::tensor::simd::KernelMode;
 use hata::util::rng::Rng;
 use hata::util::threadpool::ThreadPool;
 
@@ -34,7 +35,9 @@ fn run(method: Method, threads: usize) -> Vec<(u64, Vec<u32>)> {
     let mut rng = Rng::new(42);
     let weights = Weights::random(&cfg, &mut rng);
     let aux = MethodAux::build(&cfg, &serve, None, 1);
-    let mut engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let mut engine = Engine::new(Arc::new(model), serve);
     for id in 0..6u64 {
         engine.submit(Request {
             id,
@@ -72,13 +75,16 @@ fn quest_tokens_identical_across_thread_counts() {
     assert_eq!(serial, run(Method::Quest, 4));
 }
 
-/// Build one random model for the prefill-equivalence tests.
+/// Build one random model for the prefill-equivalence tests (kernel
+/// tier taken from `serve.kernels`, as `load_model` does).
 fn model_for(method: Method, serve: &ServeConfig) -> Model {
     let cfg = preset("hata-gqa").unwrap();
     let mut rng = Rng::new(7);
     let weights = Weights::random(&cfg, &mut rng);
     let aux = MethodAux::build(&cfg, serve, None, 1);
-    Model::new(cfg, weights, aux)
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    model
 }
 
 /// Tiled prefill must produce bit-identical caches, hash codes, side
@@ -172,7 +178,9 @@ fn run_tiled(method: Method, threads: usize, tile: usize) -> Vec<(u64, Vec<u32>)
     let mut rng = Rng::new(42);
     let weights = Weights::random(&cfg, &mut rng);
     let aux = MethodAux::build(&cfg, &serve, None, 1);
-    let mut engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let mut engine = Engine::new(Arc::new(model), serve);
     for id in 0..4u64 {
         engine.submit(Request {
             id,
@@ -210,6 +218,18 @@ fn run_exec(
     exec_mode: ExecMode,
     graph_cache: bool,
 ) -> Vec<(u64, Vec<u32>)> {
+    run_exec_kernels(method, threads, tile, exec_mode, graph_cache, KernelMode::default())
+}
+
+/// [`run_exec`] with an explicit `--kernels` tier.
+fn run_exec_kernels(
+    method: Method,
+    threads: usize,
+    tile: usize,
+    exec_mode: ExecMode,
+    graph_cache: bool,
+    kernels: KernelMode,
+) -> Vec<(u64, Vec<u32>)> {
     let cfg = preset("hata-gqa").unwrap();
     let serve = ServeConfig {
         method,
@@ -220,12 +240,15 @@ fn run_exec(
         threads,
         exec_mode,
         graph_cache,
+        kernels,
         ..Default::default()
     };
     let mut rng = Rng::new(42);
     let weights = Weights::random(&cfg, &mut rng);
     let aux = MethodAux::build(&cfg, &serve, None, 1);
-    let mut engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let mut engine = Engine::new(Arc::new(model), serve);
     for id in 0..4u64 {
         engine.submit(Request {
             id,
@@ -445,6 +468,64 @@ fn queue_exec_bit_identical_caches_and_logits() {
                     }
                 }
                 assert_eq!(a.bytes(), b.bytes(), "{method:?} seq {s}");
+            }
+        }
+    }
+}
+
+/// `--kernels simd` must be bit-identical to `--kernels reference` end
+/// to end: identical token streams from the full serving loop across
+/// Dense/Hata/Quest × threads × tile × executor × graph cache.
+/// tensor/simd.rs replays the scalar reduction order exactly, so the
+/// vectorized tier may not change a single bit anywhere in the engine.
+#[test]
+fn simd_kernels_engine_identical_to_reference() {
+    let cells: &[(usize, usize, ExecMode)] =
+        &[(1, 1, ExecMode::Barrier), (2, 16, ExecMode::Queue), (2, 1, ExecMode::Queue)];
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        for &(threads, tile, exec) in cells {
+            let rf = run_exec_kernels(method, threads, tile, exec, true, KernelMode::Reference);
+            for gc in [true, false] {
+                let simd = run_exec_kernels(method, threads, tile, exec, gc, KernelMode::Simd);
+                assert_eq!(rf, simd, "{method:?} threads={threads} tile={tile} {exec:?} gc={gc}");
+            }
+        }
+    }
+}
+
+/// Stronger than token streams: after a tiled prefill, the Reference and
+/// Simd tiers must leave byte-identical KV caches, hash codes and logits.
+#[test]
+fn simd_kernels_bit_identical_prefill_state() {
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        let mk = |kernels: KernelMode| ServeConfig {
+            method,
+            budget: 16,
+            prefill_tile: 8,
+            kernels,
+            ..Default::default()
+        };
+        let prompt: Vec<u32> = (0..200u32).map(|i| 32 + (i % 64)).collect();
+        let run = |serve: &ServeConfig| {
+            let model = model_for(method, serve);
+            let mut c = SeqKvCache::new(&model.cfg, serve);
+            let mut s = SeqState::new(&model.cfg);
+            let mut sc = DecodeScratch::new(&model.cfg);
+            model.prefill(&prompt, &mut c, &mut s, serve, &mut sc);
+            (model, c, sc)
+        };
+        let (m1, c1, sc1) = run(&mk(KernelMode::Reference));
+        let (_m2, c2, sc2) = run(&mk(KernelMode::Simd));
+        assert_eq!(sc1.logits, sc2.logits, "{method:?} logits");
+        for li in 0..m1.cfg.n_layers {
+            for kv in 0..m1.cfg.n_kv_heads {
+                assert_eq!(c1.k_slice(li, kv), c2.k_slice(li, kv), "{method:?} k l{li} kv{kv}");
+                assert_eq!(c1.v_slice(li, kv), c2.v_slice(li, kv), "{method:?} v l{li} kv{kv}");
+                assert_eq!(
+                    c1.codes_slice(li, kv),
+                    c2.codes_slice(li, kv),
+                    "{method:?} codes l{li} kv{kv}"
+                );
             }
         }
     }
