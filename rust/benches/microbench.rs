@@ -203,6 +203,8 @@ fn main() {
             qoff: 0,
             t0: 0,
             start,
+            bt: &[],
+            block_tokens: 0,
             kernels: mode,
         };
         prefill_tile_attention(&tile, &mut probs, &mut tout);

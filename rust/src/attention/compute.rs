@@ -59,7 +59,7 @@ pub fn dense_attention(mode: KernelMode, inp: &AttnInputs, probs: &mut Vec<f32>,
         for t in 0..inp.s {
             let p = (probs[t] - max).exp();
             denom += p;
-            simd::axpy(mode, p, &inp.v[t * inp.dh..(t + 1) * inp.dh], o);
+            simd::axpy(mode, p, inp.v_row(t), o);
         }
         simd::scale(mode, o, 1.0 / denom);
     }
@@ -83,8 +83,9 @@ pub fn sparse_attention_gather(
     vbuf.reserve(n * dh);
     for &t in indices {
         kbuf.extend_from_slice(inp.k_row(t as usize));
-        vbuf.extend_from_slice(&inp.v[t as usize * dh..(t as usize + 1) * dh]);
+        vbuf.extend_from_slice(inp.v_row(t as usize));
     }
+    // the gathered copies are contiguous regardless of the source layout
     let gathered = AttnInputs {
         q: inp.q,
         group: inp.group,
@@ -96,6 +97,8 @@ pub fn sparse_attention_gather(
         rbit: inp.rbit,
         s: n,
         pos: inp.pos,
+        bt: &[],
+        block_tokens: 0,
         side: super::Side::default(),
     };
     dense_attention(mode, &gathered, probs, out);
@@ -134,8 +137,7 @@ pub fn sparse_attention_fused(
         for (j, &t) in indices.iter().enumerate() {
             let p = (probs[j] - max).exp();
             denom += p;
-            let v = &inp.v[t as usize * inp.dh..(t as usize + 1) * inp.dh];
-            simd::axpy(mode, p, v, o);
+            simd::axpy(mode, p, inp.v_row(t as usize), o);
         }
         simd::scale(mode, o, 1.0 / denom);
     }
@@ -163,6 +165,10 @@ pub struct PrefillTile<'a> {
     pub t0: usize,
     /// Absolute position of block row 0.
     pub start: usize,
+    /// Paged layout: the sequence's block table (empty = contiguous).
+    pub bt: &'a [u32],
+    /// Paged layout: tokens per physical block (0 when contiguous).
+    pub block_tokens: usize,
     /// Kernel tier to run the per-row [`dense_attention`] in.
     pub kernels: KernelMode,
 }
@@ -194,6 +200,8 @@ pub fn prefill_tile_attention(tile: &PrefillTile, probs: &mut Vec<f32>, out: &mu
             rbit: 0,
             s,
             pos,
+            bt: tile.bt,
+            block_tokens: tile.block_tokens,
             side: super::Side::default(),
         };
         dense_attention(tile.kernels, &inp, probs, &mut out[r * ghd..(r + 1) * ghd]);
@@ -239,6 +247,8 @@ mod tests {
             rbit: 0,
             s,
             pos: s - 1,
+            bt: &[],
+            block_tokens: 0,
             side: crate::attention::Side::default(),
         }
     }
@@ -431,6 +441,8 @@ mod tests {
                 qoff: kv * group * dh,
                 t0,
                 start,
+                bt: &[],
+                block_tokens: 0,
                 kernels: KernelMode::Simd,
             };
             let mut probs = Vec::new();
@@ -455,6 +467,55 @@ mod tests {
                 )?;
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn paged_layout_bit_identical_to_contiguous() {
+        // the same rows scattered into out-of-order physical blocks must
+        // produce bit-identical dense and fused-sparse outputs — the
+        // kernel-level half of the paged differential guarantee
+        check(30, |rng: &mut Rng| {
+            let dh = 16;
+            let bt = 1 + rng.below(6);
+            let s = 1 + rng.below(50);
+            let group = 1 + rng.below(3);
+            let q = rng.normal_vec(group * dh);
+            let k = rng.normal_vec(s * dh);
+            let v = rng.normal_vec(s * dh);
+            let nblocks = s.div_ceil(bt);
+            let mut table: Vec<u32> = (0..nblocks as u32).collect();
+            for i in (1..table.len()).rev() {
+                table.swap(i, rng.below(i + 1));
+            }
+            let mut pk = vec![0.0f32; nblocks * bt * dh];
+            let mut pv = vec![0.0f32; nblocks * bt * dh];
+            for t in 0..s {
+                let r = table[t / bt] as usize * bt + t % bt;
+                pk[r * dh..(r + 1) * dh].copy_from_slice(&k[t * dh..(t + 1) * dh]);
+                pv[r * dh..(r + 1) * dh].copy_from_slice(&v[t * dh..(t + 1) * dh]);
+            }
+            let flat = make_inputs(&q, &k, &v, group, dh, s);
+            let mut paged = make_inputs(&q, &pk, &pv, group, dh, s);
+            paged.bt = &table;
+            paged.block_tokens = bt;
+            let mut probs = Vec::new();
+            let mut a = vec![0.0f32; group * dh];
+            let mut b = vec![0.0f32; group * dh];
+            dense_attention(KernelMode::Simd, &flat, &mut probs, &mut a);
+            dense_attention(KernelMode::Simd, &paged, &mut probs, &mut b);
+            prop_assert(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "dense paged bits",
+            )?;
+            let n = 1 + rng.below(s);
+            let idx: Vec<u32> = rng.choose_distinct(s, n).iter().map(|&i| i as u32).collect();
+            sparse_attention_fused(KernelMode::Simd, &flat, &idx, &mut probs, &mut a);
+            sparse_attention_fused(KernelMode::Simd, &paged, &idx, &mut probs, &mut b);
+            prop_assert(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused paged bits",
+            )
         });
     }
 

@@ -67,6 +67,23 @@ pub fn scores_group(qcodes: &[u64], group: usize, codes: &[u64], rbit: usize, ou
     let words = qcodes.len() / group;
     out.clear();
     out.reserve(codes.len() / words);
+    scores_group_into(qcodes, group, codes, rbit, out);
+}
+
+/// Appending variant of [`scores_group`]: scores `codes` and pushes onto
+/// `out` without clearing it first. The paged selector path walks a
+/// sequence's code cache one physical block at a time (blocks are not
+/// adjacent in the shared plane), accumulating per-block scores into one
+/// logical score vector — same arithmetic per row, so paged scoring is
+/// bit-identical to scoring the contiguous cache in one call.
+pub fn scores_group_into(
+    qcodes: &[u64],
+    group: usize,
+    codes: &[u64],
+    rbit: usize,
+    out: &mut Vec<i32>,
+) {
+    let words = qcodes.len() / group;
     for row in codes.chunks_exact(words) {
         let mut match_bits = (group * rbit) as i32;
         for g in 0..group {
@@ -140,6 +157,28 @@ mod tests {
                 }
             }
             prop_assert(agg == want, "group aggregation mismatch")
+        });
+    }
+
+    #[test]
+    fn blockwise_group_scoring_matches_one_shot() {
+        // the paged selector scores one physical block at a time; the
+        // concatenation must equal one pass over a contiguous cache
+        check(40, |rng: &mut Rng| {
+            let words = 2;
+            let rbit = 128;
+            let group = 1 + rng.below(3);
+            let n = 1 + rng.below(60);
+            let qs = rand_codes(rng, group, words);
+            let codes = rand_codes(rng, n, words);
+            let mut whole = Vec::new();
+            scores_group(&qs, group, &codes, rbit, &mut whole);
+            let bt = 1 + rng.below(7);
+            let mut blocked = Vec::new();
+            for chunk in codes.chunks(bt * words) {
+                scores_group_into(&qs, group, chunk, rbit, &mut blocked);
+            }
+            prop_assert(whole == blocked, "blockwise != one-shot")
         });
     }
 

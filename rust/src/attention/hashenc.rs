@@ -83,6 +83,31 @@ pub fn encode_fused_blocked(x: &[f32], w: &[f32], rbit: usize, out: &mut Vec<u64
     }
 }
 
+/// In-place variant of [`encode_fused_blocked`] writing the packed words
+/// into `out` (length [`words64`]`(rbit)`) instead of appending — the
+/// paged cache encodes straight into a token's code row inside the
+/// shared [`crate::kvcache::BlockStore`] plane. Identical arithmetic and
+/// reduction order, so codes are bit-identical across layouts.
+pub fn encode_fused_blocked_into(x: &[f32], w: &[f32], rbit: usize, out: &mut [u64]) {
+    debug_assert_eq!(out.len(), words64(rbit));
+    for (word, slot) in out.iter_mut().enumerate() {
+        let base = word * 64;
+        let width = (rbit - base).min(64);
+        let mut acc = [0.0f32; 64];
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &w[i * rbit + base..i * rbit + base + width];
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a += xi * r;
+            }
+        }
+        let mut packed = 0u64;
+        for (b, &a) in acc.iter().take(width).enumerate() {
+            packed |= ((a >= 0.0) as u64) << b;
+        }
+        *slot = packed;
+    }
+}
+
 /// Encode a batch of contiguous rows in row order. The tiled prefill
 /// block-append path ([`crate::kvcache::HeadMut::append_block`]) runs
 /// the same per-row [`encode_fused_blocked`] over strided rows, so both
@@ -125,9 +150,12 @@ mod tests {
             encode_fused(&x, &w, rbit, &mut a);
             encode_unfused(&x, &w, rbit, &mut b);
             encode_fused_blocked(&x, &w, rbit, &mut c);
+            let mut d = vec![u64::MAX; words64(rbit)];
+            encode_fused_blocked_into(&x, &w, rbit, &mut d);
             prop_assert(unpack(&a, rbit) == want, "fused mismatch")?;
             prop_assert(a == b, "unfused differs from fused")?;
-            prop_assert(a == c, "blocked differs from fused")
+            prop_assert(a == c, "blocked differs from fused")?;
+            prop_assert(a == d, "in-place blocked differs from fused")
         });
     }
 

@@ -13,7 +13,7 @@
 //! * [`SnapKvSelector`]    — prefill observation-window keeps + recents.
 
 use super::compute::exact_group_scores;
-use super::hamming::scores_group;
+use super::hamming::{scores_group, scores_group_into};
 use super::hashenc::encode_fused_blocked;
 use super::topk::{topk_counting, topk_quickselect};
 use super::{AttnInputs, MethodState, Scratch, Selector};
@@ -34,7 +34,26 @@ impl Selector for HataSelector {
         for g in 0..inp.group {
             encode_fused_blocked(inp.q_row(g), inp.side.hash_w, inp.rbit, &mut sc.qcodes);
         }
-        scores_group(&sc.qcodes, inp.group, &inp.codes[..inp.s * inp.words], inp.rbit, &mut sc.iscores);
+        if inp.bt.is_empty() {
+            let rows = &inp.codes[..inp.s * inp.words];
+            scores_group(&sc.qcodes, inp.group, rows, inp.rbit, &mut sc.iscores);
+        } else {
+            // paged cache: the code rows of one logical block are
+            // contiguous inside their physical block, so score block by
+            // block, appending into one logical score vector — per-row
+            // arithmetic identical to the contiguous one-shot call
+            sc.iscores.clear();
+            sc.iscores.reserve(inp.s);
+            let bt = inp.block_tokens;
+            let mut t = 0;
+            while t < inp.s {
+                let n = bt.min(inp.s - t);
+                let r = inp.phys_row(t);
+                let rows = &inp.codes[r * inp.words..(r + n) * inp.words];
+                scores_group_into(&sc.qcodes, inp.group, rows, inp.rbit, &mut sc.iscores);
+                t += n;
+            }
+        }
         let max_score = (inp.group * inp.rbit) as i32;
         topk_counting(&sc.iscores, max_score, budget, &mut sc.hist, &mut sc.indices);
     }
@@ -422,7 +441,57 @@ mod tests {
             rbit: 0,
             s,
             pos: s - 1,
+            bt: &[],
+            block_tokens: 0,
             side: Side::default(),
+        }
+    }
+
+    #[test]
+    fn hata_paged_scores_match_contiguous() {
+        // the paged per-block scoring loop must reproduce the one-shot
+        // contiguous selection exactly (same scores, same top-k)
+        let dh = 16;
+        let rbit = 128;
+        let s = 57; // ends mid-block for bt in {4, 8, 16}
+        let mut rng = Rng::new(6);
+        let k = rng.normal_vec(s * dh);
+        let hash_w = rng.normal_vec(dh * rbit);
+        let codes = encode_rows(&k, dh, &hash_w, rbit);
+        let q = rng.normal_vec(dh);
+        let v = vec![0.0; s * dh];
+        let mut flat = base_inputs(&q, &k, &v, 1, dh, s);
+        flat.codes = &codes;
+        flat.words = rbit / 64;
+        flat.rbit = rbit;
+        flat.side.hash_w = &hash_w;
+        let mut st = MethodState::default();
+        let mut sc = Scratch::default();
+        HataSelector.select(&flat, &mut st, 10, &mut sc);
+        let want = sc.indices.clone();
+        for bt in [4usize, 8, 16] {
+            // scatter code rows into shuffled physical blocks
+            let words = rbit / 64;
+            let nblocks = s.div_ceil(bt);
+            let mut table: Vec<u32> = (0..nblocks as u32).collect();
+            table.reverse();
+            let mut pcodes = vec![0u64; nblocks * bt * words];
+            let mut pk = vec![0.0f32; nblocks * bt * dh];
+            for t in 0..s {
+                let r = table[t / bt] as usize * bt + t % bt;
+                let (cs, cd) = (&codes[t * words..(t + 1) * words], r * words);
+                pcodes[cd..cd + words].copy_from_slice(cs);
+                pk[r * dh..(r + 1) * dh].copy_from_slice(&k[t * dh..(t + 1) * dh]);
+            }
+            let mut paged = base_inputs(&q, &pk, &v, 1, dh, s);
+            paged.codes = &pcodes;
+            paged.words = words;
+            paged.rbit = rbit;
+            paged.side.hash_w = &hash_w;
+            paged.bt = &table;
+            paged.block_tokens = bt;
+            HataSelector.select(&paged, &mut st, 10, &mut sc);
+            assert_eq!(want, sc.indices, "bt={bt}");
         }
     }
 

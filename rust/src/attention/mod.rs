@@ -38,6 +38,11 @@ pub mod topk;
 /// are aggregated over them, paper Sec 3.2); `k`/`v` are the full per-head
 /// caches; `codes` is the packed key-code cache (HATA) and `pos` the
 /// current absolute position (== s - 1 at decode time).
+///
+/// With the paged KV layout (`bt` non-empty), `k`/`v`/`codes` are whole
+/// [`crate::kvcache::BlockStore`] planes and logical token `t` resolves
+/// through [`AttnInputs::phys_row`]; the row accessors do this
+/// transparently, so selectors and attention kernels are layout-agnostic.
 pub struct AttnInputs<'a> {
     /// The `group` query-head rows sharing this KV head, [group, dh].
     pub q: &'a [f32],
@@ -45,9 +50,11 @@ pub struct AttnInputs<'a> {
     pub group: usize,
     /// Head dimension.
     pub dh: usize,
-    /// This head's full key cache, [s, dh] row-major.
+    /// This head's full key cache, [s, dh] row-major (the whole shared
+    /// plane when paged).
     pub k: &'a [f32],
-    /// This head's full value cache, [s, dh] row-major.
+    /// This head's full value cache, [s, dh] row-major (the whole shared
+    /// plane when paged).
     pub v: &'a [f32],
     /// Packed key-code cache (HATA), `words` u64 per token.
     pub codes: &'a [u64],
@@ -59,6 +66,11 @@ pub struct AttnInputs<'a> {
     pub s: usize,
     /// Absolute position of the query token (== s - 1).
     pub pos: usize,
+    /// Paged layout: block table mapping logical block -> physical block
+    /// id. Empty = contiguous (physical row == token index).
+    pub bt: &'a [u32],
+    /// Paged layout: tokens per physical block (0 when contiguous).
+    pub block_tokens: usize,
     /// Method-specific side structures maintained by the KV cache.
     pub side: Side<'a>,
 }
@@ -97,14 +109,33 @@ impl<'a> AttnInputs<'a> {
         &self.q[g * self.dh..(g + 1) * self.dh]
     }
 
-    /// Cached key row of token `t`.
-    pub fn k_row(&self, t: usize) -> &'a [f32] {
-        &self.k[t * self.dh..(t + 1) * self.dh]
+    /// Physical storage row of logical token `t` (identity when
+    /// contiguous, block-table indirection when paged).
+    #[inline]
+    pub fn phys_row(&self, t: usize) -> usize {
+        if self.bt.is_empty() {
+            t
+        } else {
+            self.bt[t / self.block_tokens] as usize * self.block_tokens + t % self.block_tokens
+        }
     }
 
-    /// Packed code row of token `t`.
+    /// Cached key row of logical token `t`.
+    pub fn k_row(&self, t: usize) -> &'a [f32] {
+        let r = self.phys_row(t);
+        &self.k[r * self.dh..(r + 1) * self.dh]
+    }
+
+    /// Cached value row of logical token `t`.
+    pub fn v_row(&self, t: usize) -> &'a [f32] {
+        let r = self.phys_row(t);
+        &self.v[r * self.dh..(r + 1) * self.dh]
+    }
+
+    /// Packed code row of logical token `t`.
     pub fn code_row(&self, t: usize) -> &'a [u64] {
-        &self.codes[t * self.words..(t + 1) * self.words]
+        let r = self.phys_row(t);
+        &self.codes[r * self.words..(r + 1) * self.words]
     }
 }
 

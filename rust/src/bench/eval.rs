@@ -112,6 +112,8 @@ pub fn fidelity(
                 rbit: cfg.rbit,
                 s: cache.len(),
                 pos: cache.len() - 1,
+                bt: &[],
+                block_tokens: 0,
                 side: cache.side(li, kv, model.weights.hash_head(li, kv), &model.aux),
             };
             let budget = serve.budget.min(inp.s);

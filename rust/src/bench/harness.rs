@@ -152,6 +152,8 @@ impl LayerFixture {
             rbit: self.rbit,
             s: self.s,
             pos: self.s - 1,
+            bt: &[],
+            block_tokens: 0,
             side: Side {
                 hash_w: &self.hash_w,
                 quest_min: &self.quest_min,

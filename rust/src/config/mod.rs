@@ -298,6 +298,15 @@ pub struct ServeConfig {
     pub prefill_tile: usize,
     /// KV pool capacity in tokens (across sequences).
     pub kv_capacity: usize,
+    /// Physical KV block size in tokens (`--kv-block`): the paged
+    /// cache's page granularity and the pool's accounting unit. Must
+    /// be >= 1; bit-identical outputs for any value.
+    pub kv_block: usize,
+    /// Store KV in fixed-size physical blocks behind per-sequence
+    /// block tables (`--paged`) instead of contiguous per-head
+    /// regions. Enables copy-on-write prefix sharing and cheap
+    /// preempt/resume; bit-identical to the contiguous layout.
+    pub paged: bool,
     /// Loki channels (low-rank dims) when method == Loki.
     pub loki_channels: usize,
     /// Quest block size when method == Quest.
@@ -346,6 +355,8 @@ impl Default for ServeConfig {
             prefill_chunk: 512,
             prefill_tile: 32,
             kv_capacity: 1 << 20,
+            kv_block: crate::kvcache::pool::PAGE_TOKENS,
+            paged: false,
             loki_channels: 4, // paper: 32 of 128 dims; here 4 of 16 (same 25%)
             quest_block: 16,  // paper: 32; scaled to our shorter contexts
             magicpig_k: 10,

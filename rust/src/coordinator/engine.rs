@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use crate::config::ServeConfig;
 use crate::kvcache::pool::KvPool;
-use crate::kvcache::SeqKvCache;
+use crate::kvcache::{BlockStore, SeqKvCache};
 use crate::model::sampler::Sampler;
 use crate::model::{
     make_selector, sel_ref, DecodeGraphCache, DecodeItem, DecodeScratch, Model, PrefillItem,
@@ -77,6 +77,9 @@ pub struct Engine {
     selector: Option<Box<dyn crate::attention::Selector + Send + Sync>>,
     scheduler: Scheduler,
     pool: KvPool,
+    /// shared physical block planes when `--paged`; `None` keeps every
+    /// sequence on the contiguous per-head layout
+    store: Option<Arc<BlockStore>>,
     seqs: HashMap<u64, LiveSeq>,
     workers: ThreadPool,
     worker_scratch: Vec<WorkerScratch>,
@@ -110,9 +113,20 @@ impl Engine {
         } else {
             Sampler::Greedy
         };
+        let store = serve.paged.then(|| {
+            let cfg = &model.cfg;
+            assert_eq!(cfg.rbit % 64, 0, "--paged requires rbit % 64 == 0");
+            Arc::new(BlockStore::new(
+                cfg.n_layers * cfg.n_kv_heads,
+                cfg.head_dim,
+                cfg.rbit / 64,
+                serve.kv_block,
+            ))
+        });
         Engine {
             scheduler: Scheduler::new(&serve),
-            pool: KvPool::new(serve.kv_capacity),
+            pool: KvPool::with_block(serve.kv_capacity, serve.kv_block),
+            store,
             seqs: HashMap::new(),
             workers: ThreadPool::new(threads),
             worker_scratch: (0..threads).map(|_| WorkerScratch::default()).collect(),
@@ -150,8 +164,12 @@ impl Engine {
         // results are independent of thread count and arrival order
         let rng = Rng::new(self.serve.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
         // reserve the whole request's cache up front (prompt + budget),
-        // so steady-state decode appends never reallocate
-        let mut cache = SeqKvCache::new(&self.model.cfg, &self.serve);
+        // so steady-state decode appends never reallocate — for paged
+        // caches this sizes the block table; pages come from the pool
+        let mut cache = match &self.store {
+            Some(store) => SeqKvCache::new_paged(&self.model.cfg, &self.serve, store.clone()),
+            None => SeqKvCache::new(&self.model.cfg, &self.serve),
+        };
         cache.reserve(req.prompt.len() + req.max_new_tokens + 1);
         self.seqs.insert(
             req.id,
@@ -177,6 +195,20 @@ impl Engine {
         std::mem::take(&mut self.responses)
     }
 
+    /// Preempt a live sequence back to the queue front. Its cache, pool
+    /// pages and generation state are all retained, so re-admission
+    /// resumes with zero recompute (cheap under `--paged`, where held
+    /// pages are exact block-table entries, not a contiguous region).
+    /// Returns whether `id` was live.
+    pub fn preempt(&mut self, id: u64) -> bool {
+        self.scheduler.preempt(id)
+    }
+
+    /// The engine's KV pool (page accounting, refcounts, prefix registry).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
     /// One engine step: decode every running sequence once (batched
     /// across the threadpool), advance prefill chunks, admit from the
     /// queue. Returns what got done.
@@ -192,6 +224,26 @@ impl Engine {
         let t0 = Instant::now();
         let sampler = self.sampler;
         self.scheduler.plan_into(&mut self.pool, &mut self.plan);
+        if let Some(store) = &self.store {
+            // the plan's grows may have minted fresh physical pages:
+            // extend the shared planes, then mirror the pool's block
+            // lists into every planned sequence's table — both strictly
+            // before any work item captures a PagedRef (engine thread,
+            // between passes; see kvcache::paged's module contract)
+            // SAFETY: no pass is running, so no worker holds a view
+            unsafe { store.ensure_blocks(self.pool.minted_pages()) };
+            let ids = self
+                .plan
+                .prefill
+                .iter()
+                .map(|w| w.id)
+                .chain(self.plan.decode.iter().map(|w| w.id));
+            for id in ids {
+                if let Some(seq) = self.seqs.get_mut(&id) {
+                    seq.cache.sync_table(self.pool.seq_blocks(id));
+                }
+            }
+        }
         let mut outcome =
             StepOutcome { admitted: self.plan.admitted.len(), ..Default::default() };
         let slots = self.plan.prefill.len().max(self.plan.decode.len());
@@ -228,10 +280,22 @@ impl Engine {
             for (slot, w) in self.plan.prefill.iter().enumerate() {
                 self.scheduler.on_prefilled(w.id, w.range.len());
                 outcome.prefilled += w.range.len();
+                self.metrics.prefill_tokens += w.range.len() as u64;
                 if w.is_final {
                     let logits = &self.seq_scratch[slot].logits;
                     let seq = self.seqs.get_mut(&w.id).expect("live seq");
                     seq.next_token = Some(sampler.sample(logits, &mut seq.rng));
+                }
+            }
+            // copy-on-write prefix sharing: once a prompt is fully in
+            // cache, alias any block another live sequence already
+            // stores for the identical token chain (paged only; the
+            // sequence decodes strictly past every shared block)
+            if self.store.is_some() {
+                for w in self.plan.prefill.iter().filter(|w| w.is_final) {
+                    let seq = self.seqs.get_mut(&w.id).expect("live seq");
+                    let hits = seq.cache.dedup_prefix(&mut self.pool, w.id, &seq.req.prompt);
+                    self.metrics.prefix_hits += hits as u64;
                 }
             }
             // degenerate max_new_tokens == 0: complete right after prefill

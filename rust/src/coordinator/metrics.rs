@@ -25,6 +25,14 @@ pub struct Metrics {
     /// stall events: the engine detected zero progress for consecutive
     /// steps and preempted the stuck work (see `Engine::run_to_completion`)
     pub stalls: u64,
+    /// Prompt tokens actually run through prefill. Under preempt/resume
+    /// this stays equal to the sum of prompt lengths — held pages mean
+    /// resumed sequences never recompute a chunk.
+    pub prefill_tokens: u64,
+    /// Prompt blocks deduplicated against another sequence's identical
+    /// prefix (`--paged` copy-on-write sharing): each hit is one
+    /// physical block stored once instead of twice.
+    pub prefix_hits: u64,
     /// Work-queue executor counters for the decode stage (`--exec
     /// queue`; stays zero under `--exec barrier`). `idle_waits` high
     /// relative to `tasks` means workers starve — batch too small for
@@ -122,6 +130,13 @@ impl Metrics {
                 d.graph_builds, d.graph_hits
             ));
         }
+        // paged-cache prefix sharing (zero unless --paged found hits)
+        if self.prefix_hits > 0 {
+            line.push_str(&format!(
+                " paged[prefix_hits={} prefill_tokens={}]",
+                self.prefix_hits, self.prefill_tokens
+            ));
+        }
         line
     }
 }
@@ -141,6 +156,16 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.prompt_tokens, 32);
         assert!(m.report().contains("completed=1"));
+    }
+
+    #[test]
+    fn prefix_hits_reported_only_when_present() {
+        let mut m = Metrics::new();
+        assert!(!m.report().contains("paged["), "no prefix hits yet");
+        m.prefill_tokens = 256;
+        m.prefix_hits = 3;
+        let r = m.report();
+        assert!(r.contains("paged[prefix_hits=3 prefill_tokens=256]"), "{r}");
     }
 
     #[test]

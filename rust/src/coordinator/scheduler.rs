@@ -140,6 +140,20 @@ impl Scheduler {
         let _ = pool.release(id);
     }
 
+    /// Preempt a live sequence: move its ticket to the queue front,
+    /// keeping `prefilled`/`generated` progress intact. Pool pages are
+    /// deliberately *not* released — block tables make them cheap to
+    /// hold, so on re-admission the sequence resumes exactly where it
+    /// left off with zero recompute. Returns whether `id` was live.
+    pub fn preempt(&mut self, id: u64) -> bool {
+        let Some(i) = self.live.iter().position(|t| t.id == id) else {
+            return false;
+        };
+        let t = self.live.remove(i);
+        self.queue.push_front(t);
+        true
+    }
+
     /// Drop every queued and live ticket (stall recovery); returns the
     /// evicted ids so the engine can release pages and respond.
     pub fn evict_all(&mut self) -> Vec<u64> {
@@ -164,11 +178,13 @@ impl Scheduler {
         plan.decode.clear();
         plan.prefill.clear();
         plan.admitted.clear();
-        // 1. admit while there is room
+        // 1. admit while there is room. A preempted sequence keeps its
+        // pool pages, so admission needs only the *remaining* tokens
+        // beyond what the pool already holds for this id.
         while self.live.len() < self.max_batch {
             let Some(front) = self.queue.front() else { break };
-            // need at least the prompt in pages to admit
-            if !pool.can_grow(front.id, front.prompt_len + 1) {
+            let need = (front.prompt_len + 1).saturating_sub(pool.seq_tokens(front.id));
+            if !pool.can_grow(front.id, need) {
                 break;
             }
             let t = self.queue.pop_front().unwrap();
@@ -181,10 +197,10 @@ impl Scheduler {
                 plan.decode.push(DecodeWork { id: t.id, pos: t.prompt_len + t.generated });
             }
         }
-        // reserve one token per decoding sequence
-        for w in &plan.decode {
-            let _ = pool.grow(w.id, 1);
-        }
+        // reserve one token per decoding sequence; a sequence whose
+        // reservation fails under pool pressure sits out this step
+        // (it stays live and retries next plan)
+        plan.decode.retain(|w| pool.grow(w.id, 1).is_ok());
         // 3. chunked prefill for the oldest incomplete prefill
         let mut chunk_left = self.prefill_chunk;
         for t in self.live.iter() {
@@ -347,6 +363,62 @@ mod tests {
                 reusing.on_decoded(w.id);
             }
         }
+    }
+
+    #[test]
+    fn preempt_keeps_pages_and_resumes_without_recompute() {
+        let mut s = scheduler(4, 64);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 150, 3));
+        let _ = s.plan(&mut pool); // admit + first chunk (0..64)
+        s.on_prefilled(1, 64);
+        let held = pool.seq_tokens(1);
+        assert!(held >= 64);
+        assert!(s.preempt(1));
+        assert_eq!(s.live_len(), 0);
+        assert_eq!(s.queue_len(), 1);
+        // pages retained across preemption
+        assert_eq!(pool.seq_tokens(1), held);
+        assert!(!s.preempt(1)); // not live anymore
+        // re-admission resumes from the retained prefill offset
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(plan.prefill, vec![pf(1, 64..128, false)]);
+    }
+
+    #[test]
+    fn preempted_seq_readmits_with_remaining_need_only() {
+        // pool with 3 pages; prompt needs 2 pages (+1 token for decode)
+        let mut s = scheduler(4, 4 * PAGE_TOKENS);
+        let mut pool = KvPool::new(3 * PAGE_TOKENS);
+        s.submit(mk(1, 2 * PAGE_TOKENS, 2));
+        let _ = s.plan(&mut pool); // admits + prefills whole prompt
+        s.on_prefilled(1, 2 * PAGE_TOKENS);
+        assert!(s.preempt(1));
+        // a fresh sequence asking for 2*PAGE_TOKENS+1 could not fit in
+        // the 1 remaining free page, but seq 1 already holds its pages:
+        // admission only needs the +1 decode token
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(plan.decode, vec![DecodeWork { id: 1, pos: 2 * PAGE_TOKENS }]);
+    }
+
+    #[test]
+    fn decode_sits_out_when_pool_exhausted() {
+        let mut s = scheduler(4, 64);
+        let mut pool = KvPool::new(PAGE_TOKENS);
+        s.submit(mk(1, PAGE_TOKENS - 1, 4));
+        let _ = s.plan(&mut pool);
+        s.on_prefilled(1, PAGE_TOKENS - 1);
+        // first decode token still fits in the last slot of the page
+        let p = s.plan(&mut pool);
+        assert_eq!(p.decode.len(), 1);
+        s.on_decoded(1);
+        // next token would need a second page; the pool has none, so the
+        // sequence sits out instead of decoding without a reservation
+        let p = s.plan(&mut pool);
+        assert!(p.decode.is_empty());
+        assert_eq!(s.live_len(), 1);
     }
 
     #[test]

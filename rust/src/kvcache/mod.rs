@@ -11,9 +11,29 @@
 //! token blocks per head ([`HeadMut::append_block`], then one
 //! [`SeqKvCache::advance_len_by`]), with identical per-row arithmetic so
 //! block decomposition never changes cache contents.
+//!
+//! Two storage layouts share every API above:
+//!
+//! * **contiguous** ([`SeqKvCache::new`]) — each head region owns
+//!   grow-only `Vec`s, physical row == token index;
+//! * **paged** ([`SeqKvCache::new_paged`]) — K/V/codes live in a shared
+//!   [`BlockStore`] of fixed-size blocks and the sequence holds only a
+//!   block table ([`pool::KvPool`] owns block identity, refcounts, and
+//!   copy-on-write prefix sharing). Appends and reads resolve logical
+//!   token `t` through the table; per-method side structures stay
+//!   per-sequence (they are never shared, so they never page).
+//!
+//! Both layouts produce bit-identical attention results — enforced by
+//! the rust/tests/paged.rs differential trace harness.
 
 pub mod offload;
+pub mod paged;
 pub mod pool;
+
+use std::sync::Arc;
+
+pub use paged::{BlockStore, HeadRead, PagedRef};
+use pool::KvPool;
 
 use crate::attention::Side;
 use crate::config::{Method, ModelConfig, ServeConfig};
@@ -22,14 +42,20 @@ use crate::util::rng::Rng;
 /// One (layer, kv-head) cache region: K/V rows, the packed key-code
 /// cache, and the per-method side structures maintained on append.
 /// Layout: contiguous row-major token arrays, so the per-head decode hot
-/// loop walks sequential memory.
-#[derive(Default)]
+/// loop walks sequential memory. In the paged layout the `k`/`v`/`codes`
+/// vectors stay empty (rows live in the shared [`BlockStore`]); the side
+/// structures and the token counter are maintained here either way.
+#[derive(Clone, Default)]
 pub struct HeadCache {
-    /// Key rows, [len, dh] row-major.
+    /// Tokens appended to this head (equals the row count in the
+    /// contiguous layout; the append cursor in the paged layout).
+    pub tokens: usize,
+    /// Key rows, [len, dh] row-major (contiguous layout only).
     pub k: Vec<f32>,
-    /// Value rows, [len, dh] row-major.
+    /// Value rows, [len, dh] row-major (contiguous layout only).
     pub v: Vec<f32>,
-    /// Packed key hash codes, rbit/64 words per token (HATA).
+    /// Packed key hash codes, rbit/64 words per token (HATA; contiguous
+    /// layout only).
     pub codes: Vec<u64>,
     /// Quest per-block elementwise key minima, [nblocks, dh].
     pub quest_min: Vec<f32>,
@@ -62,7 +88,11 @@ pub struct HeadMut<'a> {
     loki_channels: usize,
     mp_k: usize,
     mp_l: usize,
-    /// The underlying (layer, kv-head) cache region.
+    /// Paged layout: this head's plane in the shared [`BlockStore`] plus
+    /// the sequence's block table. `None` = contiguous layout.
+    paged: Option<PagedRef>,
+    /// The underlying (layer, kv-head) cache region (side structures +
+    /// token counter; also the K/V/code rows when contiguous).
     pub hc: &'a mut HeadCache,
 }
 
@@ -82,13 +112,41 @@ impl HeadMut<'_> {
         debug_assert_eq!(krow.len(), self.dh);
         let dh = self.dh;
         let hc = &mut *self.hc;
-        hc.k.extend_from_slice(krow);
-        hc.v.extend_from_slice(vrow);
-        if !hash_w.is_empty() {
-            crate::attention::hashenc::encode_fused_blocked(krow, hash_w, rbit, &mut hc.codes);
+        let t = hc.tokens;
+        match &self.paged {
+            // SAFETY: this work item exclusively owns this (sequence,
+            // plane) append position: the engine builds at most one
+            // append item per (sequence, layer, kv) and token `t` lands
+            // in one of the sequence's own unshared blocks (appends sit
+            // at `t >= prompt_len`, past every dedup-shared block), so
+            // no other thread touches these rows (kvcache/paged.rs
+            // module contract).
+            Some(p) => unsafe {
+                p.k_row_mut(t).copy_from_slice(krow);
+                p.v_row_mut(t).copy_from_slice(vrow);
+                if !hash_w.is_empty() {
+                    crate::attention::hashenc::encode_fused_blocked_into(
+                        krow,
+                        hash_w,
+                        rbit,
+                        p.code_row_mut(t),
+                    );
+                }
+            },
+            None => {
+                hc.k.extend_from_slice(krow);
+                hc.v.extend_from_slice(vrow);
+                if !hash_w.is_empty() {
+                    crate::attention::hashenc::encode_fused_blocked(
+                        krow,
+                        hash_w,
+                        rbit,
+                        &mut hc.codes,
+                    );
+                }
+            }
         }
         if self.quest_block > 0 {
-            let t = hc.k.len() / dh - 1;
             if t % self.quest_block == 0 {
                 hc.quest_min.extend_from_slice(krow);
                 hc.quest_max.extend_from_slice(krow);
@@ -126,6 +184,7 @@ impl HeadMut<'_> {
                 hc.mp_sigs.push(sig);
             }
         }
+        hc.tokens = t + 1;
     }
 
     /// Append a whole block of tokens' K/V rows for this head in token
@@ -149,14 +208,34 @@ impl HeadMut<'_> {
     ) {
         let dh = self.dh;
         let rows = krows.len() / stride;
-        self.hc.k.reserve(rows * dh);
-        self.hc.v.reserve(rows * dh);
-        if !hash_w.is_empty() {
-            self.hc.codes.reserve(rows * (rbit / 64));
+        if self.paged.is_none() {
+            self.hc.k.reserve(rows * dh);
+            self.hc.v.reserve(rows * dh);
+            if !hash_w.is_empty() {
+                self.hc.codes.reserve(rows * (rbit / 64));
+            }
         }
         for r in 0..rows {
             let at = r * stride + offset;
             self.append(&krows[at..at + dh], &vrows[at..at + dh], hash_w, rbit, aux);
+        }
+    }
+
+    /// Unified read view of this head's K/V/code rows in either layout.
+    pub fn read(&self) -> HeadRead<'_> {
+        match &self.paged {
+            // SAFETY: `&self` proves no concurrent mutation through this
+            // view, and the module contract (kvcache/paged.rs) rules out
+            // reallocation or foreign writes to this sequence's rows
+            // while the work item holding this HeadMut runs.
+            Some(p) => unsafe { p.read() },
+            None => HeadRead {
+                k: &self.hc.k,
+                v: &self.hc.v,
+                codes: &self.hc.codes,
+                bt: &[],
+                block_tokens: 0,
+            },
         }
     }
 
@@ -196,6 +275,7 @@ pub struct HeadHandle {
     loki_channels: usize,
     mp_k: usize,
     mp_l: usize,
+    paged: Option<PagedRef>,
     hc: *mut HeadCache,
 }
 
@@ -226,6 +306,7 @@ impl HeadHandle {
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
             mp_l: self.mp_l,
+            paged: self.paged,
             hc: &mut *self.hc,
         }
     }
@@ -239,6 +320,32 @@ impl HeadHandle {
     pub unsafe fn head_ref(&self) -> &HeadCache {
         &*self.hc
     }
+
+    /// Materialize the unified K/V/code read view of this head region,
+    /// resolving the paged layout's block indirection when active.
+    ///
+    /// # Safety
+    /// As for [`HeadHandle::head_ref`]: no mutation of this head region
+    /// (and, when paged, no [`BlockStore::ensure_blocks`]) may be live
+    /// for the returned view's lifetime.
+    pub unsafe fn read_view(&self) -> HeadRead<'_> {
+        match &self.paged {
+            Some(p) => p.read(),
+            None => {
+                let hc = &*self.hc;
+                HeadRead { k: &hc.k, v: &hc.v, codes: &hc.codes, bt: &[], block_tokens: 0 }
+            }
+        }
+    }
+}
+
+/// Paged-layout state of one sequence: the shared physical arena plus
+/// this sequence's block table (mirrored from [`pool::KvPool`] by
+/// [`SeqKvCache::sync_table`] so worker threads can resolve rows without
+/// touching the pool).
+struct PagedSeq {
+    store: Arc<BlockStore>,
+    table: Vec<u32>,
 }
 
 /// All cached state for one sequence: K/V per (layer, kv-head), the packed
@@ -257,6 +364,7 @@ pub struct SeqKvCache {
     loki_channels: usize,
     mp_k: usize,
     mp_l: usize,
+    paged: Option<PagedSeq>,
     heads: Vec<HeadCache>,
 }
 
@@ -278,8 +386,57 @@ impl SeqKvCache {
             loki_channels: if enable_loki { serve.loki_channels } else { 0 },
             mp_k: if enable_mp { serve.magicpig_k } else { 0 },
             mp_l: if enable_mp { serve.magicpig_l } else { 0 },
+            paged: None,
             heads: (0..heads).map(|_| HeadCache::default()).collect(),
         }
+    }
+
+    /// Empty *paged* cache: K/V/code rows live in the shared `store` and
+    /// this sequence holds only a block table (kept in sync with the
+    /// owning [`pool::KvPool`] via [`SeqKvCache::sync_table`]). Side
+    /// structures stay per-sequence exactly as in the contiguous layout.
+    ///
+    /// Panics if the store's geometry does not match `cfg` or if `rbit`
+    /// is not a multiple of 64 (paged code rows are written in place, so
+    /// every token must own a whole number of words).
+    pub fn new_paged(cfg: &ModelConfig, serve: &ServeConfig, store: Arc<BlockStore>) -> Self {
+        assert_eq!(
+            store.n_planes(),
+            cfg.n_layers * cfg.n_kv_heads,
+            "store plane count must match the model's (layer, kv-head) grid"
+        );
+        assert_eq!(store.dh(), cfg.head_dim, "store row width must match head_dim");
+        assert_eq!(cfg.rbit % 64, 0, "paged cache requires rbit % 64 == 0");
+        assert_eq!(store.words(), cfg.rbit / 64, "store code width must match rbit");
+        let mut cache = Self::new(cfg, serve);
+        cache.paged = Some(PagedSeq { store, table: Vec::new() });
+        cache
+    }
+
+    /// True when this cache uses the paged layout.
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// This sequence's block table (empty when contiguous).
+    pub fn block_table(&self) -> &[u32] {
+        self.paged.as_ref().map(|p| p.table.as_slice()).unwrap_or(&[])
+    }
+
+    /// Mirror the pool's block list for this sequence into the local
+    /// table (no-op when contiguous). Engine-thread only, between passes:
+    /// worker-held [`PagedRef`]s alias this table's storage, so it must
+    /// not be resized while a pass runs — callers reserve via
+    /// [`SeqKvCache::reserve`] and sync before capturing work items.
+    pub fn sync_table(&mut self, blocks: &[u32]) {
+        if let Some(p) = &mut self.paged {
+            p.table.clear();
+            p.table.extend_from_slice(blocks);
+        }
+    }
+
+    fn paged_ref(&self, h: usize) -> Option<PagedRef> {
+        self.paged.as_ref().map(|p| p.store.head_ref(h, &p.table))
     }
 
     /// Absolute head index (layer * n_kv + kv) keying the aux tables.
@@ -299,6 +456,7 @@ impl SeqKvCache {
     }
 
     fn head_view(&mut self, h: usize) -> HeadMut<'_> {
+        let paged = self.paged_ref(h);
         HeadMut {
             head: h,
             dh: self.dh,
@@ -306,6 +464,7 @@ impl SeqKvCache {
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
             mp_l: self.mp_l,
+            paged,
             hc: &mut self.heads[h],
         }
     }
@@ -322,6 +481,7 @@ impl SeqKvCache {
         let (dh, qb, lc, mk, ml, nkv) =
             (self.dh, self.quest_block, self.loki_channels, self.mp_k, self.mp_l, self.n_kv);
         let base = layer * nkv;
+        let paged = &self.paged;
         self.heads[base..base + nkv]
             .iter_mut()
             .enumerate()
@@ -332,6 +492,7 @@ impl SeqKvCache {
                 loki_channels: lc,
                 mp_k: mk,
                 mp_l: ml,
+                paged: paged.as_ref().map(|p| p.store.head_ref(base + kv, &p.table)),
                 hc,
             })
             .collect()
@@ -353,6 +514,7 @@ impl SeqKvCache {
     pub fn head_handles(&mut self) -> Vec<HeadHandle> {
         let (dh, qb, lc, mk, ml) =
             (self.dh, self.quest_block, self.loki_channels, self.mp_k, self.mp_l);
+        let paged = &self.paged;
         self.heads
             .iter_mut()
             .enumerate()
@@ -363,6 +525,7 @@ impl SeqKvCache {
                 loki_channels: lc,
                 mp_k: mk,
                 mp_l: ml,
+                paged: paged.as_ref().map(|p| p.store.head_ref(h, &p.table)),
                 hc,
             })
             .collect()
@@ -376,6 +539,7 @@ impl SeqKvCache {
     /// [`Self::head_handles`].
     pub fn head_handle(&mut self, layer: usize, kv: usize) -> HeadHandle {
         let h = self.head_index(layer, kv);
+        let paged = self.paged_ref(h);
         HeadHandle {
             head: h,
             dh: self.dh,
@@ -383,6 +547,7 @@ impl SeqKvCache {
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
             mp_l: self.mp_l,
+            paged,
             hc: &mut self.heads[h],
         }
     }
@@ -393,6 +558,10 @@ impl SeqKvCache {
     /// never reallocate. Useful for callers that know a sequence's
     /// prompt + generation budget up front — and required by the
     /// zero-allocation decode-step guarantee (rust/tests/alloc.rs).
+    ///
+    /// In the paged layout the K/V/code reservation becomes a block-table
+    /// reservation instead (the rows live in the shared [`BlockStore`]);
+    /// side structures reserve identically in both layouts.
     pub fn reserve(&mut self, tokens: usize) {
         fn reserve_total<T>(v: &mut Vec<T>, total: usize) {
             if v.capacity() < total {
@@ -401,11 +570,20 @@ impl SeqKvCache {
                 v.reserve(total - v.len());
             }
         }
+        let paged = self.paged.is_some();
+        if let Some(p) = &mut self.paged {
+            let bt = p.store.block_tokens();
+            // +1 block of slack so a trailing partial block never forces
+            // a mid-pass table reallocation (PagedRefs alias the table)
+            reserve_total(&mut p.table, tokens.div_ceil(bt) + 1);
+        }
         let dh = self.dh;
         for hc in &mut self.heads {
-            reserve_total(&mut hc.k, tokens * dh);
-            reserve_total(&mut hc.v, tokens * dh);
-            reserve_total(&mut hc.codes, tokens * self.words);
+            if !paged {
+                reserve_total(&mut hc.k, tokens * dh);
+                reserve_total(&mut hc.v, tokens * dh);
+                reserve_total(&mut hc.codes, tokens * self.words);
+            }
             if self.quest_block > 0 {
                 let blocks = tokens.div_ceil(self.quest_block);
                 reserve_total(&mut hc.quest_min, blocks * dh);
@@ -460,19 +638,186 @@ impl SeqKvCache {
         }
     }
 
-    /// Key rows of one head region, [len, dh] row-major.
+    /// Key rows of one head region, [len, dh] row-major. Contiguous
+    /// layout only (a paged head's rows live in the [`BlockStore`] —
+    /// use [`Self::read_view`] or [`Self::k_logical`]).
     pub fn k_slice(&self, layer: usize, kv: usize) -> &[f32] {
+        debug_assert!(self.paged.is_none(), "k_slice on a paged cache; use read_view");
         &self.heads[self.head_index(layer, kv)].k
     }
 
-    /// Value rows of one head region, [len, dh] row-major.
+    /// Value rows of one head region, [len, dh] row-major. Contiguous
+    /// layout only (see [`Self::k_slice`]).
     pub fn v_slice(&self, layer: usize, kv: usize) -> &[f32] {
+        debug_assert!(self.paged.is_none(), "v_slice on a paged cache; use read_view");
         &self.heads[self.head_index(layer, kv)].v
     }
 
-    /// Packed key-code words of one head region.
+    /// Packed key-code words of one head region. Contiguous layout only
+    /// (see [`Self::k_slice`]).
     pub fn codes_slice(&self, layer: usize, kv: usize) -> &[u64] {
+        debug_assert!(self.paged.is_none(), "codes_slice on a paged cache; use read_view");
         &self.heads[self.head_index(layer, kv)].codes
+    }
+
+    /// Unified read view of one head's K/V/code rows in either layout.
+    pub fn read_view(&self, layer: usize, kv: usize) -> HeadRead<'_> {
+        let h = self.head_index(layer, kv);
+        match self.paged_ref(h) {
+            // SAFETY: `&self` proves no live mutation of this cache (so
+            // no table rewrite), and the module contract rules out
+            // concurrent store reallocation while any borrow is live.
+            Some(p) => unsafe { p.read() },
+            None => {
+                let hc = &self.heads[h];
+                HeadRead { k: &hc.k, v: &hc.v, codes: &hc.codes, bt: &[], block_tokens: 0 }
+            }
+        }
+    }
+
+    /// One head's key rows gathered into logical token order —
+    /// layout-independent, for tests and differential comparisons.
+    pub fn k_logical(&self, layer: usize, kv: usize) -> Vec<f32> {
+        let rd = self.read_view(layer, kv);
+        let dh = self.dh;
+        let mut out = Vec::with_capacity(self.len * dh);
+        for t in 0..self.len {
+            let r = rd.row(t);
+            out.extend_from_slice(&rd.k[r * dh..(r + 1) * dh]);
+        }
+        out
+    }
+
+    /// One head's value rows in logical token order (see [`Self::k_logical`]).
+    pub fn v_logical(&self, layer: usize, kv: usize) -> Vec<f32> {
+        let rd = self.read_view(layer, kv);
+        let dh = self.dh;
+        let mut out = Vec::with_capacity(self.len * dh);
+        for t in 0..self.len {
+            let r = rd.row(t);
+            out.extend_from_slice(&rd.v[r * dh..(r + 1) * dh]);
+        }
+        out
+    }
+
+    /// One head's packed code words in logical token order (see
+    /// [`Self::k_logical`]). Empty when the method never encoded codes
+    /// in the contiguous layout; the paged plane always has storage, so
+    /// compare codes only for hash methods.
+    pub fn codes_logical(&self, layer: usize, kv: usize) -> Vec<u64> {
+        let rd = self.read_view(layer, kv);
+        let w = self.words;
+        let mut out = Vec::with_capacity(self.len * w);
+        if w == 0 || rd.codes.is_empty() {
+            return out;
+        }
+        for t in 0..self.len {
+            let r = rd.row(t);
+            out.extend_from_slice(&rd.codes[r * w..(r + 1) * w]);
+        }
+        out
+    }
+
+    /// Register this sequence's fully-prefilled prompt blocks in the
+    /// pool's prefix registry, aliasing any block another sequence
+    /// already holds for the identical token chain (copy-on-write prefix
+    /// sharing). Call once, engine-thread, after the final prefill chunk;
+    /// only blocks *fully covered* by the prompt participate, so every
+    /// shared block sits strictly below the append cursor and is never
+    /// written again. Returns the number of prefix hits (blocks now
+    /// stored once instead of twice). No-op for contiguous caches.
+    pub fn dedup_prefix(&mut self, pool: &mut KvPool, id: u64, prompt: &[u32]) -> usize {
+        let Some(p) = &self.paged else { return 0 };
+        let bt = p.store.block_tokens();
+        let full_blocks = prompt.len() / bt;
+        // 128-bit token-chain hash: block i's key digests tokens
+        // [0, (i+1)*bt), so equal keys mean equal prompts up to and
+        // including the block — position sensitivity for free.
+        let mut h1: u64 = 0xcbf29ce484222325; // FNV-1a offset basis
+        let mut h2: u64 = 0x9e3779b97f4a7c15;
+        let mut hits = 0usize;
+        debug_assert_eq!(prompt.chunks_exact(bt).len(), full_blocks);
+        for (idx, chunk) in prompt.chunks_exact(bt).enumerate() {
+            for &tok in chunk {
+                h1 = (h1 ^ u64::from(tok)).wrapping_mul(0x100000001b3);
+                h2 = (h2 ^ u64::from(tok).wrapping_mul(0xc6a4a7935bd1e995))
+                    .rotate_left(31)
+                    .wrapping_mul(0xc6a4a7935bd1e995);
+            }
+            let mine = pool.seq_blocks(id).get(idx).copied();
+            if pool.dedup_block(id, idx, (h1, h2)) {
+                hits += 1;
+                if cfg!(debug_assertions) {
+                    let (Some(mine), Some(&shared)) = (mine, pool.seq_blocks(id).get(idx)) else {
+                        unreachable!("dedup hit on a missing block-table entry")
+                    };
+                    debug_assert!(
+                        p.store.blocks_equal(mine, shared),
+                        "prefix hash collision: block contents diverge"
+                    );
+                }
+            }
+        }
+        self.sync_table(pool.seq_blocks(id));
+        hits
+    }
+
+    /// Copy-on-write unshare of one block-table entry before an in-place
+    /// write: allocates a private copy if (and only if) the entry is
+    /// shared, copies the payload, and re-syncs the local table. Returns
+    /// whether a copy happened. Engine-thread, between passes.
+    pub fn make_writable(
+        &mut self,
+        pool: &mut KvPool,
+        id: u64,
+        idx: usize,
+    ) -> Result<bool, pool::PoolError> {
+        let Some(p) = &self.paged else { return Ok(false) };
+        let copied = match pool.ensure_writable(id, idx)? {
+            Some((src, dst)) => {
+                // the dst id may be freshly minted — make sure the planes
+                // cover it before copying
+                // SAFETY: engine thread between passes (method contract):
+                // no worker holds a view.
+                unsafe {
+                    p.store.ensure_blocks(pool.minted_pages());
+                    p.store.copy_block(src, dst);
+                }
+                true
+            }
+            None => false,
+        };
+        self.sync_table(pool.seq_blocks(id));
+        Ok(copied)
+    }
+
+    /// Fork this paged cache into a CoW child sequence: the pool aliases
+    /// every parent block ([`pool::KvPool::fork`]), side structures are
+    /// cloned, and the child's table mirrors the shared blocks — zero
+    /// pages until a write triggers [`Self::make_writable`].
+    pub fn fork_paged(
+        &self,
+        pool: &mut KvPool,
+        parent: u64,
+        child: u64,
+    ) -> Result<SeqKvCache, pool::PoolError> {
+        let p = self.paged.as_ref().expect("fork_paged on a contiguous cache");
+        pool.fork(parent, child)?;
+        let mut cache = SeqKvCache {
+            n_layers: self.n_layers,
+            n_kv: self.n_kv,
+            dh: self.dh,
+            words: self.words,
+            len: self.len,
+            quest_block: self.quest_block,
+            loki_channels: self.loki_channels,
+            mp_k: self.mp_k,
+            mp_l: self.mp_l,
+            paged: Some(PagedSeq { store: Arc::clone(&p.store), table: Vec::new() }),
+            heads: self.heads.clone(),
+        };
+        cache.sync_table(pool.seq_blocks(child));
+        Ok(cache)
     }
 
     /// Borrow the method side structures for one head.
@@ -742,6 +1087,150 @@ mod tests {
             }
             assert_eq!(serial.bytes(), block.bytes(), "{method:?}");
         }
+    }
+
+    /// Paged test fixture: a tiny-block pool + store + paged cache for
+    /// one sequence, with the pool/store/table kept in sync the way the
+    /// engine does (grow, ensure, sync before each append).
+    fn paged_fixture(
+        cfg: &ModelConfig,
+        serve: &ServeConfig,
+        bt: usize,
+    ) -> (pool::KvPool, Arc<BlockStore>, SeqKvCache) {
+        let pool = pool::KvPool::with_block(64 * bt, bt);
+        let planes = cfg.n_layers * cfg.n_kv_heads;
+        let store = Arc::new(BlockStore::new(planes, cfg.head_dim, cfg.rbit / 64, bt));
+        let cache = SeqKvCache::new_paged(cfg, serve, Arc::clone(&store));
+        (pool, store, cache)
+    }
+
+    fn grow_synced(
+        pool: &mut pool::KvPool,
+        store: &BlockStore,
+        cache: &mut SeqKvCache,
+        id: u64,
+        tokens: usize,
+    ) {
+        pool.grow(id, tokens).unwrap();
+        // SAFETY: single-threaded test, no live views
+        unsafe { store.ensure_blocks(pool.minted_pages()) };
+        cache.sync_table(pool.seq_blocks(id));
+    }
+
+    #[test]
+    fn paged_append_matches_contiguous_logically() {
+        // the tentpole invariant at cache level: appending the same rows
+        // through the paged layout (tiny blocks, shuffled physical order)
+        // yields bit-identical logical K/V/codes and side structures
+        for method in [Method::Dense, Method::Hata, Method::Quest, Method::Loki, Method::MagicPig] {
+            let (cfg, serve) = cfg_serve(method);
+            let aux = MethodAux::build(&cfg, &serve, None, 5);
+            let hash_w = if method == Method::Hata {
+                vec![0.25; cfg.head_dim * cfg.rbit]
+            } else {
+                Vec::new()
+            };
+            let mut flat = SeqKvCache::new(&cfg, &serve);
+            let (mut pool, store, mut paged) = paged_fixture(&cfg, &serve, 4);
+            let len = 11; // crosses block boundaries, ends mid-block
+            for t in 0..len {
+                grow_synced(&mut pool, &store, &mut paged, 7, 1);
+                let val = (t as f32).sin();
+                append_token(&mut flat, &cfg, &aux, &hash_w, val);
+                append_token(&mut paged, &cfg, &aux, &hash_w, val);
+            }
+            assert_eq!(flat.len(), paged.len(), "{method:?}");
+            assert!(paged.is_paged() && !flat.is_paged());
+            for layer in 0..cfg.n_layers {
+                for kv in 0..cfg.n_kv_heads {
+                    assert_eq!(flat.k_slice(layer, kv), paged.k_logical(layer, kv), "{method:?}");
+                    assert_eq!(flat.v_slice(layer, kv), paged.v_logical(layer, kv), "{method:?}");
+                    if method == Method::Hata {
+                        assert_eq!(
+                            flat.codes_slice(layer, kv),
+                            paged.codes_logical(layer, kv),
+                            "{method:?}"
+                        );
+                    }
+                    let a = flat.side(layer, kv, &hash_w, &aux);
+                    let b = paged.side(layer, kv, &hash_w, &aux);
+                    assert_eq!(a.quest_min, b.quest_min, "{method:?}");
+                    assert_eq!(a.quest_max, b.quest_max, "{method:?}");
+                    assert_eq!(a.loki_kproj, b.loki_kproj, "{method:?}");
+                    assert_eq!(a.mp_sigs, b.mp_sigs, "{method:?}");
+                }
+            }
+            // the unified read view resolves the same rows
+            let rd = paged.read_view(0, 0);
+            assert_eq!(rd.block_tokens, 4);
+            assert_eq!(rd.bt, pool.seq_blocks(7));
+            let flat_rd = flat.read_view(0, 0);
+            assert!(flat_rd.bt.is_empty());
+            assert_eq!(flat_rd.row(5), 5);
+        }
+    }
+
+    #[test]
+    fn dedup_prefix_shares_full_prompt_blocks() {
+        let (cfg, serve) = cfg_serve(Method::Hata);
+        let aux = MethodAux::default();
+        let hash_w = vec![0.5; cfg.head_dim * cfg.rbit];
+        let bt = 4;
+        let prompt: Vec<u32> = (0..10u32).collect(); // 2 full blocks + 2 tokens
+        let (mut pool, store, mut a) = paged_fixture(&cfg, &serve, bt);
+        let mut b = SeqKvCache::new_paged(&cfg, &serve, Arc::clone(&store));
+        for (id, cache) in [(1u64, &mut a), (2u64, &mut b)] {
+            for &tok in &prompt {
+                grow_synced(&mut pool, &store, cache, id, 1);
+                append_token(cache, &cfg, &aux, &hash_w, tok as f32);
+            }
+        }
+        assert_eq!(a.dedup_prefix(&mut pool, 1, &prompt), 0, "first arrival registers");
+        assert_eq!(b.dedup_prefix(&mut pool, 2, &prompt), 2, "second arrival hits full blocks");
+        assert_eq!(pool.seq_blocks(1)[..2], pool.seq_blocks(2)[..2]);
+        assert_ne!(pool.seq_blocks(1)[2], pool.seq_blocks(2)[2], "partial block stays private");
+        assert_eq!(pool.refcount(pool.seq_blocks(1)[0]), 2);
+        assert_eq!(b.block_table(), pool.seq_blocks(2), "table resynced after dedup");
+        // logical contents are untouched by the aliasing
+        assert_eq!(a.k_logical(0, 0), b.k_logical(0, 0));
+        // appends past the prompt land in private blocks and never
+        // diverge the shared prefix
+        grow_synced(&mut pool, &store, &mut b, 2, bt);
+        a.sync_table(pool.seq_blocks(1));
+        append_token(&mut b, &cfg, &aux, &hash_w, 99.0);
+        assert_eq!(a.k_logical(0, 0), b.k_logical(0, 0)[..a.len() * cfg.head_dim]);
+    }
+
+    #[test]
+    fn fork_is_cow_and_make_writable_unshares() {
+        let (cfg, serve) = cfg_serve(Method::Dense);
+        let aux = MethodAux::default();
+        let bt = 4;
+        let (mut pool, store, mut parent) = paged_fixture(&cfg, &serve, bt);
+        for t in 0..(2 * bt) {
+            grow_synced(&mut pool, &store, &mut parent, 1, 1);
+            append_token(&mut parent, &cfg, &aux, &[], t as f32);
+        }
+        let free_before = pool.free_pages();
+        let mut child = parent.fork_paged(&mut pool, 1, 2).unwrap();
+        assert_eq!(pool.free_pages(), free_before, "fork costs zero pages");
+        assert_eq!(child.k_logical(0, 0), parent.k_logical(0, 0));
+        assert_eq!(pool.refcount(pool.seq_blocks(1)[0]), 2);
+        // unshare block 0 of the child, then scribble on it
+        assert!(child.make_writable(&mut pool, 2, 0).unwrap());
+        assert!(!child.make_writable(&mut pool, 2, 0).unwrap(), "already exclusive");
+        assert_ne!(pool.seq_blocks(1)[0], pool.seq_blocks(2)[0]);
+        let before = parent.k_logical(0, 0);
+        {
+            let head = child.head_mut(0, 0);
+            let row: Vec<f32> = vec![123.0; cfg.head_dim];
+            let p = head.paged.unwrap();
+            // SAFETY: single-threaded test; token 0's row belongs to the
+            // child's freshly unshared private block
+            unsafe { p.k_row_mut(0).copy_from_slice(&row) };
+        }
+        assert_eq!(parent.k_logical(0, 0), before, "CoW never mutates the shared block");
+        assert_eq!(child.k_logical(0, 0)[..cfg.head_dim], vec![123.0; cfg.head_dim]);
     }
 
     #[test]

@@ -1,0 +1,408 @@
+//! Physical block storage for the paged KV cache.
+//!
+//! [`super::pool::KvPool`] owns block *identity* (ids, per-sequence block
+//! tables, refcounts); this module owns the *bytes*: one [`BlockStore`]
+//! per engine holds, for every (layer, kv-head) plane, a contiguous
+//! K/V/code arena indexed by physical block id. A sequence's view of a
+//! plane is its block table — logical token `t` lives at physical row
+//! `table[t / block_tokens] * block_tokens + t % block_tokens` — so
+//! growing a sequence, preempting it, or sharing a prompt prefix across
+//! sequences never moves data, only table entries.
+//!
+//! ## Concurrency contract
+//!
+//! The store is shared (`Arc<BlockStore>`) across every sequence cache
+//! and, through [`PagedRef`], across worker threads. Safety follows the
+//! same discipline the engine already uses for `HeadHandle`/`RawSlice`
+//! payloads in `model/mod.rs`:
+//!
+//! * [`BlockStore::ensure_blocks`] (the only reallocation point) is an
+//!   `unsafe fn` called exclusively on the engine thread between model
+//!   passes, while no worker holds a view.
+//! * [`PagedRef`]s are captured on the engine thread during serial work
+//!   item construction (after any `ensure_blocks`), so the plane
+//!   pointers they carry stay valid for the whole pass.
+//! * During a pass, workers write only rows of blocks exclusively owned
+//!   by their own (sequence, plane) work item, and read only rows in
+//!   their own sequence's table; shared (refcount > 1) CoW blocks are
+//!   never written — appends land at `t >= prompt_len`, past every
+//!   dedup-shared block (see `SeqKvCache::dedup_prefix`). Distinct work
+//!   items therefore never touch overlapping addresses.
+
+use std::cell::UnsafeCell;
+
+/// Unified read view of one (layer, kv-head) cache plane: either a
+/// sequence's contiguous region (`bt` empty, rows are token-indexed) or
+/// the shared paged plane plus the sequence's block table. Everything a
+/// reader needs to resolve logical token rows, in either layout.
+pub struct HeadRead<'a> {
+    /// Key rows, `[rows, dh]` row-major (whole plane when paged).
+    pub k: &'a [f32],
+    /// Value rows, `[rows, dh]` row-major.
+    pub v: &'a [f32],
+    /// Packed key-code words, `[rows, words]`.
+    pub codes: &'a [u64],
+    /// Block table mapping logical block index -> physical block id;
+    /// empty means the contiguous layout (physical row == token).
+    pub bt: &'a [u32],
+    /// Tokens per physical block (0 in the contiguous layout).
+    pub block_tokens: usize,
+}
+
+impl HeadRead<'_> {
+    /// Physical row of logical token `t` under this view's layout.
+    #[inline]
+    pub fn row(&self, t: usize) -> usize {
+        if self.bt.is_empty() {
+            t
+        } else {
+            self.bt[t / self.block_tokens] as usize * self.block_tokens + t % self.block_tokens
+        }
+    }
+}
+
+/// Raw, copyable capture of one (plane, block table) pair: the paged
+/// analogue of the plain `&mut HeadCache` inside `HeadMut`, carried by
+/// `HeadMut`/`HeadHandle` so append and attention work items can run on
+/// worker threads. Captured on the engine thread while workers are idle
+/// (work items and task payloads are built serially); dereferenced only
+/// inside a running work item under the module-level concurrency
+/// contract.
+#[derive(Clone, Copy)]
+pub struct PagedRef {
+    k: *mut f32,
+    v: *mut f32,
+    codes: *mut u64,
+    /// Plane length in f32 elements (`k` and `v` are the same shape).
+    kv_len: usize,
+    /// Plane length in u64 code words.
+    codes_len: usize,
+    table: *const u32,
+    table_len: usize,
+    dh: usize,
+    words: usize,
+    block_tokens: usize,
+}
+
+// SAFETY: a PagedRef is addresses plus copies of shared scalars; every
+// dereference is an `unsafe fn` whose caller must prove the access is
+// ordered per the module-level contract (disjoint rows, no concurrent
+// reallocation).
+unsafe impl Send for PagedRef {}
+
+impl PagedRef {
+    /// Tokens per physical block.
+    #[inline]
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// The sequence's block table.
+    ///
+    /// # Safety
+    /// The table this ref was captured from must still be live and not
+    /// concurrently mutated (tables are only rewritten on the engine
+    /// thread between passes).
+    #[inline]
+    pub unsafe fn table<'a>(&self) -> &'a [u32] {
+        std::slice::from_raw_parts(self.table, self.table_len)
+    }
+
+    /// Physical row of logical token `t`.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::table`]; additionally `t` must be covered by
+    /// the table (`t / block_tokens < table.len()`).
+    #[inline]
+    pub unsafe fn phys_row(&self, t: usize) -> usize {
+        let b = *self.table.add(t / self.block_tokens) as usize;
+        b * self.block_tokens + t % self.block_tokens
+    }
+
+    /// Mutable K row of logical token `t`.
+    ///
+    /// # Safety
+    /// The caller must own token `t`'s block exclusively (its own
+    /// sequence's unshared block, one work item per plane) and no reader
+    /// of this row may be live — the append-before-attend ordering the
+    /// engine's stage/graph structure provides.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn k_row_mut<'a>(&self, t: usize) -> &'a mut [f32] {
+        let r = self.phys_row(t);
+        debug_assert!((r + 1) * self.dh <= self.kv_len);
+        std::slice::from_raw_parts_mut(self.k.add(r * self.dh), self.dh)
+    }
+
+    /// Mutable V row of logical token `t`.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::k_row_mut`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn v_row_mut<'a>(&self, t: usize) -> &'a mut [f32] {
+        let r = self.phys_row(t);
+        debug_assert!((r + 1) * self.dh <= self.kv_len);
+        std::slice::from_raw_parts_mut(self.v.add(r * self.dh), self.dh)
+    }
+
+    /// Mutable packed-code row of logical token `t`.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::k_row_mut`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn code_row_mut<'a>(&self, t: usize) -> &'a mut [u64] {
+        let r = self.phys_row(t);
+        debug_assert!((r + 1) * self.words <= self.codes_len);
+        std::slice::from_raw_parts_mut(self.codes.add(r * self.words), self.words)
+    }
+
+    /// Materialize the full-plane read view plus the block table.
+    ///
+    /// # Safety
+    /// No concurrent reallocation ([`BlockStore::ensure_blocks`]) and no
+    /// concurrent write to any row this reader will resolve through its
+    /// table — guaranteed by the module-level contract (each sequence
+    /// reads only its own table's rows; shared blocks are read-only).
+    pub unsafe fn read<'a>(&self) -> HeadRead<'a> {
+        HeadRead {
+            k: std::slice::from_raw_parts(self.k, self.kv_len),
+            v: std::slice::from_raw_parts(self.v, self.kv_len),
+            codes: std::slice::from_raw_parts(self.codes, self.codes_len),
+            bt: std::slice::from_raw_parts(self.table, self.table_len),
+            block_tokens: self.block_tokens,
+        }
+    }
+}
+
+/// Per-plane arenas, indexed `[plane][block * block_tokens + slot]`.
+struct Planes {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    codes: Vec<Vec<u64>>,
+    cap_blocks: usize,
+}
+
+/// The shared physical arena behind every paged [`super::SeqKvCache`]:
+/// one K/V/code plane per (layer, kv-head), each a dense array of
+/// fixed-size blocks. A physical block id addresses the same block slot
+/// in *every* plane, so one [`super::pool::KvPool`] table entry relocates
+/// a token's K, V and hash codes at once.
+pub struct BlockStore {
+    n_planes: usize,
+    dh: usize,
+    words: usize,
+    block_tokens: usize,
+    inner: UnsafeCell<Planes>,
+}
+
+// SAFETY: all mutation goes through `unsafe fn`s (`ensure_blocks`,
+// `copy_block`, and writes via `PagedRef`) whose contracts serialize
+// access per the module-level concurrency story; safe accessors only
+// read metadata or, for `blocks_equal`, rows the caller observes from
+// the engine thread between passes.
+unsafe impl Send for BlockStore {}
+unsafe impl Sync for BlockStore {}
+
+impl BlockStore {
+    /// Empty store for `n_planes` (layer, kv-head) planes of `dh`-wide
+    /// K/V rows and `words` packed code words per token, in blocks of
+    /// `block_tokens` tokens. Planes grow on demand via
+    /// [`BlockStore::ensure_blocks`].
+    pub fn new(n_planes: usize, dh: usize, words: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        BlockStore {
+            n_planes,
+            dh,
+            words,
+            block_tokens,
+            inner: UnsafeCell::new(Planes {
+                k: (0..n_planes).map(|_| Vec::new()).collect(),
+                v: (0..n_planes).map(|_| Vec::new()).collect(),
+                codes: (0..n_planes).map(|_| Vec::new()).collect(),
+                cap_blocks: 0,
+            }),
+        }
+    }
+
+    /// Tokens per physical block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Per-head row width of the stored K/V rows.
+    pub fn dh(&self) -> usize {
+        self.dh
+    }
+
+    /// Packed code words per token.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// (layer, kv-head) plane count.
+    pub fn n_planes(&self) -> usize {
+        self.n_planes
+    }
+
+    /// Physical blocks each plane currently holds rows for.
+    pub fn cap_blocks(&self) -> usize {
+        // SAFETY: metadata read; racing it requires a concurrent
+        // `ensure_blocks`, whose contract forbids concurrent access.
+        unsafe { (*self.inner.get()).cap_blocks }
+    }
+
+    /// Grow every plane to cover physical block ids `< n` (zero-filled
+    /// rows). The only operation that moves plane storage.
+    ///
+    /// # Safety
+    /// The caller must have exclusive access to the store: engine thread
+    /// only, no worker running, and no live [`PagedRef`] or
+    /// [`HeadRead`] view (all were captured before this pass or will be
+    /// captured after this call).
+    pub unsafe fn ensure_blocks(&self, n: usize) {
+        let planes = &mut *self.inner.get();
+        if n <= planes.cap_blocks {
+            return;
+        }
+        let bt = self.block_tokens;
+        for p in 0..self.n_planes {
+            planes.k[p].resize(n * bt * self.dh, 0.0);
+            planes.v[p].resize(n * bt * self.dh, 0.0);
+            planes.codes[p].resize(n * bt * self.words, 0u64);
+        }
+        planes.cap_blocks = n;
+    }
+
+    /// Capture a [`PagedRef`] for one plane and one sequence's block
+    /// table. Creating the ref is address arithmetic only; all
+    /// dereferences are `unsafe fn`s with their own contracts. `table`
+    /// must stay live (and unmoved) for as long as the ref is
+    /// dereferenced — the per-sequence tables are reserved up front and
+    /// rewritten only between passes.
+    pub fn head_ref(&self, plane: usize, table: &[u32]) -> PagedRef {
+        assert!(plane < self.n_planes, "plane {plane} out of range");
+        // SAFETY: pointer extraction only; validity of later dereference
+        // is the deref site's contract.
+        let planes = unsafe { &mut *self.inner.get() };
+        PagedRef {
+            k: planes.k[plane].as_mut_ptr(),
+            v: planes.v[plane].as_mut_ptr(),
+            codes: planes.codes[plane].as_mut_ptr(),
+            kv_len: planes.k[plane].len(),
+            codes_len: planes.codes[plane].len(),
+            table: table.as_ptr(),
+            table_len: table.len(),
+            dh: self.dh,
+            words: self.words,
+            block_tokens: self.block_tokens,
+        }
+    }
+
+    /// Copy block `src`'s rows into block `dst` across every plane — the
+    /// data half of a copy-on-write unshare
+    /// ([`super::pool::KvPool::ensure_writable`]).
+    ///
+    /// # Safety
+    /// As for [`BlockStore::ensure_blocks`]: engine thread only, no
+    /// concurrent access. Both ids must be `< cap_blocks`.
+    pub unsafe fn copy_block(&self, src: u32, dst: u32) {
+        let planes = &mut *self.inner.get();
+        let bt = self.block_tokens;
+        for p in 0..self.n_planes {
+            let (s, d, n) =
+                (src as usize * bt * self.dh, dst as usize * bt * self.dh, bt * self.dh);
+            planes.k[p].copy_within(s..s + n, d);
+            planes.v[p].copy_within(s..s + n, d);
+            let (s, d, n) =
+                (src as usize * bt * self.words, dst as usize * bt * self.words, bt * self.words);
+            planes.codes[p].copy_within(s..s + n, d);
+        }
+    }
+
+    /// Bitwise equality of two blocks across every plane (K, V and
+    /// codes) — the dedup debug check that prefix sharing never aliases
+    /// divergent data. Engine-thread use between passes.
+    pub fn blocks_equal(&self, a: u32, b: u32) -> bool {
+        // SAFETY: shared read; callers observe from the engine thread
+        // between passes (no concurrent writer), per the module contract.
+        let planes = unsafe { &*self.inner.get() };
+        let bt = self.block_tokens;
+        let (sa, sb, n) = (a as usize * bt * self.dh, b as usize * bt * self.dh, bt * self.dh);
+        let (ca, cb, m) =
+            (a as usize * bt * self.words, b as usize * bt * self.words, bt * self.words);
+        for p in 0..self.n_planes {
+            let len = planes.k[p].len();
+            if sa + n > len || sb + n > len {
+                return false;
+            }
+            if planes.k[p][sa..sa + n] != planes.k[p][sb..sb + n]
+                || planes.v[p][sa..sa + n] != planes.v[p][sb..sb + n]
+                || planes.codes[p][ca..ca + m] != planes.codes[p][cb..cb + m]
+            {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_blocks_grows_and_zero_fills() {
+        let store = BlockStore::new(2, 4, 2, 8);
+        assert_eq!(store.cap_blocks(), 0);
+        unsafe { store.ensure_blocks(3) };
+        assert_eq!(store.cap_blocks(), 3);
+        let table = [2u32, 0u32];
+        let r = store.head_ref(1, &table);
+        let rd = unsafe { r.read() };
+        assert_eq!(rd.k.len(), 3 * 8 * 4);
+        assert_eq!(rd.codes.len(), 3 * 8 * 2);
+        assert!(rd.k.iter().all(|&x| x == 0.0));
+        // logical token 0 lives in physical block 2, token 8 in block 0
+        assert_eq!(rd.row(0), 2 * 8);
+        assert_eq!(rd.row(9), 1);
+        // shrinking requests are no-ops
+        unsafe { store.ensure_blocks(1) };
+        assert_eq!(store.cap_blocks(), 3);
+    }
+
+    #[test]
+    fn paged_writes_land_at_table_rows() {
+        let store = BlockStore::new(1, 2, 1, 4);
+        unsafe { store.ensure_blocks(2) };
+        let table = [1u32, 0u32]; // logical blocks swapped
+        let r = store.head_ref(0, &table);
+        unsafe {
+            r.k_row_mut(0).copy_from_slice(&[1.0, 2.0]); // phys row 4
+            r.k_row_mut(5).copy_from_slice(&[3.0, 4.0]); // phys row 1
+            r.code_row_mut(0)[0] = 7;
+        }
+        let rd = unsafe { r.read() };
+        assert_eq!(&rd.k[4 * 2..5 * 2], &[1.0, 2.0]);
+        assert_eq!(&rd.k[2..4], &[3.0, 4.0]);
+        assert_eq!(rd.codes[4], 7);
+        assert_eq!(rd.row(5), 1);
+    }
+
+    #[test]
+    fn copy_block_and_equality() {
+        let store = BlockStore::new(2, 2, 1, 4);
+        unsafe { store.ensure_blocks(3) };
+        let table = [0u32];
+        let r = store.head_ref(0, &table);
+        unsafe {
+            r.k_row_mut(1).copy_from_slice(&[5.0, 6.0]);
+            r.v_row_mut(1).copy_from_slice(&[-5.0, -6.0]);
+            r.code_row_mut(1)[0] = 42;
+        }
+        assert!(!store.blocks_equal(0, 2));
+        unsafe { store.copy_block(0, 2) };
+        assert!(store.blocks_equal(0, 2));
+        assert!(store.blocks_equal(1, 1));
+        // out-of-range ids compare unequal instead of panicking
+        assert!(!store.blocks_equal(0, 9));
+    }
+}

@@ -1,12 +1,17 @@
-//! Page-accounting KV pool: vLLM-style admission bookkeeping.
+//! Paged KV allocator: vLLM-style block bookkeeping with refcounted
+//! copy-on-write prefix sharing.
 //!
-//! Physical storage lives in [`super::SeqKvCache`] vectors; this pool
-//! tracks page ownership so the scheduler can admit/deny prefills and
-//! detect memory pressure exactly the way a paged allocator would.
+//! The pool owns the *identity* layer of the paged cache: it hands out
+//! physical block ids, tracks per-sequence block tables, and refcounts
+//! blocks shared across sequences (identical prompt prefixes registered
+//! by token-chain hash). Physical storage for those ids lives in
+//! [`super::BlockStore`]; the contiguous (non-paged) build keeps using
+//! the pool purely as admission accounting, exactly as before.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
-/// Tokens per KV page (the allocation granularity).
+/// Tokens per KV page (the default allocation granularity; override per
+/// pool with [`KvPool::with_block`], surfaced as `--kv-block`).
 pub const PAGE_TOKENS: usize = 64;
 
 /// Admission/accounting failures.
@@ -25,68 +30,237 @@ pub enum PoolError {
     UnknownSeq(u64),
 }
 
-/// Token-capacity bookkeeping per sequence.
+/// Block allocator + per-sequence block tables + CoW prefix registry.
 #[derive(Debug)]
 pub struct KvPool {
+    block_tokens: usize,
     capacity_pages: usize,
-    free_pages: usize,
+    /// Recycled block ids (LIFO).
+    free: Vec<u32>,
+    /// High-water mark: ids below this have been handed out at least once.
+    next_fresh: u32,
+    /// Per-physical-block reference count (0 = free / never used).
+    refcount: Vec<u32>,
+    /// Prefix chain-hash -> shared physical block.
+    prefix_map: HashMap<(u64, u64), u32>,
+    /// Reverse of `prefix_map` for cleanup on free.
+    prefix_of: HashMap<u32, (u64, u64)>,
     seqs: BTreeMap<u64, SeqAlloc>,
 }
 
 #[derive(Debug, Default, Clone)]
 struct SeqAlloc {
-    pages: usize,
     tokens: usize,
+    blocks: Vec<u32>,
 }
 
 impl KvPool {
-    /// Pool with `capacity_tokens / PAGE_TOKENS` pages.
+    /// Pool with `capacity_tokens.div_ceil(PAGE_TOKENS)` pages (rounded
+    /// *up*: a 63-token capacity is one page, not zero).
     pub fn new(capacity_tokens: usize) -> Self {
-        let pages = capacity_tokens / PAGE_TOKENS;
-        KvPool { capacity_pages: pages, free_pages: pages, seqs: BTreeMap::new() }
+        Self::with_block(capacity_tokens, PAGE_TOKENS)
+    }
+
+    /// Pool with a custom block size in tokens (`--kv-block`).
+    pub fn with_block(capacity_tokens: usize, block_tokens: usize) -> Self {
+        let block_tokens = block_tokens.max(1);
+        let pages = capacity_tokens.div_ceil(block_tokens);
+        KvPool {
+            block_tokens,
+            capacity_pages: pages,
+            free: Vec::new(),
+            next_fresh: 0,
+            refcount: Vec::new(),
+            prefix_map: HashMap::new(),
+            prefix_of: HashMap::new(),
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    /// Tokens per block for this pool.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total capacity in pages.
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    /// Unreserved capacity in pages. Shared blocks count once, so prefix
+    /// sharing *increases* this relative to the sum of sequence lengths.
+    pub fn free_pages(&self) -> usize {
+        self.capacity_pages - (self.next_fresh as usize - self.free.len())
     }
 
     /// Total capacity in tokens.
     pub fn capacity_tokens(&self) -> usize {
-        self.capacity_pages * PAGE_TOKENS
+        self.capacity_pages * self.block_tokens
     }
 
     /// Unreserved capacity in tokens.
     pub fn free_tokens(&self) -> usize {
-        self.free_pages * PAGE_TOKENS
+        self.free_pages() * self.block_tokens
     }
 
-    /// Fraction of pages reserved (0 = empty, 1 = full).
+    /// Fraction of pages reserved (0 = empty, 1 = full). A zero-capacity
+    /// pool is empty, not full.
     pub fn utilization(&self) -> f64 {
-        1.0 - self.free_pages as f64 / self.capacity_pages.max(1) as f64
+        if self.capacity_pages == 0 {
+            return 0.0;
+        }
+        1.0 - self.free_pages() as f64 / self.capacity_pages as f64
     }
 
     /// Can `tokens` more tokens be appended to `seq` without exhaustion?
     pub fn can_grow(&self, seq: u64, tokens: usize) -> bool {
-        let cur = self.seqs.get(&seq).cloned().unwrap_or_default();
-        let need_pages = (cur.tokens + tokens).div_ceil(PAGE_TOKENS);
-        need_pages.saturating_sub(cur.pages) <= self.free_pages
+        let (cur_tokens, cur_blocks) =
+            self.seqs.get(&seq).map(|a| (a.tokens, a.blocks.len())).unwrap_or((0, 0));
+        let need_pages = (cur_tokens + tokens).div_ceil(self.block_tokens);
+        need_pages.saturating_sub(cur_blocks) <= self.free_pages()
     }
 
-    /// Reserve pages for `tokens` appended tokens of `seq`.
+    /// Reserve blocks for `tokens` appended tokens of `seq`, extending
+    /// its block table with newly allocated physical ids. A failed grow
+    /// changes nothing (no partial allocation, no phantom sequence).
     pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<(), PoolError> {
-        let cur = self.seqs.entry(seq).or_default();
-        let need_pages = (cur.tokens + tokens).div_ceil(PAGE_TOKENS);
-        let extra = need_pages.saturating_sub(cur.pages);
-        if extra > self.free_pages {
-            return Err(PoolError::Exhausted { need: extra, free: self.free_pages });
+        let free_pages = self.free_pages();
+        let (cur_tokens, cur_blocks) =
+            self.seqs.get(&seq).map(|a| (a.tokens, a.blocks.len())).unwrap_or((0, 0));
+        let need_pages = (cur_tokens + tokens).div_ceil(self.block_tokens);
+        let extra = need_pages.saturating_sub(cur_blocks);
+        if extra > free_pages {
+            return Err(PoolError::Exhausted { need: extra, free: free_pages });
         }
-        self.free_pages -= extra;
-        cur.pages = need_pages;
+        for _ in 0..extra {
+            let id = self.alloc_block();
+            self.seqs.entry(seq).or_default().blocks.push(id);
+        }
+        let cur = self.seqs.entry(seq).or_default();
         cur.tokens += tokens;
         Ok(())
     }
 
+    /// Pop a free id (or mint a fresh one) with refcount 1. Callers must
+    /// have checked [`KvPool::free_pages`] first.
+    fn alloc_block(&mut self) -> u32 {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                let id = self.next_fresh;
+                self.next_fresh += 1;
+                id
+            }
+        };
+        if self.refcount.len() <= id as usize {
+            self.refcount.resize(id as usize + 1, 0);
+        }
+        debug_assert_eq!(self.refcount[id as usize], 0, "allocated a live block");
+        self.refcount[id as usize] = 1;
+        id
+    }
+
     /// Release everything held by `seq` (on completion or preemption).
+    /// Shared blocks are decref'd; only the last holder frees them.
     pub fn release(&mut self, seq: u64) -> Result<(), PoolError> {
         let alloc = self.seqs.remove(&seq).ok_or(PoolError::UnknownSeq(seq))?;
-        self.free_pages += alloc.pages;
+        for id in alloc.blocks {
+            self.decref(id);
+        }
         Ok(())
+    }
+
+    fn decref(&mut self, id: u32) {
+        let rc = &mut self.refcount[id as usize];
+        debug_assert!(*rc > 0, "double free of block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            if let Some(key) = self.prefix_of.remove(&id) {
+                self.prefix_map.remove(&key);
+            }
+            self.free.push(id);
+        }
+    }
+
+    /// The physical block table of `seq` (empty if unknown).
+    pub fn seq_blocks(&self, seq: u64) -> &[u32] {
+        self.seqs.get(&seq).map(|a| a.blocks.as_slice()).unwrap_or(&[])
+    }
+
+    /// Reference count of one physical block (0 = free).
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount.get(block as usize).copied().unwrap_or(0)
+    }
+
+    /// Try to replace `seq`'s block-table entry `idx` with an existing
+    /// shared block carrying the same prefix chain-hash `key`. On a hit
+    /// the sequence's own block is decref'd (usually freed) and the entry
+    /// now aliases the shared block; on a miss the sequence's block is
+    /// registered under `key` for future arrivals. Returns whether the
+    /// entry now aliases a previously registered block (a "prefix hit").
+    pub fn dedup_block(&mut self, seq: u64, idx: usize, key: (u64, u64)) -> bool {
+        let mine = match self.seqs.get(&seq) {
+            Some(a) if idx < a.blocks.len() => a.blocks[idx],
+            _ => return false,
+        };
+        match self.prefix_map.get(&key).copied() {
+            Some(shared) if shared != mine => {
+                self.refcount[shared as usize] += 1;
+                self.seqs.get_mut(&seq).unwrap().blocks[idx] = shared;
+                self.decref(mine);
+                true
+            }
+            Some(_) => false,
+            None => {
+                self.prefix_map.insert(key, mine);
+                self.prefix_of.insert(mine, key);
+                false
+            }
+        }
+    }
+
+    /// Copy-on-write: make `seq`'s block-table entry `idx` exclusively
+    /// owned before a write. Returns `Ok(Some((src, dst)))` when a fresh
+    /// block was allocated — the caller must copy the payload `src → dst`
+    /// — and `Ok(None)` when the entry was already exclusive.
+    pub fn ensure_writable(
+        &mut self,
+        seq: u64,
+        idx: usize,
+    ) -> Result<Option<(u32, u32)>, PoolError> {
+        let cur = match self.seqs.get(&seq) {
+            Some(a) if idx < a.blocks.len() => a.blocks[idx],
+            _ => return Err(PoolError::UnknownSeq(seq)),
+        };
+        if self.refcount[cur as usize] <= 1 {
+            return Ok(None);
+        }
+        if self.free_pages() == 0 {
+            return Err(PoolError::Exhausted { need: 1, free: 0 });
+        }
+        let id = self.alloc_block();
+        self.seqs.get_mut(&seq).unwrap().blocks[idx] = id;
+        self.decref(cur);
+        Ok(Some((cur, id)))
+    }
+
+    /// Fork `child` as a full CoW alias of `parent`: the child's table
+    /// aliases every parent block (all refcounts bumped), so it costs no
+    /// new pages until either side triggers [`KvPool::ensure_writable`].
+    pub fn fork(&mut self, parent: u64, child: u64) -> Result<(), PoolError> {
+        let src = self.seqs.get(&parent).ok_or(PoolError::UnknownSeq(parent))?.clone();
+        for &id in &src.blocks {
+            self.refcount[id as usize] += 1;
+        }
+        self.seqs.insert(child, src);
+        Ok(())
+    }
+
+    /// Physical blocks minted so far (the id high-water mark). The paged
+    /// [`super::BlockStore`] sizes its planes to cover exactly these ids,
+    /// so storage grows with actual use, not pool capacity.
+    pub fn minted_pages(&self) -> usize {
+        self.next_fresh as usize
     }
 
     /// Tokens accounted to one sequence.
@@ -103,6 +277,8 @@ impl KvPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::pt::{check, prop_assert};
+    use crate::util::rng::Rng;
 
     #[test]
     fn grow_and_release_roundtrip() {
@@ -114,6 +290,7 @@ mod tests {
         assert_eq!(pool.free_tokens(), (10 - 2) * PAGE_TOKENS);
         pool.grow(1, 1).unwrap(); // 129 tokens -> 3rd page
         assert_eq!(pool.free_tokens(), (10 - 3) * PAGE_TOKENS);
+        assert_eq!(pool.seq_blocks(1).len(), 3);
         pool.release(1).unwrap();
         assert_eq!(pool.free_tokens(), 10 * PAGE_TOKENS);
         assert_eq!(pool.active_seqs(), 0);
@@ -141,5 +318,129 @@ mod tests {
         assert_eq!(pool.utilization(), 0.0);
         pool.grow(1, 2 * PAGE_TOKENS).unwrap();
         assert!((pool.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_multiple_capacity_rounds_up() {
+        // regression: `new(63)` used to truncate to a zero-page pool
+        let pool = KvPool::new(PAGE_TOKENS - 1);
+        assert_eq!(pool.capacity_pages(), 1);
+        assert!(pool.can_grow(1, 1));
+        let pool = KvPool::new(PAGE_TOKENS + 1);
+        assert_eq!(pool.capacity_pages(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_pool_reports_empty() {
+        // regression: utilization used to report 1.0 for 0/0 pages
+        let pool = KvPool::new(0);
+        assert_eq!(pool.utilization(), 0.0);
+        assert!(!pool.can_grow(1, 1));
+    }
+
+    #[test]
+    fn block_ids_are_recycled() {
+        let mut pool = KvPool::with_block(4 * 8, 8);
+        pool.grow(1, 16).unwrap();
+        let first: Vec<u32> = pool.seq_blocks(1).to_vec();
+        assert_eq!(first, vec![0, 1]);
+        pool.release(1).unwrap();
+        pool.grow(2, 8).unwrap();
+        // LIFO free list: the most recently freed id comes back first
+        assert_eq!(pool.seq_blocks(2), &[1]);
+        assert_eq!(pool.refcount(0), 0);
+        assert_eq!(pool.refcount(1), 1);
+    }
+
+    #[test]
+    fn dedup_shares_and_release_keeps_shared_alive() {
+        let mut pool = KvPool::with_block(8 * 4, 4);
+        pool.grow(1, 4).unwrap();
+        pool.grow(2, 4).unwrap();
+        let key = (0xabcd, 0x1234);
+        assert!(!pool.dedup_block(1, 0, key), "first arrival registers");
+        assert!(pool.dedup_block(2, 0, key), "second arrival hits");
+        let shared = pool.seq_blocks(1)[0];
+        assert_eq!(pool.seq_blocks(2)[0], shared);
+        assert_eq!(pool.refcount(shared), 2);
+        // seq 2's original block went back to the free list
+        assert_eq!(pool.free_pages(), 8 - 1);
+        pool.release(1).unwrap();
+        assert_eq!(pool.refcount(shared), 1, "still held by seq 2");
+        // a third arrival still hits the registry through seq 2's ref
+        pool.grow(3, 4).unwrap();
+        assert!(pool.dedup_block(3, 0, key));
+        pool.release(2).unwrap();
+        pool.release(3).unwrap();
+        assert_eq!(pool.refcount(shared), 0);
+        assert_eq!(pool.free_pages(), 8);
+        // registry was cleaned: a fresh arrival re-registers, no hit
+        pool.grow(4, 4).unwrap();
+        assert!(!pool.dedup_block(4, 0, key));
+    }
+
+    #[test]
+    fn cow_unshares_on_write() {
+        let mut pool = KvPool::with_block(8 * 4, 4);
+        pool.grow(1, 8).unwrap();
+        pool.fork(1, 2).unwrap();
+        let b0 = pool.seq_blocks(1)[0];
+        assert_eq!(pool.refcount(b0), 2);
+        // exclusive entries don't copy
+        pool.grow(3, 4).unwrap();
+        assert!(pool.ensure_writable(3, 0).unwrap().is_none());
+        // shared entries do
+        let (src, dst) = pool.ensure_writable(2, 0).unwrap().expect("copy");
+        assert_eq!(src, b0);
+        assert_ne!(dst, b0);
+        assert_eq!(pool.refcount(b0), 1);
+        assert_eq!(pool.refcount(dst), 1);
+        assert_ne!(pool.seq_blocks(1)[0], pool.seq_blocks(2)[0]);
+    }
+
+    #[test]
+    fn allocator_invariants_under_random_interleavings() {
+        // free + Σ per-seq blocks == capacity at every step (no leaks, no
+        // double frees), and can_grow ⇔ grow agreement — over randomized
+        // grow/release interleavings without sharing.
+        check(40, |rng: &mut Rng| {
+            let bt = [1, 3, 4, 8][rng.below(4)];
+            let cap_pages = 1 + rng.below(12);
+            let mut pool = KvPool::with_block(cap_pages * bt, bt);
+            let mut live: Vec<u64> = Vec::new();
+            for step in 0..200u64 {
+                if rng.below(3) == 0 && !live.is_empty() {
+                    let seq = live.swap_remove(rng.below(live.len()));
+                    pool.release(seq).unwrap();
+                } else {
+                    let seq = if !live.is_empty() && rng.below(2) == 0 {
+                        live[rng.below(live.len())]
+                    } else {
+                        live.push(step + 1000);
+                        step + 1000
+                    };
+                    let tokens = 1 + rng.below(3 * bt);
+                    let fits = pool.can_grow(seq, tokens);
+                    let grew = pool.grow(seq, tokens).is_ok();
+                    prop_assert(fits == grew, "can_grow disagrees with grow")?;
+                    if !grew && pool.seq_tokens(seq) == 0 {
+                        live.retain(|&s| s != seq);
+                        let _ = pool.release(seq);
+                    }
+                }
+                let held: usize = live.iter().map(|&s| pool.seq_blocks(s).len()).sum();
+                prop_assert(
+                    pool.free_pages() + held == pool.capacity_pages(),
+                    "pages leaked or double-freed",
+                )?;
+                let uniq: std::collections::HashSet<u32> =
+                    live.iter().flat_map(|&s| pool.seq_blocks(s)).copied().collect();
+                prop_assert(uniq.len() == held, "one block owned twice without sharing")?;
+            }
+            for seq in live {
+                pool.release(seq).unwrap();
+            }
+            prop_assert(pool.free_pages() == pool.capacity_pages(), "drain leaked")
+        });
     }
 }

@@ -29,7 +29,7 @@ const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
-    "exec", "graph-cache", "kernels",
+    "exec", "graph-cache", "kernels", "kv-block", "paged!",
 ];
 
 fn main() {
@@ -86,6 +86,12 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
                     runtime AVX2/NEON dispatch, bit-identical to
                     reference) | simd-fma (fast-math FMA + poly exp,
                     ULP-bounded; see docs/PERFORMANCE.md)
+  --paged           store KV in fixed-size physical blocks behind
+                    per-sequence block tables: copy-on-write prefix
+                    sharing + cheap preempt/resume, bit-identical to
+                    the contiguous layout (default off)
+  --kv-block N      physical KV block size in tokens (default 64);
+                    any value >= 1 is bit-identical
   --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
@@ -151,6 +157,8 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         temperature: args.f64("temperature", 0.0)? as f32,
         seed: args.u64("seed", 0)?,
         kernels,
+        kv_block: args.usize("kv-block", base.kv_block)?,
+        paged: args.flag("paged"),
         ..base
     })
 }

@@ -628,17 +628,20 @@ impl Model {
         let cfg = &self.cfg;
         w.head.append(w.krow, w.vrow, w.hash_w, cfg.rbit, &self.aux);
         let s_now = w.pos + 1;
+        let rd = w.head.read();
         let inp = AttnInputs {
             q: w.q,
             group: cfg.group(),
             dh: cfg.head_dim,
-            k: &w.head.hc.k,
-            v: &w.head.hc.v,
-            codes: &w.head.hc.codes,
+            k: rd.k,
+            v: rd.v,
+            codes: rd.codes,
             words: cfg.rbit / 64,
             rbit: cfg.rbit,
             s: s_now,
             pos: w.pos,
+            bt: rd.bt,
+            block_tokens: rd.block_tokens,
             side: w.head.side(w.hash_w, &self.aux),
         };
         let use_dense = selector.is_none()
@@ -1203,17 +1206,20 @@ impl Model {
             if w == 0 {
                 continue;
             }
+            let rd = cache.read_view(li, kv);
             let inp = AttnInputs {
                 q: win.as_slice(),
                 group: g,
                 dh: self.cfg.head_dim,
-                k: cache.k_slice(li, kv),
-                v: cache.v_slice(li, kv),
-                codes: cache.codes_slice(li, kv),
+                k: rd.k,
+                v: rd.v,
+                codes: rd.codes,
                 words: self.cfg.rbit / 64,
                 rbit: self.cfg.rbit,
                 s: cache.len(),
                 pos: cache.len() - 1,
+                bt: rd.bt,
+                block_tokens: rd.block_tokens,
                 side: crate::attention::Side::default(),
             };
             let mut st = MethodState::default();
@@ -1307,20 +1313,21 @@ impl Model {
                 let q = q.as_slice();
                 let cache = &*it.cache;
                 for (kv, ahead) in attn.chunks_mut(len * ghd).enumerate() {
-                    let k = cache.k_slice(li, kv);
-                    let v = cache.v_slice(li, kv);
+                    let rd = cache.read_view(li, kv);
                     for (ti, out) in ahead.chunks_mut(tile * ghd).enumerate() {
                         tiles.push(AttnTileItem {
                             tile: PrefillTile {
                                 q,
-                                k,
-                                v,
+                                k: rd.k,
+                                v: rd.v,
                                 group,
                                 dh,
                                 qstride: qrow,
                                 qoff: kv * ghd,
                                 t0: ti * tile,
                                 start,
+                                bt: rd.bt,
+                                block_tokens: rd.block_tokens,
                                 kernels: self.kernels,
                             },
                             out,
@@ -1534,17 +1541,19 @@ impl Model {
             PrefillTask::AttnTile { head, q, out, qoff, t0, start } => {
                 // SAFETY: this head's append task completed (graph edge),
                 // so its K/V buffers are stable for the whole read.
-                let hc = unsafe { head.head_ref() };
+                let rd = unsafe { head.read_view() };
                 let tile = PrefillTile {
                     q: unsafe { q.get() },
-                    k: &hc.k,
-                    v: &hc.v,
+                    k: rd.k,
+                    v: rd.v,
                     group: cfg.group(),
                     dh: cfg.head_dim,
                     qstride: cfg.n_heads * cfg.head_dim,
                     qoff: *qoff,
                     t0: *t0,
                     start: *start,
+                    bt: rd.bt,
+                    block_tokens: rd.block_tokens,
                     kernels: self.kernels,
                 };
                 prefill_tile_attention(&tile, &mut ws.sel.probs, unsafe { out.get() });

@@ -14,14 +14,22 @@
 //! (which intentionally rebuilds the graph every step) verifies the
 //! counter actually observes the hot path.
 //!
+//! The matrix runs the paged KV layout too (`--paged`): block-table
+//! growth and plane resizes happen on the engine thread *between*
+//! steps (`KvPool::grow` + `BlockStore::ensure_blocks` + `sync_table`,
+//! mirroring `Engine::step`), so the armed decode window must stay
+//! allocation-free through the block-table indirection as well.
+//!
 //! Everything lives in ONE `#[test]` so no sibling test thread can
 //! allocate while the counter is armed.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use hata::config::{preset, ExecMode, Method, ModelConfig, ServeConfig};
-use hata::kvcache::{MethodAux, SeqKvCache};
+use hata::kvcache::pool::KvPool;
+use hata::kvcache::{BlockStore, MethodAux, SeqKvCache};
 use hata::model::{
     make_selector, sel_ref, weights::Weights, DecodeGraphCache, DecodeItem, DecodeScratch, Model,
     SeqState, WorkerScratch,
@@ -108,7 +116,10 @@ const MEASURED_STEPS: usize = 4;
 /// Run prefill + WARM_STEPS decode steps cold, then MEASURED_STEPS with
 /// the allocation counter armed around each `decode_batch` call (the
 /// "decode step" under test). Returns the armed-window event count.
-fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool) -> u64 {
+/// With `paged`, the caches run on pool-managed block tables (tiny
+/// 4-token blocks) grown between steps, exactly as the engine does.
+fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool, paged: bool) -> u64 {
+    const BT: usize = 4;
     let cfg: ModelConfig = preset("hata-gqa").unwrap();
     let serve = ServeConfig {
         method,
@@ -116,6 +127,7 @@ fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool) -> u64
         threads,
         exec_mode: ExecMode::Queue,
         graph_cache,
+        kv_block: BT,
         ..Default::default()
     };
     let mut rng = Rng::new(5);
@@ -133,10 +145,21 @@ fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool) -> u64
     for w in workers.iter_mut() {
         prewarm_worker(w, max_s, &model.cfg, &serve);
     }
+    let mut kv_pool = KvPool::with_block(4096 * BT, BT);
+    let store = Arc::new(BlockStore::new(
+        model.cfg.n_layers * model.cfg.n_kv_heads,
+        model.cfg.head_dim,
+        model.cfg.rbit / 64,
+        BT,
+    ));
     let mut caches: Vec<SeqKvCache> = prompts
         .iter()
         .map(|_| {
-            let mut c = SeqKvCache::new(&model.cfg, &serve);
+            let mut c = if paged {
+                SeqKvCache::new_paged(&model.cfg, &serve, Arc::clone(&store))
+            } else {
+                SeqKvCache::new(&model.cfg, &serve)
+            };
             c.reserve(max_s);
             c
         })
@@ -154,12 +177,30 @@ fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool) -> u64
         prompts.iter().map(|_| DecodeScratch::new(&model.cfg)).collect();
     let mut next: Vec<u32> = Vec::new();
     for (i, p) in prompts.iter().enumerate() {
+        if paged {
+            kv_pool.grow(i as u64, p.len()).unwrap();
+            // SAFETY: no pass is running, so no worker holds a view
+            unsafe { store.ensure_blocks(kv_pool.minted_pages()) };
+            caches[i].sync_table(kv_pool.seq_blocks(i as u64));
+        }
         model.prefill(p, &mut caches[i], &mut states[i], &serve, &mut scratches[i]);
         next.push(argmax(&scratches[i].logits) as u32);
     }
     let mut graph_cache_state = DecodeGraphCache::new();
     ALLOCS.store(0, Ordering::SeqCst);
     for step in 0..total_steps {
+        if paged {
+            // engine-thread work between passes, outside the armed
+            // window — exactly where Engine::step does it
+            for i in 0..prompts.len() {
+                kv_pool.grow(i as u64, 1).unwrap();
+            }
+            // SAFETY: no pass is running, so no worker holds a view
+            unsafe { store.ensure_blocks(kv_pool.minted_pages()) };
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.sync_table(kv_pool.seq_blocks(i as u64));
+            }
+        }
         let mut items: Vec<DecodeItem> = caches
             .iter_mut()
             .zip(states.iter_mut())
@@ -213,17 +254,27 @@ fn warmed_decode_step_is_allocation_free() {
     ];
     for method in methods {
         for threads in [1usize, 2, 8] {
-            let n = steady_state_allocs(method, threads, true);
+            let n = steady_state_allocs(method, threads, true, false);
             assert_eq!(
                 n, 0,
                 "{method:?} threads={threads}: {n} allocation(s) in a warmed \
                  steady-state decode step (queue exec, graph cache on)"
             );
         }
+        // paged layout: block-table growth happens between steps, so the
+        // armed decode window must stay allocation-free here too
+        for threads in [1usize, 2] {
+            let n = steady_state_allocs(method, threads, true, true);
+            assert_eq!(
+                n, 0,
+                "{method:?} threads={threads}: {n} allocation(s) in a warmed \
+                 steady-state PAGED decode step (queue exec, graph cache on)"
+            );
+        }
     }
     // negative control: with the graph cache off every step rebuilds the
     // task graph, which MUST register as allocations — proving the
     // counter actually observes the decode hot path.
-    let n = steady_state_allocs(Method::Hata, 2, false);
+    let n = steady_state_allocs(Method::Hata, 2, false, false);
     assert!(n > 0, "counter saw nothing with graph cache off — harness is broken");
 }

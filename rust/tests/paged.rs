@@ -1,0 +1,490 @@
+//! Differential trace harness for the paged KV cache.
+//!
+//! The paged layout (`--paged`: fixed-size physical blocks behind
+//! per-sequence block tables, copy-on-write prefix sharing, block-table
+//! admission) must be **bitwise-identical** to the contiguous layout —
+//! not approximately equal, not token-equal-by-luck. Two kinds of proof
+//! live here:
+//!
+//! 1. **Engine traces**: a seeded multi-request trace (staggered
+//!    arrivals, shared prefixes, mid-flight preemptions) is replayed
+//!    through a paged and a contiguous engine build; the per-request
+//!    token streams must match exactly, across methods × threads ×
+//!    tiles × executors × graph-cache × kernel tiers. Along the way the
+//!    pool is audited every step: each physical block's refcount must
+//!    equal the number of live block-table references to it, and every
+//!    page must be back on the free list when the trace drains (no
+//!    leaks, no double frees).
+//! 2. **Model-level state**: prefill + decode through a paged cache
+//!    (tiny blocks, real pool-managed tables) must leave bit-identical
+//!    logits at every step and bit-identical logical K/V rows, hash
+//!    codes and Quest min/max summaries, for every method in the zoo.
+//!
+//! Plus the sharing properties the tentpole claims: shared prefixes are
+//! stored once (refcount > 1 while both holders live, `prefix_hits`
+//! metric counts the saved blocks), preempt/resume recomputes nothing
+//! (`prefill_tokens` equals the sum of prompt lengths), and
+//! copy-on-write never mutates a shared block in place.
+//!
+//! The block size under test comes from `HATA_KV_BLOCK` (the CI paged
+//! leg sets 4); the tiny default forces many blocks, boundary crossings
+//! and partial tail blocks.
+
+use std::sync::Arc;
+
+use hata::config::{preset, ExecMode, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::{FinishReason, Request};
+use hata::kvcache::pool::KvPool;
+use hata::kvcache::{BlockStore, MethodAux, SeqKvCache};
+use hata::model::{make_selector, sel_ref, weights::Weights, DecodeScratch, Model, SeqState};
+use hata::tensor::ops::argmax;
+use hata::tensor::simd::KernelMode;
+use hata::util::rng::Rng;
+
+const METHODS: [Method; 9] = [
+    Method::Dense,
+    Method::ExactTopK,
+    Method::Hata,
+    Method::Loki,
+    Method::Quest,
+    Method::MagicPig,
+    Method::StreamingLlm,
+    Method::H2o,
+    Method::SnapKv,
+];
+
+/// Physical block size under test: `HATA_KV_BLOCK` or a tiny default
+/// that maximizes block-boundary traffic.
+fn kv_block() -> usize {
+    std::env::var("HATA_KV_BLOCK").ok().and_then(|s| s.parse().ok()).unwrap_or(4)
+}
+
+/// One request of a trace: prompt, generation budget, and the engine
+/// step at which it arrives.
+struct TraceReq {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    arrive: usize,
+}
+
+/// A deterministic multi-request schedule. `preempts` are (step, id)
+/// events applied before that step runs.
+struct Trace {
+    reqs: Vec<TraceReq>,
+    preempts: Vec<(usize, u64)>,
+    last_event: usize,
+}
+
+impl Trace {
+    fn prompt_tokens_total(&self) -> u64 {
+        self.reqs.iter().map(|r| r.prompt.len() as u64).sum()
+    }
+}
+
+/// Six requests: two pairs share a 2-block prefix (ids 0/3 and 1/4),
+/// two are unique — arrivals staggered so each pair's lifetimes
+/// overlap and the second arrival's dedup lands while the first holder
+/// is still decoding (that's what makes refcount > 1 observable).
+fn build_trace(seed: u64, preempts: Vec<(usize, u64)>) -> Trace {
+    let bt = kv_block();
+    let mut rng = Rng::new(seed);
+    let mut tok = |n: usize| -> Vec<u32> { (0..n).map(|_| 32 + rng.below(64) as u32).collect() };
+    let prefix_a = tok(2 * bt);
+    let prefix_b = tok(2 * bt);
+    // (shared prefix, suffix length, max_new, arrival step)
+    let specs: [(Option<&[u32]>, usize, usize, usize); 6] = [
+        (Some(&prefix_a), 9, 6, 0),
+        (Some(&prefix_b), 13, 6, 0),
+        (None, 11 + bt, 4, 1),
+        (Some(&prefix_a), 15, 4, 2),
+        (Some(&prefix_b), 10 + bt, 4, 3),
+        (None, 9, 3, 4),
+    ];
+    let mut reqs = Vec::new();
+    for (id, (prefix, suffix, max_new, arrive)) in specs.into_iter().enumerate() {
+        let mut prompt = prefix.map(<[u32]>::to_vec).unwrap_or_default();
+        prompt.extend((0..suffix).map(|_| 32 + rng.below(64) as u32));
+        reqs.push(TraceReq { id: id as u64, prompt, max_new, arrive });
+    }
+    let last_event = reqs
+        .iter()
+        .map(|r| r.arrive)
+        .chain(preempts.iter().map(|p| p.0))
+        .max()
+        .unwrap_or(0);
+    Trace { reqs, preempts, last_event }
+}
+
+/// Audit the pool against the set of sequences that could hold pages:
+/// every minted block's refcount must equal the number of block-table
+/// references to it, and the free-page count must match the blocks in
+/// use. Returns the largest refcount seen (> 1 means a block is
+/// physically shared right now).
+fn check_conservation(pool: &KvPool, open_ids: &[u64]) -> u32 {
+    let minted = pool.minted_pages();
+    let mut counts = vec![0u32; minted];
+    for &id in open_ids {
+        for &b in pool.seq_blocks(id) {
+            counts[b as usize] += 1;
+        }
+    }
+    let mut in_use = 0usize;
+    let mut max_rc = 0u32;
+    for (b, &c) in counts.iter().enumerate() {
+        assert_eq!(
+            pool.refcount(b as u32),
+            c,
+            "block {b}: refcount diverged from live references (leak or double free)"
+        );
+        if c > 0 {
+            in_use += 1;
+        }
+        max_rc = max_rc.max(c);
+    }
+    assert_eq!(
+        pool.free_pages(),
+        pool.capacity_pages() - in_use,
+        "free-page accounting diverged from blocks in use"
+    );
+    max_rc
+}
+
+/// What one engine replay of a trace produced.
+struct TraceRun {
+    /// (id, generated tokens), sorted by id
+    streams: Vec<(u64, Vec<u32>)>,
+    prefix_hits: u64,
+    prefill_tokens: u64,
+    /// largest physical-block refcount observed at any step
+    max_shared_rc: u32,
+}
+
+/// Replay `trace` through one engine build and collect the streams plus
+/// the paged audit trail. The model is seeded identically for every
+/// call, so two runs differ only in the axes passed here.
+#[allow(clippy::too_many_arguments)]
+fn run_trace(
+    trace: &Trace,
+    method: Method,
+    threads: usize,
+    tile: usize,
+    exec_mode: ExecMode,
+    graph_cache: bool,
+    kernels: KernelMode,
+    paged: bool,
+) -> TraceRun {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 4,
+        prefill_chunk: 48,
+        prefill_tile: tile,
+        threads,
+        exec_mode,
+        graph_cache,
+        kernels,
+        kv_block: kv_block(),
+        paged,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let mut engine = Engine::new(Arc::new(model), serve);
+    let mut open: Vec<u64> = Vec::new();
+    let mut streams: Vec<(u64, Vec<u32>)> = Vec::new();
+    let mut max_shared_rc = 0u32;
+    let mut step = 0usize;
+    loop {
+        for r in trace.reqs.iter().filter(|r| r.arrive == step) {
+            engine.submit(Request {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new,
+                stop_token: None,
+                arrival: 0.0,
+            });
+            open.push(r.id);
+        }
+        for &(_, id) in trace.preempts.iter().filter(|(s, _)| *s == step) {
+            engine.preempt(id);
+        }
+        engine.step();
+        for resp in engine.take_responses() {
+            assert_eq!(resp.reason, FinishReason::MaxTokens, "request {} must finish", resp.id);
+            open.retain(|&id| id != resp.id);
+            streams.push((resp.id, resp.tokens));
+        }
+        if paged {
+            max_shared_rc = max_shared_rc.max(check_conservation(engine.pool(), &open));
+        }
+        step += 1;
+        if step > trace.last_event && !engine.has_work() {
+            break;
+        }
+        assert!(step < 10_000, "trace did not converge");
+    }
+    assert!(open.is_empty(), "every request must complete");
+    if paged {
+        let pool = engine.pool();
+        assert_eq!(pool.active_seqs(), 0, "pool leak: sequences still hold pages");
+        assert_eq!(pool.free_pages(), pool.capacity_pages(), "pool leak: pages not returned");
+    }
+    streams.sort_by_key(|(id, _)| *id);
+    TraceRun {
+        streams,
+        prefix_hits: engine.metrics.prefix_hits,
+        prefill_tokens: engine.metrics.prefill_tokens,
+        max_shared_rc,
+    }
+}
+
+/// The tentpole differential, widest axis: for every method in the
+/// zoo, a paged engine must emit exactly the contiguous engine's token
+/// streams on a shared-prefix trace — while the step-by-step pool audit
+/// inside `run_trace` proves no block ever leaks, double-frees, or
+/// carries a wrong refcount. Sharing must actually happen: the paged
+/// run must observe refcount > 1 and count prefix hits.
+#[test]
+fn paged_engine_bitwise_identical_for_every_method() {
+    let trace = build_trace(11, Vec::new());
+    for method in METHODS {
+        let flat = run_trace(&trace, method, 2, 16, ExecMode::Queue, true, KernelMode::Simd, false);
+        let paged = run_trace(&trace, method, 2, 16, ExecMode::Queue, true, KernelMode::Simd, true);
+        assert_eq!(flat.streams, paged.streams, "{method:?}: paged streams diverged");
+        assert!(paged.prefix_hits > 0, "{method:?}: shared prefixes must produce dedup hits");
+        assert!(paged.max_shared_rc > 1, "{method:?}: a shared block must be refcounted > 1");
+        assert_eq!(flat.prefix_hits, 0, "{method:?}: contiguous engines never dedup");
+    }
+}
+
+/// The remaining parallel.rs axes: threads × tile × executor ×
+/// graph-cache × kernel tier, paged vs contiguous, on the selector
+/// methods with the most layout-sensitive access patterns.
+#[test]
+fn paged_engine_identical_across_axes() {
+    let trace = build_trace(23, Vec::new());
+    let cells: &[(usize, usize, ExecMode, bool, KernelMode)] = &[
+        (1, 1, ExecMode::Barrier, true, KernelMode::Reference),
+        (2, 16, ExecMode::Queue, true, KernelMode::Simd),
+        (4, 7, ExecMode::Queue, false, KernelMode::Simd),
+        (2, 16, ExecMode::Barrier, false, KernelMode::Reference),
+    ];
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        for &(threads, tile, exec, gc, kernels) in cells {
+            let flat = run_trace(&trace, method, threads, tile, exec, gc, kernels, false);
+            let paged = run_trace(&trace, method, threads, tile, exec, gc, kernels, true);
+            assert_eq!(
+                flat.streams, paged.streams,
+                "{method:?} threads={threads} tile={tile} {exec:?} gc={gc} {kernels:?}"
+            );
+        }
+    }
+}
+
+/// Preempt/resume must recompute nothing: block tables make held pages
+/// cheap, so a preempted sequence resumes exactly where it stopped.
+/// `prefill_tokens` counts every chunk actually run — if a resume ever
+/// re-prefilled, the counter would exceed the sum of prompt lengths.
+/// And the token streams still match a contiguous run that was never
+/// preempted at all.
+#[test]
+fn preempt_resume_recomputes_nothing() {
+    let quiet = build_trace(31, Vec::new());
+    let stormy = build_trace(31, vec![(2, 0), (3, 1), (5, 3), (6, 2)]);
+    for method in [Method::Dense, Method::Hata] {
+        let flat = run_trace(&quiet, method, 2, 16, ExecMode::Queue, true, KernelMode::Simd, false);
+        let paged =
+            run_trace(&stormy, method, 2, 16, ExecMode::Queue, true, KernelMode::Simd, true);
+        assert_eq!(
+            flat.streams, paged.streams,
+            "{method:?}: preempted paged run diverged from quiet contiguous run"
+        );
+        assert_eq!(
+            paged.prefill_tokens,
+            stormy.prompt_tokens_total(),
+            "{method:?}: a resumed sequence re-prefilled a chunk (recompute)"
+        );
+    }
+}
+
+/// Model-level bitwise identity for the whole method zoo: logits after
+/// prefill and after every decode step, plus logical K/V rows, hash
+/// codes and Quest block summaries, must match the contiguous build
+/// bit for bit — with the paged cache running on pool-managed tables
+/// exactly as the engine drives them.
+#[test]
+fn paged_model_bitwise_state_for_every_method() {
+    let bt = kv_block();
+    for method in METHODS {
+        let serve = ServeConfig { method, budget: 16, kv_block: bt, ..Default::default() };
+        let cfg = preset("hata-gqa").unwrap();
+        let mut rng = Rng::new(7);
+        let weights = Weights::random(&cfg, &mut rng);
+        let aux = MethodAux::build(&cfg, &serve, None, 1);
+        let model = Model::new(cfg, weights, aux);
+        let selector = make_selector(&serve);
+        let sel = sel_ref(&selector);
+        let decode_steps = 6usize;
+        // prompt crosses many block boundaries and ends mid-block
+        let prompt: Vec<u32> = (0..(10 * bt + 3) as u32).map(|i| 32 + (i % 64)).collect();
+
+        let mut c1 = SeqKvCache::new(&model.cfg, &serve);
+        let mut s1 = SeqState::new(&model.cfg);
+        let mut sc1 = DecodeScratch::new(&model.cfg);
+        model.prefill(&prompt, &mut c1, &mut s1, &serve, &mut sc1);
+
+        let mut pool = KvPool::with_block(1024 * bt, bt);
+        let planes = model.cfg.n_layers * model.cfg.n_kv_heads;
+        let store = Arc::new(BlockStore::new(planes, model.cfg.head_dim, model.cfg.rbit / 64, bt));
+        let mut c2 = SeqKvCache::new_paged(&model.cfg, &serve, Arc::clone(&store));
+        c2.reserve(prompt.len() + decode_steps + 1);
+        let mut s2 = SeqState::new(&model.cfg);
+        let mut sc2 = DecodeScratch::new(&model.cfg);
+        pool.grow(1, prompt.len()).unwrap();
+        // SAFETY: single-threaded test, no live views of the store
+        unsafe { store.ensure_blocks(pool.minted_pages()) };
+        c2.sync_table(pool.seq_blocks(1));
+        model.prefill(&prompt, &mut c2, &mut s2, &serve, &mut sc2);
+        assert_eq!(sc1.logits, sc2.logits, "{method:?}: prefill logits diverged");
+
+        let mut next = argmax(&sc1.logits) as u32;
+        for step in 0..decode_steps {
+            let pos = prompt.len() + step;
+            pool.grow(1, 1).unwrap();
+            // SAFETY: single-threaded test, no live views of the store
+            unsafe { store.ensure_blocks(pool.minted_pages()) };
+            c2.sync_table(pool.seq_blocks(1));
+            model.decode_step(next, pos, &mut c1, &mut s1, &serve, sel, &mut sc1);
+            model.decode_step(next, pos, &mut c2, &mut s2, &serve, sel, &mut sc2);
+            assert_eq!(sc1.logits, sc2.logits, "{method:?}: step {step} logits diverged");
+            next = argmax(&sc1.logits) as u32;
+        }
+        for li in 0..model.cfg.n_layers {
+            for kv in 0..model.cfg.n_kv_heads {
+                assert_eq!(
+                    c1.k_slice(li, kv),
+                    c2.k_logical(li, kv),
+                    "{method:?}: K rows diverged l{li} kv{kv}"
+                );
+                assert_eq!(
+                    c1.v_slice(li, kv),
+                    c2.v_logical(li, kv),
+                    "{method:?}: V rows diverged l{li} kv{kv}"
+                );
+                if method == Method::Hata {
+                    assert_eq!(
+                        c1.codes_slice(li, kv),
+                        c2.codes_logical(li, kv),
+                        "{method:?}: hash codes diverged l{li} kv{kv}"
+                    );
+                }
+                let hw = model.weights.hash_head(li, kv);
+                let a = c1.side(li, kv, hw, &model.aux);
+                let b = c2.side(li, kv, hw, &model.aux);
+                assert_eq!(a.quest_min, b.quest_min, "{method:?}: quest_min l{li} kv{kv}");
+                assert_eq!(a.quest_max, b.quest_max, "{method:?}: quest_max l{li} kv{kv}");
+            }
+        }
+    }
+}
+
+/// Copy-on-write correctness as a property: fork a prefilled sequence,
+/// unshare the partial tail block, decode on the child — and the
+/// parent's every logical K/V/code row must be byte-identical to its
+/// pre-fork snapshot. A single in-place write to a shared block would
+/// flip parent bytes and fail this.
+#[test]
+fn cow_fork_never_mutates_parent_blocks() {
+    let bt = kv_block();
+    let serve =
+        ServeConfig { method: Method::Hata, budget: 16, kv_block: bt, ..Default::default() };
+    let cfg = preset("hata-gqa").unwrap();
+    let mut rng = Rng::new(9);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let model = Model::new(cfg, weights, aux);
+    let selector = make_selector(&serve);
+    let sel = sel_ref(&selector);
+    // ends mid-block for bt > 1, so the fork shares a partial tail
+    let plen = 2 * bt + bt.div_ceil(2);
+    let prompt: Vec<u32> = (0..plen as u32).map(|i| 32 + (i * 5 % 64)).collect();
+
+    let mut pool = KvPool::with_block(256 * bt, bt);
+    let planes = model.cfg.n_layers * model.cfg.n_kv_heads;
+    let store = Arc::new(BlockStore::new(planes, model.cfg.head_dim, model.cfg.rbit / 64, bt));
+    let mut parent = SeqKvCache::new_paged(&model.cfg, &serve, Arc::clone(&store));
+    parent.reserve(prompt.len() + 4);
+    let mut ps = SeqState::new(&model.cfg);
+    let mut psc = DecodeScratch::new(&model.cfg);
+    pool.grow(1, prompt.len()).unwrap();
+    // SAFETY: single-threaded test, no live views of the store
+    unsafe { store.ensure_blocks(pool.minted_pages()) };
+    parent.sync_table(pool.seq_blocks(1));
+    model.prefill(&prompt, &mut parent, &mut ps, &serve, &mut psc);
+
+    // snapshot every logical row of the parent
+    let snap: Vec<(Vec<f32>, Vec<f32>, Vec<u64>)> = (0..model.cfg.n_layers)
+        .flat_map(|li| (0..model.cfg.n_kv_heads).map(move |kv| (li, kv)))
+        .map(|(li, kv)| {
+            (parent.k_logical(li, kv), parent.v_logical(li, kv), parent.codes_logical(li, kv))
+        })
+        .collect();
+
+    let minted_before = pool.minted_pages();
+    let mut child = parent.fork_paged(&mut pool, 1, 2).unwrap();
+    assert_eq!(pool.minted_pages(), minted_before, "fork must mint zero pages");
+    for &b in pool.seq_blocks(1) {
+        assert_eq!(pool.refcount(b), 2, "every parent block must be shared after fork");
+    }
+    assert_eq!(child.block_table(), pool.seq_blocks(1), "child aliases the parent's blocks");
+
+    // unshare the partial tail block the child is about to append into
+    if plen % bt != 0 {
+        let idx = plen / bt;
+        let copied = child.make_writable(&mut pool, 2, idx).unwrap();
+        assert!(copied, "a shared tail block must be copied, never written in place");
+        assert_eq!(pool.refcount(pool.seq_blocks(1)[idx]), 1, "parent tail unshared again");
+    }
+
+    // decode two tokens on the child only
+    let mut cs = SeqState::new(&model.cfg);
+    let mut csc = DecodeScratch::new(&model.cfg);
+    child.reserve(prompt.len() + 4);
+    let mut next = argmax(&psc.logits) as u32;
+    for step in 0..2 {
+        pool.grow(2, 1).unwrap();
+        // SAFETY: single-threaded test, no live views of the store
+        unsafe { store.ensure_blocks(pool.minted_pages()) };
+        child.sync_table(pool.seq_blocks(2));
+        model.decode_step(next, plen + step, &mut child, &mut cs, &serve, sel, &mut csc);
+        next = argmax(&csc.logits) as u32;
+    }
+
+    // the parent's bytes are untouched; the child agrees on the prefix
+    for li in 0..model.cfg.n_layers {
+        for kv in 0..model.cfg.n_kv_heads {
+            let (k, v, codes) = &snap[li * model.cfg.n_kv_heads + kv];
+            assert_eq!(&parent.k_logical(li, kv), k, "parent K mutated l{li} kv{kv}");
+            assert_eq!(&parent.v_logical(li, kv), v, "parent V mutated l{li} kv{kv}");
+            assert_eq!(&parent.codes_logical(li, kv), codes, "parent codes mutated l{li} kv{kv}");
+            assert_eq!(
+                child.k_logical(li, kv)[..k.len()],
+                k[..],
+                "child prefix diverged l{li} kv{kv}"
+            );
+        }
+    }
+    assert_eq!(child.len(), parent.len() + 2);
+
+    // teardown conserves every page
+    pool.release(1).unwrap();
+    pool.release(2).unwrap();
+    assert_eq!(pool.active_seqs(), 0);
+    assert_eq!(pool.free_pages(), pool.capacity_pages(), "leak after release");
+}
