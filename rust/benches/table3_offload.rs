@@ -1,15 +1,99 @@
-//! Table 3 reproduction: KV-offloading — HATA-off vs MagicPIG-style.
+//! Table 3 reproduction: KV-offloading — HATA-off vs MagicPIG-style —
+//! now in two halves:
 //!
-//! Paper testbed: PCIe 4.0, 48 CPU threads; Llama2 @36K prefill + 500
-//! decode and Llama3.1 @72K + 500 decode, budgets 1.56% (HATA-off) and
-//! 2-3% sampled (MagicPIG). Cost models in kvcache/offload.rs (the
-//! substitution ledger is documented in DESIGN.md §4).
+//! 1. **Analytical** (paper scale): the fixed cost models in
+//!    kvcache/offload.rs priced on the paper's PCIe 4.0 testbed, Llama2
+//!    @36K prefill + 500 decode and Llama3.1 @72K + 500 decode.
+//! 2. **Live** (scaled down): the real residency tier (`--offload`)
+//!    running inside the serving engine on the hata-gqa preset under
+//!    maximum offload pressure (budget 0). Every fetch pass is metered
+//!    twice — a modeled ledger priced by the same fixed PCIe model the
+//!    analytical half uses, and measured wall-clock seconds of the
+//!    actual slow-tier copies — and the figure reports the prediction
+//!    error between them.
+//!
+//! **Stated bound**: in-process slow-tier copies are strictly faster
+//! than a real PCIe link, so measured seconds must land in the sandwich
+//! `0.25 * bytes/calibrated_memcpy_bw <= measured <= modeled`, where
+//! the ceiling is the fixed analytical model (its 10 µs per-descriptor
+//! DMA latency dominates small-block gathers) and the floor is the
+//! machine's own measured copy bandwidth with 4x slack for scattered
+//! sub-block copies. The run asserts this sandwich and prints the error.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use hata::bench::report::{fmt, Table};
-use hata::config::preset;
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::Request;
 use hata::kvcache::offload::{hata_off, magicpig_off, OffloadRates};
+use hata::kvcache::tier::OffloadStats;
+use hata::kvcache::MethodAux;
+use hata::model::{weights::Weights, Model};
+use hata::util::rng::Rng;
+
+/// Best-case in-process copy bandwidth (bytes/s), measured on a few
+/// contiguous 8 MB memcpys — the floor of the live sandwich bound.
+fn calibrate_memcpy_bw() -> f64 {
+    let src = vec![1.0f32; 2 << 20];
+    let mut dst = vec![0.0f32; 2 << 20];
+    let bytes = src.len() * 4;
+    // warm up, then take the best of 5 (least-disturbed) passes
+    dst.copy_from_slice(&src);
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        dst.copy_from_slice(&src);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(&dst);
+    bytes as f64 / best.max(1e-12)
+}
+
+/// Run the live tiered engine on a small trace; returns the final tier
+/// counters and total wall seconds of the run.
+fn run_live(method: Method) -> (OffloadStats, f64) {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 4,
+        prefill_chunk: 48,
+        threads: 2,
+        kv_block: 4,
+        offload: true,
+        offload_budget: 0,
+        prefetch_depth: 1,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let model = Model::new(cfg, weights, aux);
+    let mut engine = Engine::new(Arc::new(model), serve);
+    let mut rng = Rng::new(7);
+    for id in 0..6u64 {
+        let plen = 48 + rng.below(32) as usize;
+        engine.submit(Request {
+            id,
+            prompt: (0..plen).map(|_| 32 + rng.below(64) as u32).collect(),
+            max_new_tokens: 12,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let t0 = Instant::now();
+    let responses = engine.run_to_completion();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), 6, "{method:?}: every request must complete");
+    let stats = engine.metrics.offload.expect("offload run reports tier stats");
+    eprintln!("[table3] live {method:?}: {}", engine.metrics.report());
+    (stats, wall)
+}
 
 fn main() {
+    // ---- analytical half: the paper's testbed, paper-scale contexts
     let rates = OffloadRates::paper_testbed();
     let mut table = Table::new(
         "Table 3 proxy: offloading time (modeled, PCIe 4.0 testbed)",
@@ -38,4 +122,53 @@ fn main() {
     }
     println!("{}", table.render());
     table.write_csv("bench_results", "table3").unwrap();
+
+    // ---- live half: the residency tier under the real engine
+    let memcpy_bw = calibrate_memcpy_bw();
+    eprintln!("[table3] calibrated in-process copy bandwidth: {:.1} GB/s", memcpy_bw / 1e9);
+    let cols = [
+        "method", "fetches", "prefetch", "evicts", "fetch_MB", "model_s", "floor_s", "wall_s",
+        "wall/model",
+    ];
+    let mut live = Table::new(
+        "Table 3 live: residency tier, modeled vs measured fetch seconds (budget 0)",
+        &cols,
+    );
+    for method in [Method::Hata, Method::Dense, Method::Quest] {
+        let (o, _wall) = run_live(method);
+        let fetched = o.demand_fetches + o.prefetch_fetches;
+        assert!(fetched > 0 && o.evictions > 0, "{method:?}: tier must actually run");
+        let modeled = o.fetch.seconds;
+        let floor = 0.25 * o.fetch.bytes as f64 / memcpy_bw;
+        let measured = o.measured_fetch_s;
+        // the stated bound: fixed-PCIe model is a ceiling, calibrated
+        // copy bandwidth (with 4x scatter slack) a floor
+        assert!(
+            measured <= modeled,
+            "{method:?}: measured {measured:.6}s exceeded the PCIe-model ceiling {modeled:.6}s"
+        );
+        assert!(
+            measured >= floor,
+            "{method:?}: measured {measured:.9}s under the copy-bandwidth floor {floor:.9}s"
+        );
+        live.row(vec![
+            format!("{method:?}"),
+            fetched.to_string(),
+            o.prefetch_fetches.to_string(),
+            o.evictions.to_string(),
+            fmt(o.fetch.bytes as f64 / 1e6),
+            fmt(modeled),
+            fmt(floor),
+            fmt(measured),
+            fmt(measured / modeled),
+        ]);
+        eprintln!(
+            "[table3] live {method:?}: error {:.1}% (measured {:.3} ms, modeled {:.3} ms)",
+            100.0 * (modeled - measured) / modeled,
+            measured * 1e3,
+            modeled * 1e3,
+        );
+    }
+    println!("{}", live.render());
+    live.write_csv("bench_results", "table3_live").unwrap();
 }

@@ -182,6 +182,11 @@ pub struct MethodState {
     pub h2o_cum: Vec<f32>,
     /// SnapKV: token set chosen from the observation window at prefill.
     pub snapkv_keep: Vec<u32>,
+    /// Offload: physical block ids this head's selection touched at the
+    /// last decode step — the layer-ahead prefetch task's fetch list.
+    /// Written only when a residency tier is attached (stays empty, and
+    /// allocation-free, otherwise).
+    pub sel_blocks: Vec<u32>,
 }
 
 /// A token-selection policy for sparse attention.

@@ -307,6 +307,23 @@ pub struct ServeConfig {
     /// regions. Enables copy-on-write prefix sharing and cheap
     /// preempt/resume; bit-identical to the contiguous layout.
     pub paged: bool,
+    /// Run the residency tier (`--offload`): cold K/V blocks spill to a
+    /// rate-limited slow-tier store and decode fetches back only the
+    /// blocks its top-k selection needs, scoring the always-resident
+    /// code cache first (paper Sec 5.3). Implies `paged`; bit-identical
+    /// to the resident paged run.
+    pub offload: bool,
+    /// Device-resident K/V budget in tokens when offloading
+    /// (`--offload-budget`): after each step, cold blocks beyond this
+    /// many tokens are written back to the slow tier. 0 keeps only the
+    /// append-target blocks resident (maximum offload pressure).
+    pub offload_budget: usize,
+    /// How many layers ahead the decode graph fetches the blocks a
+    /// (sequence, head) selected last step (`--prefetch-depth`): layer
+    /// L's fetch is released once layer L-depth's QKV finishes, so it
+    /// overlaps layer L-1's attention at the default depth of 1
+    /// (InfiniGen-style). 0 releases the fetch at the layer itself.
+    pub prefetch_depth: usize,
     /// Loki channels (low-rank dims) when method == Loki.
     pub loki_channels: usize,
     /// Quest block size when method == Quest.
@@ -357,6 +374,9 @@ impl Default for ServeConfig {
             kv_capacity: 1 << 20,
             kv_block: crate::kvcache::pool::PAGE_TOKENS,
             paged: false,
+            offload: false,
+            offload_budget: 0,
+            prefetch_depth: 1,
             loki_channels: 4, // paper: 32 of 128 dims; here 4 of 16 (same 25%)
             quest_block: 16,  // paper: 32; scaled to our shorter contexts
             magicpig_k: 10,

@@ -20,13 +20,16 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::ServeConfig;
+use crate::kvcache::offload::OffloadRates;
 use crate::kvcache::pool::KvPool;
+use crate::kvcache::tier::TierController;
 use crate::kvcache::{BlockStore, SeqKvCache};
 use crate::model::sampler::Sampler;
 use crate::model::{
     make_selector, sel_ref, DecodeGraphCache, DecodeItem, DecodeScratch, Model, PrefillItem,
     SeqState, WorkerScratch,
 };
+use crate::simulator::pcie::PcieModel;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -38,6 +41,22 @@ use super::scheduler::{Scheduler, SeqTicket, StepPlan};
 /// (stuck scheduler or unsatisfiable admission), surfaces it through
 /// metrics and preempts the stuck requests instead of spinning forever.
 const STALL_LIMIT: u64 = 64;
+
+/// The PCIe link model the residency tier charges its ledgers against:
+/// the paper's Table 3 testbed link, with the bandwidth overridable via
+/// `HATA_OFFLOAD_BW` (bytes/second) so benches can pin the model to a
+/// machine's measured host<->device copy rate.
+fn offload_pcie() -> PcieModel {
+    let mut pcie = OffloadRates::paper_testbed().pcie;
+    if let Ok(bw) = std::env::var("HATA_OFFLOAD_BW") {
+        if let Ok(bw) = bw.parse::<f64>() {
+            if bw > 0.0 {
+                pcie.bandwidth = bw;
+            }
+        }
+    }
+    pcie
+}
 
 struct LiveSeq {
     req: Request,
@@ -80,6 +99,16 @@ pub struct Engine {
     /// shared physical block planes when `--paged`; `None` keeps every
     /// sequence on the contiguous per-head layout
     store: Option<Arc<BlockStore>>,
+    /// residency-tier controller when `--offload`: tracks which physical
+    /// blocks hold device-resident K/V, spills cold blocks to the slow
+    /// tier under `--offload-budget` and services demand/prefetch fetches
+    tier: Option<Arc<TierController>>,
+    /// recycled per-step scratch for [`Self::enforce_offload_budget`]:
+    /// every live sequence's physical blocks
+    live_blocks: Vec<u32>,
+    /// recycled per-step scratch: append-target (tail) blocks, exempt
+    /// from eviction
+    tail_blocks: Vec<u32>,
     seqs: HashMap<u64, LiveSeq>,
     workers: ThreadPool,
     worker_scratch: Vec<WorkerScratch>,
@@ -104,8 +133,12 @@ pub struct Engine {
 
 impl Engine {
     /// Build an engine: scheduler, KV pool, threadpool and scratch sized
-    /// from `serve`.
-    pub fn new(model: Arc<Model>, serve: ServeConfig) -> Self {
+    /// from `serve`. `--offload` implies `--paged` (the residency tier
+    /// tracks physical blocks, so it needs the shared block planes).
+    pub fn new(model: Arc<Model>, mut serve: ServeConfig) -> Self {
+        if serve.offload {
+            serve.paged = true;
+        }
         let selector = make_selector(&serve);
         let threads = serve.threads.max(1);
         let sampler = if serve.temperature > 0.0 {
@@ -123,10 +156,21 @@ impl Engine {
                 serve.kv_block,
             ))
         });
+        let tier = match (&store, serve.offload) {
+            (Some(store), true) => {
+                Some(Arc::new(TierController::new(store.clone(), offload_pcie())))
+            }
+            _ => None,
+        };
+        let mut metrics = Metrics::new();
+        metrics.paged_active = serve.paged;
         Engine {
             scheduler: Scheduler::new(&serve),
             pool: KvPool::with_block(serve.kv_capacity, serve.kv_block),
             store,
+            tier,
+            live_blocks: Vec::new(),
+            tail_blocks: Vec::new(),
             seqs: HashMap::new(),
             workers: ThreadPool::new(threads),
             worker_scratch: (0..threads).map(|_| WorkerScratch::default()).collect(),
@@ -136,7 +180,7 @@ impl Engine {
             decode_feed: Vec::new(),
             finished: Vec::new(),
             sampler,
-            metrics: Metrics::new(),
+            metrics,
             clock: Instant::now(),
             responses: Vec::new(),
             selector,
@@ -170,6 +214,9 @@ impl Engine {
             Some(store) => SeqKvCache::new_paged(&self.model.cfg, &self.serve, store.clone()),
             None => SeqKvCache::new(&self.model.cfg, &self.serve),
         };
+        if let Some(tier) = &self.tier {
+            cache.attach_tier(tier.clone());
+        }
         cache.reserve(req.prompt.len() + req.max_new_tokens + 1);
         self.seqs.insert(
             req.id,
@@ -232,6 +279,10 @@ impl Engine {
             // between passes; see kvcache::paged's module contract)
             // SAFETY: no pass is running, so no worker holds a view
             unsafe { store.ensure_blocks(self.pool.minted_pages()) };
+            if let Some(tier) = &self.tier {
+                tier.ensure_capacity(self.pool.minted_pages());
+                tier.begin_step();
+            }
             let ids = self
                 .plan
                 .prefill
@@ -240,7 +291,19 @@ impl Engine {
                 .chain(self.plan.decode.iter().map(|w| w.id));
             for id in ids {
                 if let Some(seq) = self.seqs.get_mut(&id) {
+                    // blocks appended to the table this step are fresh
+                    // device pages: mark them resident so the tier never
+                    // "restores" stale slow-tier data from a previous
+                    // owner of a recycled physical block. (Safe to diff
+                    // by index: tables only grow while a sequence is
+                    // live, and dedup swaps happen below the old length.)
+                    let old_len = seq.cache.block_table().len();
                     seq.cache.sync_table(self.pool.seq_blocks(id));
+                    if let Some(tier) = &self.tier {
+                        for &b in seq.cache.block_table().get(old_len..).unwrap_or(&[]) {
+                            tier.note_allocated(b);
+                        }
+                    }
                 }
             }
         }
@@ -252,6 +315,17 @@ impl Engine {
         }
         // ---- batched prefill chunks
         if !self.plan.prefill.is_empty() {
+            // prefill attends over the whole context so far, so the
+            // sequence's every block must be device-resident before the
+            // pass captures views (a preempted-then-resumed sequence may
+            // have been spilled under the budget while it waited)
+            if let Some(tier) = &self.tier {
+                for w in &self.plan.prefill {
+                    if let Some(seq) = self.seqs.get(&w.id) {
+                        tier.fetch_table_all_planes(seq.cache.block_table());
+                    }
+                }
+            }
             {
                 let mut by_id: HashMap<u64, &mut LiveSeq> =
                     self.seqs.iter_mut().map(|(id, s)| (*id, s)).collect();
@@ -369,8 +443,35 @@ impl Engine {
             self.finish(id, reason);
         }
         self.finished = finished;
+        if self.tier.is_some() {
+            self.enforce_offload_budget();
+            if let Some(tier) = &self.tier {
+                self.metrics.offload = Some(tier.stats());
+            }
+        }
         self.metrics.on_step(t0.elapsed().as_secs_f64(), outcome.decoded);
         outcome
+    }
+
+    /// Spill cold blocks to the slow tier until the device-resident count
+    /// fits `--offload-budget` (in tokens; 0 keeps only append-target
+    /// tails resident). Runs on the engine thread between passes: no
+    /// worker holds a [`crate::kvcache::paged::PagedRef`] view, so moving
+    /// block payloads is safe. Tail blocks of every tracked sequence —
+    /// queued, live or preempted — are exempt so appends always land on
+    /// device-resident rows.
+    fn enforce_offload_budget(&mut self) {
+        let Some(tier) = &self.tier else { return };
+        self.live_blocks.clear();
+        self.tail_blocks.clear();
+        for &id in self.seqs.keys() {
+            self.live_blocks.extend_from_slice(self.pool.seq_blocks(id));
+            if let Some(tail) = self.pool.seq_tail(id) {
+                self.tail_blocks.push(tail);
+            }
+        }
+        let budget_blocks = self.serve.offload_budget / self.pool.block_tokens();
+        tier.evict_to_budget(budget_blocks, &self.live_blocks, &self.tail_blocks);
     }
 
     fn finish(&mut self, id: u64, reason: FinishReason) {

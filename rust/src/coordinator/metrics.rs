@@ -2,6 +2,7 @@
 //! and the work-queue executor's per-stage (decode vs prefill)
 //! busy/idle counters.
 
+use crate::kvcache::tier::OffloadStats;
 use crate::util::stats::{LatencyHistogram, Summary};
 use crate::util::workqueue::QueueStats;
 
@@ -40,6 +41,13 @@ pub struct Metrics {
     pub decode_exec: QueueStats,
     /// Work-queue executor counters for the prefill stage.
     pub prefill_exec: QueueStats,
+    /// Whether the engine runs the paged KV layout: gates the `paged[..]`
+    /// report section so `prefill_tokens` shows for every paged run, not
+    /// only the ones that happened to share a prefix.
+    pub paged_active: bool,
+    /// Residency-tier counters, present when `--offload` is active; the
+    /// engine refreshes this snapshot from the tier controller each step.
+    pub offload: Option<OffloadStats>,
     started_at: Option<std::time::Instant>,
 }
 
@@ -130,11 +138,25 @@ impl Metrics {
                 d.graph_builds, d.graph_hits
             ));
         }
-        // paged-cache prefix sharing (zero unless --paged found hits)
-        if self.prefix_hits > 0 {
+        // paged-cache section whenever the paged layout is active, even
+        // with zero sharing — prefill_tokens is meaningful either way
+        if self.paged_active {
             line.push_str(&format!(
                 " paged[prefix_hits={} prefill_tokens={}]",
                 self.prefix_hits, self.prefill_tokens
+            ));
+        }
+        if let Some(o) = &self.offload {
+            line.push_str(&format!(
+                " offload[fetch={} prefetch={} hit={} evict={} fetch_MB={:.2} \
+                 model_s={:.4} wall_s={:.4}]",
+                o.demand_fetches,
+                o.prefetch_fetches,
+                o.hits,
+                o.evictions,
+                o.fetch.bytes as f64 / 1e6,
+                o.fetch.seconds,
+                o.measured_fetch_s,
             ));
         }
         line
@@ -159,13 +181,33 @@ mod tests {
     }
 
     #[test]
-    fn prefix_hits_reported_only_when_present() {
+    fn paged_section_gated_on_mode_not_hits() {
         let mut m = Metrics::new();
-        assert!(!m.report().contains("paged["), "no prefix hits yet");
         m.prefill_tokens = 256;
         m.prefix_hits = 3;
+        assert!(!m.report().contains("paged["), "contiguous run never shows paged[]");
+        m.paged_active = true;
         let r = m.report();
         assert!(r.contains("paged[prefix_hits=3 prefill_tokens=256]"), "{r}");
+        // a paged run with zero sharing still reports its prefill tokens
+        m.prefix_hits = 0;
+        let r = m.report();
+        assert!(r.contains("paged[prefix_hits=0 prefill_tokens=256]"), "{r}");
+    }
+
+    #[test]
+    fn offload_section_reports_tier_counters() {
+        let mut m = Metrics::new();
+        assert!(!m.report().contains("offload["), "no tier yet");
+        m.offload = Some(OffloadStats {
+            demand_fetches: 5,
+            prefetch_fetches: 2,
+            hits: 40,
+            evictions: 3,
+            ..Default::default()
+        });
+        let r = m.report();
+        assert!(r.contains("offload[fetch=5 prefetch=2 hit=40 evict=3"), "{r}");
     }
 
     #[test]

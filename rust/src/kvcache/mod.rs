@@ -29,11 +29,13 @@
 pub mod offload;
 pub mod paged;
 pub mod pool;
+pub mod tier;
 
 use std::sync::Arc;
 
 pub use paged::{BlockStore, HeadRead, PagedRef};
 use pool::KvPool;
+use tier::TierController;
 
 use crate::attention::Side;
 use crate::config::{Method, ModelConfig, ServeConfig};
@@ -255,6 +257,38 @@ impl HeadMut<'_> {
             mp_l: self.mp_l,
         }
     }
+
+    /// True when this head's paged ref carries a residency tier
+    /// (`--offload` runs only).
+    pub fn tier_active(&self) -> bool {
+        self.paged.as_ref().is_some_and(|p| p.has_tier())
+    }
+
+    /// Demand-fetch every slow-tier block covering logical tokens
+    /// `[0, len)` of this head's plane and record the block list in
+    /// `out` — the full-range path (dense attention and exact top-k
+    /// scoring read every cached row). No-op without a tier.
+    pub fn ensure_range_resident(&self, len: usize, out: &mut Vec<u32>) {
+        let Some(p) = self.paged.as_ref().filter(|p| p.has_tier()) else { return };
+        // SAFETY: this HeadMut was captured under the paged module
+        // contract (table live and unmoved for the pass); the tier
+        // controller is kept alive by the engine's Arc for the run.
+        unsafe {
+            p.ensure_range_resident(len);
+            p.range_blocks(len, out);
+        }
+    }
+
+    /// Demand-fetch the slow-tier blocks holding the selected token
+    /// `indices` and record the deduplicated block list in `out` — the
+    /// top-k path: score always-resident codes first, then fetch only
+    /// what selection chose. No-op without a tier.
+    pub fn ensure_selected_resident(&self, indices: &[u32], out: &mut Vec<u32>) {
+        let Some(p) = self.paged.as_ref().filter(|p| p.has_tier()) else { return };
+        // SAFETY: as for [`HeadMut::ensure_range_resident`]; selector
+        // output indices are all `< s` and therefore table-covered.
+        unsafe { p.ensure_selected_resident(indices, out) };
+    }
 }
 
 /// Address-based view of one (layer, kv-head) cache region for the
@@ -321,6 +355,21 @@ impl HeadHandle {
         &*self.hc
     }
 
+    /// Prefetch previously recorded physical `blocks` of this head's
+    /// plane from the slow tier (the decode graph's layer-ahead fetch
+    /// task body). No-op unless a residency tier is attached.
+    ///
+    /// # Safety
+    /// The handle's table must be live and unmoved (pass contract) and
+    /// the recorded ids still owned by or shared with this sequence —
+    /// true for a selection recorded at the previous decode step, since
+    /// a live sequence's blocks are only released when it finishes.
+    pub unsafe fn prefetch_blocks(&self, blocks: &[u32]) {
+        if let Some(p) = &self.paged {
+            p.prefetch_blocks(blocks);
+        }
+    }
+
     /// Materialize the unified K/V/code read view of this head region,
     /// resolving the paged layout's block indirection when active.
     ///
@@ -346,6 +395,20 @@ impl HeadHandle {
 struct PagedSeq {
     store: Arc<BlockStore>,
     table: Vec<u32>,
+    /// Residency-tier controller, present when the engine enabled
+    /// `--offload`; attached to every [`PagedRef`] captured from this
+    /// sequence so worker-side fetches can reach it.
+    tier: Option<Arc<TierController>>,
+}
+
+impl PagedSeq {
+    fn head_ref(&self, h: usize) -> PagedRef {
+        let mut r = self.store.head_ref(h, &self.table);
+        if let Some(t) = &self.tier {
+            r.attach_tier(Arc::as_ptr(t));
+        }
+        r
+    }
 }
 
 /// All cached state for one sequence: K/V per (layer, kv-head), the packed
@@ -409,8 +472,17 @@ impl SeqKvCache {
         assert_eq!(cfg.rbit % 64, 0, "paged cache requires rbit % 64 == 0");
         assert_eq!(store.words(), cfg.rbit / 64, "store code width must match rbit");
         let mut cache = Self::new(cfg, serve);
-        cache.paged = Some(PagedSeq { store, table: Vec::new() });
+        cache.paged = Some(PagedSeq { store, table: Vec::new(), tier: None });
         cache
+    }
+
+    /// Attach the engine's residency-tier controller (`--offload`):
+    /// every [`PagedRef`] captured from now on carries it, routing
+    /// worker-side block fetches through the tier. Panics on a
+    /// contiguous cache — offload requires the paged layout.
+    pub fn attach_tier(&mut self, tier: Arc<TierController>) {
+        let p = self.paged.as_mut().expect("attach_tier requires the paged layout");
+        p.tier = Some(tier);
     }
 
     /// True when this cache uses the paged layout.
@@ -436,7 +508,7 @@ impl SeqKvCache {
     }
 
     fn paged_ref(&self, h: usize) -> Option<PagedRef> {
-        self.paged.as_ref().map(|p| p.store.head_ref(h, &p.table))
+        self.paged.as_ref().map(|p| p.head_ref(h))
     }
 
     /// Absolute head index (layer * n_kv + kv) keying the aux tables.
@@ -492,7 +564,7 @@ impl SeqKvCache {
                 loki_channels: lc,
                 mp_k: mk,
                 mp_l: ml,
-                paged: paged.as_ref().map(|p| p.store.head_ref(base + kv, &p.table)),
+                paged: paged.as_ref().map(|p| p.head_ref(base + kv)),
                 hc,
             })
             .collect()
@@ -525,7 +597,7 @@ impl SeqKvCache {
                 loki_channels: lc,
                 mp_k: mk,
                 mp_l: ml,
-                paged: paged.as_ref().map(|p| p.store.head_ref(h, &p.table)),
+                paged: paged.as_ref().map(|p| p.head_ref(h)),
                 hc,
             })
             .collect()
@@ -751,8 +823,14 @@ impl SeqKvCache {
                     let (Some(mine), Some(&shared)) = (mine, pool.seq_blocks(id).get(idx)) else {
                         unreachable!("dedup hit on a missing block-table entry")
                     };
+                    // device rows are poison once a block spilled to the
+                    // slow tier — only compare when both sides are whole
+                    let comparable = match &p.tier {
+                        Some(t) => t.is_fully_resident(mine) && t.is_fully_resident(shared),
+                        None => true,
+                    };
                     debug_assert!(
-                        p.store.blocks_equal(mine, shared),
+                        !comparable || p.store.blocks_equal(mine, shared),
                         "prefix hash collision: block contents diverge"
                     );
                 }
@@ -781,6 +859,17 @@ impl SeqKvCache {
                 // no worker holds a view.
                 unsafe {
                     p.store.ensure_blocks(pool.minted_pages());
+                }
+                if let Some(t) = &p.tier {
+                    // copy_block reads device rows: restore a spilled
+                    // source first, and mark the (possibly recycled)
+                    // private copy freshly device-resident
+                    t.ensure_capacity(pool.minted_pages());
+                    t.fetch_table_all_planes(&[src]);
+                    t.note_allocated(dst);
+                }
+                // SAFETY: as above.
+                unsafe {
                     p.store.copy_block(src, dst);
                 }
                 true
@@ -813,7 +902,11 @@ impl SeqKvCache {
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
             mp_l: self.mp_l,
-            paged: Some(PagedSeq { store: Arc::clone(&p.store), table: Vec::new() }),
+            paged: Some(PagedSeq {
+                store: Arc::clone(&p.store),
+                table: Vec::new(),
+                tier: p.tier.clone(),
+            }),
             heads: self.heads.clone(),
         };
         cache.sync_table(pool.seq_blocks(child));

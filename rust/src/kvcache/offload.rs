@@ -85,17 +85,19 @@ pub fn hata_off(cfg: &ModelConfig, rates: &OffloadRates, prefill_len: usize, dec
         let s = prefill_len + step;
         let score = code_bytes(cfg, s) as f64 / rates.dev_bw;
         let row_bytes = 2 * per_head_rows * cfg.head_dim * 4 * cfg.n_kv_heads;
-        let mut step_s = 0.0f64;
+        let pack = 2.0 * row_bytes as f64 / rates.host_bw;
+        let mut l = TransferLedger::default();
+        l.add(&rates.pcie, row_bytes);
         for _layer in 0..cfg.n_layers {
-            let pack = 2.0 * row_bytes as f64 / rates.host_bw;
-            let mut l = TransferLedger::default();
-            l.add(&rates.pcie, row_bytes);
             ledger.add(&rates.pcie, row_bytes);
-            let attend = row_bytes as f64 / rates.dev_bw;
-            // prefetch overlap: next layer's pack+DMA hides behind the
-            // current layer's attend; the slower of the two paces a layer.
-            step_s += attend.max(pack + l.seconds);
         }
+        let fetch = pack + l.seconds;
+        let attend = row_bytes as f64 / rates.dev_bw;
+        // Prefetch overlap pipelines layer L+1's pack+DMA behind layer L's
+        // attend, but the pipeline has ends: layer 0's fetch has no prior
+        // attend to hide behind, and the last layer's attend runs after the
+        // final fetch. fill + (n-1) overlapped stages + drain:
+        let step_s = fetch + (cfg.n_layers - 1) as f64 * attend.max(fetch) + attend;
         rep.decode_seconds += score + step_s;
     }
     rep.ledger = ledger;
@@ -127,9 +129,16 @@ pub fn magicpig_off(cfg: &ModelConfig, rates: &OffloadRates, prefill_len: usize,
         let score = (s * sig_bytes_per_tok) as f64 / rates.host_bw;
         let attend = (2 * per_head_rows * cfg.head_dim * 4 * cfg.n_kv_heads * cfg.n_layers) as f64
             / rates.host_bw;
-        // query down + output up, tiny
-        ledger.add(&rates.pcie, 2 * cfg.d_model * 4 * cfg.n_layers);
-        rep.decode_seconds += score + attend + 2.0 * rates.pcie.latency * cfg.n_layers as f64;
+        // query down + output up per layer, tiny but latency-bound: the
+        // ledger records the same 2*n_layers DMAs the time term charges,
+        // so ledger.transfers/ledger.seconds agree with decode_seconds.
+        let mut l = TransferLedger::default();
+        for _layer in 0..cfg.n_layers {
+            l.add(&rates.pcie, cfg.d_model * 4); // query down
+            l.add(&rates.pcie, cfg.d_model * 4); // output up
+        }
+        ledger.merge(&l);
+        rep.decode_seconds += score + attend + l.seconds;
     }
     rep.ledger = ledger;
     rep
@@ -174,5 +183,61 @@ mod tests {
         let rep = hata_off(&cfg, &rates, 1000, 10, 64);
         // at least the full prefill KV must have crossed the link
         assert!(rep.ledger.bytes >= (1000 * cfg.kv_bytes_per_token()) as u64);
+    }
+
+    #[test]
+    fn hata_off_decode_charges_pipeline_fill_and_drain() {
+        // The prefetch pipeline can only hide a fetch behind a *prior*
+        // layer's attend: layer 0's fetch and the last layer's attend
+        // stick out of the overlap. One decode step must therefore cost
+        // exactly fetch + (L-1)*max(attend, fetch) + attend on top of
+        // the code-scoring term — not L*max(attend, fetch), which the
+        // old accounting charged (off by one fill + one drain).
+        let cfg = preset("mirror-llama2-7b").unwrap();
+        let rates = OffloadRates::paper_testbed();
+        let (prefill, budget) = (36_000, 561);
+        let rep = hata_off(&cfg, &rates, prefill, 1, budget);
+        let row_bytes = 2 * budget * cfg.head_dim * 4 * cfg.n_kv_heads;
+        let score = prefill * cfg.code_bytes_per_token();
+        let score = score as f64 / rates.dev_bw;
+        let pack = 2.0 * row_bytes as f64 / rates.host_bw;
+        let fetch = pack + rates.pcie.transfer_time(row_bytes);
+        let attend = row_bytes as f64 / rates.dev_bw;
+        let expect = score + fetch + (cfg.n_layers - 1) as f64 * attend.max(fetch) + attend;
+        assert!(
+            (rep.decode_seconds - expect).abs() < 1e-12,
+            "decode step accounting drifted: {} vs {expect}",
+            rep.decode_seconds
+        );
+        let fully_overlapped = score + cfg.n_layers as f64 * attend.max(fetch);
+        assert!(rep.decode_seconds > fully_overlapped, "ends of the pipeline must stick out");
+    }
+
+    #[test]
+    fn magicpig_ledger_agrees_with_charged_time() {
+        // Satellite fix: the ledger used to record ONE merged DMA per
+        // step while decode_seconds charged 2*n_layers DMA latencies.
+        // Both sides must now see the same transfers, so the modeled
+        // decode PCIe seconds are exactly recomputable from the ledger.
+        let cfg = preset("hata-mha").unwrap();
+        let rates = OffloadRates::paper_testbed();
+        let steps = 7;
+        let rep = magicpig_off(&cfg, &rates, 500, steps, 32);
+        let mut prefill_only = TransferLedger::default();
+        let sig_bytes_per_tok = 1500 / 8 * cfg.n_layers * cfg.n_kv_heads;
+        prefill_only.add(&rates.pcie, 500 * cfg.kv_bytes_per_token() + 500 * sig_bytes_per_tok);
+        let decode_transfers = rep.ledger.transfers - prefill_only.transfers;
+        assert_eq!(
+            decode_transfers,
+            (2 * cfg.n_layers * steps) as u64,
+            "ledger must record every per-layer query/output DMA"
+        );
+        let per_step = 2 * cfg.n_layers;
+        let per_step_s = per_step as f64 * rates.pcie.transfer_time(cfg.d_model * 4);
+        let decode_link_s = rep.ledger.seconds - prefill_only.seconds;
+        assert!(
+            (decode_link_s - steps as f64 * per_step_s).abs() < 1e-12,
+            "ledger seconds must match the latency charged into decode_seconds"
+        );
     }
 }

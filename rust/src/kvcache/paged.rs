@@ -31,6 +31,8 @@
 
 use std::cell::UnsafeCell;
 
+use super::tier::TierController;
+
 /// Unified read view of one (layer, kv-head) cache plane: either a
 /// sequence's contiguous region (`bt` empty, rows are token-indexed) or
 /// the shared paged plane plus the sequence's block table. Everything a
@@ -82,6 +84,11 @@ pub struct PagedRef {
     dh: usize,
     words: usize,
     block_tokens: usize,
+    /// (layer, kv-head) plane index this ref was captured for.
+    plane: usize,
+    /// Residency-tier controller, null unless `--offload` is active.
+    /// The engine's `Arc` keeps it alive for the whole run.
+    tier: *const TierController,
 }
 
 // SAFETY: a PagedRef is addresses plus copies of shared scalars; every
@@ -95,6 +102,90 @@ impl PagedRef {
     #[inline]
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// Attach a residency-tier controller (done by `SeqKvCache` when the
+    /// engine enabled `--offload`). The pointee must outlive every
+    /// dereference of this ref — the engine's `Arc` guarantees it.
+    pub fn attach_tier(&mut self, tier: *const TierController) {
+        self.tier = tier;
+    }
+
+    /// True when a residency tier is attached (`--offload` runs only).
+    #[inline]
+    pub fn has_tier(&self) -> bool {
+        !self.tier.is_null()
+    }
+
+    /// Demand-fetch every Host-resident block covering logical tokens
+    /// `[0, len)` of this plane. No-op without a tier.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::table`]; the attached tier controller must be
+    /// live (engine holds the `Arc` for the run).
+    pub unsafe fn ensure_range_resident(&self, len: usize) {
+        if self.tier.is_null() || len == 0 {
+            return;
+        }
+        let blocks = &self.table()[..len.div_ceil(self.block_tokens)];
+        (*self.tier).fetch_blocks(self.plane, blocks, false);
+    }
+
+    /// Demand-fetch the blocks holding the selected logical token
+    /// `indices` of this plane. No-op without a tier.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::ensure_range_resident`]; every index must be
+    /// covered by the table.
+    pub unsafe fn ensure_selected_resident(&self, indices: &[u32], scratch: &mut Vec<u32>) {
+        if self.tier.is_null() {
+            return;
+        }
+        self.selected_blocks(indices, scratch);
+        (*self.tier).fetch_blocks(self.plane, scratch, false);
+    }
+
+    /// Fetch previously recorded physical `blocks` of this plane ahead
+    /// of demand (the layer-ahead prefetch task body). No-op without a
+    /// tier.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::ensure_range_resident`]; the recorded ids must
+    /// still be owned by (or shared with) this ref's sequence, which
+    /// holds them at least until its next decode step.
+    pub unsafe fn prefetch_blocks(&self, blocks: &[u32]) {
+        if self.tier.is_null() {
+            return;
+        }
+        (*self.tier).fetch_blocks(self.plane, blocks, true);
+    }
+
+    /// Resolve the deduplicated physical block ids covering logical
+    /// token `indices` into `out` (cleared first). `indices` need not be
+    /// sorted — selector output order is arbitrary.
+    ///
+    /// # Safety
+    /// As for [`PagedRef::table`]; every index must be covered.
+    pub unsafe fn selected_blocks(&self, indices: &[u32], out: &mut Vec<u32>) {
+        out.clear();
+        let table = self.table();
+        for &t in indices {
+            let b = table[t as usize / self.block_tokens];
+            if !out.contains(&b) {
+                out.push(b);
+            }
+        }
+    }
+
+    /// Resolve the physical block ids covering logical tokens `[0, len)`
+    /// into `out` (cleared first) — the dense-attention analogue of
+    /// [`PagedRef::selected_blocks`].
+    ///
+    /// # Safety
+    /// As for [`PagedRef::table`]; `len` must be covered.
+    pub unsafe fn range_blocks(&self, len: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend_from_slice(&self.table()[..len.div_ceil(self.block_tokens)]);
     }
 
     /// The sequence's block table.
@@ -294,7 +385,29 @@ impl BlockStore {
             dh: self.dh,
             words: self.words,
             block_tokens: self.block_tokens,
+            plane,
+            tier: std::ptr::null(),
         }
+    }
+
+    /// Raw K and V row storage of one block in one plane — the residency
+    /// tier's spill/fetch data path (the code plane is deliberately not
+    /// exposed: codes never leave the device).
+    ///
+    /// # Safety
+    /// The caller must be the only thread touching these rows: either
+    /// the engine thread between passes (eviction), or a worker holding
+    /// the tier lock fetching a block that no task reads until the fetch
+    /// reports it resident. `block < cap_blocks`, and no concurrent
+    /// [`BlockStore::ensure_blocks`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn block_kv_mut(&self, plane: usize, block: u32) -> (&mut [f32], &mut [f32]) {
+        let planes = &mut *self.inner.get();
+        let n = self.block_tokens * self.dh;
+        let off = block as usize * n;
+        let k = planes.k[plane][off..off + n].as_mut_ptr();
+        let v = planes.v[plane][off..off + n].as_mut_ptr();
+        (std::slice::from_raw_parts_mut(k, n), std::slice::from_raw_parts_mut(v, n))
     }
 
     /// Copy block `src`'s rows into block `dst` across every plane — the

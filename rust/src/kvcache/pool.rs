@@ -187,6 +187,14 @@ impl KvPool {
         self.seqs.get(&seq).map(|a| a.blocks.as_slice()).unwrap_or(&[])
     }
 
+    /// `seq`'s append-target block — the last table entry, where its
+    /// next token lands. The residency tier exempts these from eviction:
+    /// appends must always write device-resident rows. `None` if the
+    /// sequence is unknown or holds no blocks yet.
+    pub fn seq_tail(&self, seq: u64) -> Option<u32> {
+        self.seq_blocks(seq).last().copied()
+    }
+
     /// Reference count of one physical block (0 = free).
     pub fn refcount(&self, block: u32) -> u32 {
         self.refcount.get(block as usize).copied().unwrap_or(0)

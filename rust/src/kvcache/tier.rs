@@ -1,0 +1,411 @@
+//! Residency tiering for the paged KV cache: the runtime half of
+//! HATA-off (paper Sec 5.3, Table 3).
+//!
+//! The analytical cost model in [`super::offload`] prices the paper's
+//! scalability story; this module *runs* it. Every physical block of the
+//! shared [`BlockStore`] carries a per-plane residency tier:
+//!
+//! * **Device** — rows live in the store's plane arena, readable by any
+//!   attention work item (the default; freshly minted blocks start here);
+//! * **Host** — rows were evicted to this controller's slow-tier arena
+//!   and the device copy is poisoned with NaN, so any read that skips the
+//!   fetch path corrupts logits and trips the bit-identity differential
+//!   tests instead of silently passing.
+//!
+//! The compact key-code cache is **never** evicted: decode scores codes
+//! on the always-resident plane, top-k selects, and only the selected
+//! K/V blocks are fetched back (demand path), optionally one layer ahead
+//! of their attention pass (prefetch path, InfiniGen-style). Evictions
+//! happen on the engine thread between passes, write cold blocks back
+//! under the pool's refcount/CoW rules (shared blocks spill once and are
+//! fetched once for all holders), and never touch any live sequence's
+//! tail block — the append target must stay writable on device.
+//!
+//! ## Concurrency contract
+//!
+//! All tier state sits behind one mutex. Worker threads call the fetch
+//! entry points concurrently during a pass; a fetch copies rows
+//! host→device *while holding the lock*, so a block observed `Device`
+//! by any later lock holder is fully copied (mutex release/acquire
+//! orders the memcpy before the read). Readers only resolve rows of
+//! blocks their own ensure/prefetch call reported resident, which keeps
+//! device-row reads data-race-free under the same row-disjointness
+//! discipline `paged.rs` documents. Eviction, capacity growth and
+//! allocation resets run on the engine thread between passes only.
+//!
+//! ## Accounting
+//!
+//! Every fetch pass is metered twice: a modeled [`TransferLedger`]
+//! priced by the configured [`PcieModel`] (one scattered-row gather per
+//! pass, matching the cost model's staging assumption), and measured
+//! wall-clock seconds of the actual copies. `benches/table3_offload.rs`
+//! runs this runtime beside the analytical model and reports the
+//! prediction error between the two.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::paged::BlockStore;
+use crate::simulator::pcie::{PcieModel, TransferLedger};
+
+/// Snapshot of the tier controller's counters, threaded through
+/// `Metrics::report` each engine step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffloadStats {
+    /// Block-plane copies fetched host→device on the demand path (an
+    /// attention work item needed rows that were not resident).
+    pub demand_fetches: u64,
+    /// Block-plane copies fetched host→device by prefetch tasks running
+    /// ahead of their layer's attention.
+    pub prefetch_fetches: u64,
+    /// Residency checks that found the block-plane already on device.
+    pub hits: u64,
+    /// Blocks written back to the slow tier (all device planes at once).
+    pub evictions: u64,
+    /// Modeled host→device traffic (PCIe-priced gathers).
+    pub fetch: TransferLedger,
+    /// Modeled device→host write-back traffic.
+    pub evict: TransferLedger,
+    /// Measured wall-clock seconds spent in fetch copies.
+    pub measured_fetch_s: f64,
+    /// Measured wall-clock seconds spent in eviction copies.
+    pub measured_evict_s: f64,
+}
+
+/// Per-block tier state.
+struct BlockState {
+    /// Per-plane flag: `true` when this (plane, block)'s K/V rows live
+    /// in the slow-tier arena (device copy poisoned).
+    host: Vec<bool>,
+    /// Number of `true` entries in `host`.
+    n_host: usize,
+    /// Step counter at last allocation/fetch/hit — the LRU eviction key.
+    last_touch: u64,
+}
+
+struct TierInner {
+    blocks: Vec<BlockState>,
+    /// Slow-tier K arena, `[plane][block * bt * dh ..]` — same indexing
+    /// as the device plane so spill/fetch are straight row copies.
+    slow_k: Vec<Vec<f32>>,
+    /// Slow-tier V arena.
+    slow_v: Vec<Vec<f32>>,
+    stats: OffloadStats,
+    step: u64,
+    /// Eviction scratch (deduped live ids / LRU candidates).
+    live_scratch: Vec<u32>,
+    cand_scratch: Vec<(u64, u32)>,
+}
+
+/// Shared residency-tier controller for one [`BlockStore`]. The engine
+/// owns one `Arc<TierController>` when `--offload` is active; sequence
+/// caches attach it so every [`super::PagedRef`] captured for a pass can
+/// reach the fetch path from worker threads.
+pub struct TierController {
+    store: Arc<BlockStore>,
+    pcie: PcieModel,
+    inner: Mutex<TierInner>,
+}
+
+impl TierController {
+    /// Fresh controller: every block starts Device-resident; the slow
+    /// tier grows with [`TierController::ensure_capacity`].
+    pub fn new(store: Arc<BlockStore>, pcie: PcieModel) -> Self {
+        let n_planes = store.n_planes();
+        TierController {
+            store,
+            pcie,
+            inner: Mutex::new(TierInner {
+                blocks: Vec::new(),
+                slow_k: (0..n_planes).map(|_| Vec::new()).collect(),
+                slow_v: (0..n_planes).map(|_| Vec::new()).collect(),
+                stats: OffloadStats::default(),
+                step: 0,
+                live_scratch: Vec::new(),
+                cand_scratch: Vec::new(),
+            }),
+        }
+    }
+
+    /// The PCIe model pricing this controller's modeled ledgers.
+    pub fn pcie(&self) -> PcieModel {
+        self.pcie
+    }
+
+    /// Grow tier metadata and the slow arenas to cover physical block
+    /// ids `< n`. Engine thread, between passes (pairs with
+    /// [`BlockStore::ensure_blocks`]).
+    pub fn ensure_capacity(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let n_planes = self.store.n_planes();
+        while inner.blocks.len() < n {
+            inner.blocks.push(BlockState {
+                host: vec![false; n_planes],
+                n_host: 0,
+                last_touch: inner.step,
+            });
+        }
+        let (bt, dh) = (self.store.block_tokens(), self.store.dh());
+        for p in 0..n_planes {
+            if inner.slow_k[p].len() < n * bt * dh {
+                inner.slow_k[p].resize(n * bt * dh, 0.0);
+                inner.slow_v[p].resize(n * bt * dh, 0.0);
+            }
+        }
+    }
+
+    /// Advance the LRU clock one engine step.
+    pub fn begin_step(&self) {
+        self.inner.lock().unwrap().step += 1;
+    }
+
+    /// Reset `block` to Device across every plane without copying:
+    /// called on the engine thread when the pool mints (or recycles) the
+    /// block into a sequence's table, whose upcoming appends will write
+    /// fresh rows. Without this, a recycled block still marked Host
+    /// would later fetch stale slow-tier data over the new contents.
+    pub fn note_allocated(&self, block: u32) {
+        let mut g = self.inner.lock().unwrap();
+        let step = g.step;
+        if let Some(st) = g.blocks.get_mut(block as usize) {
+            st.host.iter_mut().for_each(|h| *h = false);
+            st.n_host = 0;
+            st.last_touch = step;
+        }
+    }
+
+    /// True when every plane of `block` is Device-resident (used to
+    /// guard debug checks that compare device rows, e.g. the dedup
+    /// `blocks_equal` assertion).
+    pub fn is_fully_resident(&self, block: u32) -> bool {
+        let g = self.inner.lock().unwrap();
+        match g.blocks.get(block as usize) {
+            Some(b) => b.n_host == 0,
+            None => true,
+        }
+    }
+
+    /// Cumulative counters since construction.
+    pub fn stats(&self) -> OffloadStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Fetch one plane of every block in `blocks` that is Host-resident
+    /// (worker-callable; blocks may repeat — repeats after the first
+    /// fetch count as hits). `prefetch` selects which counter the copies
+    /// land in.
+    pub fn fetch_blocks(&self, plane: usize, blocks: &[u32], prefetch: bool) {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let (bt, dh) = (self.store.block_tokens(), self.store.dh());
+        let row_elems = bt * dh;
+        let t0 = Instant::now();
+        let mut missing = 0u64;
+        for &b in blocks {
+            let Some(st) = inner.blocks.get_mut(b as usize) else { continue };
+            st.last_touch = inner.step;
+            if !st.host[plane] {
+                inner.stats.hits += 1;
+                continue;
+            }
+            let off = b as usize * row_elems;
+            // SAFETY: tier lock held; no task reads these rows until a
+            // fetch reports them resident, so this write is exclusive.
+            unsafe {
+                let (k, v) = self.store.block_kv_mut(plane, b);
+                k.copy_from_slice(&inner.slow_k[plane][off..off + row_elems]);
+                v.copy_from_slice(&inner.slow_v[plane][off..off + row_elems]);
+            }
+            st.host[plane] = false;
+            st.n_host -= 1;
+            missing += 1;
+        }
+        if missing > 0 {
+            let bytes = missing as usize * 2 * row_elems * 4;
+            // one staged gather per fetch pass: `missing` scattered K
+            // and V row-groups packed host-side, then shipped together
+            inner.stats.fetch.add_gather(&self.pcie, bytes, missing as usize * 2 * bt);
+            inner.stats.measured_fetch_s += t0.elapsed().as_secs_f64();
+            if prefetch {
+                inner.stats.prefetch_fetches += missing;
+            } else {
+                inner.stats.demand_fetches += missing;
+            }
+        }
+    }
+
+    /// Demand-fetch every plane of every block in `table` — the prefill
+    /// path (prefill attention reads the whole prefix) and the CoW
+    /// unshare path (`copy_block` needs a current source). Engine thread.
+    pub fn fetch_table_all_planes(&self, table: &[u32]) {
+        for plane in 0..self.store.n_planes() {
+            self.fetch_blocks(plane, table, false);
+        }
+    }
+
+    /// Write back LRU-cold live blocks until at most `budget_blocks` of
+    /// `live` remain Device-resident. `tails` (every live sequence's
+    /// append-target block) are exempt, so the budget is a soft floor of
+    /// `tails.len()`. Engine thread, between passes.
+    pub fn evict_to_budget(&self, budget_blocks: usize, live: &[u32], tails: &[u32]) {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let n_planes = self.store.n_planes();
+        inner.live_scratch.clear();
+        inner.live_scratch.extend_from_slice(live);
+        inner.live_scratch.sort_unstable();
+        inner.live_scratch.dedup();
+        let mut resident = 0usize;
+        inner.cand_scratch.clear();
+        for &b in &inner.live_scratch {
+            let Some(st) = inner.blocks.get(b as usize) else { continue };
+            if st.n_host < n_planes {
+                resident += 1;
+                if !tails.contains(&b) {
+                    inner.cand_scratch.push((st.last_touch, b));
+                }
+            }
+        }
+        if resident <= budget_blocks {
+            return;
+        }
+        inner.cand_scratch.sort_unstable();
+        let (bt, dh) = (self.store.block_tokens(), self.store.dh());
+        let row_elems = bt * dh;
+        let t0 = Instant::now();
+        let mut evicted = 0usize;
+        for i in 0..inner.cand_scratch.len() {
+            if resident <= budget_blocks {
+                break;
+            }
+            let b = inner.cand_scratch[i].1;
+            let st = &mut inner.blocks[b as usize];
+            let off = b as usize * row_elems;
+            let mut spilled = 0usize;
+            for plane in 0..n_planes {
+                if st.host[plane] {
+                    continue;
+                }
+                // SAFETY: engine thread between passes — no reader or
+                // writer of any device row is live.
+                unsafe {
+                    let (k, v) = self.store.block_kv_mut(plane, b);
+                    inner.slow_k[plane][off..off + row_elems].copy_from_slice(k);
+                    inner.slow_v[plane][off..off + row_elems].copy_from_slice(v);
+                    // poison: a read that bypasses the fetch path must
+                    // corrupt results, not silently succeed
+                    k.fill(f32::NAN);
+                    v.fill(f32::NAN);
+                }
+                st.host[plane] = true;
+                st.n_host += 1;
+                spilled += 1;
+            }
+            resident -= 1;
+            evicted += 1;
+            inner.stats.evictions += 1;
+            inner.stats.evict.add(&self.pcie, spilled * 2 * row_elems * 4);
+        }
+        if evicted > 0 {
+            inner.stats.measured_evict_s += t0.elapsed().as_secs_f64();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n_planes: usize, blocks: usize) -> (Arc<BlockStore>, TierController) {
+        let store = Arc::new(BlockStore::new(n_planes, 2, 1, 4));
+        unsafe { store.ensure_blocks(blocks) };
+        let tier = TierController::new(store.clone(), PcieModel::gen4_x16());
+        tier.ensure_capacity(blocks);
+        (store, tier)
+    }
+
+    fn fill_block(store: &BlockStore, plane: usize, block: u32, val: f32) {
+        let table = [block];
+        let r = store.head_ref(plane, &table);
+        for t in 0..4 {
+            unsafe {
+                r.k_row_mut(t).fill(val);
+                r.v_row_mut(t).fill(-val);
+            }
+        }
+    }
+
+    fn read_first(store: &BlockStore, plane: usize, block: u32) -> f32 {
+        let table = [block];
+        let rd = unsafe { store.head_ref(plane, &table).read() };
+        rd.k[rd.row(0) * 2]
+    }
+
+    #[test]
+    fn evict_poisons_and_fetch_restores() {
+        let (store, tier) = setup(2, 3);
+        fill_block(&store, 0, 1, 7.0);
+        fill_block(&store, 1, 1, 9.0);
+        tier.evict_to_budget(0, &[1], &[]);
+        assert!(read_first(&store, 0, 1).is_nan(), "device copy must be poisoned");
+        assert!(!tier.is_fully_resident(1));
+        tier.fetch_blocks(0, &[1], false);
+        assert_eq!(read_first(&store, 0, 1), 7.0);
+        assert!(!tier.is_fully_resident(1), "plane 1 still spilled");
+        tier.fetch_blocks(1, &[1], false);
+        assert_eq!(read_first(&store, 1, 1), 9.0);
+        assert!(tier.is_fully_resident(1));
+        let s = tier.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.demand_fetches, 2);
+        assert_eq!(s.fetch.bytes, s.evict.bytes);
+    }
+
+    #[test]
+    fn tails_survive_eviction_and_budget_holds() {
+        let (_store, tier) = setup(1, 4);
+        tier.evict_to_budget(1, &[0, 1, 2, 3], &[3]);
+        // tail 3 exempt, one more block allowed by budget
+        let resident: Vec<u32> = (0..4).filter(|&b| tier.is_fully_resident(b)).collect();
+        assert!(resident.contains(&3));
+        assert_eq!(resident.len(), 1, "budget=1: only the tail stays, {resident:?}");
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first() {
+        let (_store, tier) = setup(1, 3);
+        tier.begin_step();
+        tier.fetch_blocks(0, &[2], false); // touch 2 at step 1 (hit)
+        tier.begin_step();
+        tier.fetch_blocks(0, &[0], false); // touch 0 at step 2
+        tier.evict_to_budget(2, &[0, 1, 2], &[]);
+        assert!(!tier.is_fully_resident(1), "block 1 is coldest");
+        assert!(tier.is_fully_resident(0));
+        assert!(tier.is_fully_resident(2));
+    }
+
+    #[test]
+    fn recycled_block_does_not_fetch_stale_rows() {
+        let (store, tier) = setup(1, 2);
+        fill_block(&store, 0, 0, 5.0);
+        tier.evict_to_budget(0, &[0], &[]);
+        // block 0 freed and re-minted: new owner writes fresh rows
+        tier.note_allocated(0);
+        fill_block(&store, 0, 0, 11.0);
+        tier.fetch_blocks(0, &[0], false);
+        assert_eq!(read_first(&store, 0, 0), 11.0, "stale slow-tier data must not win");
+        assert_eq!(tier.stats().hits, 1, "post-reset fetch is a hit");
+    }
+
+    #[test]
+    fn hits_do_not_touch_the_ledger() {
+        let (_store, tier) = setup(1, 2);
+        tier.fetch_blocks(0, &[0, 1, 0], false);
+        let s = tier.stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.demand_fetches, 0);
+        assert_eq!(s.fetch.transfers, 0);
+        assert_eq!(s.fetch.bytes, 0);
+    }
+}

@@ -29,7 +29,8 @@ const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
-    "exec", "graph-cache", "kernels", "kv-block", "paged!",
+    "exec", "graph-cache", "kernels", "kv-block", "paged!", "offload!",
+    "offload-budget", "prefetch-depth",
 ];
 
 fn main() {
@@ -92,6 +93,16 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
                     the contiguous layout (default off)
   --kv-block N      physical KV block size in tokens (default 64);
                     any value >= 1 is bit-identical
+  --offload         spill cold K/V blocks to a slow-tier store and fetch
+                    back only the blocks decode's top-k selection needs
+                    (codes stay device-resident; implies --paged;
+                    bit-identical to the resident paged run)
+  --offload-budget N  device-resident K/V token budget while offloading
+                    (default 0 = keep only append-target blocks hot)
+  --prefetch-depth N  layers of lookahead for the decode-graph block
+                    prefetch (default 1 = fetch layer L during layer
+                    L-1's attention, InfiniGen-style; 0 = fetch at the
+                    layer itself)
   --temperature T   sampling temperature (default 0 = greedy)
   --random-weights  use random weights instead of artifacts (smoke mode)
   --artifacts DIR   artifact directory (default artifacts)";
@@ -158,7 +169,10 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         seed: args.u64("seed", 0)?,
         kernels,
         kv_block: args.usize("kv-block", base.kv_block)?,
-        paged: args.flag("paged"),
+        paged: args.flag("paged") || args.flag("offload"),
+        offload: args.flag("offload"),
+        offload_budget: args.usize("offload-budget", base.offload_budget)?,
+        prefetch_depth: args.usize("prefetch-depth", base.prefetch_depth)?,
         ..base
     })
 }

@@ -401,6 +401,11 @@ enum DecodeTask {
     Mlp { sc: *mut DecodeScratch, layer: usize },
     /// Final norm + LM head for one sequence.
     LmHead { sc: *mut DecodeScratch },
+    /// Offload only: fetch the blocks this (sequence, layer, kv-head)
+    /// selected last step from the slow tier, released `prefetch_depth`
+    /// layers ahead of the head's Attn task so the transfer overlaps an
+    /// earlier layer's attention (InfiniGen-style lookahead).
+    Prefetch { head: HeadHandle, st: *const MethodState },
 }
 
 // SAFETY: the raw pointers reference per-sequence state whose accesses
@@ -432,6 +437,10 @@ pub struct DecodeGraphCache {
     /// (n_layers, n_kv_heads) guard so a cache is never reused across
     /// models of a different shape.
     shape: (usize, usize),
+    /// Prefetch-depth the structure was built with (`Some(depth)` when
+    /// `--offload` added per-head Prefetch tasks, `None` otherwise) —
+    /// the offload axis of the shape guard.
+    prefetch: Option<usize>,
 }
 
 impl DecodeGraphCache {
@@ -442,6 +451,7 @@ impl DecodeGraphCache {
             tasks: Vec::new(),
             batch: usize::MAX,
             shape: (0, 0),
+            prefetch: None,
         }
     }
 }
@@ -648,6 +658,16 @@ impl Model {
             || w.layer < cfg.dense_layers
             || serve.budget == 0
             || serve.budget >= s_now;
+        // Offload: dense attention and exact top-k scoring read every
+        // cached row, so restore the full range from the slow tier up
+        // front; every other selector scores the always-resident code
+        // cache (or side structures) and fetches only after selection.
+        // The recorded block list doubles as next step's prefetch list.
+        let tiered = w.head.tier_active();
+        let needs_full_rows = use_dense || serve.method == Method::ExactTopK;
+        if tiered && needs_full_rows {
+            w.head.ensure_range_resident(s_now, &mut w.st.sel_blocks);
+        }
         let km = self.kernels;
         if use_dense {
             dense_attention(km, &inp, &mut sel.probs, &mut *w.out);
@@ -663,6 +683,9 @@ impl Model {
             chooser.select(&inp, &mut *w.st, serve.budget, &mut *sel);
             // split borrows: take indices out, then compute
             let indices = std::mem::take(&mut sel.indices);
+            if tiered && !needs_full_rows {
+                w.head.ensure_selected_resident(&indices, &mut w.st.sel_blocks);
+            }
             match self.sparse_kernel {
                 SparseKernel::Fused => {
                     sparse_attention_fused(km, &inp, &indices, &mut sel.probs, &mut *w.out)
@@ -854,6 +877,7 @@ impl Model {
     ) -> QueueStats {
         let cfg = &self.cfg;
         let shape = (cfg.n_layers, cfg.n_kv_heads);
+        let prefetch = serve.offload.then_some(serve.prefetch_depth);
         let mut throwaway;
         let cache = if serve.graph_cache {
             graph_cache
@@ -861,8 +885,9 @@ impl Model {
             throwaway = DecodeGraphCache::new();
             &mut throwaway
         };
-        let rebuild = cache.batch != items.len() || cache.shape != shape;
-        self.bind_decode_tasks(items, cache, rebuild);
+        let rebuild =
+            cache.batch != items.len() || cache.shape != shape || cache.prefetch != prefetch;
+        self.bind_decode_tasks(items, cache, rebuild, prefetch);
         let mut stats = cache.graph.run(pool, &mut cache.tasks, workers, |_, t, ws| {
             self.run_decode_task(t, serve, selector, ws)
         });
@@ -887,28 +912,51 @@ impl Model {
         items: &mut [DecodeItem],
         cache: &mut DecodeGraphCache,
         rebuild: bool,
+        prefetch: Option<usize>,
     ) {
         let cfg = &self.cfg;
         let group = cfg.group();
         let dh = cfg.head_dim;
         let ghd = group * dh;
         if rebuild {
-            let per_seq = cfg.n_layers * (2 + cfg.n_kv_heads) + 1;
+            let per_head = if prefetch.is_some() { 2 } else { 1 };
+            let per_seq = cfg.n_layers * (2 + per_head * cfg.n_kv_heads) + 1;
             cache.graph.clear();
             cache.batch = items.len();
             cache.shape = (cfg.n_layers, cfg.n_kv_heads);
+            cache.prefetch = prefetch;
             cache.tasks.reserve(items.len() * per_seq);
             let mut attn_ids: Vec<TaskId> = Vec::with_capacity(cfg.n_kv_heads);
+            let mut qkv_ids: Vec<TaskId> = Vec::with_capacity(cfg.n_layers);
             for _ in 0..items.len() {
                 let mut prev: Option<TaskId> = None;
-                for _li in 0..cfg.n_layers {
+                qkv_ids.clear();
+                for li in 0..cfg.n_layers {
                     let qkv = match prev {
                         Some(p) => cache.graph.add(&[p]),
                         None => cache.graph.add(&[]),
                     };
+                    qkv_ids.push(qkv);
                     attn_ids.clear();
                     for _kv in 0..cfg.n_kv_heads {
-                        attn_ids.push(cache.graph.add(&[qkv]));
+                        match prefetch {
+                            // layer li's fetch is released once layer
+                            // (li - depth)'s QKV lands — deep enough to
+                            // overlap attention of the layers between —
+                            // and the head's attend waits for its fetch
+                            // (deterministic hit accounting, and the
+                            // fetch's read of last step's selection is
+                            // ordered before this step's write)
+                            Some(depth) => {
+                                let pf = if li >= depth {
+                                    cache.graph.add(&[qkv_ids[li - depth]])
+                                } else {
+                                    cache.graph.add(&[])
+                                };
+                                attn_ids.push(cache.graph.add(&[qkv, pf]));
+                            }
+                            None => attn_ids.push(cache.graph.add(&[qkv])),
+                        }
                     }
                     prev = Some(cache.graph.add(&attn_ids));
                 }
@@ -932,6 +980,15 @@ impl Model {
                 cache.tasks.push(DecodeTask::Qkv { sc: scp, layer: li, pos });
                 for kv in 0..cfg.n_kv_heads {
                     let hw = self.weights.hash_head(li, kv);
+                    if prefetch.is_some() {
+                        cache.tasks.push(DecodeTask::Prefetch {
+                            head: it.cache.head_handle(li, kv),
+                            // SAFETY: same indexing as the Attn task
+                            // below; the Prefetch→Attn edge orders this
+                            // shared read before the exclusive write.
+                            st: unsafe { stp.add(li * cfg.n_kv_heads + kv) },
+                        });
+                    }
                     cache.tasks.push(DecodeTask::Attn {
                         head: it.cache.head_handle(li, kv),
                         // SAFETY: li * n_kv + kv < per_head.len() by
@@ -990,6 +1047,16 @@ impl Model {
             }
             DecodeTask::Mlp { sc, layer } => self.layer_mlp(*layer, unsafe { &mut **sc }),
             DecodeTask::LmHead { sc } => self.lm_head(unsafe { &mut **sc }),
+            DecodeTask::Prefetch { head, st } => {
+                // SAFETY: the Prefetch→Attn edge makes this head's Attn
+                // task wait for us, so this shared read of the state
+                // (the block list its Attn wrote *last* step) precedes
+                // this step's exclusive write; no other task touches it.
+                let blocks = unsafe { &(**st).sel_blocks };
+                // SAFETY: recorded ids stay owned by/shared with a live
+                // sequence until its next step (HeadHandle contract).
+                unsafe { head.prefetch_blocks(blocks) };
+            }
         }
     }
 

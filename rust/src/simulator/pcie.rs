@@ -61,6 +61,14 @@ impl TransferLedger {
         self.transfers += 1;
     }
 
+    /// Fold another ledger into this one (used to roll per-step or
+    /// per-worker ledgers up into a run total).
+    pub fn merge(&mut self, other: &TransferLedger) {
+        self.bytes += other.bytes;
+        self.seconds += other.seconds;
+        self.transfers += other.transfers;
+    }
+
     /// Overlap compute and transfer: wall time of a step that computes
     /// for `compute_s` while this ledger's last transfer streams.
     pub fn overlapped(compute_s: f64, transfer_s: f64) -> f64 {
@@ -94,6 +102,47 @@ mod tests {
         assert!(scattered > contiguous);
         // 1024 rows -> 128 descriptor batches
         assert!((scattered - contiguous - 127.0 * m.latency).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gather_of_zero_rows_pays_no_latency() {
+        // rows=0 -> zero descriptor batches: an empty gather models a
+        // fetch pass that found every block resident (runtime hit path).
+        let m = PcieModel::gen4_x16();
+        assert_eq!(m.gather_time(0, 0), 0.0);
+        // bytes with rows=0 would be a caller bug, but the model stays
+        // well-defined: pure bandwidth term, no setup cost.
+        assert!((m.gather_time(1 << 20, 0) - (1 << 20) as f64 / m.bandwidth).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gather_under_eight_rows_is_one_batch() {
+        // rows < 8 still needs one descriptor batch: same setup cost as
+        // a contiguous DMA of the same size.
+        let m = PcieModel::gen4_x16();
+        for rows in 1..8 {
+            assert!((m.gather_time(4096, rows) - m.transfer_time(4096)).abs() < 1e-12, "rows={rows}");
+        }
+        // the ninth row starts a second batch
+        assert!(m.gather_time(4096, 9) > m.gather_time(4096, 8));
+    }
+
+    #[test]
+    fn ledger_gather_accounting_matches_runtime_fetch_path() {
+        // The runtime fetch path accounts each demand-fetch pass as one
+        // gather of `missing_rows` K/V rows; the ledger must agree with
+        // PcieModel::gather_time exactly and merge() must be lossless.
+        let m = PcieModel::gen4_x16();
+        let mut per_pass = TransferLedger::default();
+        per_pass.add_gather(&m, 3 * 4096, 3 * 2 * 4); // 3 blocks, 2*bt rows each
+        assert_eq!(per_pass.transfers, 1);
+        assert!((per_pass.seconds - m.gather_time(3 * 4096, 24)).abs() < 1e-15);
+        let mut total = TransferLedger::default();
+        total.add(&m, 1000);
+        total.merge(&per_pass);
+        assert_eq!(total.bytes, 1000 + 3 * 4096);
+        assert_eq!(total.transfers, 2);
+        assert!((total.seconds - (m.transfer_time(1000) + per_pass.seconds)).abs() < 1e-15);
     }
 
     #[test]

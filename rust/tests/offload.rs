@@ -1,0 +1,288 @@
+//! Differential harness for the KV residency tier (`--offload`).
+//!
+//! Offloading moves real bytes: cold K/V blocks are written back to a
+//! slow-tier store (their device rows poisoned with NaN), and decode
+//! fetches back only the blocks its top-k selection touches, scoring the
+//! always-resident code cache first. The proof obligations:
+//!
+//! 1. **Bit-identity**: an engine running with `--offload` under maximum
+//!    pressure (budget 0 — only append-target tail blocks stay resident)
+//!    must emit exactly the token streams of a fully-resident paged
+//!    engine, for every method in the zoo and across the executor /
+//!    thread / kernel / prefetch-depth axes. The NaN poison makes this a
+//!    strong claim: any read that bypasses the fetch path corrupts
+//!    logits and fails the comparison, so passing proves every consumed
+//!    row was genuinely restored from the slow tier.
+//! 2. **The tier actually ran**: fetches and evictions must be observed
+//!    (> 0), and with layer-ahead prefetch enabled, prefetch-issued
+//!    copies must be observed too.
+//! 3. **Accounting**: the modeled transfer ledger must agree exactly
+//!    with the fetch counters (`bytes == fetched_planes * plane_bytes`)
+//!    and with the PCIe model's pricing, and the measured wall-clock
+//!    must be populated. `benches/table3_offload.rs` carries the
+//!    modeled-vs-measured prediction-error figure.
+//!
+//! Block size comes from `HATA_KV_BLOCK` (CI's offload leg sets 4).
+
+use std::sync::Arc;
+
+use hata::config::{preset, ExecMode, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::{FinishReason, Request};
+use hata::kvcache::tier::OffloadStats;
+use hata::kvcache::MethodAux;
+use hata::model::{weights::Weights, Model};
+use hata::tensor::simd::KernelMode;
+use hata::util::rng::Rng;
+
+const METHODS: [Method; 9] = [
+    Method::Dense,
+    Method::ExactTopK,
+    Method::Hata,
+    Method::Loki,
+    Method::Quest,
+    Method::MagicPig,
+    Method::StreamingLlm,
+    Method::H2o,
+    Method::SnapKv,
+];
+
+/// Physical block size under test (`HATA_KV_BLOCK` or a tiny default).
+fn kv_block() -> usize {
+    std::env::var("HATA_KV_BLOCK").ok().and_then(|s| s.parse().ok()).unwrap_or(4)
+}
+
+struct TraceReq {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    arrive: usize,
+}
+
+/// A deterministic multi-request schedule with staggered arrivals and
+/// shared prefixes (same shape as the paged harness, so the offload run
+/// also exercises dedup'd blocks spilling and refetching).
+fn build_trace(seed: u64) -> Vec<TraceReq> {
+    let bt = kv_block();
+    let mut rng = Rng::new(seed);
+    let mut tok = |n: usize| -> Vec<u32> { (0..n).map(|_| 32 + rng.below(64) as u32).collect() };
+    let prefix_a = tok(2 * bt);
+    let prefix_b = tok(2 * bt);
+    let specs: [(Option<&[u32]>, usize, usize, usize); 6] = [
+        (Some(&prefix_a), 9, 6, 0),
+        (Some(&prefix_b), 13, 6, 0),
+        (None, 11 + bt, 4, 1),
+        (Some(&prefix_a), 15, 4, 2),
+        (Some(&prefix_b), 10 + bt, 4, 3),
+        (None, 9, 3, 4),
+    ];
+    specs
+        .into_iter()
+        .enumerate()
+        .map(|(id, (prefix, suffix, max_new, arrive))| {
+            let mut prompt = prefix.map(<[u32]>::to_vec).unwrap_or_default();
+            prompt.extend((0..suffix).map(|_| 32 + rng.below(64) as u32));
+            TraceReq { id: id as u64, prompt, max_new, arrive }
+        })
+        .collect()
+}
+
+struct TraceRun {
+    /// (id, generated tokens), sorted by id
+    streams: Vec<(u64, Vec<u32>)>,
+    offload: Option<OffloadStats>,
+}
+
+/// Replay a trace through one engine build. `offload` is
+/// `Some((budget_tokens, prefetch_depth))`; `None` runs the resident
+/// paged reference.
+fn run_trace(
+    reqs: &[TraceReq],
+    method: Method,
+    threads: usize,
+    exec_mode: ExecMode,
+    kernels: KernelMode,
+    offload: Option<(usize, usize)>,
+) -> TraceRun {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 4,
+        prefill_chunk: 48,
+        prefill_tile: 16,
+        threads,
+        exec_mode,
+        graph_cache: true,
+        kernels,
+        kv_block: kv_block(),
+        paged: true,
+        offload: offload.is_some(),
+        offload_budget: offload.map_or(0, |(b, _)| b),
+        prefetch_depth: offload.map_or(1, |(_, d)| d),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let mut engine = Engine::new(Arc::new(model), serve);
+    let mut open: Vec<u64> = Vec::new();
+    let mut streams: Vec<(u64, Vec<u32>)> = Vec::new();
+    let last_arrival = reqs.iter().map(|r| r.arrive).max().unwrap_or(0);
+    let mut step = 0usize;
+    loop {
+        for r in reqs.iter().filter(|r| r.arrive == step) {
+            engine.submit(Request {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new,
+                stop_token: None,
+                arrival: 0.0,
+            });
+            open.push(r.id);
+        }
+        engine.step();
+        for resp in engine.take_responses() {
+            assert_eq!(resp.reason, FinishReason::MaxTokens, "request {} must finish", resp.id);
+            open.retain(|&id| id != resp.id);
+            streams.push((resp.id, resp.tokens));
+        }
+        step += 1;
+        if step > last_arrival && !engine.has_work() {
+            break;
+        }
+        assert!(step < 10_000, "trace did not converge");
+    }
+    assert!(open.is_empty(), "every request must complete");
+    streams.sort_by_key(|(id, _)| *id);
+    TraceRun { streams, offload: engine.metrics.offload }
+}
+
+/// The tentpole differential, widest axis: under maximum offload
+/// pressure (budget 0), every method's token streams must match the
+/// resident paged engine bit for bit — while evictions and fetches are
+/// actually happening (NaN poison guarantees a bypassed fetch would
+/// corrupt the comparison, so this cannot pass vacuously).
+#[test]
+fn offload_engine_bitwise_identical_for_every_method() {
+    let reqs = build_trace(11);
+    for method in METHODS {
+        let resident = run_trace(&reqs, method, 2, ExecMode::Queue, KernelMode::Simd, None);
+        let tiered = run_trace(&reqs, method, 2, ExecMode::Queue, KernelMode::Simd, Some((0, 1)));
+        assert_eq!(resident.streams, tiered.streams, "{method:?}: offload streams diverged");
+        let o = tiered.offload.expect("offload run reports tier stats");
+        assert!(o.evictions > 0, "{method:?}: budget 0 must evict cold blocks");
+        assert!(
+            o.demand_fetches + o.prefetch_fetches > 0,
+            "{method:?}: spilled blocks must be fetched back"
+        );
+        assert!(resident.offload.is_none(), "{method:?}: resident run has no tier");
+    }
+}
+
+/// The remaining axes: threads × executor × kernel tier × prefetch
+/// depth (0 = fetch at the layer itself, 2 = two layers of lookahead)
+/// × a non-zero block budget, on the most layout-sensitive methods.
+#[test]
+fn offload_engine_identical_across_axes() {
+    let reqs = build_trace(23);
+    let bt = kv_block();
+    let cells: &[(usize, ExecMode, KernelMode, usize, usize)] = &[
+        (1, ExecMode::Barrier, KernelMode::Reference, 0, 1),
+        (4, ExecMode::Queue, KernelMode::Simd, 0, 0),
+        (2, ExecMode::Queue, KernelMode::Simd, 0, 2),
+        (2, ExecMode::Queue, KernelMode::Simd, 4 * bt, 1),
+        (2, ExecMode::Barrier, KernelMode::Reference, 2 * bt, 1),
+    ];
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        for &(threads, exec, kernels, budget, depth) in cells {
+            let resident = run_trace(&reqs, method, threads, exec, kernels, None);
+            let tiered = run_trace(&reqs, method, threads, exec, kernels, Some((budget, depth)));
+            assert_eq!(
+                resident.streams, tiered.streams,
+                "{method:?} threads={threads} {exec:?} {kernels:?} budget={budget} depth={depth}"
+            );
+        }
+    }
+}
+
+/// Layer-ahead prefetch must actually issue copies: under budget 0 a
+/// head's selected blocks are evicted again after every step, so the
+/// next step's prefetch task (released one layer ahead) re-fetches them
+/// before the attention task runs. Depth 0 still fetches, but strictly
+/// on the demand path's behalf within the same layer.
+#[test]
+fn prefetch_tasks_issue_fetches() {
+    let reqs = build_trace(31);
+    let tiered = run_trace(&reqs, Method::Hata, 2, ExecMode::Queue, KernelMode::Simd, Some((0, 1)));
+    let o = tiered.offload.expect("tier stats");
+    assert!(o.prefetch_fetches > 0, "layer-ahead prefetch must fetch spilled blocks: {o:?}");
+    assert!(o.hits > 0, "prefetched blocks must turn later residency checks into hits");
+}
+
+/// A budget large enough to hold every block means the tier never
+/// spills: zero evictions, zero fetches, and the streams still match.
+#[test]
+fn ample_budget_never_spills() {
+    let reqs = build_trace(47);
+    let resident = run_trace(&reqs, Method::Hata, 2, ExecMode::Queue, KernelMode::Simd, None);
+    let tiered =
+        run_trace(&reqs, Method::Hata, 2, ExecMode::Queue, KernelMode::Simd, Some((1 << 20, 1)));
+    assert_eq!(resident.streams, tiered.streams);
+    let o = tiered.offload.expect("tier stats");
+    assert_eq!(o.evictions, 0, "ample budget must not evict: {o:?}");
+    assert_eq!(o.demand_fetches + o.prefetch_fetches, 0, "nothing spilled, nothing fetched");
+    assert_eq!(o.fetch.bytes, 0);
+}
+
+/// The modeled ledger must agree exactly with the counters and the PCIe
+/// model: every fetched block-plane moves `2 * block_tokens * head_dim`
+/// f32 rows, every pass is one priced gather, and eviction bytes mirror
+/// fetch bytes for blocks that spill whole. Measured wall-clock must be
+/// populated whenever modeled seconds are.
+#[test]
+fn ledger_accounting_is_exact() {
+    let reqs = build_trace(59);
+    let tiered = run_trace(&reqs, Method::Hata, 2, ExecMode::Queue, KernelMode::Simd, Some((0, 1)));
+    let o = tiered.offload.expect("tier stats");
+    let cfg = preset("hata-gqa").unwrap();
+    let plane_bytes = (2 * kv_block() * cfg.head_dim * 4) as u64;
+    let fetched = o.demand_fetches + o.prefetch_fetches;
+    assert_eq!(o.fetch.bytes, fetched * plane_bytes, "fetch bytes must count fetched planes");
+    assert_eq!(o.evict.bytes % plane_bytes, 0, "evict bytes are whole planes");
+    assert!(o.evict.bytes > 0);
+    // every pass is one gather: transfers <= fetched planes, and the
+    // modeled seconds are bounded by the PCIe model's bandwidth term
+    // plus per-batch descriptor latency (8 rows per batch, 2*bt rows
+    // per fetched plane — see PcieModel::gather_time)
+    let pcie = hata::simulator::pcie::PcieModel::gen4_x16();
+    assert!(o.fetch.transfers <= fetched, "one gather per fetch pass");
+    let bw_term = o.fetch.bytes as f64 / pcie.bandwidth;
+    let rows = (fetched as usize) * 2 * kv_block();
+    let max_latency = pcie.latency * (rows as f64 / 8.0 + o.fetch.transfers as f64);
+    assert!(o.fetch.seconds >= bw_term, "modeled seconds below bandwidth floor");
+    assert!(o.fetch.seconds <= bw_term + max_latency, "modeled seconds above latency ceiling");
+    assert!(o.measured_fetch_s > 0.0, "measured fetch wall-clock must be populated");
+    assert!(o.measured_evict_s > 0.0, "measured evict wall-clock must be populated");
+}
+
+/// `--offload` implies the paged layout even when the caller forgot
+/// `--paged`: the engine forces it before building the store.
+#[test]
+fn offload_forces_paged_layout() {
+    let cfg = preset("hata-gqa").unwrap();
+    let mut rng = Rng::new(1);
+    let weights = Weights::random(&cfg, &mut rng);
+    let serve = ServeConfig {
+        method: Method::Hata,
+        budget: 16,
+        offload: true,
+        paged: false,
+        ..Default::default()
+    };
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let engine = Engine::new(Arc::new(Model::new(cfg, weights, aux)), serve);
+    assert!(engine.serve.paged, "offload must imply the paged layout");
+}
