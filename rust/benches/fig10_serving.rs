@@ -1,0 +1,355 @@
+//! Fig 10 reproduction: serving goodput vs offered load under the
+//! streaming front door.
+//!
+//! An **open-loop** load generator fires requests at the router on a
+//! seeded Poisson schedule (exponential inter-arrival gaps at each
+//! offered load λ, mixed prompt lengths), submits through the
+//! non-blocking admission gate ([`Router::try_submit_stream`]; a full
+//! gate sheds the request, as an open-loop client must), and polls every
+//! live [`ResponseStream`] for tokens. All latency is measured
+//! **client-side against the scheduled arrival time**, so queueing and
+//! admission delay count toward TTFT exactly as a user would see them.
+//!
+//! Per cell the bench reports goodput — completed requests that met both
+//! SLOs (TTFT ≤ `--slo-ttft-ms`, mean TPOT ≤ `--slo-tpot-ms`) per
+//! second of makespan — alongside shed count and client-side
+//! TTFT/TPOT percentiles, plus a per-request record array. Everything
+//! lands in `<out>/fig10_serving.json` (schema below) and a rendered
+//! table on stdout.
+//!
+//! ```text
+//! { "cells": [ { "offered_load": .., "goodput": .., "completed": ..,
+//!                "shed": .., "ttft_p50_ms": .., "ttft_p99_ms": ..,
+//!                "tpot_p50_ms": .., "tpot_p99_ms": .., "makespan_s": ..,
+//!                "requests": [ { "id", "arrival_s", "prompt_len",
+//!                                "tokens", "ttft_ms", "tpot_mean_ms",
+//!                                "slo_ok", "outcome" } ] } ] }
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hata::bench::report::{fmt, Table};
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::request::Request;
+use hata::coordinator::router::{Policy, Router};
+use hata::coordinator::stream::{ResponseStream, StreamEvent};
+use hata::kvcache::MethodAux;
+use hata::model::{weights::Weights, Model};
+use hata::util::cli::Args;
+use hata::util::json::Json;
+use hata::util::rng::Rng;
+use hata::util::stats::Summary;
+
+const FLAGS: &[&str] = &[
+    "offered-load", "requests", "method", "budget", "max-batch", "threads",
+    "workers", "max-concurrent", "waiting-served-ratio",
+    "prefill-chunk-budget", "kv-block", "paged!", "offload!",
+    "offload-budget", "seed", "max-new", "prompt-lens", "out", "slo-ttft-ms",
+    "slo-tpot-ms",
+];
+
+/// One request on the open-loop schedule.
+struct Planned {
+    id: u64,
+    /// scheduled arrival, seconds after cell start
+    at: f64,
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// Client-side observation of one request's stream.
+struct ClientRec {
+    id: u64,
+    arrival: f64,
+    prompt_len: usize,
+    /// seconds after cell start the client saw the first token
+    first_token: Option<f64>,
+    /// seconds after cell start the client saw the latest token
+    last_token: f64,
+    tokens: usize,
+    outcome: &'static str,
+}
+
+/// A finite number, or JSON null (empty-summary percentiles are NaN).
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Seeded Poisson schedule: exponential gaps at rate `lambda` req/s,
+/// prompt lengths drawn uniformly from `lens`.
+fn plan(lambda: f64, n: usize, lens: &[usize], max_new: usize, seed: u64) -> Vec<Planned> {
+    let mut rng = Rng::new(seed);
+    let mut at = 0.0f64;
+    (0..n as u64)
+        .map(|id| {
+            at += -(1.0 - rng.f64()).ln() / lambda;
+            let plen = lens[rng.below(lens.len())];
+            Planned {
+                id,
+                at,
+                prompt: (0..plen).map(|_| 32 + rng.below(64) as u32).collect(),
+                max_new,
+            }
+        })
+        .collect()
+}
+
+struct CellResult {
+    offered: f64,
+    goodput: f64,
+    completed: usize,
+    shed: usize,
+    makespan: f64,
+    ttft_ms: Summary,
+    tpot_ms: Summary,
+    requests: Vec<Json>,
+}
+
+/// Drive one offered-load cell against a fresh router.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    model: &Arc<Model>,
+    serve: &ServeConfig,
+    workers: usize,
+    lambda: f64,
+    planned: Vec<Planned>,
+    slo_ttft_s: f64,
+    slo_tpot_s: f64,
+) -> CellResult {
+    let total = planned.len();
+    let mut router =
+        Router::new(Arc::clone(model), serve.clone(), workers, Policy::LeastLoaded);
+    let mut recs: Vec<ClientRec> = Vec::with_capacity(total);
+    let mut active: Vec<(usize, ResponseStream)> = Vec::new();
+    let mut pending = planned.into_iter().peekable();
+    let mut shed = 0usize;
+    let mut completed = 0usize;
+    let mut last_done_at = 0.0f64;
+    let t0 = Instant::now();
+    while pending.peek().is_some() || !active.is_empty() {
+        let now = t0.elapsed().as_secs_f64();
+        let mut progressed = false;
+        // fire every arrival whose scheduled time has passed; a full
+        // admission gate sheds the request (open-loop: no retry)
+        while pending.peek().is_some_and(|p| p.at <= now) {
+            let p = pending.next().unwrap();
+            let rec = ClientRec {
+                id: p.id,
+                arrival: p.at,
+                prompt_len: p.prompt.len(),
+                first_token: None,
+                last_token: 0.0,
+                tokens: 0,
+                outcome: "shed",
+            };
+            let req = Request {
+                id: p.id,
+                prompt: p.prompt,
+                max_new_tokens: p.max_new,
+                stop_token: None,
+                arrival: 0.0,
+            };
+            recs.push(rec);
+            let slot = recs.len() - 1;
+            match router.try_submit_stream(req) {
+                Ok(stream) => {
+                    recs[slot].outcome = "completed";
+                    active.push((slot, stream));
+                }
+                Err(_) => shed += 1,
+            }
+            progressed = true;
+        }
+        // poll every live stream; client-side clock stamps each event
+        let mut i = 0;
+        while i < active.len() {
+            let (slot, stream) = &active[i];
+            let slot = *slot;
+            let mut done = false;
+            while let Some(ev) = stream.try_recv() {
+                progressed = true;
+                let at = t0.elapsed().as_secs_f64();
+                match ev {
+                    StreamEvent::Token { .. } => {
+                        let rec = &mut recs[slot];
+                        rec.tokens += 1;
+                        rec.last_token = at;
+                        if rec.first_token.is_none() {
+                            rec.first_token = Some(at);
+                        }
+                    }
+                    StreamEvent::Done(resp) => {
+                        let rec = &mut recs[slot];
+                        if resp.reason == hata::coordinator::request::FinishReason::Preempted {
+                            rec.outcome = "preempted";
+                        }
+                        completed += 1;
+                        last_done_at = at;
+                        done = true;
+                        break;
+                    }
+                }
+            }
+            if done {
+                active.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let makespan = last_done_at.max(t0.elapsed().as_secs_f64());
+    let mut ttft_ms = Summary::new();
+    let mut tpot_ms = Summary::new();
+    let mut slo_ok_count = 0usize;
+    let mut requests = Vec::with_capacity(recs.len());
+    for rec in &recs {
+        let ttft = rec.first_token.map(|t| t - rec.arrival);
+        let tpot = (rec.tokens > 1)
+            .then(|| (rec.last_token - rec.first_token.unwrap()) / (rec.tokens - 1) as f64);
+        let slo_ok = rec.outcome == "completed"
+            && ttft.is_some_and(|t| t <= slo_ttft_s)
+            && tpot.map_or(rec.tokens >= 1, |t| t <= slo_tpot_s);
+        if slo_ok {
+            slo_ok_count += 1;
+        }
+        if let Some(t) = ttft {
+            ttft_ms.add(t * 1e3);
+        }
+        if let Some(t) = tpot {
+            tpot_ms.add(t * 1e3);
+        }
+        requests.push(Json::obj(vec![
+            ("id", Json::num(rec.id as f64)),
+            ("arrival_s", Json::num(rec.arrival)),
+            ("prompt_len", Json::num(rec.prompt_len as f64)),
+            ("tokens", Json::num(rec.tokens as f64)),
+            ("ttft_ms", ttft.map(|t| Json::num(t * 1e3)).unwrap_or(Json::Null)),
+            ("tpot_mean_ms", tpot.map(|t| Json::num(t * 1e3)).unwrap_or(Json::Null)),
+            ("slo_ok", Json::Bool(slo_ok)),
+            ("outcome", Json::str(rec.outcome)),
+        ]));
+    }
+    CellResult {
+        offered: lambda,
+        goodput: slo_ok_count as f64 / makespan.max(1e-9),
+        completed,
+        shed,
+        makespan,
+        ttft_ms,
+        tpot_ms,
+        requests,
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // cargo bench passes its own flags (e.g. --bench) before ours; drop
+    // everything up to the first flag we know
+    let argv: Vec<String> =
+        argv.into_iter().filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv, FLAGS, false).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let loads = args.f64_list("offered-load", &[10.0, 30.0, 90.0]).unwrap();
+    let n_requests = args.usize("requests", 24).unwrap();
+    let method = Method::parse(&args.str("method", "hata")).expect("bad --method");
+    let lens = args.usize_list("prompt-lens", &[24, 48, 96]).unwrap();
+    let max_new = args.usize("max-new", 8).unwrap();
+    let workers = args.usize("workers", 1).unwrap();
+    let seed = args.u64("seed", 0).unwrap();
+    let slo_ttft_s = args.f64("slo-ttft-ms", 2000.0).unwrap() / 1e3;
+    let slo_tpot_s = args.f64("slo-tpot-ms", 500.0).unwrap() / 1e3;
+    let out_dir = args.str("out", "bench_results");
+    let serve = ServeConfig {
+        method,
+        budget: args.usize("budget", 16).unwrap(),
+        max_batch: args.usize("max-batch", 4).unwrap(),
+        threads: args.usize("threads", 1).unwrap(),
+        max_concurrent: args.usize("max-concurrent", 8).unwrap(),
+        waiting_served_ratio: args.f64("waiting-served-ratio", 0.0).unwrap(),
+        prefill_chunk: args.usize("prefill-chunk-budget", 48).unwrap(),
+        kv_block: args.usize("kv-block", ServeConfig::default().kv_block).unwrap(),
+        paged: args.flag("paged") || args.flag("offload"),
+        offload: args.flag("offload"),
+        offload_budget: args
+            .usize("offload-budget", ServeConfig::default().offload_budget)
+            .unwrap(),
+        seed,
+        ..Default::default()
+    };
+    let cfg = preset("hata-gqa").unwrap();
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let model = Arc::new(model);
+
+    let mut table = Table::new(
+        &format!(
+            "Fig 10 proxy: goodput vs offered load (method={}, max_concurrent={}, \
+             chunk={}, workers={})",
+            method.name(),
+            serve.max_concurrent,
+            serve.prefill_chunk,
+            workers
+        ),
+        &[
+            "offered", "goodput", "completed", "shed", "ttft_p50_ms", "ttft_p99_ms",
+            "tpot_p50_ms", "tpot_p99_ms",
+        ],
+    );
+    let mut cells = Vec::new();
+    for (i, &lambda) in loads.iter().enumerate() {
+        let planned = plan(lambda, n_requests, &lens, max_new, seed ^ ((i as u64 + 1) << 32));
+        let cell = run_cell(&model, &serve, workers, lambda, planned, slo_ttft_s, slo_tpot_s);
+        eprintln!(
+            "[fig10] load={lambda:.1} req/s -> goodput {:.2} req/s, completed {}, shed {}",
+            cell.goodput, cell.completed, cell.shed
+        );
+        table.row(vec![
+            fmt(cell.offered),
+            fmt(cell.goodput),
+            cell.completed.to_string(),
+            cell.shed.to_string(),
+            fmt(cell.ttft_ms.p50()),
+            fmt(cell.ttft_ms.p99()),
+            fmt(cell.tpot_ms.p50()),
+            fmt(cell.tpot_ms.p99()),
+        ]);
+        cells.push(Json::obj(vec![
+            ("offered_load", Json::num(cell.offered)),
+            ("goodput", Json::num(cell.goodput)),
+            ("completed", Json::num(cell.completed as f64)),
+            ("shed", Json::num(cell.shed as f64)),
+            ("makespan_s", Json::num(cell.makespan)),
+            ("ttft_p50_ms", num_or_null(cell.ttft_ms.p50())),
+            ("ttft_p99_ms", num_or_null(cell.ttft_ms.p99())),
+            ("tpot_p50_ms", num_or_null(cell.tpot_ms.p50())),
+            ("tpot_p99_ms", num_or_null(cell.tpot_ms.p99())),
+            ("requests", Json::Arr(cell.requests)),
+        ]));
+    }
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("method", Json::str(method.name())),
+        ("max_concurrent", Json::num(serve.max_concurrent as f64)),
+        ("prefill_chunk", Json::num(serve.prefill_chunk as f64)),
+        ("slo_ttft_ms", Json::num(slo_ttft_s * 1e3)),
+        ("slo_tpot_ms", Json::num(slo_tpot_s * 1e3)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let path = format!("{out_dir}/fig10_serving.json");
+    std::fs::write(&path, doc.to_string_pretty()).unwrap();
+    println!("wrote {path}");
+}

@@ -70,7 +70,8 @@ fn main() {
                 let mut items = vec![PrefillItem {
                     tokens: &prompt[start..end],
                     start,
-                    whole: false,
+                    prompt_len: prompt.len(),
+                    is_final: end == prompt.len(),
                     tile,
                     cache: &mut cache,
                     state: &mut state,

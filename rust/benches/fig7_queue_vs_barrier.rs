@@ -61,7 +61,8 @@ fn run_decode(
             .map(|(((p, cache), state), scratch)| PrefillItem {
                 tokens: p,
                 start: 0,
-                whole: false,
+                prompt_len: p.len(),
+                is_final: false,
                 tile: serve.prefill_tile,
                 cache,
                 state,
@@ -124,7 +125,8 @@ fn run_prefill(
             .map(|(((p, cache), state), scratch)| PrefillItem {
                 tokens: p,
                 start: 0,
-                whole: false,
+                prompt_len: p.len(),
+                is_final: false,
                 tile: serve.prefill_tile,
                 cache,
                 state,

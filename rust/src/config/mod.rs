@@ -288,8 +288,24 @@ pub struct ServeConfig {
     pub budget: usize,
     /// Max sequences decoded together per step.
     pub max_batch: usize,
-    /// Max tokens a prefill chunk may process per scheduler step.
+    /// Max tokens a prefill chunk may process per scheduler step
+    /// (`--prefill-chunk-budget`): long prompts stream through the step
+    /// loop in pieces of this many tokens, interleaved with in-flight
+    /// decode, so one long prefill never stalls everyone's TPOT.
+    /// Bit-identical outputs for any value >= 1.
     pub prefill_chunk: usize,
+    /// Max requests in flight across the serving front door
+    /// (`--max-concurrent`): the router's admission semaphore blocks —
+    /// or, for open-loop clients, sheds — submissions beyond this
+    /// count. 0 = unbounded (the closed-loop default).
+    pub max_concurrent: usize,
+    /// Waiting/served batching policy ratio (`--waiting-served-ratio`):
+    /// while live sequences are running, the scheduler defers admitting
+    /// queued requests until `waiting >= ratio * running`, so prefill
+    /// passes amortize over bigger admission batches instead of
+    /// injecting one prompt at a time into a busy decode batch. 0.0
+    /// (default) admits whenever a slot and KV pages are free.
+    pub waiting_served_ratio: f64,
     /// Query rows per tiled-prefill attention work item: each prefill
     /// chunk fans (sequence, kv-head, query-tile) tiles of this many
     /// query tokens across the engine threadpool. Any value >= 1 is
@@ -370,6 +386,8 @@ impl Default for ServeConfig {
             budget: 64,
             max_batch: 8,
             prefill_chunk: 512,
+            max_concurrent: 0,
+            waiting_served_ratio: 0.0,
             prefill_tile: 32,
             kv_capacity: 1 << 20,
             kv_block: crate::kvcache::pool::PAGE_TOKENS,

@@ -36,11 +36,14 @@ use crate::util::threadpool::ThreadPool;
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, Response};
 use super::scheduler::{Scheduler, SeqTicket, StepPlan};
+use super::stream::{ResponseStream, StreamSender};
 
 /// Consecutive zero-progress steps before the engine declares a stall
 /// (stuck scheduler or unsatisfiable admission), surfaces it through
 /// metrics and preempts the stuck requests instead of spinning forever.
-const STALL_LIMIT: u64 = 64;
+/// Shared with the router's worker loop, which applies the same limit
+/// so a stuck engine never spins a worker thread at 100% CPU.
+pub const STALL_LIMIT: u64 = 64;
 
 /// The PCIe link model the residency tier charges its ledgers against:
 /// the paper's Table 3 testbed link, with the bandwidth overridable via
@@ -65,6 +68,11 @@ struct LiveSeq {
     out: Vec<u32>,
     next_token: Option<u32>,
     first_token_at: Option<f64>,
+    /// previous token's commit time, for inter-token (TPOT) latency
+    last_token_at: Option<f64>,
+    /// per-token stream to the caller, when submitted via
+    /// [`Engine::submit_stream`]
+    stream: Option<StreamSender>,
     rng: Rng,
 }
 
@@ -194,8 +202,27 @@ impl Engine {
     }
 
     /// Accept a request: allocate its cache/state and queue it for
-    /// admission.
-    pub fn submit(&mut self, mut req: Request) {
+    /// admission. Responses come back through [`Engine::take_responses`]
+    /// (the closed-loop path).
+    pub fn submit(&mut self, req: Request) {
+        self.submit_with(req, None);
+    }
+
+    /// Accept a request and return a live per-token stream for it. The
+    /// caller sees every generated token at its commit point and a
+    /// terminal [`super::stream::StreamEvent::Done`] when the request
+    /// finishes — including stall-recovery preemptions, so a stream
+    /// always terminates. The finished response is *also* pushed to
+    /// [`Engine::take_responses`] (worker bookkeeping relies on that);
+    /// callers consume one side or the other, not both.
+    pub fn submit_stream(&mut self, req: Request) -> ResponseStream {
+        let (handle, sender) = ResponseStream::channel(req.id);
+        self.submit_with(req, Some(sender));
+        handle
+    }
+
+    /// [`Engine::submit`] with an optional per-token stream attached.
+    pub fn submit_with(&mut self, mut req: Request, stream: Option<StreamSender>) {
         req.arrival = self.now();
         self.scheduler.submit(SeqTicket {
             id: req.id,
@@ -226,6 +253,8 @@ impl Engine {
                 out: Vec::new(),
                 next_token: None,
                 first_token_at: None,
+                last_token_at: None,
+                stream,
                 rng,
                 req,
             },
@@ -271,6 +300,7 @@ impl Engine {
         let t0 = Instant::now();
         let sampler = self.sampler;
         self.scheduler.plan_into(&mut self.pool, &mut self.plan);
+        self.metrics.on_queue_depth(self.scheduler.queue_len());
         if let Some(store) = &self.store {
             // the plan's grows may have minted fresh physical pages:
             // extend the shared planes, then mirror the pool's block
@@ -336,7 +366,8 @@ impl Engine {
                     items.push(PrefillItem {
                         tokens: &req.prompt[w.range.clone()],
                         start: w.range.start,
-                        whole: w.range.start == 0 && w.is_final,
+                        prompt_len: req.prompt.len(),
+                        is_final: w.is_final,
                         tile: w.tile,
                         cache,
                         state,
@@ -393,10 +424,16 @@ impl Engine {
             let seq = self.seqs.get_mut(&w.id).expect("live seq");
             let tok = seq.next_token.expect("prefill completed");
             seq.out.push(tok);
+            let at = self.clock.elapsed().as_secs_f64();
             if seq.first_token_at.is_none() {
-                let at = self.clock.elapsed().as_secs_f64();
                 seq.first_token_at = Some(at);
                 self.metrics.on_first_token(at - seq.req.arrival);
+            } else if let Some(prev) = seq.last_token_at {
+                self.metrics.on_inter_token(at - prev);
+            }
+            seq.last_token_at = Some(at);
+            if let Some(stream) = &seq.stream {
+                stream.send_token(tok, seq.out.len() - 1);
             }
             if seq.req.stop_token == Some(tok) {
                 self.finished.push((w.id, FinishReason::StopToken));
@@ -479,20 +516,29 @@ impl Engine {
         if let Some(seq) = self.seqs.remove(&id) {
             let now = self.now();
             self.metrics.on_complete(now - seq.req.arrival, seq.req.prompt.len());
-            self.responses.push(Response {
+            let resp = Response {
                 id,
                 prompt_len: seq.req.prompt.len(),
                 tokens: seq.out,
                 reason,
                 ttft: seq.first_token_at.unwrap_or(now) - seq.req.arrival,
                 total_time: now - seq.req.arrival,
-            });
+            };
+            if let Some(stream) = &seq.stream {
+                stream.finish(resp.clone());
+            }
+            self.responses.push(resp);
         }
     }
 
     /// Preempt everything still queued or live and record the stall in
     /// metrics — a stuck scheduler surfaces as a report, not a crash.
-    fn abort_stalled(&mut self) {
+    /// Callers driving [`Engine::step`] directly (the router's worker
+    /// loop) invoke this once [`STALL_LIMIT`] zero-progress steps
+    /// accumulate; [`Engine::run_to_completion`] applies it internally.
+    /// Streamed requests get their terminal `Done` event here too, so a
+    /// stalled stream still terminates.
+    pub fn abort_stalled(&mut self) {
         let stuck = self.scheduler.evict_all();
         self.metrics.on_stall(stuck.len());
         crate::util::logger::log(
@@ -508,14 +554,18 @@ impl Engine {
             let _ = self.pool.release(id);
             if let Some(seq) = self.seqs.remove(&id) {
                 let now = self.now();
-                self.responses.push(Response {
+                let resp = Response {
                     id,
                     prompt_len: seq.req.prompt.len(),
                     tokens: seq.out,
                     reason: FinishReason::Preempted,
                     ttft: seq.first_token_at.unwrap_or(now) - seq.req.arrival,
                     total_time: now - seq.req.arrival,
-                });
+                };
+                if let Some(stream) = &seq.stream {
+                    stream.finish(resp.clone());
+                }
+                self.responses.push(resp);
             }
         }
     }
@@ -640,6 +690,22 @@ mod tests {
         small.submit(req(1, 100, 4));
         big.submit(req(1, 100, 4));
         assert_eq!(small.run_to_completion()[0].tokens, big.run_to_completion()[0].tokens);
+    }
+
+    #[test]
+    fn submit_stream_sees_every_token_then_done() {
+        let mut closed = engine(Method::Hata, 4);
+        closed.submit(req(5, 40, 6));
+        let reference = closed.run_to_completion().remove(0);
+
+        let mut e = engine(Method::Hata, 4);
+        let stream = e.submit_stream(req(5, 40, 6));
+        e.run_to_completion();
+        let out = stream.wait();
+        let resp = out.response.expect("stream must terminate with Done");
+        assert_eq!(out.tokens, reference.tokens, "streamed tokens match closed loop");
+        assert_eq!(resp.tokens, reference.tokens);
+        assert_eq!(resp.reason, FinishReason::MaxTokens);
     }
 
     #[test]

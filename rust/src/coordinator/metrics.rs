@@ -11,6 +11,13 @@ use crate::util::workqueue::QueueStats;
 pub struct Metrics {
     /// Time-to-first-token distribution.
     pub ttft: LatencyHistogram,
+    /// Inter-token (TPOT) latency distribution: the gap between
+    /// consecutive token commits of the same request, from the second
+    /// generated token on.
+    pub tpot: LatencyHistogram,
+    /// Scheduler queue depth sampled at every step (waiting requests,
+    /// live batch excluded) — the admission backlog the serve SLO sees.
+    pub queue_depth: Summary,
     /// Engine step latency distribution.
     pub step_latency: LatencyHistogram,
     /// Per-request completion times.
@@ -68,6 +75,16 @@ impl Metrics {
         self.ttft.record(ttft);
     }
 
+    /// Record one inter-token gap (TPOT sample) of a running request.
+    pub fn on_inter_token(&mut self, gap: f64) {
+        self.tpot.record(gap);
+    }
+
+    /// Record the scheduler's waiting-queue depth at a step boundary.
+    pub fn on_queue_depth(&mut self, depth: usize) {
+        self.queue_depth.add(depth as f64);
+    }
+
     /// Record a request completion.
     pub fn on_complete(&mut self, total_time: f64, prompt_len: usize) {
         self.completed += 1;
@@ -110,7 +127,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut line = format!(
             "completed={} gen_tokens={} prompt_tokens={} tput={:.1} tok/s \
-             step p50={:.3}ms p99={:.3}ms ttft p50={:.1}ms stalls={} preempted={}",
+             step p50={:.3}ms p99={:.3}ms ttft p50={:.1}ms p99={:.1}ms stalls={} preempted={}",
             self.completed,
             self.generated_tokens,
             self.prompt_tokens,
@@ -118,9 +135,24 @@ impl Metrics {
             self.step_latency.quantile(0.5) * 1e3,
             self.step_latency.quantile(0.99) * 1e3,
             self.ttft.quantile(0.5) * 1e3,
+            self.ttft.quantile(0.99) * 1e3,
             self.stalls,
             self.preempted,
         );
+        if self.tpot.count() > 0 {
+            line.push_str(&format!(
+                " tpot[p50={:.3}ms p99={:.3}ms]",
+                self.tpot.quantile(0.5) * 1e3,
+                self.tpot.quantile(0.99) * 1e3
+            ));
+        }
+        if self.queue_depth.count() > 0 {
+            line.push_str(&format!(
+                " queue[mean={:.1} max={:.0}]",
+                self.queue_depth.mean(),
+                self.queue_depth.max()
+            ));
+        }
         for (stage, s) in [("decode", &self.decode_exec), ("prefill", &self.prefill_exec)] {
             if s.runs > 0 {
                 line.push_str(&format!(
@@ -178,6 +210,23 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.prompt_tokens, 32);
         assert!(m.report().contains("completed=1"));
+    }
+
+    #[test]
+    fn tpot_and_queue_sections_gated_on_samples() {
+        let mut m = Metrics::new();
+        let r = m.report();
+        assert!(!r.contains("tpot["), "no inter-token samples yet: {r}");
+        assert!(!r.contains("queue["), "no queue samples yet: {r}");
+        m.on_inter_token(0.004);
+        m.on_inter_token(0.004);
+        m.on_queue_depth(3);
+        m.on_queue_depth(7);
+        assert_eq!(m.tpot.count(), 2);
+        assert_eq!(m.queue_depth.count(), 2);
+        let r = m.report();
+        assert!(r.contains("tpot[p50="), "{r}");
+        assert!(r.contains("queue[mean=5.0 max=7]"), "{r}");
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! * [`scheduler`]— admission + prefill-chunk/decode interleaving policy
 //! * [`engine`]   — the step loop driving the native model
 //! * [`router`]   — multi-worker front door (round-robin / least-loaded)
-//! * [`metrics`]  — latency histograms, throughput counters
+//!   with a `--max-concurrent` admission semaphore
+//! * [`stream`]   — channel-backed per-token [`stream::ResponseStream`]
+//!   handles for streaming callers
+//! * [`metrics`]  — latency histograms (TTFT/TPOT/queue depth),
+//!   throughput counters
 //!
 //! ## Batched-step data flow (`serve.threads`)
 //!
@@ -38,3 +42,4 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod stream;

@@ -4,16 +4,35 @@
 //! Each worker thread owns an [`super::engine::Engine`]; the router picks
 //! a worker per request (round-robin or least-loaded by outstanding
 //! count), forwards over an mpsc channel, and funnels responses back.
+//! Three serving-path concerns live here:
+//!
+//! * **Bounded admission** (`--max-concurrent`): an [`Admission`]
+//!   semaphore caps requests in flight across all workers. Closed-loop
+//!   [`Router::submit`] and streaming [`Router::submit_stream`] block
+//!   at the front door when full; open-loop clients use
+//!   [`Router::try_submit_stream`] and shed load themselves.
+//! * **Per-token streaming**: [`Router::submit_stream`] returns a
+//!   [`ResponseStream`] fed by the owning worker's engine at every
+//!   token-commit point. Streamed responses bypass the closed-loop
+//!   drain channel (their terminal event carries the full response).
+//! * **Stall recovery, not busy-spin**: a worker whose engine reports
+//!   [`STALL_LIMIT`] consecutive zero-progress steps aborts the stuck
+//!   requests ([`Engine::abort_stalled`]) instead of spinning at 100%
+//!   CPU forever — which also means [`Router::drain`] always returns.
+//!   An idle worker parks on its channel; [`Router::worker_stats`]
+//!   exposes step/park counters so tests can prove both properties.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ServeConfig;
 use crate::model::Model;
 
-use super::engine::Engine;
+use super::engine::{Engine, STALL_LIMIT};
 use super::request::{Request, Response};
+use super::stream::{ResponseStream, StreamSender};
 
 /// Worker-selection policy for incoming requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,8 +44,92 @@ pub enum Policy {
 }
 
 enum Msg {
-    Req(Request),
+    Req(Request, Option<StreamSender>),
     Drain,
+}
+
+#[derive(Default)]
+struct AdmissionState {
+    in_flight: usize,
+    peak: usize,
+}
+
+/// Counting semaphore over requests in flight across the whole router
+/// (`--max-concurrent`). `limit == 0` means unbounded — the semaphore
+/// still counts, so [`Admission::in_flight`] / [`Admission::peak`] stay
+/// meaningful, but nothing ever blocks.
+pub struct Admission {
+    limit: usize,
+    state: Mutex<AdmissionState>,
+    freed: Condvar,
+}
+
+impl Admission {
+    fn new(limit: usize) -> Self {
+        Admission { limit, state: Mutex::new(AdmissionState::default()), freed: Condvar::new() }
+    }
+
+    /// Block until a slot frees, then take it.
+    fn acquire(&self) {
+        let mut st = self.state.lock().unwrap();
+        while self.limit != 0 && st.in_flight >= self.limit {
+            st = self.freed.wait(st).unwrap();
+        }
+        st.in_flight += 1;
+        st.peak = st.peak.max(st.in_flight);
+    }
+
+    /// Take a slot only if one is free right now.
+    fn try_acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if self.limit != 0 && st.in_flight >= self.limit {
+            return false;
+        }
+        st.in_flight += 1;
+        st.peak = st.peak.max(st.in_flight);
+        true
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight = st.in_flight.saturating_sub(1);
+        drop(st);
+        self.freed.notify_one();
+    }
+
+    /// The configured cap (0 = unbounded).
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Requests currently holding a slot.
+    pub fn in_flight(&self) -> usize {
+        self.state.lock().unwrap().in_flight
+    }
+
+    /// High-water mark of concurrent in-flight requests.
+    pub fn peak(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+}
+
+/// Live per-worker counters, shared with the worker thread.
+#[derive(Default)]
+struct SharedStats {
+    /// engine steps executed
+    steps: AtomicU64,
+    /// times the worker parked on its request channel (idle, no work)
+    idle_waits: AtomicU64,
+}
+
+/// Snapshot of one worker's loop counters ([`Router::worker_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    /// Engine steps this worker has executed.
+    pub steps: u64,
+    /// Times the worker parked (blocking `recv`) with an idle engine —
+    /// an idle worker accumulates *waits*, never *steps*.
+    pub idle_waits: u64,
 }
 
 /// Router owning N worker threads.
@@ -34,6 +137,8 @@ pub struct Router {
     txs: Vec<Sender<Msg>>,
     resp_rx: Receiver<Response>,
     outstanding: Vec<Arc<AtomicUsize>>,
+    stats: Vec<Arc<SharedStats>>,
+    admission: Arc<Admission>,
     next: usize,
     policy: Policy,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -41,24 +146,34 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn `n_workers` engine threads sharing one model.
+    /// Spawn `n_workers` engine threads sharing one model. The admission
+    /// cap comes from `serve.max_concurrent` (0 = unbounded).
     pub fn new(model: Arc<Model>, serve: ServeConfig, n_workers: usize, policy: Policy) -> Self {
         let (resp_tx, resp_rx) = channel::<Response>();
+        let admission = Arc::new(Admission::new(serve.max_concurrent));
         let mut txs = Vec::new();
         let mut outstanding = Vec::new();
+        let mut stats = Vec::new();
         let mut workers = Vec::new();
         for _ in 0..n_workers.max(1) {
             let (tx, rx) = channel::<Msg>();
             let load = Arc::new(AtomicUsize::new(0));
+            let shared = Arc::new(SharedStats::default());
             let resp_tx = resp_tx.clone();
             let model = Arc::clone(&model);
             let serve = serve.clone();
             let load2 = Arc::clone(&load);
+            let shared2 = Arc::clone(&shared);
+            let admission2 = Arc::clone(&admission);
             workers.push(std::thread::spawn(move || {
                 let mut engine = Engine::new(model, serve);
+                // ids submitted with a stream: their responses reach the
+                // caller via the stream's terminal event, not resp_tx
+                let mut streamed: HashSet<u64> = HashSet::new();
+                let mut zero_steps = 0u64;
                 loop {
                     // ingest every pending message without blocking while
-                    // the engine has work; block when idle
+                    // the engine has work; park on the channel when idle
                     let msg = if engine.has_work() {
                         match rx.try_recv() {
                             Ok(m) => Some(m),
@@ -66,28 +181,49 @@ impl Router {
                             Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
                         }
                     } else {
+                        shared2.idle_waits.fetch_add(1, Ordering::Relaxed);
                         match rx.recv() {
                             Ok(m) => Some(m),
                             Err(_) => break,
                         }
                     };
                     match msg {
-                        Some(Msg::Req(r)) => engine.submit(r),
+                        Some(Msg::Req(r, stream)) => {
+                            if stream.is_some() {
+                                streamed.insert(r.id);
+                            }
+                            engine.submit_with(r, stream);
+                            zero_steps = 0;
+                        }
                         Some(Msg::Drain) | None => {}
                     }
                     if engine.has_work() {
-                        engine.step();
-                        for r in engine.take_responses() {
-                            load2.fetch_sub(1, Ordering::SeqCst);
-                            let _ = resp_tx.send(r);
+                        shared2.steps.fetch_add(1, Ordering::Relaxed);
+                        let outcome = engine.step();
+                        zero_steps = if outcome.progress() == 0 { zero_steps + 1 } else { 0 };
+                        if zero_steps >= STALL_LIMIT {
+                            // stuck admission (e.g. a prompt that can never
+                            // fit the KV pool): preempt instead of spinning
+                            // this thread at 100% CPU and hanging drain()
+                            engine.abort_stalled();
+                            zero_steps = 0;
                         }
+                    }
+                    for r in engine.take_responses() {
+                        load2.fetch_sub(1, Ordering::SeqCst);
+                        admission2.release();
+                        if streamed.remove(&r.id) {
+                            continue; // delivered via the stream's Done
+                        }
+                        let _ = resp_tx.send(r);
                     }
                 }
             }));
             txs.push(tx);
             outstanding.push(load);
+            stats.push(shared);
         }
-        Router { txs, resp_rx, outstanding, next: 0, policy, workers, in_flight: 0 }
+        Router { txs, resp_rx, outstanding, stats, admission, next: 0, policy, workers, in_flight: 0 }
     }
 
     fn pick(&mut self) -> usize {
@@ -107,15 +243,47 @@ impl Router {
         }
     }
 
-    /// Route one request to a worker according to the policy.
+    /// Route one closed-loop request to a worker according to the
+    /// policy; its response comes back through [`Router::drain`].
+    /// Blocks at the admission gate when `--max-concurrent` is hit.
     pub fn submit(&mut self, req: Request) {
+        self.admission.acquire();
         let i = self.pick();
         self.outstanding[i].fetch_add(1, Ordering::SeqCst);
         self.in_flight += 1;
-        self.txs[i].send(Msg::Req(req)).expect("worker alive");
+        self.txs[i].send(Msg::Req(req, None)).expect("worker alive");
     }
 
-    /// Block until all in-flight requests respond; returns them.
+    /// Route one request and return its live per-token stream. Blocks at
+    /// the admission gate when `--max-concurrent` is hit. The terminal
+    /// [`super::stream::StreamEvent::Done`] carries the full response;
+    /// streamed requests do **not** appear in [`Router::drain`].
+    pub fn submit_stream(&mut self, req: Request) -> ResponseStream {
+        self.admission.acquire();
+        self.stream_inner(req)
+    }
+
+    /// Non-blocking [`Router::submit_stream`]: sheds the request back to
+    /// the caller instead of waiting when the admission gate is full —
+    /// the open-loop load-generator primitive.
+    pub fn try_submit_stream(&mut self, req: Request) -> Result<ResponseStream, Request> {
+        if !self.admission.try_acquire() {
+            return Err(req);
+        }
+        Ok(self.stream_inner(req))
+    }
+
+    fn stream_inner(&mut self, req: Request) -> ResponseStream {
+        let (handle, sender) = ResponseStream::channel(req.id);
+        let i = self.pick();
+        self.outstanding[i].fetch_add(1, Ordering::SeqCst);
+        self.txs[i].send(Msg::Req(req, Some(sender))).expect("worker alive");
+        handle
+    }
+
+    /// Block until all closed-loop in-flight requests respond; returns
+    /// them. Streamed requests are not waited on here — consume their
+    /// [`ResponseStream`]s instead.
     pub fn drain(&mut self) -> Vec<Response> {
         for tx in &self.txs {
             let _ = tx.send(Msg::Drain);
@@ -131,6 +299,23 @@ impl Router {
     /// Engine worker threads owned by this router.
     pub fn worker_count(&self) -> usize {
         self.txs.len()
+    }
+
+    /// The shared admission gate (inspect `in_flight`/`peak` in tests
+    /// and load generators).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// Snapshot every worker's loop counters.
+    pub fn worker_stats(&self) -> Vec<WorkerStats> {
+        self.stats
+            .iter()
+            .map(|s| WorkerStats {
+                steps: s.steps.load(Ordering::Relaxed),
+                idle_waits: s.idle_waits.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 }
 
@@ -208,5 +393,62 @@ mod tests {
     fn drop_joins_workers() {
         let router = Router::new(model(), serve(), 2, Policy::RoundRobin);
         drop(router); // must not hang
+    }
+
+    #[test]
+    fn streamed_requests_bypass_drain() {
+        let mut router = Router::new(model(), serve(), 2, Policy::RoundRobin);
+        let stream = router.submit_stream(req(11));
+        router.submit(req(12)); // closed-loop alongside the stream
+        let out = stream.wait();
+        assert_eq!(out.tokens.len(), 3);
+        let resp = out.response.expect("stream terminates with Done");
+        assert_eq!(resp.id, 11);
+        assert_eq!(resp.tokens, out.tokens);
+        let rs = router.drain();
+        assert_eq!(rs.len(), 1, "drain sees only the closed-loop request");
+        assert_eq!(rs[0].id, 12);
+    }
+
+    #[test]
+    fn admission_counts_and_releases() {
+        let mut serve = serve();
+        serve.max_concurrent = 2;
+        let mut router = Router::new(model(), serve, 2, Policy::RoundRobin);
+        let streams: Vec<_> = (0..2).map(|i| router.submit_stream(req(20 + i))).collect();
+        assert!(router.admission().peak() <= 2);
+        for s in streams {
+            assert!(s.wait().response.is_some());
+        }
+        // release happens on the worker after the terminal event; give it
+        // a bounded moment to settle
+        for _ in 0..1000 {
+            if router.admission().in_flight() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(router.admission().in_flight(), 0);
+        assert_eq!(router.admission().peak(), 2);
+    }
+
+    #[test]
+    fn try_submit_sheds_when_full() {
+        let mut serve = serve();
+        serve.max_concurrent = 1;
+        let mut router = Router::new(model(), serve, 1, Policy::RoundRobin);
+        // hold the only slot without handing the request to a worker:
+        // the gate is router-wide state, so a manual acquire models a
+        // long-running in-flight request deterministically
+        router.admission().acquire();
+        let shed = router.try_submit_stream(req(30));
+        let req_back = match shed {
+            Err(r) => r,
+            Ok(_) => panic!("gate full: request must be shed"),
+        };
+        assert_eq!(req_back.id, 30);
+        router.admission().release();
+        let stream = router.try_submit_stream(req_back).expect("slot free");
+        assert_eq!(stream.wait().tokens.len(), 3);
     }
 }

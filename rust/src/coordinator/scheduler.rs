@@ -86,6 +86,7 @@ pub struct Scheduler {
     max_batch: usize,
     prefill_chunk: usize,
     prefill_tile: usize,
+    waiting_served_ratio: f64,
 }
 
 impl Scheduler {
@@ -95,8 +96,9 @@ impl Scheduler {
             queue: VecDeque::new(),
             live: Vec::new(),
             max_batch: serve.max_batch,
-            prefill_chunk: serve.prefill_chunk,
+            prefill_chunk: serve.prefill_chunk.max(1),
             prefill_tile: serve.prefill_tile,
+            waiting_served_ratio: serve.waiting_served_ratio,
         }
     }
 
@@ -178,13 +180,32 @@ impl Scheduler {
         plan.decode.clear();
         plan.prefill.clear();
         plan.admitted.clear();
-        // 1. admit while there is room. A preempted sequence keeps its
-        // pool pages, so admission needs only the *remaining* tokens
-        // beyond what the pool already holds for this id.
-        while self.live.len() < self.max_batch {
+        // 1. admit while there is room. Admission *reserves* pages (not
+        // just checks), so two candidates can never both pass against
+        // the same free pages within one plan — and it charges only the
+        // request's next prefill chunk, not the whole prompt: a long
+        // prompt streams into the pool chunk by chunk exactly as it
+        // prefills. The final chunk's reservation includes the first
+        // decode slot so a prompt that fits never finishes prefill
+        // unable to emit a token. A preempted sequence keeps its pool
+        // pages, so on re-admission the delta beyond what it already
+        // holds is usually zero.
+        //
+        // The waiting/served gate (TGI-style batching policy): while a
+        // batch is running, hold admissions until the waiting pool is
+        // worth a prefill pass relative to it. ratio 0.0 always admits.
+        let gate_open = self.live.is_empty()
+            || self.queue.len() as f64 >= self.waiting_served_ratio * self.live.len() as f64;
+        while gate_open && self.live.len() < self.max_batch {
             let Some(front) = self.queue.front() else { break };
-            let need = (front.prompt_len + 1).saturating_sub(pool.seq_tokens(front.id));
-            if !pool.can_grow(front.id, need) {
+            let remaining = front.prompt_len - front.prefilled;
+            let next_target = if remaining <= self.prefill_chunk {
+                front.prompt_len + 1
+            } else {
+                front.prefilled + self.prefill_chunk
+            };
+            let delta = next_target.saturating_sub(pool.seq_tokens(front.id));
+            if pool.grow(front.id, delta).is_err() {
                 break;
             }
             let t = self.queue.pop_front().unwrap();
@@ -197,11 +218,17 @@ impl Scheduler {
                 plan.decode.push(DecodeWork { id: t.id, pos: t.prompt_len + t.generated });
             }
         }
-        // reserve one token per decoding sequence; a sequence whose
-        // reservation fails under pool pressure sits out this step
-        // (it stays live and retries next plan)
-        plan.decode.retain(|w| pool.grow(w.id, 1).is_ok());
-        // 3. chunked prefill for the oldest incomplete prefill
+        // reserve through the token being written (pos + 1 rows); the
+        // slot admission pre-reserved makes the first delta zero. A
+        // sequence whose reservation fails under pool pressure sits out
+        // this step (it stays live and retries next plan)
+        plan.decode.retain(|w| {
+            let delta = (w.pos + 1).saturating_sub(pool.seq_tokens(w.id));
+            pool.grow(w.id, delta).is_ok()
+        });
+        // 3. chunked prefill for the oldest incomplete prefill; grow
+        // only past the tokens admission (or a held preemption) already
+        // reserved for this id
         let mut chunk_left = self.prefill_chunk;
         for t in self.live.iter() {
             if chunk_left == 0 {
@@ -209,7 +236,8 @@ impl Scheduler {
             }
             if !t.is_prefill_done() {
                 let take = chunk_left.min(t.prompt_len - t.prefilled);
-                if pool.grow(t.id, take).is_ok() {
+                let delta = (t.prefilled + take).saturating_sub(pool.seq_tokens(t.id));
+                if pool.grow(t.id, delta).is_ok() {
                     plan.prefill.push(PrefillWork {
                         id: t.id,
                         range: t.prefilled..t.prefilled + take,
@@ -419,6 +447,80 @@ mod tests {
         let p = s.plan(&mut pool);
         assert!(p.decode.is_empty());
         assert_eq!(s.live_len(), 1);
+    }
+
+    #[test]
+    fn chunked_admission_charges_only_next_chunk() {
+        // a long prompt must not reserve its whole length at admission:
+        // only the first prefill chunk's pages are charged, and each
+        // later chunk pays as it runs (the --paged composition rule:
+        // chunked admission charges only the next chunk's pages)
+        let mut s = scheduler(4, 64);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 300, 2));
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(pool.seq_tokens(1), 64, "admission charged beyond the first chunk");
+        s.on_prefilled(1, 64);
+        let _ = s.plan(&mut pool);
+        assert_eq!(pool.seq_tokens(1), 128, "second chunk pays for itself only");
+    }
+
+    #[test]
+    fn final_chunk_admission_reserves_decode_slot() {
+        // a prompt that fits in one chunk reserves prompt+1 tokens, so
+        // finishing prefill can always emit the first token without a
+        // fresh reservation racing other admissions
+        let mut s = scheduler(4, 512);
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        s.submit(mk(1, 10, 4));
+        let _ = s.plan(&mut pool);
+        assert_eq!(pool.seq_tokens(1), 11);
+        s.on_prefilled(1, 10);
+        // the pre-reserved slot makes the first decode's delta zero
+        let free_before = pool.free_pages();
+        let p = s.plan(&mut pool);
+        assert_eq!(p.decode.len(), 1);
+        assert_eq!(pool.free_pages(), free_before, "first decode re-charged its slot");
+    }
+
+    #[test]
+    fn admission_cannot_overcommit_within_one_plan() {
+        // two queued prompts that each fit alone but not together: the
+        // reserve-at-admit rule must admit exactly one, never both
+        let mut s = scheduler(8, 2 * PAGE_TOKENS);
+        let mut pool = KvPool::new(2 * PAGE_TOKENS);
+        s.submit(mk(1, 2 * PAGE_TOKENS - 1, 2));
+        s.submit(mk(2, 2 * PAGE_TOKENS - 1, 2));
+        let plan = s.plan(&mut pool);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(s.queue_len(), 1);
+        assert_eq!(pool.free_pages(), 0);
+    }
+
+    #[test]
+    fn waiting_served_ratio_defers_admission_until_worth_it() {
+        let mut s = Scheduler::new(&ServeConfig {
+            max_batch: 8,
+            prefill_chunk: 64,
+            waiting_served_ratio: 2.0,
+            ..Default::default()
+        });
+        let mut pool = KvPool::new(100 * PAGE_TOKENS);
+        // an empty engine always admits (nothing to amortize against)
+        s.submit(mk(1, 8, 4));
+        let p = s.plan(&mut pool);
+        assert_eq!(p.admitted, vec![1]);
+        s.on_prefilled(1, 8);
+        // one waiter against one running seq: 1 < 2.0 * 1, deferred
+        s.submit(mk(2, 8, 4));
+        let p = s.plan(&mut pool);
+        assert!(p.admitted.is_empty(), "gate must defer a lone waiter");
+        assert_eq!(p.decode.len(), 1, "running decode is never held up");
+        // a second waiter tips the ratio: 2 >= 2.0 * 1, both admitted
+        s.submit(mk(3, 8, 4));
+        let p = s.plan(&mut pool);
+        assert_eq!(p.admitted, vec![2, 3]);
     }
 
     #[test]

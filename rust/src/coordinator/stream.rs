@@ -1,0 +1,166 @@
+//! Per-token response streaming: the channel-backed handle a caller
+//! holds while the engine generates (text-generation-inference's
+//! `infer` shape, scaled to one process).
+//!
+//! The engine owns a [`StreamSender`] inside the live sequence and
+//! pushes a [`StreamEvent::Token`] at every token-commit point of the
+//! step loop, then [`StreamEvent::Done`] with the full
+//! [`Response`] when the request finishes (including stall-recovery
+//! preemptions — a stream always terminates). The caller side is a
+//! plain mpsc receiver: poll it with [`ResponseStream::try_recv`] from
+//! an open-loop client, block on [`ResponseStream::recv`], or collect
+//! everything with [`ResponseStream::wait`]. A hung-up caller never
+//! stalls the engine: sends to a dropped receiver are ignored.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::request::Response;
+
+/// One event on a request's token stream.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// A newly generated token, streamed at its commit point.
+    Token {
+        /// the generated token id
+        token: u32,
+        /// 0-based index within the request's generated output
+        index: usize,
+    },
+    /// Generation finished; carries the full response (its `tokens`
+    /// repeat everything streamed, so late consumers need no replay).
+    Done(Response),
+}
+
+/// Engine-side sending half of a request's stream.
+#[derive(Clone)]
+pub struct StreamSender {
+    tx: Sender<StreamEvent>,
+}
+
+impl StreamSender {
+    /// Emit one generated token (a hung-up caller is ignored).
+    pub fn send_token(&self, token: u32, index: usize) {
+        let _ = self.tx.send(StreamEvent::Token { token, index });
+    }
+
+    /// Emit the terminal event (a hung-up caller is ignored).
+    pub fn finish(&self, resp: Response) {
+        let _ = self.tx.send(StreamEvent::Done(resp));
+    }
+}
+
+/// Caller-side handle: the live token stream of one request.
+pub struct ResponseStream {
+    id: u64,
+    rx: Receiver<StreamEvent>,
+}
+
+/// Everything a fully drained [`ResponseStream`] produced.
+pub struct StreamOutcome {
+    /// Tokens in streamed order.
+    pub tokens: Vec<u32>,
+    /// The terminal response; `None` only if the engine was torn down
+    /// mid-request (sender dropped without a [`StreamEvent::Done`]).
+    pub response: Option<Response>,
+}
+
+impl ResponseStream {
+    /// A connected (stream, sender) pair for request `id`.
+    pub fn channel(id: u64) -> (ResponseStream, StreamSender) {
+        let (tx, rx) = channel();
+        (ResponseStream { id, rx }, StreamSender { tx })
+    }
+
+    /// The request id this stream belongs to.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the stream is exhausted
+    /// and the engine has dropped its sender.
+    pub fn recv(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll: `None` when no event is ready right now (or
+    /// the stream is exhausted) — the open-loop client's primitive.
+    pub fn try_recv(&self) -> Option<StreamEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Drain the stream to completion: collect every streamed token and
+    /// the terminal response. Returns as soon as `Done` arrives (or the
+    /// sender is dropped), so it never outwaits a finished request.
+    pub fn wait(self) -> StreamOutcome {
+        let mut tokens = Vec::new();
+        let mut response = None;
+        while let Ok(ev) = self.rx.recv() {
+            match ev {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done(r) => {
+                    response = Some(r);
+                    break;
+                }
+            }
+        }
+        StreamOutcome { tokens, response }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    fn resp(id: u64, tokens: Vec<u32>) -> Response {
+        Response {
+            id,
+            prompt_len: 4,
+            tokens,
+            reason: FinishReason::MaxTokens,
+            ttft: 0.0,
+            total_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn wait_collects_tokens_and_terminal_response() {
+        let (stream, tx) = ResponseStream::channel(7);
+        tx.send_token(10, 0);
+        tx.send_token(11, 1);
+        tx.finish(resp(7, vec![10, 11]));
+        let out = stream.wait();
+        assert_eq!(out.tokens, vec![10, 11]);
+        let r = out.response.expect("terminal event");
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tokens, out.tokens, "Done must repeat the streamed tokens");
+    }
+
+    #[test]
+    fn dropped_sender_terminates_wait_without_response() {
+        let (stream, tx) = ResponseStream::channel(1);
+        tx.send_token(5, 0);
+        drop(tx);
+        let out = stream.wait();
+        assert_eq!(out.tokens, vec![5]);
+        assert!(out.response.is_none());
+    }
+
+    #[test]
+    fn dropped_receiver_never_errors_the_sender() {
+        let (stream, tx) = ResponseStream::channel(2);
+        assert_eq!(stream.id(), 2);
+        drop(stream);
+        tx.send_token(1, 0); // must not panic
+        tx.finish(resp(2, vec![1]));
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking() {
+        let (stream, tx) = ResponseStream::channel(3);
+        assert!(stream.try_recv().is_none());
+        tx.send_token(9, 0);
+        assert!(matches!(stream.try_recv(), Some(StreamEvent::Token { token: 9, index: 0 })));
+        assert!(stream.try_recv().is_none());
+    }
+}

@@ -24,13 +24,15 @@ use hata::model::{tokenizer, weights::Weights, Model};
 use hata::tensor::simd::KernelMode;
 use hata::util::cli::Args;
 use hata::util::rng::Rng;
+use hata::util::stats::Summary;
 
 const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
     "exec", "graph-cache", "kernels", "kv-block", "paged!", "offload!",
-    "offload-budget", "prefetch-depth",
+    "offload-budget", "prefetch-depth", "max-concurrent",
+    "waiting-served-ratio", "prefill-chunk-budget",
 ];
 
 fn main() {
@@ -73,6 +75,15 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
   --fig N           regenerate figure 6|7|8
   --requests N      serve: number of synthetic requests
   --workers N       serve: router workers
+  --max-concurrent N  serve: admission cap on requests in flight across
+                    all workers (default 0 = unbounded); submission
+                    blocks at the front door when full
+  --waiting-served-ratio R  serve: defer admitting into a running batch
+                    until waiting >= R * live (default 0 = admit
+                    eagerly); batches admissions to amortize prefill
+  --prefill-chunk-budget N  prompt tokens prefilled per request per step
+                    (default 512), interleaved with decode in the same
+                    step; bit-identical for any value >= 1
   --threads N       engine threadpool width (default 1 = serial)
   --prefill-tile N  query rows per tiled-prefill work item (default 32;
                     any value is bit-identical, it only shapes fan-out)
@@ -173,6 +184,9 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         offload: args.flag("offload"),
         offload_budget: args.usize("offload-budget", base.offload_budget)?,
         prefetch_depth: args.usize("prefetch-depth", base.prefetch_depth)?,
+        max_concurrent: args.usize("max-concurrent", base.max_concurrent)?,
+        waiting_served_ratio: args.f64("waiting-served-ratio", base.waiting_served_ratio)?,
+        prefill_chunk: args.usize("prefill-chunk-budget", base.prefill_chunk)?,
         ..base
     })
 }
@@ -211,28 +225,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.u64("seed", 0)?);
     let mut router = Router::new(Arc::clone(&model), serve.clone(), workers, Policy::LeastLoaded);
     let t0 = std::time::Instant::now();
+    let mut streams = Vec::with_capacity(n_requests);
     for id in 0..n_requests {
         let (prompt, _) =
             hata::bench::tasks::make_task(TaskKind::Ns, &corpus, &mut rng, ctx, None);
-        router.submit(Request {
+        // submit_stream blocks at the admission gate under
+        // --max-concurrent, so this loop doubles as a closed-loop client
+        streams.push(router.submit_stream(Request {
             id: id as u64,
             prompt: tokenizer::encode(&prompt),
             max_new_tokens: max_new,
             stop_token: None,
             arrival: 0.0,
-        });
+        }));
     }
-    let responses = router.drain();
+    let mut gen = 0usize;
+    let mut served = 0usize;
+    let mut ttft = Summary::new();
+    let mut tpot = Summary::new();
+    for stream in streams {
+        let out = stream.wait();
+        if let Some(r) = out.response {
+            served += 1;
+            gen += r.tokens.len();
+            ttft.add(r.ttft * 1e3);
+            if r.tokens.len() > 1 {
+                tpot.add((r.total_time - r.ttft) / (r.tokens.len() - 1) as f64 * 1e3);
+            }
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
-    let gen: usize = responses.iter().map(|r| r.tokens.len()).sum();
     println!(
         "served {} requests ({} tokens generated) in {:.2}s -> {:.1} tok/s, method={}, budget={}",
-        responses.len(),
+        served,
         gen,
         wall,
         gen as f64 / wall,
         serve.method.name(),
         serve.budget
+    );
+    println!(
+        "ttft p50={:.1}ms p99={:.1}ms | tpot mean={:.2}ms p99={:.2}ms",
+        ttft.p50(),
+        ttft.p99(),
+        tpot.mean(),
+        tpot.p99()
     );
     Ok(())
 }

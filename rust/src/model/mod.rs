@@ -215,12 +215,21 @@ pub struct WorkerScratch {
 pub struct SeqState {
     /// [`MethodState`] per (layer, kv) head, layer-major.
     pub per_head: Vec<MethodState>,
+    /// SnapKV observation-window queries accumulated across prefill
+    /// chunks (per kv head; empty until a chunk overlaps the window).
+    /// Chunked prefill fills this incrementally and the final chunk's
+    /// epilogue consumes it, so a chunked prompt ends with exactly the
+    /// whole-prompt SnapKV state.
+    pub snapkv_qwin: Vec<Vec<f32>>,
 }
 
 impl SeqState {
     /// Default state for every (layer, kv) head of `cfg`.
     pub fn new(cfg: &ModelConfig) -> Self {
-        SeqState { per_head: vec![MethodState::default(); cfg.n_layers * cfg.n_kv_heads] }
+        SeqState {
+            per_head: vec![MethodState::default(); cfg.n_layers * cfg.n_kv_heads],
+            snapkv_qwin: Vec::new(),
+        }
     }
 }
 
@@ -244,10 +253,14 @@ pub struct PrefillItem<'a> {
     pub tokens: &'a [u32],
     /// absolute position of `tokens[0]`
     pub start: usize,
-    /// chunk covers the entire prompt: capture SnapKV observation state
-    /// after the block pass (chunked prompts skip the capture, exactly
-    /// as the token-serial path always has)
-    pub whole: bool,
+    /// full prompt length of the sequence this chunk belongs to (tells
+    /// SnapKV where the observation window `[prompt_len - window,
+    /// prompt_len)` sits relative to this chunk)
+    pub prompt_len: usize,
+    /// last chunk of the prompt: run the method's prefill epilogue
+    /// (SnapKV keep-set ranking over the accumulated observation
+    /// window) after the block pass
+    pub is_final: bool,
     /// query rows per attention tile work item (`serve.prefill_tile`,
     /// surfaced per chunk by
     /// [`crate::coordinator::scheduler::PrefillWork`])
@@ -1067,8 +1080,12 @@ impl Model {
     /// machinery as [`Model::decode_batch`], bit-identical to the
     /// token-serial reference for any tile/thread count and either
     /// `serve.exec_mode` (queue by default, barrier-per-stage scatter as
-    /// the reference path). Whole-prompt chunks additionally capture
-    /// SnapKV observation state after the pass. H2O chunks keep the
+    /// the reference path). SnapKV chunks accumulate the observation
+    /// window (the slice overlapping `[prompt_len - w, prompt_len)`)
+    /// into the sequence's persistent [`SeqState::snapkv_qwin`] after
+    /// the pass, and the final chunk runs the keep-set ranking — so a
+    /// chunked prompt ends bit-identical to a whole-prompt prefill.
+    /// H2O chunks keep the
     /// token-serial path (sequence-granular fan-out) under both modes:
     /// its cumulative attention mass accumulates in query order during
     /// dense prefill, which tiling would reorder. Returns the work-queue
@@ -1083,7 +1100,7 @@ impl Model {
         if serve.method == Method::H2o {
             let dense = ServeConfig { budget: 0, ..serve.clone() };
             pool.scatter(items, workers, |_, it, _| {
-                if it.whole {
+                if it.start == 0 && it.is_final {
                     self.prefill_serial(
                         it.tokens,
                         &mut *it.cache,
@@ -1127,15 +1144,33 @@ impl Model {
             }
         };
         if serve.method == Method::SnapKv {
-            for it in items.iter_mut().filter(|it| it.whole) {
+            for it in items.iter_mut() {
                 let len = it.tokens.len();
                 if len == 0 {
                     continue;
                 }
-                let w0 = len.saturating_sub(serve.snapkv_window);
-                let mut qwin: Vec<Vec<f32>> = vec![Vec::new(); self.cfg.n_kv_heads];
-                self.snapkv_gather(&it.scratch.block.q, w0..len, &mut qwin);
-                self.snapkv_finalize(&qwin, &mut *it.cache, &mut *it.state, &mut it.scratch.sel);
+                // accumulate the slice of this chunk that overlaps the
+                // prompt's observation window [prompt_len - w, prompt_len)
+                // into the sequence's persistent qwin, so a chunked
+                // prompt finalizes with exactly the whole-prompt state
+                let w0 = it.prompt_len.saturating_sub(serve.snapkv_window);
+                if it.start + len > w0 {
+                    if it.state.snapkv_qwin.is_empty() {
+                        it.state.snapkv_qwin = vec![Vec::new(); self.cfg.n_kv_heads];
+                    }
+                    let lo = w0.max(it.start) - it.start;
+                    let qwin = &mut it.state.snapkv_qwin;
+                    self.snapkv_gather(&it.scratch.block.q, lo..len, qwin);
+                }
+                if it.is_final {
+                    let qwin = std::mem::take(&mut it.state.snapkv_qwin);
+                    self.snapkv_finalize(
+                        &qwin,
+                        &mut *it.cache,
+                        &mut *it.state,
+                        &mut it.scratch.sel,
+                    );
+                }
             }
         }
         stats

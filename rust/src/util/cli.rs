@@ -129,6 +129,21 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Comma-separated list of f64, e.g. `--offered-load 10,25,50`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(key.to_string(), v.clone()))
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +195,17 @@ mod tests {
         let a = Args::parse(&argv(&["--lens", "1,2,3"]), &["lens"], false).unwrap();
         assert_eq!(a.usize_list("lens", &[]).unwrap(), vec![1, 2, 3]);
         assert_eq!(a.usize_list("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let a = Args::parse(&argv(&["--load", "0.5, 10,25"]), &["load"], false).unwrap();
+        assert_eq!(a.f64_list("load", &[]).unwrap(), vec![0.5, 10.0, 25.0]);
+        assert_eq!(a.f64_list("other", &[1.5]).unwrap(), vec![1.5]);
+        assert!(Args::parse(&argv(&["--load", "x"]), &["load"], false)
+            .unwrap()
+            .f64_list("load", &[])
+            .is_err());
     }
 
     #[test]

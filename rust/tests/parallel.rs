@@ -345,7 +345,8 @@ fn queue_exec_matches_barrier_for_snapkv() {
                 .map(|(((p, cache), state), scratch)| PrefillItem {
                     tokens: p,
                     start: 0,
-                    whole: true,
+                    prompt_len: p.len(),
+                    is_final: true,
                     tile: serve.prefill_tile,
                     cache,
                     state,
@@ -406,7 +407,8 @@ fn queue_exec_bit_identical_caches_and_logits() {
                     .map(|(((p, cache), state), scratch)| PrefillItem {
                         tokens: p,
                         start: 0,
-                        whole: true,
+                        prompt_len: p.len(),
+                        is_final: true,
                         tile: serve.prefill_tile,
                         cache,
                         state,
