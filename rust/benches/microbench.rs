@@ -13,9 +13,13 @@ use hata::attention::hamming::{scores_group, scores_scalar, scores_word};
 use hata::attention::hashenc::{encode_fused, encode_fused_blocked, encode_unfused};
 use hata::attention::topk::{topk_counting, topk_heap, topk_quickselect};
 use hata::bench::harness::{bench, LayerFixture};
-use hata::bench::report::{fmt, roofline_cells, ROOFLINE_HEADER, Table};
-use hata::simulator::roofline::{float_kernel, Device, KernelEstimate};
-use hata::tensor::simd::{self, backend_name, KernelMode};
+use hata::bench::report::{
+    fmt, int_roofline_cells, roofline_cells, Table, INT_ROOFLINE_HEADER, ROOFLINE_HEADER,
+};
+use hata::simulator::roofline::{
+    float_kernel, float_kernel_dtype, int_kernel, Device, KernelEstimate,
+};
+use hata::tensor::simd::{self, backend_name, KernelMode, KvDtype};
 use hata::util::rng::Rng;
 
 /// The seed-era vecmat with the `xi == 0.0` skip branch, kept here so the
@@ -92,7 +96,7 @@ fn main() {
     table.row(vec!["hamming_word".into(), fmt(r.mean_s * 1e3), fmt(bytes / r.mean_s / 1e9)]);
 
     let r = bench("hamming group4", 2, iters, || {
-        scores_group(&q4, 4, &codes, rbit, &mut iscores);
+        scores_group(KernelMode::Reference, &q4, 4, &codes, rbit, &mut iscores);
     });
     table.row(vec!["hamming_group4".into(), fmt(r.mean_s * 1e3), fmt(bytes / r.mean_s / 1e9)]);
 
@@ -133,8 +137,40 @@ fn main() {
     println!("{}", table.render());
     table.write_csv("bench_results", "microbench").unwrap();
 
-    // ---- float kernel layer x --kernels modes, with roofline columns
     let dev = Device::cpu();
+
+    // ---- vectorized Hamming scorer x --kernels mode (GOP/s roofline)
+    let mut hh: Vec<&str> = vec!["primitive", "mode", "ms", "speedup_vs_ref"];
+    hh.extend_from_slice(&INT_ROOFLINE_HEADER);
+    let mut ht = Table::new(
+        &format!("hamming scorer x --kernels mode (simd backend: {})", backend_name()),
+        &hh,
+    );
+    // traffic: s key-code rows streamed once plus the i32 score column;
+    // work: XOR + popcount + add per (query head, word) pair
+    let hest = int_kernel(&dev, (s * words * 8 + s * 4) as f64, (4 * s * words * 3) as f64);
+    let mut href = Vec::new();
+    scores_group(KernelMode::Reference, &q4, 4, &codes, rbit, &mut href);
+    let mut ref_ms = None;
+    for mode in KernelMode::all() {
+        let r = bench("hamming group4", 2, iters, || {
+            scores_group(mode, &q4, 4, &codes, rbit, &mut iscores);
+        });
+        assert_eq!(iscores, href, "vectorized scorer diverged from scores_group reference");
+        let base = *ref_ms.get_or_insert(r.mean_s);
+        let mut row = vec![
+            "hamming_group4".to_string(),
+            mode.name().to_string(),
+            fmt(r.mean_s * 1e3),
+            fmt(base / r.mean_s),
+        ];
+        row.extend(int_roofline_cells(&hest, r.mean_s));
+        ht.row(row);
+    }
+    println!("{}", ht.render());
+    ht.write_csv("bench_results", "microbench_hamming").unwrap();
+
+    // ---- float kernel layer x --kernels modes, with roofline columns
     let mut header: Vec<&str> = vec!["kernel", "mode", "ms", "speedup_vs_ref"];
     header.extend_from_slice(&ROOFLINE_HEADER);
     let mut ft = Table::new(
@@ -168,6 +204,50 @@ fn main() {
         std::hint::black_box(simd::dot(mode, &av, &bv));
     });
 
+    // widening dot/axpy over packed half rows: the streamed operand is
+    // widened in-register, so traffic (and the roofline bound) drops to
+    // the dtype's width. Reference and Simd share the canonical
+    // reduction order (bit-identical); SimdFma fuses and stays within
+    // fast-math tolerance, mirroring the f32 tiers.
+    for dtype in [KvDtype::Bf16, KvDtype::F16] {
+        let mut pk = Vec::new();
+        simd::pack_extend(dtype, &bv, &mut pk);
+        let d_ref = simd::dot_wide(KernelMode::Reference, dtype, &av, &pk);
+        let d_simd = simd::dot_wide(KernelMode::Simd, dtype, &av, &pk);
+        assert_eq!(
+            d_ref.to_bits(),
+            d_simd.to_bits(),
+            "dot_wide Simd diverged from reference ({})",
+            dtype.name()
+        );
+        let est = float_kernel(&dev, (nbig * 4 + nbig * dtype.bytes()) as f64, (2 * nbig) as f64);
+        run_modes(&mut ft, &format!("dot_wide_1M_{}", dtype.name()), &est, iters, |mode| {
+            std::hint::black_box(simd::dot_wide(mode, dtype, &av, &pk));
+        });
+
+        let mut y_ref = av.clone();
+        let mut y_fma = av.clone();
+        simd::axpy_wide(KernelMode::Reference, dtype, 0.5, &pk, &mut y_ref);
+        simd::axpy_wide(KernelMode::Simd, dtype, 0.5, &pk, &mut y_fma);
+        assert!(
+            y_ref.iter().zip(&y_fma).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "axpy_wide Simd diverged from reference ({})",
+            dtype.name()
+        );
+        y_fma.copy_from_slice(&av);
+        simd::axpy_wide(KernelMode::SimdFma, dtype, 0.5, &pk, &mut y_fma);
+        assert!(
+            y_ref.iter().zip(&y_fma).all(|(a, b)| (a - b).abs() <= 1e-5 * a.abs().max(1e-3)),
+            "axpy_wide SimdFma drifted past fast-math tolerance ({})",
+            dtype.name()
+        );
+        let mut yw = vec![0.0f32; nbig];
+        let est = float_kernel(&dev, (nbig * 8 + nbig * dtype.bytes()) as f64, (2 * nbig) as f64);
+        run_modes(&mut ft, &format!("axpy_wide_1M_{}", dtype.name()), &est, iters, |mode| {
+            simd::axpy_wide(mode, dtype, 0.5, &pk, &mut yw);
+        });
+    }
+
     // decode attention kernels at dh=128 over a 4K context
     let sa = 4096usize;
     let fx = LayerFixture::new(sa, dh, 1, rbit, 11);
@@ -177,6 +257,57 @@ fn main() {
     run_modes(&mut ft, "dense_attn_s4096", &est, iters, |mode| {
         dense_attention(mode, &fx.inputs(), &mut probs, &mut aout);
     });
+
+    // decode attention across --kv-dtype widths: packed half K/V rows
+    // halve the streamed bytes, so at the bandwidth roof the same
+    // KernelMode runs up to 2x faster (the perf gate asks >= 1.5x for
+    // bf16 vs f32 at a fixed mode). Selection is dtype-independent; the
+    // packed run must match attention over the widened-f32 copy bit for
+    // bit at Reference and Simd.
+    for dtype in [KvDtype::Bf16, KvDtype::F16] {
+        let mut kp = Vec::new();
+        let mut vp = Vec::new();
+        simd::pack_extend(dtype, &fx.k, &mut kp);
+        simd::pack_extend(dtype, &fx.v, &mut vp);
+        let mut wk = Vec::new();
+        let mut wv = Vec::new();
+        simd::widen_extend(dtype, &kp, &mut wk);
+        simd::widen_extend(dtype, &vp, &mut wv);
+        let mut inp = fx.inputs();
+        inp.k = &kp;
+        inp.v = &vp;
+        inp.kv_dtype = dtype;
+        let mut winp = fx.inputs();
+        winp.k = &wk;
+        winp.v = &wv;
+        for mode in [KernelMode::Reference, KernelMode::Simd] {
+            let mut o_packed = vec![0.0f32; dh];
+            let mut o_wide = vec![0.0f32; dh];
+            dense_attention(mode, &inp, &mut probs, &mut o_packed);
+            dense_attention(mode, &winp, &mut probs, &mut o_wide);
+            assert!(
+                o_packed.iter().zip(&o_wide).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "packed {} attention diverged from widened f32 ({mode:?})",
+                dtype.name()
+            );
+        }
+        let est = float_kernel_dtype(&dev, dtype, (2 * sa * dh) as f64, (4 * sa * dh) as f64);
+        let name = format!("dense_attn_s4096_{}", dtype.name());
+        run_modes(&mut ft, &name, &est, iters, |mode| {
+            dense_attention(mode, &inp, &mut probs, &mut aout);
+        });
+        if dtype == KvDtype::Bf16 {
+            let t32 = bench("dense_attn f32 simd", 1, iters, || {
+                dense_attention(KernelMode::Simd, &fx.inputs(), &mut probs, &mut aout);
+            })
+            .mean_s;
+            let t16 = bench("dense_attn bf16 simd", 1, iters, || {
+                dense_attention(KernelMode::Simd, &inp, &mut probs, &mut aout);
+            })
+            .mean_s;
+            eprintln!("[microbench] decode-attention bf16 vs f32 at Simd: {:.2}x", t32 / t16);
+        }
+    }
 
     let k = 256usize;
     let sel: Vec<u32> = (0..sa as u32).step_by(sa / k).collect();
@@ -205,6 +336,7 @@ fn main() {
             start,
             bt: &[],
             block_tokens: 0,
+            kv_dtype: KvDtype::F32,
             kernels: mode,
         };
         prefill_tile_attention(&tile, &mut probs, &mut tout);

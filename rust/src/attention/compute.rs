@@ -20,24 +20,27 @@
 //! what makes tiled prefill bit-identical to token-serial prefill.
 
 use super::AttnInputs;
-use crate::tensor::ops::dot;
-use crate::tensor::simd::{self, KernelMode};
+use crate::tensor::simd::{self, KernelMode, KvDtype};
 
 /// Dense attention over the full cache: out[g] = softmax(q_g K^T / sqrt(d)) V.
 ///
 /// The kernel is staged onto the mode-dispatched primitives in
-/// [`crate::tensor::simd`]: a [`simd::dot`] score pass with a scalar
-/// streaming max, then a fused exp/accumulate pass that dispatches the
-/// dominant `o += p * v` row update through [`simd::axpy`] (the scalar
-/// `exp` is 1/dh of the MAC work and keeps `probs` holding the raw
-/// scores, which the H2O accumulator reads after the call), and a final
-/// [`simd::scale`]. For `Reference` and `Simd` every per-element
-/// operation happens in the same order as the historical fused scalar
-/// loop, so the result is bit-identical across all three of {old scalar
-/// kernel, `Reference`, `Simd`}; `SimdFma` is the documented fast-math
-/// tier (FMA contractions in `dot`/`axpy`).
+/// [`crate::tensor::simd`]: a [`simd::dot_wide`] score pass with a
+/// scalar streaming max, then a fused exp/accumulate pass that
+/// dispatches the dominant `o += p * v` row update through
+/// [`simd::axpy_wide`] (the scalar `exp` is 1/dh of the MAC work and
+/// keeps `probs` holding the raw scores, which the H2O accumulator
+/// reads after the call), and a final [`simd::scale`]. The `*_wide`
+/// kernels widen half-precision K/V rows in-register and are exactly
+/// the f32 kernels for `KvDtype::F32`. For `Reference` and `Simd`
+/// every per-element operation happens in the same order as the
+/// historical fused scalar loop, so the result is bit-identical across
+/// all three of {old scalar kernel, `Reference`, `Simd`} per dtype;
+/// `SimdFma` is the documented fast-math tier (FMA contractions in
+/// `dot`/`axpy`).
 pub fn dense_attention(mode: KernelMode, inp: &AttnInputs, probs: &mut Vec<f32>, out: &mut [f32]) {
     let scale = 1.0 / (inp.dh as f32).sqrt();
+    let dt = inp.kv_dtype;
     probs.clear();
     probs.resize(inp.s, 0.0);
     for g in 0..inp.group {
@@ -45,7 +48,7 @@ pub fn dense_attention(mode: KernelMode, inp: &AttnInputs, probs: &mut Vec<f32>,
         // score pass (scalar streaming max: trivial cost, fixed order)
         let mut max = f32::NEG_INFINITY;
         for t in 0..inp.s {
-            let s = simd::dot(mode, q, inp.k_row(t)) * scale;
+            let s = simd::dot_wide(mode, dt, q, inp.k_row(t)) * scale;
             probs[t] = s;
             if s > max {
                 max = s;
@@ -59,7 +62,7 @@ pub fn dense_attention(mode: KernelMode, inp: &AttnInputs, probs: &mut Vec<f32>,
         for t in 0..inp.s {
             let p = (probs[t] - max).exp();
             denom += p;
-            simd::axpy(mode, p, inp.v_row(t), o);
+            simd::axpy_wide(mode, dt, p, inp.v_row(t), o);
         }
         simd::scale(mode, o, 1.0 / denom);
     }
@@ -82,10 +85,12 @@ pub fn sparse_attention_gather(
     kbuf.reserve(n * dh);
     vbuf.reserve(n * dh);
     for &t in indices {
-        kbuf.extend_from_slice(inp.k_row(t as usize));
-        vbuf.extend_from_slice(inp.v_row(t as usize));
+        // half rows widen exactly during the gather, so the copies are
+        // plain f32 regardless of the storage dtype
+        simd::widen_extend(inp.kv_dtype, inp.k_row(t as usize), kbuf);
+        simd::widen_extend(inp.kv_dtype, inp.v_row(t as usize), vbuf);
     }
-    // the gathered copies are contiguous regardless of the source layout
+    // the gathered copies are contiguous f32 regardless of source layout
     let gathered = AttnInputs {
         q: inp.q,
         group: inp.group,
@@ -99,6 +104,8 @@ pub fn sparse_attention_gather(
         pos: inp.pos,
         bt: &[],
         block_tokens: 0,
+        kv_dtype: KvDtype::F32,
+        kernels: mode,
         side: super::Side::default(),
     };
     dense_attention(mode, &gathered, probs, out);
@@ -121,11 +128,12 @@ pub fn sparse_attention_fused(
     let n = indices.len();
     probs.clear();
     probs.resize(n, 0.0);
+    let dt = inp.kv_dtype;
     for g in 0..inp.group {
         let q = inp.q_row(g);
         let mut max = f32::NEG_INFINITY;
         for (j, &t) in indices.iter().enumerate() {
-            let s = simd::dot(mode, q, inp.k_row(t as usize)) * scale;
+            let s = simd::dot_wide(mode, dt, q, inp.k_row(t as usize)) * scale;
             probs[j] = s;
             if s > max {
                 max = s;
@@ -137,7 +145,7 @@ pub fn sparse_attention_fused(
         for (j, &t) in indices.iter().enumerate() {
             let p = (probs[j] - max).exp();
             denom += p;
-            simd::axpy(mode, p, inp.v_row(t as usize), o);
+            simd::axpy_wide(mode, dt, p, inp.v_row(t as usize), o);
         }
         simd::scale(mode, o, 1.0 / denom);
     }
@@ -169,6 +177,9 @@ pub struct PrefillTile<'a> {
     pub bt: &'a [u32],
     /// Paged layout: tokens per physical block (0 when contiguous).
     pub block_tokens: usize,
+    /// Storage dtype of the `k`/`v` planes (packed rows for the half
+    /// dtypes, as in [`AttnInputs::kv_dtype`]).
+    pub kv_dtype: KvDtype,
     /// Kernel tier to run the per-row [`dense_attention`] in.
     pub kernels: KernelMode,
 }
@@ -202,6 +213,8 @@ pub fn prefill_tile_attention(tile: &PrefillTile, probs: &mut Vec<f32>, out: &mu
             pos,
             bt: tile.bt,
             block_tokens: tile.block_tokens,
+            kv_dtype: tile.kv_dtype,
+            kernels: tile.kernels,
             side: super::Side::default(),
         };
         dense_attention(tile.kernels, &inp, probs, &mut out[r * ghd..(r + 1) * ghd]);
@@ -209,7 +222,9 @@ pub fn prefill_tile_attention(tile: &PrefillTile, probs: &mut Vec<f32>, out: &mu
 }
 
 /// Exact per-query-head qk scores aggregated over the GQA group with
-/// softmax weighting — used by the ExactTopK oracle selector.
+/// softmax weighting — used by the ExactTopK oracle selector. Always
+/// runs the canonical-order reference dot (widening for half storage),
+/// so the oracle is kernel-mode-independent.
 pub fn exact_group_scores(inp: &AttnInputs, out: &mut Vec<f32>) {
     let scale = 1.0 / (inp.dh as f32).sqrt();
     out.clear();
@@ -217,7 +232,7 @@ pub fn exact_group_scores(inp: &AttnInputs, out: &mut Vec<f32>) {
     for g in 0..inp.group {
         let q = inp.q_row(g);
         for t in 0..inp.s {
-            out[t] += dot(q, inp.k_row(t)) * scale;
+            out[t] += simd::dot_wide(KernelMode::Reference, inp.kv_dtype, q, inp.k_row(t)) * scale;
         }
     }
 }
@@ -249,6 +264,8 @@ mod tests {
             pos: s - 1,
             bt: &[],
             block_tokens: 0,
+            kv_dtype: KvDtype::F32,
+            kernels: KernelMode::default(),
             side: crate::attention::Side::default(),
         }
     }
@@ -443,6 +460,7 @@ mod tests {
                 start,
                 bt: &[],
                 block_tokens: 0,
+                kv_dtype: KvDtype::F32,
                 kernels: KernelMode::Simd,
             };
             let mut probs = Vec::new();
@@ -516,6 +534,76 @@ mod tests {
                 a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
                 "fused paged bits",
             )
+        });
+    }
+
+    /// Half-precision storage invariant: attention over a packed
+    /// bf16/f16 cache is bitwise equal to attention over the *widened*
+    /// f32 copy of that cache (widening is exact and the `*_wide`
+    /// kernels keep the canonical order), and `Simd` stays bit-equal to
+    /// `Reference` per dtype. The quantization itself is the only lossy
+    /// step, bounded in halfkv.rs at the engine level.
+    #[test]
+    fn half_kv_bit_identical_to_widened_f32() {
+        check(30, |rng: &mut Rng| {
+            let dh = 32;
+            let s = 1 + rng.below(60);
+            let group = 1 + rng.below(3);
+            let q = rng.normal_vec(group * dh);
+            let k = rng.normal_vec(s * dh);
+            let v = rng.normal_vec(s * dh);
+            for dt in [KvDtype::Bf16, KvDtype::F16] {
+                let mut pk = vec![0.0f32; dt.elems(s * dh)];
+                let mut pv = vec![0.0f32; dt.elems(s * dh)];
+                simd::pack_row(dt, &k, &mut pk);
+                simd::pack_row(dt, &v, &mut pv);
+                let mut wk = vec![0.0f32; s * dh];
+                let mut wv = vec![0.0f32; s * dh];
+                simd::widen_row(dt, &pk, &mut wk);
+                simd::widen_row(dt, &pv, &mut wv);
+                let f32_inp = make_inputs(&q, &wk, &wv, group, dh, s);
+                let mut half_inp = make_inputs(&q, &pk, &pv, group, dh, s);
+                half_inp.kv_dtype = dt;
+                let mut probs = Vec::new();
+                let mut a = vec![0.0f32; group * dh];
+                let mut b = vec![0.0f32; group * dh];
+                let mut c = vec![0.0f32; group * dh];
+                dense_attention(KernelMode::Reference, &f32_inp, &mut probs, &mut a);
+                dense_attention(KernelMode::Reference, &half_inp, &mut probs, &mut b);
+                dense_attention(KernelMode::Simd, &half_inp, &mut probs, &mut c);
+                prop_assert(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "half dense != widened f32 dense",
+                )?;
+                prop_assert(
+                    b.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "half simd != half reference",
+                )?;
+                let n = 1 + rng.below(s);
+                let idx: Vec<u32> =
+                    rng.choose_distinct(s, n).iter().map(|&i| i as u32).collect();
+                let (mut kb, mut vb) = (Vec::new(), Vec::new());
+                sparse_attention_fused(KernelMode::Simd, &f32_inp, &idx, &mut probs, &mut a);
+                sparse_attention_fused(KernelMode::Simd, &half_inp, &idx, &mut probs, &mut b);
+                sparse_attention_gather(
+                    KernelMode::Simd,
+                    &half_inp,
+                    &idx,
+                    &mut kb,
+                    &mut vb,
+                    &mut probs,
+                    &mut c,
+                );
+                prop_assert(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "half fused != widened f32 fused",
+                )?;
+                prop_assert(
+                    b.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "half gather != half fused",
+                )?;
+            }
+            Ok(())
         });
     }
 

@@ -6,14 +6,26 @@
 //! blocked variant that walks the code cache in L1-sized chunks and a
 //! per-byte scalar variant kept as the Fig. 9 'Simple' baseline.
 //!
+//! The GQA group scorer additionally has explicit-lane vector kernels
+//! (AVX2 `vpshufb` nibble-popcount + `vpsadbw`, NEON `vcnt`) behind the
+//! same [`KernelMode`] dispatch as the float kernels: integer XOR and
+//! byte-count arithmetic has a single possible result, so the vector
+//! paths are exactly equal to [`scores_word`] / the scalar group loop on
+//! every input, and `Reference` (or `HATA_SIMD=scalar`) always falls back
+//! to the scalar loop.
+//!
 //! Score = matching bits = rbit - hamming distance (higher = more similar),
 //! identical to python/compile/kernels/ref.py.
+
+use crate::tensor::simd::{self, KernelMode};
 
 /// 'Simple' baseline: per-byte table-free popcount, one token at a time.
 /// Deliberately naive (the unoptimized PyTorch analog in Fig. 9).
 pub fn scores_scalar(qcode: &[u64], codes: &[u64], rbit: usize, out: &mut Vec<i32>) {
     let words = qcode.len();
+    debug_assert_eq!(codes.len() % words, 0, "ragged codes slice");
     out.clear();
+    out.reserve(codes.len() / words);
     for row in codes.chunks_exact(words) {
         let mut mismatch = 0u32;
         for (a, b) in qcode.iter().zip(row) {
@@ -62,12 +74,18 @@ pub fn scores_word(qcode: &[u64], codes: &[u64], rbit: usize, out: &mut Vec<i32>
 
 /// GQA aggregation: sum the match counts of all query heads in the group
 /// in one pass over the code cache (one cache read serves the group, the
-/// CPU analog of the paper's coalesced shared read).
-pub fn scores_group(qcodes: &[u64], group: usize, codes: &[u64], rbit: usize, out: &mut Vec<i32>) {
-    let words = qcodes.len() / group;
+/// CPU analog of the paper's coalesced shared read). `mode` selects the
+/// scalar reference or the vectorized popcount kernels (exactly equal).
+pub fn scores_group(
+    mode: KernelMode,
+    qcodes: &[u64],
+    group: usize,
+    codes: &[u64],
+    rbit: usize,
+    out: &mut Vec<i32>,
+) {
     out.clear();
-    out.reserve(codes.len() / words);
-    scores_group_into(qcodes, group, codes, rbit, out);
+    scores_group_into(mode, qcodes, group, codes, rbit, out);
 }
 
 /// Appending variant of [`scores_group`]: scores `codes` and pushes onto
@@ -77,6 +95,7 @@ pub fn scores_group(qcodes: &[u64], group: usize, codes: &[u64], rbit: usize, ou
 /// logical score vector — same arithmetic per row, so paged scoring is
 /// bit-identical to scoring the contiguous cache in one call.
 pub fn scores_group_into(
+    mode: KernelMode,
     qcodes: &[u64],
     group: usize,
     codes: &[u64],
@@ -84,6 +103,28 @@ pub fn scores_group_into(
     out: &mut Vec<i32>,
 ) {
     let words = qcodes.len() / group;
+    debug_assert_eq!(codes.len() % words, 0, "ragged codes slice");
+    out.reserve(codes.len() / words);
+    if mode != KernelMode::Reference
+        && simd::lanes_active()
+        && vector_scores_into(qcodes, group, words, codes, rbit, out)
+    {
+        return;
+    }
+    scores_group_ref(qcodes, group, words, codes, rbit, out);
+}
+
+/// The scalar group loop: the bit-identical reference the vector paths
+/// are checked against (integer arithmetic, so "identical" is exact
+/// equality, not a tolerance).
+fn scores_group_ref(
+    qcodes: &[u64],
+    group: usize,
+    words: usize,
+    codes: &[u64],
+    rbit: usize,
+    out: &mut Vec<i32>,
+) {
     for row in codes.chunks_exact(words) {
         let mut match_bits = (group * rbit) as i32;
         for g in 0..group {
@@ -92,6 +133,190 @@ pub fn scores_group_into(
             match_bits -= mismatch as i32;
         }
         out.push(match_bits);
+    }
+}
+
+/// Arch-specific vector group scorer. Returns `false` when no kernel
+/// covers this shape (scalar backend handled by the caller; oversized
+/// groups or unusual word counts on x86) so the caller falls back to
+/// [`scores_group_ref`].
+#[allow(unused_variables, unreachable_code)]
+fn vector_scores_into(
+    qcodes: &[u64],
+    group: usize,
+    words: usize,
+    codes: &[u64],
+    rbit: usize,
+    out: &mut Vec<i32>,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if group > x86::MAX_GROUP {
+            return false;
+        }
+        match words {
+            2 => unsafe { x86::scores_group_w2_avx2(qcodes, group, codes, rbit, out) },
+            4 => unsafe { x86::scores_group_w4_avx2(qcodes, group, codes, rbit, out) },
+            _ => return false,
+        }
+        return true;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if words >= 2 {
+            unsafe { neon::scores_group_neon(qcodes, group, words, codes, rbit, out) };
+            return true;
+        }
+        return false;
+    }
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 group scorer: XOR the 128/256-bit code row against each
+    //! query head's code, popcount bytes with the `vpshufb` nibble
+    //! lookup, and horizontally sum bytes with `vpsadbw`. All integer
+    //! ops, so the result is exactly the scalar loop's.
+
+    use core::arch::x86_64::*;
+
+    /// Per-head query codes are staged in a fixed register array;
+    /// larger groups (not produced by any supported model config) fall
+    /// back to the scalar loop.
+    pub(super) const MAX_GROUP: usize = 8;
+
+    /// Byte popcount: nibble LUT shuffle, low + high halves.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_bytes(v: __m256i, lut: __m256i, low: __m256i) -> __m256i {
+        let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(v, low));
+        let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(v), low));
+        _mm256_add_epi8(lo, hi)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn nibble_lut() -> __m256i {
+        _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3,
+            2, 3, 3, 4,
+        )
+    }
+
+    /// words == 2 (rbit <= 128): two 16-byte code rows per 256-bit
+    /// chunk, query codes broadcast to both lanes; `vpsadbw` leaves the
+    /// per-row mismatch in u64 lanes (0+1 = row r, 2+3 = row r+1).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scores_group_w2_avx2(
+        qcodes: &[u64],
+        group: usize,
+        codes: &[u64],
+        rbit: usize,
+        out: &mut Vec<i32>,
+    ) {
+        let base = (group * rbit) as i32;
+        let zero = _mm256_setzero_si256();
+        let (lut, low) = (nibble_lut(), _mm256_set1_epi8(0x0F));
+        let mut qv = [_mm_setzero_si128(); MAX_GROUP];
+        for (g, q) in qv.iter_mut().enumerate().take(group) {
+            *q = _mm_loadu_si128(qcodes.as_ptr().add(g * 2) as *const __m128i);
+        }
+        let n = codes.len() / 2;
+        let pc = codes.as_ptr();
+        let mut r = 0;
+        while r + 2 <= n {
+            let rows = _mm256_loadu_si256(pc.add(r * 2) as *const __m256i);
+            let mut acc = zero;
+            for q in qv.iter().take(group) {
+                let x = _mm256_xor_si256(rows, _mm256_broadcastsi128_si256(*q));
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(popcount_bytes(x, lut, low), zero));
+            }
+            let mut lanes = [0u64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            out.push(base - (lanes[0] + lanes[1]) as i32);
+            out.push(base - (lanes[2] + lanes[3]) as i32);
+            r += 2;
+        }
+        if r < n {
+            let row = &codes[r * 2..r * 2 + 2];
+            let mut mismatch = 0u32;
+            for g in 0..group {
+                let q = &qcodes[g * 2..g * 2 + 2];
+                mismatch += (q[0] ^ row[0]).count_ones() + (q[1] ^ row[1]).count_ones();
+            }
+            out.push(base - mismatch as i32);
+        }
+    }
+
+    /// words == 4 (rbit <= 256): one 32-byte code row per 256-bit load.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scores_group_w4_avx2(
+        qcodes: &[u64],
+        group: usize,
+        codes: &[u64],
+        rbit: usize,
+        out: &mut Vec<i32>,
+    ) {
+        let base = (group * rbit) as i32;
+        let zero = _mm256_setzero_si256();
+        let (lut, low) = (nibble_lut(), _mm256_set1_epi8(0x0F));
+        let mut qv = [_mm256_setzero_si256(); MAX_GROUP];
+        for (g, q) in qv.iter_mut().enumerate().take(group) {
+            *q = _mm256_loadu_si256(qcodes.as_ptr().add(g * 4) as *const __m256i);
+        }
+        let n = codes.len() / 4;
+        let pc = codes.as_ptr();
+        for r in 0..n {
+            let row = _mm256_loadu_si256(pc.add(r * 4) as *const __m256i);
+            let mut acc = zero;
+            for q in qv.iter().take(group) {
+                let x = _mm256_xor_si256(row, *q);
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(popcount_bytes(x, lut, low), zero));
+            }
+            let mut lanes = [0u64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            out.push(base - (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as i32);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON group scorer: `veor` + `vcnt` byte popcount + `vaddv`
+    //! horizontal sum per 16-byte chunk (sum <= 128, fits the u8 lane
+    //! reduction). Exactly equal to the scalar loop.
+
+    use core::arch::aarch64::*;
+
+    pub(super) unsafe fn scores_group_neon(
+        qcodes: &[u64],
+        group: usize,
+        words: usize,
+        codes: &[u64],
+        rbit: usize,
+        out: &mut Vec<i32>,
+    ) {
+        let base = (group * rbit) as i32;
+        for row in codes.chunks_exact(words) {
+            let mut mismatch = 0u32;
+            for g in 0..group {
+                let q = &qcodes[g * words..(g + 1) * words];
+                let mut c = 0;
+                while c + 2 <= words {
+                    let x = veorq_u8(
+                        vreinterpretq_u8_u64(vld1q_u64(q.as_ptr().add(c))),
+                        vreinterpretq_u8_u64(vld1q_u64(row.as_ptr().add(c))),
+                    );
+                    mismatch += vaddvq_u8(vcntq_u8(x)) as u32;
+                    c += 2;
+                }
+                if c < words {
+                    mismatch += (q[c] ^ row[c]).count_ones();
+                }
+            }
+            out.push(base - mismatch as i32);
+        }
     }
 }
 
@@ -147,7 +372,7 @@ mod tests {
             let qs = rand_codes(rng, group, words);
             let codes = rand_codes(rng, n, words);
             let mut agg = Vec::new();
-            scores_group(&qs, group, &codes, rbit, &mut agg);
+            scores_group(KernelMode::Simd, &qs, group, &codes, rbit, &mut agg);
             let mut want = vec![0i32; n];
             let mut single = Vec::new();
             for g in 0..group {
@@ -172,13 +397,38 @@ mod tests {
             let qs = rand_codes(rng, group, words);
             let codes = rand_codes(rng, n, words);
             let mut whole = Vec::new();
-            scores_group(&qs, group, &codes, rbit, &mut whole);
+            scores_group(KernelMode::Simd, &qs, group, &codes, rbit, &mut whole);
             let bt = 1 + rng.below(7);
             let mut blocked = Vec::new();
             for chunk in codes.chunks(bt * words) {
-                scores_group_into(&qs, group, chunk, rbit, &mut blocked);
+                scores_group_into(KernelMode::Simd, &qs, group, chunk, rbit, &mut blocked);
             }
             prop_assert(whole == blocked, "blockwise != one-shot")
+        });
+    }
+
+    /// The vectorized group scorers must be *exactly* equal to the
+    /// scalar reference — integer arithmetic leaves no tolerance — for
+    /// every word count (vector and fallback shapes), group size
+    /// (including past the x86 register-staging cap) and row-count
+    /// parity (odd tails in the two-rows-per-chunk kernel).
+    #[test]
+    fn vectorized_group_scorer_equals_reference() {
+        check(80, |rng: &mut Rng| {
+            let words = [1, 2, 3, 4][rng.below(4)];
+            let rbit = words * 64 - rng.below(5);
+            let group = 1 + rng.below(10);
+            let n = 1 + rng.below(40);
+            let qs = rand_codes(rng, group, words);
+            let codes = rand_codes(rng, n, words);
+            let mut reference = Vec::new();
+            scores_group(KernelMode::Reference, &qs, group, &codes, rbit, &mut reference);
+            for mode in [KernelMode::Simd, KernelMode::SimdFma] {
+                let mut got = Vec::new();
+                scores_group(mode, &qs, group, &codes, rbit, &mut got);
+                prop_assert(got == reference, "vectorized scorer != reference")?;
+            }
+            Ok(())
         });
     }
 

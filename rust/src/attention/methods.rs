@@ -18,6 +18,7 @@ use super::hashenc::encode_fused_blocked;
 use super::topk::{topk_counting, topk_quickselect};
 use super::{AttnInputs, MethodState, Scratch, Selector};
 use crate::tensor::ops::dot;
+use crate::tensor::simd::{self, KernelMode};
 
 // --------------------------------------------------------------------- HATA
 
@@ -36,7 +37,7 @@ impl Selector for HataSelector {
         }
         if inp.bt.is_empty() {
             let rows = &inp.codes[..inp.s * inp.words];
-            scores_group(&sc.qcodes, inp.group, rows, inp.rbit, &mut sc.iscores);
+            scores_group(inp.kernels, &sc.qcodes, inp.group, rows, inp.rbit, &mut sc.iscores);
         } else {
             // paged cache: the code rows of one logical block are
             // contiguous inside their physical block, so score block by
@@ -50,7 +51,8 @@ impl Selector for HataSelector {
                 let n = bt.min(inp.s - t);
                 let r = inp.phys_row(t);
                 let rows = &inp.codes[r * inp.words..(r + n) * inp.words];
-                scores_group_into(&sc.qcodes, inp.group, rows, inp.rbit, &mut sc.iscores);
+                let sg = &mut sc.iscores;
+                scores_group_into(inp.kernels, &sc.qcodes, inp.group, rows, inp.rbit, sg);
                 t += n;
             }
         }
@@ -386,7 +388,10 @@ pub fn snapkv_prefill(
             let causal_end = qi + 1;
             let mut max = f32::NEG_INFINITY;
             for (t, l) in logits.iter_mut().enumerate().take(causal_end) {
-                *l = dot(q, inp.k_row(t)) * scale;
+                // Reference tier: the prefill observation pass must rank
+                // identically on every backend (the keep-set is sticky
+                // state, so any divergence here outlives the step).
+                *l = simd::dot_wide(KernelMode::Reference, inp.kv_dtype, q, inp.k_row(t)) * scale;
                 if *l > max {
                     max = *l;
                 }
@@ -420,6 +425,7 @@ mod tests {
     use super::*;
     use crate::attention::hashenc::encode_rows;
     use crate::attention::Side;
+    use crate::tensor::simd::KvDtype;
     use crate::util::rng::Rng;
 
     fn base_inputs<'a>(
@@ -443,6 +449,8 @@ mod tests {
             pos: s - 1,
             bt: &[],
             block_tokens: 0,
+            kv_dtype: KvDtype::F32,
+            kernels: KernelMode::default(),
             side: Side::default(),
         }
     }

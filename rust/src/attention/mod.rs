@@ -32,6 +32,8 @@ pub mod hashenc;
 pub mod methods;
 pub mod topk;
 
+use crate::tensor::simd::{KernelMode, KvDtype};
+
 /// Everything a selector may look at for one (layer, kv-head) decode step.
 ///
 /// `q` holds the `group` query-head rows sharing this KV head (GQA scores
@@ -71,6 +73,15 @@ pub struct AttnInputs<'a> {
     pub bt: &'a [u32],
     /// Paged layout: tokens per physical block (0 when contiguous).
     pub block_tokens: usize,
+    /// Storage dtype of the `k`/`v` planes. Half dtypes store rows
+    /// packed two elements per f32 slot ([`KvDtype::elems`]); the row
+    /// accessors return *packed* rows, which the widening kernels in
+    /// [`crate::tensor::simd`] read directly. `codes` and every [`Side`]
+    /// structure stay f32/u64 and are built from pre-quantization keys,
+    /// so selection is dtype-independent.
+    pub kv_dtype: KvDtype,
+    /// Kernel tier the attention kernels and the Hamming scorer run at.
+    pub kernels: KernelMode,
     /// Method-specific side structures maintained by the KV cache.
     pub side: Side<'a>,
 }
@@ -120,16 +131,27 @@ impl<'a> AttnInputs<'a> {
         }
     }
 
-    /// Cached key row of logical token `t`.
-    pub fn k_row(&self, t: usize) -> &'a [f32] {
-        let r = self.phys_row(t);
-        &self.k[r * self.dh..(r + 1) * self.dh]
+    /// f32 storage slots per stored K/V row (`dh` for f32 storage,
+    /// `dh / 2` packed for the half dtypes).
+    #[inline]
+    pub fn kv_elems(&self) -> usize {
+        self.kv_dtype.elems(self.dh)
     }
 
-    /// Cached value row of logical token `t`.
+    /// Cached key row of logical token `t` — *packed* storage form
+    /// (`kv_elems()` long); read it through the `*_wide` kernels.
+    pub fn k_row(&self, t: usize) -> &'a [f32] {
+        let r = self.phys_row(t);
+        let e = self.kv_elems();
+        &self.k[r * e..(r + 1) * e]
+    }
+
+    /// Cached value row of logical token `t` — packed storage form, as
+    /// [`AttnInputs::k_row`].
     pub fn v_row(&self, t: usize) -> &'a [f32] {
         let r = self.phys_row(t);
-        &self.v[r * self.dh..(r + 1) * self.dh]
+        let e = self.kv_elems();
+        &self.v[r * e..(r + 1) * e]
     }
 
     /// Packed code row of logical token `t`.

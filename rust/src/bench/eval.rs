@@ -114,6 +114,8 @@ pub fn fidelity(
                 pos: cache.len() - 1,
                 bt: &[],
                 block_tokens: 0,
+                kv_dtype: cache.kv_dtype,
+                kernels: model.kernels,
                 side: cache.side(li, kv, model.weights.hash_head(li, kv), &model.aux),
             };
             let budget = serve.budget.min(inp.s);

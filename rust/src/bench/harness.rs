@@ -3,6 +3,7 @@
 //! fixture shared by the Fig 5 / Fig 9 benches.
 
 use crate::attention::{AttnInputs, Side};
+use crate::tensor::simd::{KernelMode, KvDtype};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::timer::time_iters;
@@ -154,6 +155,8 @@ impl LayerFixture {
             pos: self.s - 1,
             bt: &[],
             block_tokens: 0,
+            kv_dtype: KvDtype::F32,
+            kernels: KernelMode::default(),
             side: Side {
                 hash_w: &self.hash_w,
                 quest_min: &self.quest_min,

@@ -87,6 +87,26 @@ pub fn roofline_cells(
     vec![fmt(gbs), fmt(roof_gbs), fmt(gflops), fmt(roof_gflops), fmt(pct)]
 }
 
+/// Header labels matching the cells produced by [`int_roofline_cells`].
+pub const INT_ROOFLINE_HEADER: [&str; 5] = ["GB/s", "roof_GB/s", "GOP/s", "roof_GOP/s", "%roof"];
+
+/// Roofline columns for integer/bit-op kernels (the Hamming scorer):
+/// same shape as [`roofline_cells`] with the ALU work read from the
+/// estimate's VPU slot, so XOR+popcount throughput prints as GOP/s next
+/// to its own `simulator::roofline::int_kernel` bound rather than a
+/// GFLOP/s column that would always read zero.
+pub fn int_roofline_cells(
+    est: &crate::simulator::roofline::KernelEstimate,
+    measured_s: f64,
+) -> Vec<String> {
+    let gbs = est.hbm_bytes / measured_s / 1e9;
+    let gops = est.vpu_ops / measured_s / 1e9;
+    let roof_gbs = est.hbm_bytes / est.seconds / 1e9;
+    let roof_gops = est.vpu_ops / est.seconds / 1e9;
+    let pct = 100.0 * est.seconds / measured_s;
+    vec![fmt(gbs), fmt(roof_gbs), fmt(gops), fmt(roof_gops), fmt(pct)]
+}
+
 /// Format a float with sensible precision for table cells.
 pub fn fmt(v: f64) -> String {
     if v.is_nan() {
@@ -148,6 +168,16 @@ mod tests {
         // measured 2x slower -> half the roof
         let slow = roofline_cells(&est, est.seconds * 2.0);
         assert_eq!(slow[4], "50.00");
+    }
+
+    #[test]
+    fn int_roofline_cells_match_header_and_bound() {
+        let dev = crate::simulator::roofline::Device::cpu();
+        let est = crate::simulator::roofline::int_kernel(&dev, 1e9, 1.0);
+        let cells = int_roofline_cells(&est, est.seconds);
+        assert_eq!(cells.len(), INT_ROOFLINE_HEADER.len());
+        assert_eq!(cells[0], cells[1]);
+        assert_eq!(cells[4], "100");
     }
 
     #[test]

@@ -43,7 +43,11 @@ impl ModelConfig {
         self.rbit / 32
     }
 
-    /// Bytes of K+V cache per token (f32).
+    /// Bytes of K+V cache per token at the nominal f32 storage width —
+    /// the figure the *analytical* offload model (`kvcache/offload.rs`)
+    /// prices traffic with. The live tier meters actual stored bytes,
+    /// which scale with `ServeConfig::kv_dtype`
+    /// ([`crate::tensor::simd::KvDtype::bytes`]).
     pub fn kv_bytes_per_token(&self) -> usize {
         2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
     }
@@ -376,6 +380,13 @@ pub struct ServeConfig {
     /// bit-identical vectorized `Simd` default, or the `SimdFma`
     /// fast-math tier (see docs/PERFORMANCE.md §--kernels).
     pub kernels: crate::tensor::simd::KernelMode,
+    /// KV storage dtype (`--kv-dtype`): f32 (default, bit-identical to
+    /// the historical layout) or packed bf16/f16 rows that halve
+    /// attention memory traffic and offload ledger bytes. Hash codes and
+    /// selector side structures always hash the pre-quantization f32
+    /// keys, so top-k selection is dtype-independent (see
+    /// docs/PERFORMANCE.md §--kv-dtype for the accuracy contract).
+    pub kv_dtype: crate::tensor::simd::KvDtype,
 }
 
 impl Default for ServeConfig {
@@ -407,6 +418,7 @@ impl Default for ServeConfig {
             temperature: 0.0,
             seed: 0,
             kernels: crate::tensor::simd::KernelMode::default(),
+            kv_dtype: crate::tensor::simd::KvDtype::F32,
         }
     }
 }

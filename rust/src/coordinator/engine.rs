@@ -162,6 +162,7 @@ impl Engine {
                 cfg.head_dim,
                 cfg.rbit / 64,
                 serve.kv_block,
+                serve.kv_dtype,
             ))
         });
         let tier = match (&store, serve.offload) {

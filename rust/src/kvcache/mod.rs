@@ -39,6 +39,7 @@ use tier::TierController;
 
 use crate::attention::Side;
 use crate::config::{Method, ModelConfig, ServeConfig};
+use crate::tensor::simd::{self, KvDtype};
 use crate::util::rng::Rng;
 
 /// One (layer, kv-head) cache region: K/V rows, the packed key-code
@@ -52,9 +53,12 @@ pub struct HeadCache {
     /// Tokens appended to this head (equals the row count in the
     /// contiguous layout; the append cursor in the paged layout).
     pub tokens: usize,
-    /// Key rows, [len, dh] row-major (contiguous layout only).
+    /// Key rows, [len, kv_elems] row-major in *packed* storage form
+    /// (contiguous layout only): `dh` f32 slots per row for f32 storage,
+    /// `dh / 2` for the packed half dtypes.
     pub k: Vec<f32>,
-    /// Value rows, [len, dh] row-major (contiguous layout only).
+    /// Value rows, [len, kv_elems] row-major, packed as `k` (contiguous
+    /// layout only).
     pub v: Vec<f32>,
     /// Packed key hash codes, rbit/64 words per token (HATA; contiguous
     /// layout only).
@@ -86,6 +90,7 @@ pub struct HeadMut<'a> {
     /// absolute head index (layer * n_kv + kv) — keys the aux tables
     pub head: usize,
     dh: usize,
+    kv_dtype: KvDtype,
     quest_block: usize,
     loki_channels: usize,
     mp_k: usize,
@@ -103,6 +108,11 @@ impl HeadMut<'_> {
     /// and any enabled side structures. `hash_w` is the trained
     /// [dh, rbit] matrix for this head; `aux` carries the per-model
     /// method constants (Loki PCA, MagicPIG planes).
+    ///
+    /// `krow`/`vrow` are always logical f32 rows; half storage dtypes
+    /// quantize here (the pipeline's single lossy step). Hash codes and
+    /// every side structure are computed from the *pre-quantization*
+    /// `krow`, so selection is identical across storage dtypes.
     pub fn append(
         &mut self,
         krow: &[f32],
@@ -124,8 +134,8 @@ impl HeadMut<'_> {
             // no other thread touches these rows (kvcache/paged.rs
             // module contract).
             Some(p) => unsafe {
-                p.k_row_mut(t).copy_from_slice(krow);
-                p.v_row_mut(t).copy_from_slice(vrow);
+                simd::pack_row(self.kv_dtype, krow, p.k_row_mut(t));
+                simd::pack_row(self.kv_dtype, vrow, p.v_row_mut(t));
                 if !hash_w.is_empty() {
                     crate::attention::hashenc::encode_fused_blocked_into(
                         krow,
@@ -136,8 +146,8 @@ impl HeadMut<'_> {
                 }
             },
             None => {
-                hc.k.extend_from_slice(krow);
-                hc.v.extend_from_slice(vrow);
+                simd::pack_extend(self.kv_dtype, krow, &mut hc.k);
+                simd::pack_extend(self.kv_dtype, vrow, &mut hc.v);
                 if !hash_w.is_empty() {
                     crate::attention::hashenc::encode_fused_blocked(
                         krow,
@@ -211,8 +221,9 @@ impl HeadMut<'_> {
         let dh = self.dh;
         let rows = krows.len() / stride;
         if self.paged.is_none() {
-            self.hc.k.reserve(rows * dh);
-            self.hc.v.reserve(rows * dh);
+            let e = self.kv_dtype.elems(dh);
+            self.hc.k.reserve(rows * e);
+            self.hc.v.reserve(rows * e);
             if !hash_w.is_empty() {
                 self.hc.codes.reserve(rows * (rbit / 64));
             }
@@ -237,6 +248,7 @@ impl HeadMut<'_> {
                 codes: &self.hc.codes,
                 bt: &[],
                 block_tokens: 0,
+                kv_dtype: self.kv_dtype,
             },
         }
     }
@@ -305,6 +317,7 @@ impl HeadMut<'_> {
 pub struct HeadHandle {
     head: usize,
     dh: usize,
+    kv_dtype: KvDtype,
     quest_block: usize,
     loki_channels: usize,
     mp_k: usize,
@@ -336,6 +349,7 @@ impl HeadHandle {
         HeadMut {
             head: self.head,
             dh: self.dh,
+            kv_dtype: self.kv_dtype,
             quest_block: self.quest_block,
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
@@ -382,7 +396,14 @@ impl HeadHandle {
             Some(p) => p.read(),
             None => {
                 let hc = &*self.hc;
-                HeadRead { k: &hc.k, v: &hc.v, codes: &hc.codes, bt: &[], block_tokens: 0 }
+                HeadRead {
+                    k: &hc.k,
+                    v: &hc.v,
+                    codes: &hc.codes,
+                    bt: &[],
+                    block_tokens: 0,
+                    kv_dtype: self.kv_dtype,
+                }
             }
         }
     }
@@ -418,10 +439,12 @@ pub struct SeqKvCache {
     pub n_layers: usize,
     /// KV heads per layer.
     pub n_kv: usize,
-    /// Per-head dimension of the stored K/V rows.
+    /// Per-head *logical* dimension of the stored K/V rows.
     pub dh: usize,
     /// Packed code words per token (rbit / 64).
     pub words: usize,
+    /// Storage dtype of the K/V rows (`--kv-dtype`).
+    pub kv_dtype: KvDtype,
     len: usize,
     quest_block: usize,
     loki_channels: usize,
@@ -439,11 +462,16 @@ impl SeqKvCache {
         let enable_quest = serve.method == Method::Quest;
         let enable_loki = serve.method == Method::Loki;
         let enable_mp = serve.method == Method::MagicPig;
+        assert!(
+            !serve.kv_dtype.is_half() || cfg.head_dim % 2 == 0,
+            "half kv dtypes need an even head_dim"
+        );
         SeqKvCache {
             n_layers: cfg.n_layers,
             n_kv: cfg.n_kv_heads,
             dh: cfg.head_dim,
             words: cfg.rbit / 64,
+            kv_dtype: serve.kv_dtype,
             len: 0,
             quest_block: if enable_quest { serve.quest_block } else { 0 },
             loki_channels: if enable_loki { serve.loki_channels } else { 0 },
@@ -469,6 +497,7 @@ impl SeqKvCache {
             "store plane count must match the model's (layer, kv-head) grid"
         );
         assert_eq!(store.dh(), cfg.head_dim, "store row width must match head_dim");
+        assert_eq!(store.kv_dtype(), serve.kv_dtype, "store kv dtype must match serve config");
         assert_eq!(cfg.rbit % 64, 0, "paged cache requires rbit % 64 == 0");
         assert_eq!(store.words(), cfg.rbit / 64, "store code width must match rbit");
         let mut cache = Self::new(cfg, serve);
@@ -532,6 +561,7 @@ impl SeqKvCache {
         HeadMut {
             head: h,
             dh: self.dh,
+            kv_dtype: self.kv_dtype,
             quest_block: self.quest_block,
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
@@ -552,6 +582,7 @@ impl SeqKvCache {
     pub fn layer_heads_mut(&mut self, layer: usize) -> Vec<HeadMut<'_>> {
         let (dh, qb, lc, mk, ml, nkv) =
             (self.dh, self.quest_block, self.loki_channels, self.mp_k, self.mp_l, self.n_kv);
+        let dt = self.kv_dtype;
         let base = layer * nkv;
         let paged = &self.paged;
         self.heads[base..base + nkv]
@@ -560,6 +591,7 @@ impl SeqKvCache {
             .map(|(kv, hc)| HeadMut {
                 head: base + kv,
                 dh,
+                kv_dtype: dt,
                 quest_block: qb,
                 loki_channels: lc,
                 mp_k: mk,
@@ -586,6 +618,7 @@ impl SeqKvCache {
     pub fn head_handles(&mut self) -> Vec<HeadHandle> {
         let (dh, qb, lc, mk, ml) =
             (self.dh, self.quest_block, self.loki_channels, self.mp_k, self.mp_l);
+        let dt = self.kv_dtype;
         let paged = &self.paged;
         self.heads
             .iter_mut()
@@ -593,6 +626,7 @@ impl SeqKvCache {
             .map(|(h, hc)| HeadHandle {
                 head: h,
                 dh,
+                kv_dtype: dt,
                 quest_block: qb,
                 loki_channels: lc,
                 mp_k: mk,
@@ -615,6 +649,7 @@ impl SeqKvCache {
         HeadHandle {
             head: h,
             dh: self.dh,
+            kv_dtype: self.kv_dtype,
             quest_block: self.quest_block,
             loki_channels: self.loki_channels,
             mp_k: self.mp_k,
@@ -650,10 +685,11 @@ impl SeqKvCache {
             reserve_total(&mut p.table, tokens.div_ceil(bt) + 1);
         }
         let dh = self.dh;
+        let e = self.kv_dtype.elems(dh);
         for hc in &mut self.heads {
             if !paged {
-                reserve_total(&mut hc.k, tokens * dh);
-                reserve_total(&mut hc.v, tokens * dh);
+                reserve_total(&mut hc.k, tokens * e);
+                reserve_total(&mut hc.v, tokens * e);
                 reserve_total(&mut hc.codes, tokens * self.words);
             }
             if self.quest_block > 0 {
@@ -710,16 +746,17 @@ impl SeqKvCache {
         }
     }
 
-    /// Key rows of one head region, [len, dh] row-major. Contiguous
-    /// layout only (a paged head's rows live in the [`BlockStore`] —
-    /// use [`Self::read_view`] or [`Self::k_logical`]).
+    /// Key rows of one head region, [len, kv_elems] row-major in packed
+    /// storage form. Contiguous layout only (a paged head's rows live in
+    /// the [`BlockStore`] — use [`Self::read_view`] or
+    /// [`Self::k_logical`]; the latter also widens half storage).
     pub fn k_slice(&self, layer: usize, kv: usize) -> &[f32] {
         debug_assert!(self.paged.is_none(), "k_slice on a paged cache; use read_view");
         &self.heads[self.head_index(layer, kv)].k
     }
 
-    /// Value rows of one head region, [len, dh] row-major. Contiguous
-    /// layout only (see [`Self::k_slice`]).
+    /// Value rows of one head region, packed storage form as
+    /// [`Self::k_slice`]. Contiguous layout only.
     pub fn v_slice(&self, layer: usize, kv: usize) -> &[f32] {
         debug_assert!(self.paged.is_none(), "v_slice on a paged cache; use read_view");
         &self.heads[self.head_index(layer, kv)].v
@@ -742,32 +779,41 @@ impl SeqKvCache {
             Some(p) => unsafe { p.read() },
             None => {
                 let hc = &self.heads[h];
-                HeadRead { k: &hc.k, v: &hc.v, codes: &hc.codes, bt: &[], block_tokens: 0 }
+                HeadRead {
+                    k: &hc.k,
+                    v: &hc.v,
+                    codes: &hc.codes,
+                    bt: &[],
+                    block_tokens: 0,
+                    kv_dtype: self.kv_dtype,
+                }
             }
         }
     }
 
-    /// One head's key rows gathered into logical token order —
-    /// layout-independent, for tests and differential comparisons.
+    /// One head's key rows gathered into logical token order and widened
+    /// to f32 — layout- and dtype-independent, for tests and
+    /// differential comparisons.
     pub fn k_logical(&self, layer: usize, kv: usize) -> Vec<f32> {
         let rd = self.read_view(layer, kv);
-        let dh = self.dh;
-        let mut out = Vec::with_capacity(self.len * dh);
+        let e = self.kv_dtype.elems(self.dh);
+        let mut out = Vec::with_capacity(self.len * self.dh);
         for t in 0..self.len {
             let r = rd.row(t);
-            out.extend_from_slice(&rd.k[r * dh..(r + 1) * dh]);
+            simd::widen_extend(self.kv_dtype, &rd.k[r * e..(r + 1) * e], &mut out);
         }
         out
     }
 
-    /// One head's value rows in logical token order (see [`Self::k_logical`]).
+    /// One head's value rows in logical token order, widened to f32 (see
+    /// [`Self::k_logical`]).
     pub fn v_logical(&self, layer: usize, kv: usize) -> Vec<f32> {
         let rd = self.read_view(layer, kv);
-        let dh = self.dh;
-        let mut out = Vec::with_capacity(self.len * dh);
+        let e = self.kv_dtype.elems(self.dh);
+        let mut out = Vec::with_capacity(self.len * self.dh);
         for t in 0..self.len {
             let r = rd.row(t);
-            out.extend_from_slice(&rd.v[r * dh..(r + 1) * dh]);
+            simd::widen_extend(self.kv_dtype, &rd.v[r * e..(r + 1) * e], &mut out);
         }
         out
     }
@@ -897,6 +943,7 @@ impl SeqKvCache {
             n_kv: self.n_kv,
             dh: self.dh,
             words: self.words,
+            kv_dtype: self.kv_dtype,
             len: self.len,
             quest_block: self.quest_block,
             loki_channels: self.loki_channels,
@@ -1192,7 +1239,8 @@ mod tests {
     ) -> (pool::KvPool, Arc<BlockStore>, SeqKvCache) {
         let pool = pool::KvPool::with_block(64 * bt, bt);
         let planes = cfg.n_layers * cfg.n_kv_heads;
-        let store = Arc::new(BlockStore::new(planes, cfg.head_dim, cfg.rbit / 64, bt));
+        let store =
+            Arc::new(BlockStore::new(planes, cfg.head_dim, cfg.rbit / 64, bt, serve.kv_dtype));
         let cache = SeqKvCache::new_paged(cfg, serve, Arc::clone(&store));
         (pool, store, cache)
     }
@@ -1260,6 +1308,54 @@ mod tests {
             let flat_rd = flat.read_view(0, 0);
             assert!(flat_rd.bt.is_empty());
             assert_eq!(flat_rd.row(5), 5);
+        }
+    }
+
+    #[test]
+    fn half_dtype_append_quantizes_once_and_matches_across_layouts() {
+        // contiguous and paged half-precision caches must hold the same
+        // quantized rows, codes must come from the pre-quantization f32
+        // keys (== the f32 run's codes), and re-quantizing the widened
+        // rows must be the identity (quantize-once contract)
+        for dtype in [KvDtype::Bf16, KvDtype::F16] {
+            let (cfg, mut serve) = cfg_serve(Method::Hata);
+            serve.kv_dtype = dtype;
+            let serve_f32 = ServeConfig { method: Method::Hata, ..Default::default() };
+            let aux = MethodAux::default();
+            let hash_w = vec![0.5; cfg.head_dim * cfg.rbit];
+            let mut full = SeqKvCache::new(&cfg, &serve_f32);
+            let mut flat = SeqKvCache::new(&cfg, &serve);
+            let (mut pool, store, mut paged) = paged_fixture(&cfg, &serve, 4);
+            for t in 0..11 {
+                grow_synced(&mut pool, &store, &mut paged, 3, 1);
+                let val = (t as f32).sin() * 3.0;
+                append_token(&mut full, &cfg, &aux, &hash_w, val);
+                append_token(&mut flat, &cfg, &aux, &hash_w, val);
+                append_token(&mut paged, &cfg, &aux, &hash_w, val);
+            }
+            // packed footprint is half the f32 one
+            assert_eq!(flat.heads[0].k.len() * 2, full.heads[0].k.len(), "{dtype:?}");
+            for layer in 0..cfg.n_layers {
+                for kv in 0..cfg.n_kv_heads {
+                    let fk = flat.k_logical(layer, kv);
+                    assert_eq!(fk, paged.k_logical(layer, kv), "{dtype:?}");
+                    assert_eq!(flat.v_logical(layer, kv), paged.v_logical(layer, kv), "{dtype:?}");
+                    // codes hash pre-quantization keys: identical to f32
+                    assert_eq!(
+                        flat.codes_slice(layer, kv),
+                        &full.codes_logical(layer, kv)[..],
+                        "{dtype:?}"
+                    );
+                    // widened rows re-quantize to the same stored bits
+                    let mut requant = Vec::new();
+                    for row in fk.chunks_exact(cfg.head_dim) {
+                        simd::pack_extend(dtype, row, &mut requant);
+                    }
+                    let stored = &flat.heads[flat.head_index(layer, kv)].k;
+                    let eq = requant.iter().zip(stored).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(eq, "{dtype:?} widen/requantize must be the identity");
+                }
+            }
         }
     }
 

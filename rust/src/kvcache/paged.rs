@@ -32,15 +32,18 @@
 use std::cell::UnsafeCell;
 
 use super::tier::TierController;
+use crate::tensor::simd::KvDtype;
 
 /// Unified read view of one (layer, kv-head) cache plane: either a
 /// sequence's contiguous region (`bt` empty, rows are token-indexed) or
 /// the shared paged plane plus the sequence's block table. Everything a
 /// reader needs to resolve logical token rows, in either layout.
 pub struct HeadRead<'a> {
-    /// Key rows, `[rows, dh]` row-major (whole plane when paged).
+    /// Key rows, `[rows, kv_elems]` row-major in *packed* storage form
+    /// (whole plane when paged): `dh` f32 slots per row for f32 storage,
+    /// `dh / 2` slots holding two half-precision values each otherwise.
     pub k: &'a [f32],
-    /// Value rows, `[rows, dh]` row-major.
+    /// Value rows, `[rows, kv_elems]` row-major, packed as `k`.
     pub v: &'a [f32],
     /// Packed key-code words, `[rows, words]`.
     pub codes: &'a [u64],
@@ -49,6 +52,8 @@ pub struct HeadRead<'a> {
     pub bt: &'a [u32],
     /// Tokens per physical block (0 in the contiguous layout).
     pub block_tokens: usize,
+    /// Storage dtype of the `k`/`v` rows.
+    pub kv_dtype: KvDtype,
 }
 
 impl HeadRead<'_> {
@@ -81,7 +86,10 @@ pub struct PagedRef {
     codes_len: usize,
     table: *const u32,
     table_len: usize,
-    dh: usize,
+    /// f32 storage slots per K/V row (`dh` for f32, `dh / 2` packed for
+    /// the half dtypes).
+    kv_elems: usize,
+    kv_dtype: KvDtype,
     words: usize,
     block_tokens: usize,
     /// (layer, kv-head) plane index this ref was captured for.
@@ -102,6 +110,12 @@ impl PagedRef {
     #[inline]
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// Storage dtype of the K/V rows this ref addresses.
+    #[inline]
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 
     /// Attach a residency-tier controller (done by `SeqKvCache` when the
@@ -210,7 +224,9 @@ impl PagedRef {
         b * self.block_tokens + t % self.block_tokens
     }
 
-    /// Mutable K row of logical token `t`.
+    /// Mutable K row of logical token `t` — *packed* storage form
+    /// (`kv_elems` f32 slots; write half dtypes through
+    /// [`crate::tensor::simd::pack_row`]).
     ///
     /// # Safety
     /// The caller must own token `t`'s block exclusively (its own
@@ -220,19 +236,20 @@ impl PagedRef {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn k_row_mut<'a>(&self, t: usize) -> &'a mut [f32] {
         let r = self.phys_row(t);
-        debug_assert!((r + 1) * self.dh <= self.kv_len);
-        std::slice::from_raw_parts_mut(self.k.add(r * self.dh), self.dh)
+        debug_assert!((r + 1) * self.kv_elems <= self.kv_len);
+        std::slice::from_raw_parts_mut(self.k.add(r * self.kv_elems), self.kv_elems)
     }
 
-    /// Mutable V row of logical token `t`.
+    /// Mutable V row of logical token `t` — packed storage form, as
+    /// [`PagedRef::k_row_mut`].
     ///
     /// # Safety
     /// As for [`PagedRef::k_row_mut`].
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn v_row_mut<'a>(&self, t: usize) -> &'a mut [f32] {
         let r = self.phys_row(t);
-        debug_assert!((r + 1) * self.dh <= self.kv_len);
-        std::slice::from_raw_parts_mut(self.v.add(r * self.dh), self.dh)
+        debug_assert!((r + 1) * self.kv_elems <= self.kv_len);
+        std::slice::from_raw_parts_mut(self.v.add(r * self.kv_elems), self.kv_elems)
     }
 
     /// Mutable packed-code row of logical token `t`.
@@ -260,6 +277,7 @@ impl PagedRef {
             codes: std::slice::from_raw_parts(self.codes, self.codes_len),
             bt: std::slice::from_raw_parts(self.table, self.table_len),
             block_tokens: self.block_tokens,
+            kv_dtype: self.kv_dtype,
         }
     }
 }
@@ -280,6 +298,9 @@ struct Planes {
 pub struct BlockStore {
     n_planes: usize,
     dh: usize,
+    /// f32 storage slots per K/V row ([`KvDtype::elems`] of `dh`).
+    kv_elems: usize,
+    kv_dtype: KvDtype,
     words: usize,
     block_tokens: usize,
     inner: UnsafeCell<Planes>,
@@ -295,14 +316,23 @@ unsafe impl Sync for BlockStore {}
 
 impl BlockStore {
     /// Empty store for `n_planes` (layer, kv-head) planes of `dh`-wide
-    /// K/V rows and `words` packed code words per token, in blocks of
-    /// `block_tokens` tokens. Planes grow on demand via
-    /// [`BlockStore::ensure_blocks`].
-    pub fn new(n_planes: usize, dh: usize, words: usize, block_tokens: usize) -> Self {
+    /// K/V rows stored as `kv_dtype` and `words` packed code words per
+    /// token, in blocks of `block_tokens` tokens. Planes grow on demand
+    /// via [`BlockStore::ensure_blocks`].
+    pub fn new(
+        n_planes: usize,
+        dh: usize,
+        words: usize,
+        block_tokens: usize,
+        kv_dtype: KvDtype,
+    ) -> Self {
         assert!(block_tokens > 0, "block_tokens must be positive");
+        assert!(!kv_dtype.is_half() || dh % 2 == 0, "half kv dtypes need an even head_dim");
         BlockStore {
             n_planes,
             dh,
+            kv_elems: kv_dtype.elems(dh),
+            kv_dtype,
             words,
             block_tokens,
             inner: UnsafeCell::new(Planes {
@@ -319,9 +349,21 @@ impl BlockStore {
         self.block_tokens
     }
 
-    /// Per-head row width of the stored K/V rows.
+    /// Per-head *logical* row width of the stored K/V rows (f32 values a
+    /// row widens to, independent of storage dtype).
     pub fn dh(&self) -> usize {
         self.dh
+    }
+
+    /// f32 storage slots per K/V row (`dh` for f32 storage, `dh / 2`
+    /// packed for the half dtypes) — the plane row stride.
+    pub fn kv_elems(&self) -> usize {
+        self.kv_elems
+    }
+
+    /// Storage dtype of the K/V planes.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 
     /// Packed code words per token.
@@ -356,8 +398,8 @@ impl BlockStore {
         }
         let bt = self.block_tokens;
         for p in 0..self.n_planes {
-            planes.k[p].resize(n * bt * self.dh, 0.0);
-            planes.v[p].resize(n * bt * self.dh, 0.0);
+            planes.k[p].resize(n * bt * self.kv_elems, 0.0);
+            planes.v[p].resize(n * bt * self.kv_elems, 0.0);
             planes.codes[p].resize(n * bt * self.words, 0u64);
         }
         planes.cap_blocks = n;
@@ -382,7 +424,8 @@ impl BlockStore {
             codes_len: planes.codes[plane].len(),
             table: table.as_ptr(),
             table_len: table.len(),
-            dh: self.dh,
+            kv_elems: self.kv_elems,
+            kv_dtype: self.kv_dtype,
             words: self.words,
             block_tokens: self.block_tokens,
             plane,
@@ -403,7 +446,7 @@ impl BlockStore {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn block_kv_mut(&self, plane: usize, block: u32) -> (&mut [f32], &mut [f32]) {
         let planes = &mut *self.inner.get();
-        let n = self.block_tokens * self.dh;
+        let n = self.block_tokens * self.kv_elems;
         let off = block as usize * n;
         let k = planes.k[plane][off..off + n].as_mut_ptr();
         let v = planes.v[plane][off..off + n].as_mut_ptr();
@@ -420,9 +463,9 @@ impl BlockStore {
     pub unsafe fn copy_block(&self, src: u32, dst: u32) {
         let planes = &mut *self.inner.get();
         let bt = self.block_tokens;
+        let e = self.kv_elems;
         for p in 0..self.n_planes {
-            let (s, d, n) =
-                (src as usize * bt * self.dh, dst as usize * bt * self.dh, bt * self.dh);
+            let (s, d, n) = (src as usize * bt * e, dst as usize * bt * e, bt * e);
             planes.k[p].copy_within(s..s + n, d);
             planes.v[p].copy_within(s..s + n, d);
             let (s, d, n) =
@@ -439,7 +482,8 @@ impl BlockStore {
         // between passes (no concurrent writer), per the module contract.
         let planes = unsafe { &*self.inner.get() };
         let bt = self.block_tokens;
-        let (sa, sb, n) = (a as usize * bt * self.dh, b as usize * bt * self.dh, bt * self.dh);
+        let e = self.kv_elems;
+        let (sa, sb, n) = (a as usize * bt * e, b as usize * bt * e, bt * e);
         let (ca, cb, m) =
             (a as usize * bt * self.words, b as usize * bt * self.words, bt * self.words);
         for p in 0..self.n_planes {
@@ -464,7 +508,7 @@ mod tests {
 
     #[test]
     fn ensure_blocks_grows_and_zero_fills() {
-        let store = BlockStore::new(2, 4, 2, 8);
+        let store = BlockStore::new(2, 4, 2, 8, KvDtype::F32);
         assert_eq!(store.cap_blocks(), 0);
         unsafe { store.ensure_blocks(3) };
         assert_eq!(store.cap_blocks(), 3);
@@ -484,7 +528,7 @@ mod tests {
 
     #[test]
     fn paged_writes_land_at_table_rows() {
-        let store = BlockStore::new(1, 2, 1, 4);
+        let store = BlockStore::new(1, 2, 1, 4, KvDtype::F32);
         unsafe { store.ensure_blocks(2) };
         let table = [1u32, 0u32]; // logical blocks swapped
         let r = store.head_ref(0, &table);
@@ -502,7 +546,7 @@ mod tests {
 
     #[test]
     fn copy_block_and_equality() {
-        let store = BlockStore::new(2, 2, 1, 4);
+        let store = BlockStore::new(2, 2, 1, 4, KvDtype::F32);
         unsafe { store.ensure_blocks(3) };
         let table = [0u32];
         let r = store.head_ref(0, &table);
@@ -517,5 +561,29 @@ mod tests {
         assert!(store.blocks_equal(1, 1));
         // out-of-range ids compare unequal instead of panicking
         assert!(!store.blocks_equal(0, 9));
+    }
+
+    #[test]
+    fn half_dtype_planes_use_packed_strides() {
+        let store = BlockStore::new(2, 4, 1, 8, KvDtype::Bf16);
+        assert_eq!(store.dh(), 4);
+        assert_eq!(store.kv_elems(), 2);
+        unsafe { store.ensure_blocks(3) };
+        let table = [2u32, 0u32];
+        let r = store.head_ref(1, &table);
+        let rd = unsafe { r.read() };
+        // half the f32 plane footprint for the same token capacity
+        assert_eq!(rd.k.len(), 3 * 8 * 2);
+        assert_eq!(rd.kv_dtype, KvDtype::Bf16);
+        // rows are kv_elems long and land at packed strides
+        unsafe {
+            assert_eq!(r.k_row_mut(0).len(), 2);
+            r.k_row_mut(0).copy_from_slice(&[1.0, 2.0]); // phys row 16
+        }
+        let rd = unsafe { r.read() };
+        assert_eq!(&rd.k[2 * 8 * 2..2 * 8 * 2 + 2], &[1.0, 2.0]);
+        // CoW copy moves packed rows intact
+        unsafe { store.copy_block(2, 1) };
+        assert!(store.blocks_equal(2, 1));
     }
 }

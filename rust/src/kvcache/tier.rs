@@ -85,8 +85,10 @@ struct BlockState {
 
 struct TierInner {
     blocks: Vec<BlockState>,
-    /// Slow-tier K arena, `[plane][block * bt * dh ..]` — same indexing
-    /// as the device plane so spill/fetch are straight row copies.
+    /// Slow-tier K arena, `[plane][block * bt * kv_elems ..]` — same
+    /// packed indexing as the device plane so spill/fetch are straight
+    /// row copies of the stored (possibly half-precision) bits, and all
+    /// byte accounting scales with the storage dtype automatically.
     slow_k: Vec<Vec<f32>>,
     /// Slow-tier V arena.
     slow_v: Vec<Vec<f32>>,
@@ -146,11 +148,11 @@ impl TierController {
                 last_touch: inner.step,
             });
         }
-        let (bt, dh) = (self.store.block_tokens(), self.store.dh());
+        let (bt, e) = (self.store.block_tokens(), self.store.kv_elems());
         for p in 0..n_planes {
-            if inner.slow_k[p].len() < n * bt * dh {
-                inner.slow_k[p].resize(n * bt * dh, 0.0);
-                inner.slow_v[p].resize(n * bt * dh, 0.0);
+            if inner.slow_k[p].len() < n * bt * e {
+                inner.slow_k[p].resize(n * bt * e, 0.0);
+                inner.slow_v[p].resize(n * bt * e, 0.0);
             }
         }
     }
@@ -198,8 +200,8 @@ impl TierController {
     pub fn fetch_blocks(&self, plane: usize, blocks: &[u32], prefetch: bool) {
         let mut g = self.inner.lock().unwrap();
         let inner = &mut *g;
-        let (bt, dh) = (self.store.block_tokens(), self.store.dh());
-        let row_elems = bt * dh;
+        let (bt, e) = (self.store.block_tokens(), self.store.kv_elems());
+        let row_elems = bt * e;
         let t0 = Instant::now();
         let mut missing = 0u64;
         for &b in blocks {
@@ -271,8 +273,7 @@ impl TierController {
             return;
         }
         inner.cand_scratch.sort_unstable();
-        let (bt, dh) = (self.store.block_tokens(), self.store.dh());
-        let row_elems = bt * dh;
+        let row_elems = self.store.block_tokens() * self.store.kv_elems();
         let t0 = Instant::now();
         let mut evicted = 0usize;
         for i in 0..inner.cand_scratch.len() {
@@ -316,9 +317,10 @@ impl TierController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::simd::KvDtype;
 
     fn setup(n_planes: usize, blocks: usize) -> (Arc<BlockStore>, TierController) {
-        let store = Arc::new(BlockStore::new(n_planes, 2, 1, 4));
+        let store = Arc::new(BlockStore::new(n_planes, 2, 1, 4, KvDtype::F32));
         unsafe { store.ensure_blocks(blocks) };
         let tier = TierController::new(store.clone(), PcieModel::gen4_x16());
         tier.ensure_capacity(blocks);
@@ -407,5 +409,31 @@ mod tests {
         assert_eq!(s.demand_fetches, 0);
         assert_eq!(s.fetch.transfers, 0);
         assert_eq!(s.fetch.bytes, 0);
+    }
+
+    #[test]
+    fn half_dtype_spill_fetch_halves_ledger_bytes_and_round_trips() {
+        // same block geometry, half storage: spill + fetch move exactly
+        // half the bytes, and the stored bits survive the round trip
+        let run = |dt: KvDtype| {
+            let store = Arc::new(BlockStore::new(1, 2, 1, 4, dt));
+            unsafe { store.ensure_blocks(2) };
+            let tier = TierController::new(store.clone(), PcieModel::gen4_x16());
+            tier.ensure_capacity(2);
+            fill_block(&store, 0, 0, 3.0);
+            tier.evict_to_budget(0, &[0, 1], &[]);
+            tier.fetch_blocks(0, &[0, 1], false);
+            (tier.stats(), read_first(&store, 0, 0))
+        };
+        let (full, _) = run(KvDtype::F32);
+        let (half, restored) = run(KvDtype::Bf16);
+        assert!(full.evict.bytes > 0);
+        assert_eq!(half.evict.bytes * 2, full.evict.bytes, "evict bytes must halve");
+        assert_eq!(half.fetch.bytes * 2, full.fetch.bytes, "fetch bytes must halve");
+        assert_eq!(half.evictions, full.evictions);
+        assert_eq!(half.demand_fetches, full.demand_fetches);
+        // spill/fetch are raw copies of the packed plane, so the stored
+        // bits come back exactly as written
+        assert_eq!(restored, 3.0);
     }
 }

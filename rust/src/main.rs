@@ -21,7 +21,7 @@ use hata::coordinator::request::Request;
 use hata::coordinator::router::{Policy, Router};
 use hata::kvcache::MethodAux;
 use hata::model::{tokenizer, weights::Weights, Model};
-use hata::tensor::simd::KernelMode;
+use hata::tensor::simd::{KernelMode, KvDtype};
 use hata::util::cli::Args;
 use hata::util::rng::Rng;
 use hata::util::stats::Summary;
@@ -30,7 +30,7 @@ const FLAGS: &[&str] = &[
     "model", "method", "budget", "ctx", "samples", "seed", "table", "fig",
     "requests", "workers", "threads", "temperature", "max-new", "prompt",
     "artifacts", "rbit", "verbose!", "random-weights!", "out", "prefill-tile",
-    "exec", "graph-cache", "kernels", "kv-block", "paged!", "offload!",
+    "exec", "graph-cache", "kernels", "kv-block", "kv-dtype", "paged!", "offload!",
     "offload-budget", "prefetch-depth", "max-concurrent",
     "waiting-served-ratio", "prefill-chunk-budget",
 ];
@@ -98,6 +98,13 @@ const USAGE: &str = "usage: hata <serve|generate|eval|pjrt|info> [flags]
                     runtime AVX2/NEON dispatch, bit-identical to
                     reference) | simd-fma (fast-math FMA + poly exp,
                     ULP-bounded; see docs/PERFORMANCE.md)
+  --kv-dtype D      KV storage dtype: f32 (default, bit-identical to the
+                    historical layout) | bf16 | f16 — packed half rows
+                    halve attention memory traffic and offload bytes;
+                    hash codes are computed from pre-quantization keys,
+                    so top-k selection matches the f32 run exactly and
+                    only attention values carry bounded rounding error
+                    (docs/PERFORMANCE.md)
   --paged           store KV in fixed-size physical blocks behind
                     per-sequence block tables: copy-on-write prefix
                     sharing + cheap preempt/resume, bit-identical to
@@ -169,6 +176,8 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         .context("bad --graph-cache (expected on|off)")?;
     let kernels =
         KernelMode::parse(&args.str("kernels", base.kernels.name())).context("bad --kernels")?;
+    let kv_dtype =
+        KvDtype::parse(&args.str("kv-dtype", base.kv_dtype.name())).context("bad --kv-dtype")?;
     Ok(ServeConfig {
         method,
         budget: args.usize("budget", 64)?,
@@ -179,6 +188,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         temperature: args.f64("temperature", 0.0)? as f32,
         seed: args.u64("seed", 0)?,
         kernels,
+        kv_dtype,
         kv_block: args.usize("kv-block", base.kv_block)?,
         paged: args.flag("paged") || args.flag("offload"),
         offload: args.flag("offload"),

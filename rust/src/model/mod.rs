@@ -665,6 +665,8 @@ impl Model {
             pos: w.pos,
             bt: rd.bt,
             block_tokens: rd.block_tokens,
+            kv_dtype: rd.kv_dtype,
+            kernels: self.kernels,
             side: w.head.side(w.hash_w, &self.aux),
         };
         let use_dense = selector.is_none()
@@ -1322,6 +1324,8 @@ impl Model {
                 pos: cache.len() - 1,
                 bt: rd.bt,
                 block_tokens: rd.block_tokens,
+                kv_dtype: rd.kv_dtype,
+                kernels: self.kernels,
                 side: crate::attention::Side::default(),
             };
             let mut st = MethodState::default();
@@ -1430,6 +1434,7 @@ impl Model {
                                 start,
                                 bt: rd.bt,
                                 block_tokens: rd.block_tokens,
+                                kv_dtype: rd.kv_dtype,
                                 kernels: self.kernels,
                             },
                             out,
@@ -1656,6 +1661,7 @@ impl Model {
                     start: *start,
                     bt: rd.bt,
                     block_tokens: rd.block_tokens,
+                    kv_dtype: rd.kv_dtype,
                     kernels: self.kernels,
                 };
                 prefill_tile_attention(&tile, &mut ws.sel.probs, unsafe { out.get() });

@@ -107,6 +107,28 @@ pub fn float_kernel(dev: &Device, hbm_bytes: f64, flops: f64) -> KernelEstimate 
     finish(dev, hbm_bytes, flops, 0.0, 0)
 }
 
+/// Per-dtype variant of [`float_kernel`]: `elems` values streamed at the
+/// KV storage dtype's element width. Half-precision rows move half the
+/// bytes, so the roofline time halves relative to f32 at the same
+/// bandwidth — the bound the `--kv-dtype` microbench rows print their
+/// GB/s against.
+pub fn float_kernel_dtype(
+    dev: &Device,
+    dtype: crate::tensor::simd::KvDtype,
+    elems: f64,
+    flops: f64,
+) -> KernelEstimate {
+    float_kernel(dev, elems * dtype.bytes() as f64, flops)
+}
+
+/// Integer/bit-op kernel estimate (the vectorized Hamming scorer):
+/// bytes moved plus simple ALU ops (XOR + popcount + add) in the VPU
+/// slot, no floating-point work. Gives the scorer its own GOP/s
+/// roofline row per `KernelMode` instead of a meaningless GFLOP/s one.
+pub fn int_kernel(dev: &Device, hbm_bytes: f64, ops: f64) -> KernelEstimate {
+    finish(dev, hbm_bytes, 0.0, ops, 0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +174,29 @@ mod tests {
         // compute-bound: no traffic, 96 GFLOP = 1 s at nominal peak
         let cmp = float_kernel(&dev, 8.0, 96e9);
         assert!((cmp.seconds - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dtype_kernel_halves_bandwidth_bound_for_half_rows() {
+        use crate::tensor::simd::KvDtype;
+        let dev = Device::cpu();
+        let elems = 1e8;
+        let f32_est = float_kernel_dtype(&dev, KvDtype::F32, elems, 0.0);
+        let bf16_est = float_kernel_dtype(&dev, KvDtype::Bf16, elems, 0.0);
+        assert!((f32_est.hbm_bytes - 2.0 * bf16_est.hbm_bytes).abs() < 1.0);
+        assert!((f32_est.seconds - 2.0 * bf16_est.seconds).abs() / f32_est.seconds < 1e-9);
+    }
+
+    #[test]
+    fn int_kernel_takes_binding_resource() {
+        let dev = Device::cpu();
+        // memory-bound: 1 GB of codes streamed, trivial ALU work
+        let mem = int_kernel(&dev, 1e9, 1.0);
+        assert!((mem.seconds - 1e9 / dev.hbm_bw).abs() / mem.seconds < 1e-9);
+        // ALU-bound: no traffic, 48 Gop = 1 s at the nominal VPU peak
+        let alu = int_kernel(&dev, 8.0, 48e9);
+        assert!((alu.seconds - 1.0).abs() < 1e-6);
+        assert_eq!(alu.flops, 0.0);
     }
 
     #[test]

@@ -68,12 +68,269 @@ impl KernelMode {
     }
 }
 
+// ------------------------------------------------------------ KV dtype
+
+/// Storage datatype of cached K/V rows (`--kv-dtype`).
+///
+/// Half-precision rows are stored *packed*: two 16-bit elements per f32
+/// storage slot, so a logical `head_dim`-element row occupies
+/// [`KvDtype::elems`]`(head_dim) = head_dim / 2` slots inside the same
+/// `Vec<f32>` arenas the f32 layout uses (which is what makes every
+/// byte count — block planes, spill buffers, transfer ledgers — halve
+/// without touching the plumbing). Quantization (round-to-nearest-even)
+/// happens exactly once, on append; every read widens exactly, so a
+/// stored row round-trips bit-for-bit and `Reference`/`Simd` reads stay
+/// bit-identical per dtype. Hash codes and the other selector side
+/// structures are always built from the pre-quantization f32 key row,
+/// so top-k *selection* is unaffected by the storage dtype.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// Full-precision f32 storage (the default; bit-identical to the
+    /// historical layout).
+    #[default]
+    F32,
+    /// bfloat16: f32 truncated to an 8-bit mantissa with RNE rounding.
+    /// Same exponent range as f32, ~2-3 decimal digits.
+    Bf16,
+    /// IEEE binary16: 10-bit mantissa, narrow exponent (|x| <~ 65504,
+    /// subnormals below ~6e-5).
+    F16,
+}
+
+impl KvDtype {
+    /// Parse a CLI value (`f32` | `bf16` | `f16`).
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => KvDtype::F32,
+            "bf16" | "bfloat16" => KvDtype::Bf16,
+            "f16" | "fp16" | "half" | "float16" => KvDtype::F16,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name (CLI value, bench row label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Bf16 => "bf16",
+            KvDtype::F16 => "f16",
+        }
+    }
+
+    /// All dtypes, for bench/test sweeps.
+    pub fn all() -> [KvDtype; 3] {
+        [KvDtype::F32, KvDtype::Bf16, KvDtype::F16]
+    }
+
+    /// Bytes per stored element (4 or 2) — the factor the offload
+    /// ledger and roofline byte counts scale by.
+    pub const fn bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::Bf16 | KvDtype::F16 => 2,
+        }
+    }
+
+    /// f32 storage slots occupied by a logical `dh`-element row (`dh`
+    /// for f32, `dh / 2` packed for the half dtypes; half storage
+    /// requires an even `dh`, asserted where caches are built).
+    #[inline]
+    pub fn elems(self, dh: usize) -> usize {
+        match self {
+            KvDtype::F32 => dh,
+            KvDtype::Bf16 | KvDtype::F16 => {
+                debug_assert_eq!(dh % 2, 0, "half KV dtypes need even head_dim");
+                dh / 2
+            }
+        }
+    }
+
+    /// True for the packed 16-bit dtypes.
+    pub const fn is_half(self) -> bool {
+        !matches!(self, KvDtype::F32)
+    }
+}
+
+// ---------------------------------------------- half-precision scalars
+
+/// f32 -> bf16 with round-to-nearest-even (NaN kept quiet, sign kept).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 -> f32 (exact: the bit pattern is the f32 high half).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 -> IEEE f16 with round-to-nearest-even, overflow to infinity,
+/// gradual underflow through f16 subnormals, NaN kept quiet.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // Inf stays Inf; NaN maps to a quiet NaN with the payload head.
+        return if abs > 0x7F80_0000 {
+            sign | 0x7E00 | ((abs >> 13) as u16 & 0x03FF)
+        } else {
+            sign | 0x7C00
+        };
+    }
+    let e = (abs >> 23) as i32 - 127 + 15; // rebias 8-bit -> 5-bit
+    if e >= 31 {
+        return sign | 0x7C00; // overflow -> Inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // subnormal: shift the full 24-bit significand into place, RNE
+        let man = (abs & 0x7F_FFFF) | 0x80_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            half + (((rem > halfway) as u32) | (((rem == halfway) as u32) & (half & 1)));
+        return sign | rounded as u16;
+    }
+    let man = abs & 0x7F_FFFF;
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    // rounding may carry into the exponent; e == 30 carrying to 0x7C00
+    // is exactly the RNE overflow-to-Inf case.
+    let rounded = half + (((rem > 0x1000) as u32) | (((rem == 0x1000) as u32) & (half & 1)));
+    sign | rounded as u16
+}
+
+/// IEEE f16 -> f32 (exact; matches the F16C `vcvtph2ps` widening).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    match exp {
+        0 => {
+            if man == 0 {
+                f32::from_bits(sign)
+            } else {
+                // subnormal: value = man * 2^-24, exact in f32
+                let v = man as f32 * (1.0 / 16_777_216.0);
+                f32::from_bits(v.to_bits() | sign)
+            }
+        }
+        0x1F => {
+            if man == 0 {
+                f32::from_bits(sign | 0x7F80_0000)
+            } else {
+                f32::from_bits(sign | 0x7FC0_0000 | (man << 13))
+            }
+        }
+        e => f32::from_bits(sign | ((e as u32 + 112) << 23) | (man << 13)),
+    }
+}
+
+/// Widen one stored 16-bit element of `dtype` to f32 (exact).
+#[inline]
+pub fn widen1(dtype: KvDtype, h: u16) -> f32 {
+    match dtype {
+        KvDtype::F32 => unreachable!("f32 rows are not packed"),
+        KvDtype::Bf16 => bf16_to_f32(h),
+        KvDtype::F16 => f16_to_f32(h),
+    }
+}
+
+// ------------------------------------------------------ packed row I/O
+
+/// View a packed half-precision arena as its `u16` elements (element
+/// `i` of a row is the `i`-th `u16` in memory order; both the pack and
+/// widen paths go through this view, so the layout is endian-agnostic).
+#[inline]
+pub(crate) fn packed_u16(p: &[f32]) -> &[u16] {
+    // SAFETY: u16 alignment is below f32's and the byte span is equal.
+    unsafe { std::slice::from_raw_parts(p.as_ptr() as *const u16, p.len() * 2) }
+}
+
+/// Mutable variant of [`packed_u16`].
+#[inline]
+pub(crate) fn packed_u16_mut(p: &mut [f32]) -> &mut [u16] {
+    // SAFETY: as packed_u16; the borrow is exclusive.
+    unsafe { std::slice::from_raw_parts_mut(p.as_mut_ptr() as *mut u16, p.len() * 2) }
+}
+
+/// Quantize one logical f32 row into packed storage
+/// (`dst.len() == dtype.elems(src.len())`; RNE per element, the single
+/// lossy step of the half-KV pipeline).
+pub fn pack_row(dtype: KvDtype, src: &[f32], dst: &mut [f32]) {
+    match dtype {
+        KvDtype::F32 => dst.copy_from_slice(src),
+        KvDtype::Bf16 | KvDtype::F16 => {
+            let d = packed_u16_mut(dst);
+            debug_assert_eq!(d.len(), src.len());
+            for (o, &x) in d.iter_mut().zip(src) {
+                *o = if dtype == KvDtype::Bf16 { f32_to_bf16(x) } else { f32_to_f16(x) };
+            }
+        }
+    }
+}
+
+/// Append one quantized logical row onto a packed arena (the contiguous
+/// cache's `extend_from_slice` equivalent; resizes within reserved
+/// capacity, so the steady-state append path stays allocation-free).
+pub fn pack_extend(dtype: KvDtype, src: &[f32], dst: &mut Vec<f32>) {
+    match dtype {
+        KvDtype::F32 => dst.extend_from_slice(src),
+        _ => {
+            let at = dst.len();
+            dst.resize(at + dtype.elems(src.len()), 0.0);
+            pack_row(dtype, src, &mut dst[at..]);
+        }
+    }
+}
+
+/// Widen one packed storage row back to logical f32 (exact;
+/// `dst.len() * dtype.bytes() == src.len() * 4`).
+pub fn widen_row(dtype: KvDtype, src: &[f32], dst: &mut [f32]) {
+    match dtype {
+        KvDtype::F32 => dst.copy_from_slice(src),
+        KvDtype::Bf16 | KvDtype::F16 => {
+            let s = packed_u16(src);
+            debug_assert_eq!(s.len(), dst.len());
+            for (o, &h) in dst.iter_mut().zip(s) {
+                *o = widen1(dtype, h);
+            }
+        }
+    }
+}
+
+/// Append the exactly-widened row onto an f32 gather buffer (the
+/// sparse gather path's `extend_from_slice` equivalent).
+pub fn widen_extend(dtype: KvDtype, src: &[f32], dst: &mut Vec<f32>) {
+    match dtype {
+        KvDtype::F32 => dst.extend_from_slice(src),
+        _ => {
+            let at = dst.len();
+            dst.resize(at + src.len() * 2, 0.0);
+            widen_row(dtype, src, &mut dst[at..]);
+        }
+    }
+}
+
 /// Vector backend resolved at runtime (one cached probe per process).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Backend {
     Scalar,
     #[cfg(target_arch = "x86_64")]
-    Avx2 { fma: bool },
+    Avx2 { fma: bool, f16c: bool },
     #[cfg(target_arch = "aarch64")]
     Neon,
 }
@@ -88,7 +345,10 @@ fn detect_backend() -> Backend {
     #[cfg(target_arch = "x86_64")]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
-            return Backend::Avx2 { fma: std::arch::is_x86_feature_detected!("fma") };
+            return Backend::Avx2 {
+                fma: std::arch::is_x86_feature_detected!("fma"),
+                f16c: std::arch::is_x86_feature_detected!("f16c"),
+            };
         }
     }
     #[cfg(target_arch = "aarch64")]
@@ -106,23 +366,34 @@ fn backend() -> Backend {
 
 /// Human-readable name of the active vector backend (bench headers,
 /// `--verbose` logs): `"avx2+fma"`, `"avx2"`, `"neon"` or `"scalar"`.
+/// F16C only gates the f16 widening fast path internally and does not
+/// change the name (the set of names is a stable contract).
 pub fn backend_name() -> &'static str {
     match backend() {
         Backend::Scalar => "scalar",
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 { fma: true } => "avx2+fma",
+        Backend::Avx2 { fma: true, .. } => "avx2+fma",
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 { fma: false } => "avx2",
+        Backend::Avx2 { fma: false, .. } => "avx2",
         #[cfg(target_arch = "aarch64")]
         Backend::Neon => "neon",
     }
+}
+
+/// True when an explicit vector backend (AVX2 / NEON) is active rather
+/// than the scalar fallback. The integer popcount kernels in
+/// [`crate::attention::hamming`] key their `KernelMode` dispatch off
+/// this, mirroring how the float kernels fall back when `HATA_SIMD`
+/// forces scalar.
+pub(crate) fn lanes_active() -> bool {
+    backend() != Backend::Scalar
 }
 
 /// True when `mode` will actually run the fused-multiply-add polynomial
 /// kernels on this host (SimdFma requested and AVX2+FMA detected).
 #[cfg(target_arch = "x86_64")]
 fn fma_active(mode: KernelMode) -> bool {
-    mode == KernelMode::SimdFma && matches!(backend(), Backend::Avx2 { fma: true })
+    mode == KernelMode::SimdFma && matches!(backend(), Backend::Avx2 { fma: true, .. })
 }
 
 // ------------------------------------------------------------------ dot
@@ -143,9 +414,9 @@ pub fn dot(mode: KernelMode, a: &[f32], b: &[f32]) -> f32 {
         },
         KernelMode::SimdFma => match backend() {
             #[cfg(target_arch = "x86_64")]
-            Backend::Avx2 { fma: true } => unsafe { x86::dot_fma(a, b) },
+            Backend::Avx2 { fma: true, .. } => unsafe { x86::dot_fma(a, b) },
             #[cfg(target_arch = "x86_64")]
-            Backend::Avx2 { fma: false } => unsafe { x86::dot_avx2(a, b) },
+            Backend::Avx2 { fma: false, .. } => unsafe { x86::dot_avx2(a, b) },
             #[cfg(target_arch = "aarch64")]
             Backend::Neon => unsafe { neon::dot_fma_neon(a, b) },
             _ => ops::dot(a, b),
@@ -172,9 +443,9 @@ pub fn vecmat(mode: KernelMode, x: &[f32], a: &[f32], m: usize, y: &mut [f32]) {
         },
         KernelMode::SimdFma => match backend() {
             #[cfg(target_arch = "x86_64")]
-            Backend::Avx2 { fma: true } => unsafe { x86::vecmat_fma(x, a, m, y) },
+            Backend::Avx2 { fma: true, .. } => unsafe { x86::vecmat_fma(x, a, m, y) },
             #[cfg(target_arch = "x86_64")]
-            Backend::Avx2 { fma: false } => unsafe { x86::vecmat_avx2(x, a, m, y) },
+            Backend::Avx2 { fma: false, .. } => unsafe { x86::vecmat_avx2(x, a, m, y) },
             #[cfg(target_arch = "aarch64")]
             Backend::Neon => unsafe { neon::vecmat_fma_neon(x, a, m, y) },
             _ => ops::vecmat(x, a, m, y),
@@ -212,9 +483,9 @@ pub fn axpy(mode: KernelMode, alpha: f32, x: &[f32], y: &mut [f32]) {
         },
         KernelMode::SimdFma => match backend() {
             #[cfg(target_arch = "x86_64")]
-            Backend::Avx2 { fma: true } => unsafe { x86::axpy_fma(alpha, x, y) },
+            Backend::Avx2 { fma: true, .. } => unsafe { x86::axpy_fma(alpha, x, y) },
             #[cfg(target_arch = "x86_64")]
-            Backend::Avx2 { fma: false } => unsafe { x86::axpy_avx2(alpha, x, y) },
+            Backend::Avx2 { fma: false, .. } => unsafe { x86::axpy_avx2(alpha, x, y) },
             #[cfg(target_arch = "aarch64")]
             Backend::Neon => unsafe { neon::axpy_fma_neon(alpha, x, y) },
             _ => axpy_scalar(alpha, x, y),
@@ -225,6 +496,205 @@ pub fn axpy(mode: KernelMode, alpha: f32, x: &[f32], y: &mut [f32]) {
 fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
     for (yj, &xj) in y.iter_mut().zip(x) {
         *yj += alpha * xj;
+    }
+}
+
+// ----------------------------------------------------- widening kernels
+//
+// The half-KV read path: each kernel takes the packed storage row and
+// widens elements to f32 *in-register* (AVX2 integer widen for bf16,
+// F16C `vcvtph2ps` for f16, `vmovl`+shift on NEON) before the exact
+// same arithmetic as its f32 counterpart. Widening is exact, so the
+// scalar references below are bit-identical to the vector paths per
+// dtype — the same contract the f32 kernels keep — and `KvDtype::F32`
+// simply delegates to the f32 kernel.
+
+/// Scalar reference for [`dot_wide`]: [`ops::dot`]'s canonical blocked
+/// order with each packed element widened before the multiply.
+fn dot_wide_scalar(dtype: KvDtype, a: &[f32], h: &[u16]) -> f32 {
+    let n = a.len();
+    const B: usize = ops::BLOCK;
+    let blocks = n / B;
+    let mut acc = [0.0f32; B];
+    for i in 0..blocks {
+        for (j, av) in acc.iter_mut().enumerate() {
+            *av += a[i * B + j] * widen1(dtype, h[i * B + j]);
+        }
+    }
+    let mut lane = [0.0f32; B / 2];
+    let (lo, hi) = acc.split_at(B / 2);
+    for ((l, &a0), &a1) in lane.iter_mut().zip(lo).zip(hi) {
+        *l = a0 + a1;
+    }
+    let mut s = lane[0];
+    for &l in &lane[1..] {
+        s += l;
+    }
+    for i in blocks * B..n {
+        s += a[i] * widen1(dtype, h[i]);
+    }
+    s
+}
+
+/// Mode-dispatched dot of an f32 query row against a packed K row of
+/// `dtype` (`packed.len() == dtype.elems(a.len())`). `KvDtype::F32` is
+/// exactly [`dot`]; the half dtypes widen in-register and keep
+/// `Reference`/`Simd` bit-identical per dtype. On x86 the f16 fast path
+/// needs F16C (universal on AVX2-era cores); without it the scalar
+/// reference runs, which is bit-identical anyway.
+#[inline]
+pub fn dot_wide(mode: KernelMode, dtype: KvDtype, a: &[f32], packed: &[f32]) -> f32 {
+    if dtype == KvDtype::F32 {
+        return dot(mode, a, packed);
+    }
+    let h = packed_u16(packed);
+    debug_assert_eq!(h.len(), a.len());
+    match mode {
+        KernelMode::Reference => dot_wide_scalar(dtype, a, h),
+        KernelMode::Simd => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { f16c, .. } => match dtype {
+                KvDtype::Bf16 => unsafe { x86::dot_wide_bf16_avx2(a, h) },
+                KvDtype::F16 if f16c => unsafe { x86::dot_wide_f16_avx2(a, h) },
+                _ => dot_wide_scalar(dtype, a, h),
+            },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon if dtype == KvDtype::Bf16 => unsafe { neon::dot_wide_bf16_neon(a, h) },
+            _ => dot_wide_scalar(dtype, a, h),
+        },
+        KernelMode::SimdFma => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma, f16c } => match dtype {
+                KvDtype::Bf16 if fma => unsafe { x86::dot_wide_bf16_fma(a, h) },
+                KvDtype::Bf16 => unsafe { x86::dot_wide_bf16_avx2(a, h) },
+                KvDtype::F16 if fma && f16c => unsafe { x86::dot_wide_f16_fma(a, h) },
+                KvDtype::F16 if f16c => unsafe { x86::dot_wide_f16_avx2(a, h) },
+                _ => dot_wide_scalar(dtype, a, h),
+            },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon if dtype == KvDtype::Bf16 => {
+                unsafe { neon::dot_wide_bf16_fma_neon(a, h) }
+            }
+            _ => dot_wide_scalar(dtype, a, h),
+        },
+    }
+}
+
+/// Scalar reference for [`axpy_wide`] (elementwise, so every lane width
+/// is bit-identical by construction).
+fn axpy_wide_scalar(dtype: KvDtype, alpha: f32, h: &[u16], y: &mut [f32]) {
+    for (yj, &hj) in y.iter_mut().zip(h) {
+        *yj += alpha * widen1(dtype, hj);
+    }
+}
+
+/// y += alpha * widen(x) over a packed V row of `dtype` (the attention
+/// `o += p * v` update against half-precision storage). `KvDtype::F32`
+/// is exactly [`axpy`].
+#[inline]
+pub fn axpy_wide(mode: KernelMode, dtype: KvDtype, alpha: f32, packed: &[f32], y: &mut [f32]) {
+    if dtype == KvDtype::F32 {
+        return axpy(mode, alpha, packed, y);
+    }
+    let h = packed_u16(packed);
+    debug_assert_eq!(h.len(), y.len());
+    match mode {
+        KernelMode::Reference => axpy_wide_scalar(dtype, alpha, h, y),
+        KernelMode::Simd => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { f16c, .. } => match dtype {
+                KvDtype::Bf16 => unsafe { x86::axpy_wide_bf16_avx2(alpha, h, y) },
+                KvDtype::F16 if f16c => unsafe { x86::axpy_wide_f16_avx2(alpha, h, y) },
+                _ => axpy_wide_scalar(dtype, alpha, h, y),
+            },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon if dtype == KvDtype::Bf16 => {
+                unsafe { neon::axpy_wide_bf16_neon(alpha, h, y) }
+            }
+            _ => axpy_wide_scalar(dtype, alpha, h, y),
+        },
+        KernelMode::SimdFma => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma, f16c } => match dtype {
+                KvDtype::Bf16 if fma => unsafe { x86::axpy_wide_bf16_fma(alpha, h, y) },
+                KvDtype::Bf16 => unsafe { x86::axpy_wide_bf16_avx2(alpha, h, y) },
+                KvDtype::F16 if fma && f16c => unsafe { x86::axpy_wide_f16_fma(alpha, h, y) },
+                KvDtype::F16 if f16c => unsafe { x86::axpy_wide_f16_avx2(alpha, h, y) },
+                _ => axpy_wide_scalar(dtype, alpha, h, y),
+            },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon if dtype == KvDtype::Bf16 => {
+                unsafe { neon::axpy_wide_bf16_fma_neon(alpha, h, y) }
+            }
+            _ => axpy_wide_scalar(dtype, alpha, h, y),
+        },
+    }
+}
+
+/// Scalar reference for [`vecmat_wide`]: row-major accumulation, the
+/// [`ops::vecmat`] order with each matrix element widened first.
+fn vecmat_wide_scalar(dtype: KvDtype, x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        let row = &h[i * m..(i + 1) * m];
+        for (yj, &hij) in y.iter_mut().zip(row) {
+            *yj += xi * widen1(dtype, hij);
+        }
+    }
+}
+
+/// Mode-dispatched vector–matrix product against a packed row-major
+/// matrix of `dtype`: `y[j] = sum_i x[i] * widen(a[i, j])` for a
+/// logical A `[x.len(), m]` (`packed.len() == dtype.elems(x.len() * m)`,
+/// requiring an even `m` so packed rows stay slot-aligned).
+/// `KvDtype::F32` is exactly [`vecmat`]. Per output element the
+/// accumulation is sequential in `i`, so every lane width is
+/// bit-identical to the scalar reference.
+pub fn vecmat_wide(
+    mode: KernelMode,
+    dtype: KvDtype,
+    x: &[f32],
+    packed: &[f32],
+    m: usize,
+    y: &mut [f32],
+) {
+    if dtype == KvDtype::F32 {
+        return vecmat(mode, x, packed, m, y);
+    }
+    let h = packed_u16(packed);
+    debug_assert_eq!(m % 2, 0, "packed vecmat rows need an even m");
+    debug_assert_eq!(h.len(), x.len() * m);
+    debug_assert_eq!(y.len(), m);
+    match mode {
+        KernelMode::Reference => vecmat_wide_scalar(dtype, x, h, m, y),
+        KernelMode::Simd => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { f16c, .. } => match dtype {
+                KvDtype::Bf16 => unsafe { x86::vecmat_wide_bf16_avx2(x, h, m, y) },
+                KvDtype::F16 if f16c => unsafe { x86::vecmat_wide_f16_avx2(x, h, m, y) },
+                _ => vecmat_wide_scalar(dtype, x, h, m, y),
+            },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon if dtype == KvDtype::Bf16 => {
+                unsafe { neon::vecmat_wide_bf16_neon(x, h, m, y) }
+            }
+            _ => vecmat_wide_scalar(dtype, x, h, m, y),
+        },
+        KernelMode::SimdFma => match backend() {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 { fma, f16c } => match dtype {
+                KvDtype::Bf16 if fma => unsafe { x86::vecmat_wide_bf16_fma(x, h, m, y) },
+                KvDtype::Bf16 => unsafe { x86::vecmat_wide_bf16_avx2(x, h, m, y) },
+                KvDtype::F16 if fma && f16c => unsafe { x86::vecmat_wide_f16_fma(x, h, m, y) },
+                KvDtype::F16 if f16c => unsafe { x86::vecmat_wide_f16_avx2(x, h, m, y) },
+                _ => vecmat_wide_scalar(dtype, x, h, m, y),
+            },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon if dtype == KvDtype::Bf16 => {
+                unsafe { neon::vecmat_wide_bf16_fma_neon(x, h, m, y) }
+            }
+            _ => vecmat_wide_scalar(dtype, x, h, m, y),
+        },
     }
 }
 
@@ -636,6 +1106,158 @@ mod x86 {
             j += 1;
         }
     }
+
+    // ------------------------------------------------- widening kernels
+
+    /// Widen 8 packed bf16 values to 8 f32 lanes: zero-extend each u16
+    /// to u32, shift into the high half, reinterpret. Exact by
+    /// construction (bf16 is the top 16 bits of an f32).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_bf16_8(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+    }
+
+    /// Widen 8 packed f16 values via F16C `vcvtph2ps`. Exact: every
+    /// IEEE half (normals, subnormals, infinities, NaNs) is
+    /// representable in single precision, and the hardware conversion
+    /// matches the software one bit for bit.
+    #[inline]
+    #[target_feature(enable = "avx2,f16c")]
+    unsafe fn widen_f16_8(p: *const u16) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// [`dot_avx2`] with the b operand widened per 8-lane load; same
+    /// canonical 16-block accumulators, lane merge and ordered sum.
+    macro_rules! dot_wide_body {
+        ($a:ident, $h:ident, $widen:ident, $w1:path, $madd:ident) => {{
+            let n = $a.len();
+            let blocks = n / 16;
+            let pa = $a.as_ptr();
+            let ph = $h.as_ptr();
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for i in 0..blocks {
+                let x0 = _mm256_loadu_ps(pa.add(i * 16));
+                let x1 = _mm256_loadu_ps(pa.add(i * 16 + 8));
+                acc0 = $madd(x0, $widen(ph.add(i * 16)), acc0);
+                acc1 = $madd(x1, $widen(ph.add(i * 16 + 8)), acc1);
+            }
+            let mut s = hsum_ordered(_mm256_add_ps(acc0, acc1));
+            for i in blocks * 16..n {
+                s += $a[i] * $w1($h[i]);
+            }
+            s
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_wide_bf16_avx2(a: &[f32], h: &[u16]) -> f32 {
+        dot_wide_body!(a, h, widen_bf16_8, super::bf16_to_f32, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot_wide_bf16_fma(a: &[f32], h: &[u16]) -> f32 {
+        dot_wide_body!(a, h, widen_bf16_8, super::bf16_to_f32, _mm256_fmadd_ps)
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    pub(super) unsafe fn dot_wide_f16_avx2(a: &[f32], h: &[u16]) -> f32 {
+        dot_wide_body!(a, h, widen_f16_8, super::f16_to_f32, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub(super) unsafe fn dot_wide_f16_fma(a: &[f32], h: &[u16]) -> f32 {
+        dot_wide_body!(a, h, widen_f16_8, super::f16_to_f32, _mm256_fmadd_ps)
+    }
+
+    /// Elementwise `y += alpha * widen(h)`; any lane width bit-matches
+    /// the scalar reference because each element is independent.
+    macro_rules! axpy_wide_body {
+        ($alpha:ident, $h:ident, $y:ident, $widen:ident, $w1:path, $madd:ident) => {{
+            let n = $h.len();
+            let va = _mm256_set1_ps($alpha);
+            let ph = $h.as_ptr();
+            let py = $y.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= n {
+                let y0 = $madd(va, $widen(ph.add(j)), _mm256_loadu_ps(py.add(j)));
+                _mm256_storeu_ps(py.add(j), y0);
+                j += 8;
+            }
+            while j < n {
+                $y[j] += $alpha * $w1($h[j]);
+                j += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_wide_bf16_avx2(alpha: f32, h: &[u16], y: &mut [f32]) {
+        axpy_wide_body!(alpha, h, y, widen_bf16_8, super::bf16_to_f32, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy_wide_bf16_fma(alpha: f32, h: &[u16], y: &mut [f32]) {
+        axpy_wide_body!(alpha, h, y, widen_bf16_8, super::bf16_to_f32, _mm256_fmadd_ps)
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    pub(super) unsafe fn axpy_wide_f16_avx2(alpha: f32, h: &[u16], y: &mut [f32]) {
+        axpy_wide_body!(alpha, h, y, widen_f16_8, super::f16_to_f32, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub(super) unsafe fn axpy_wide_f16_fma(alpha: f32, h: &[u16], y: &mut [f32]) {
+        axpy_wide_body!(alpha, h, y, widen_f16_8, super::f16_to_f32, _mm256_fmadd_ps)
+    }
+
+    /// Row-major accumulate with widened rows. One row at a time: per
+    /// output element the row order is the sequential scalar order, so
+    /// this is bit-identical to [`super::vecmat_wide_scalar`].
+    macro_rules! vecmat_wide_body {
+        ($x:ident, $h:ident, $m:ident, $y:ident, $widen:ident, $w1:path, $madd:ident) => {{
+            $y.fill(0.0);
+            let ph = $h.as_ptr();
+            let py = $y.as_mut_ptr();
+            for (i, &xi) in $x.iter().enumerate() {
+                let b0 = _mm256_set1_ps(xi);
+                let row = ph.add(i * $m);
+                let mut j = 0;
+                while j + 8 <= $m {
+                    let y0 = $madd(b0, $widen(row.add(j)), _mm256_loadu_ps(py.add(j)));
+                    _mm256_storeu_ps(py.add(j), y0);
+                    j += 8;
+                }
+                while j < $m {
+                    *py.add(j) += xi * $w1(*row.add(j));
+                    j += 1;
+                }
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vecmat_wide_bf16_avx2(x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+        vecmat_wide_body!(x, h, m, y, widen_bf16_8, super::bf16_to_f32, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn vecmat_wide_bf16_fma(x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+        vecmat_wide_body!(x, h, m, y, widen_bf16_8, super::bf16_to_f32, _mm256_fmadd_ps)
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    pub(super) unsafe fn vecmat_wide_f16_avx2(x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+        vecmat_wide_body!(x, h, m, y, widen_f16_8, super::f16_to_f32, madd_mul_add)
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub(super) unsafe fn vecmat_wide_f16_fma(x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+        vecmat_wide_body!(x, h, m, y, widen_f16_8, super::f16_to_f32, _mm256_fmadd_ps)
+    }
 }
 
 // ==================================================== aarch64 backends
@@ -799,6 +1421,108 @@ mod neon {
             y[j] = x[j] * inv * g[j];
             j += 1;
         }
+    }
+
+    // ------------------------------------------------- widening kernels
+
+    /// Widen 4 packed bf16 values to 4 f32 lanes: zero-extend the u16s
+    /// to u32, shift into the high half, reinterpret. Exact by
+    /// construction. (f16 has no exact NEON widen without the `fp16`
+    /// extension, so the f16 path stays on the bit-identical scalar
+    /// reference on aarch64.)
+    #[inline]
+    unsafe fn widen_bf16_4(p: *const u16) -> float32x4_t {
+        vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vld1_u16(p))))
+    }
+
+    macro_rules! dot_wide_neon_body {
+        ($a:ident, $h:ident, $madd:ident) => {{
+            let n = $a.len();
+            let blocks = n / 16;
+            let pa = $a.as_ptr();
+            let ph = $h.as_ptr();
+            let mut a0 = vdupq_n_f32(0.0);
+            let mut a1 = vdupq_n_f32(0.0);
+            let mut a2 = vdupq_n_f32(0.0);
+            let mut a3 = vdupq_n_f32(0.0);
+            for i in 0..blocks {
+                let o = i * 16;
+                a0 = $madd(a0, vld1q_f32(pa.add(o)), widen_bf16_4(ph.add(o)));
+                a1 = $madd(a1, vld1q_f32(pa.add(o + 4)), widen_bf16_4(ph.add(o + 4)));
+                a2 = $madd(a2, vld1q_f32(pa.add(o + 8)), widen_bf16_4(ph.add(o + 8)));
+                a3 = $madd(a3, vld1q_f32(pa.add(o + 12)), widen_bf16_4(ph.add(o + 12)));
+            }
+            let mut s = hsum_ordered2(vaddq_f32(a0, a2), vaddq_f32(a1, a3));
+            for i in blocks * 16..n {
+                s += $a[i] * super::bf16_to_f32($h[i]);
+            }
+            s
+        }};
+    }
+
+    pub(super) unsafe fn dot_wide_bf16_neon(a: &[f32], h: &[u16]) -> f32 {
+        dot_wide_neon_body!(a, h, madd_mul_add)
+    }
+
+    pub(super) unsafe fn dot_wide_bf16_fma_neon(a: &[f32], h: &[u16]) -> f32 {
+        dot_wide_neon_body!(a, h, madd_fused)
+    }
+
+    macro_rules! axpy_wide_neon_body {
+        ($alpha:ident, $h:ident, $y:ident, $madd:ident) => {{
+            let n = $h.len();
+            let va = vdupq_n_f32($alpha);
+            let ph = $h.as_ptr();
+            let py = $y.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let v = $madd(vld1q_f32(py.add(j)), va, widen_bf16_4(ph.add(j)));
+                vst1q_f32(py.add(j), v);
+                j += 4;
+            }
+            while j < n {
+                $y[j] += $alpha * super::bf16_to_f32($h[j]);
+                j += 1;
+            }
+        }};
+    }
+
+    pub(super) unsafe fn axpy_wide_bf16_neon(alpha: f32, h: &[u16], y: &mut [f32]) {
+        axpy_wide_neon_body!(alpha, h, y, madd_mul_add)
+    }
+
+    pub(super) unsafe fn axpy_wide_bf16_fma_neon(alpha: f32, h: &[u16], y: &mut [f32]) {
+        axpy_wide_neon_body!(alpha, h, y, madd_fused)
+    }
+
+    macro_rules! vecmat_wide_neon_body {
+        ($x:ident, $h:ident, $m:ident, $y:ident, $madd:ident) => {{
+            $y.fill(0.0);
+            let ph = $h.as_ptr();
+            let py = $y.as_mut_ptr();
+            for (i, &xi) in $x.iter().enumerate() {
+                let bx = vdupq_n_f32(xi);
+                let row = ph.add(i * $m);
+                let mut j = 0;
+                while j + 4 <= $m {
+                    let v = $madd(vld1q_f32(py.add(j)), bx, widen_bf16_4(row.add(j)));
+                    vst1q_f32(py.add(j), v);
+                    j += 4;
+                }
+                while j < $m {
+                    *py.add(j) += xi * super::bf16_to_f32(*row.add(j));
+                    j += 1;
+                }
+            }
+        }};
+    }
+
+    pub(super) unsafe fn vecmat_wide_bf16_neon(x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+        vecmat_wide_neon_body!(x, h, m, y, madd_mul_add)
+    }
+
+    pub(super) unsafe fn vecmat_wide_bf16_fma_neon(x: &[f32], h: &[u16], m: usize, y: &mut [f32]) {
+        vecmat_wide_neon_body!(x, h, m, y, madd_fused)
     }
 }
 
@@ -1016,5 +1740,239 @@ mod tests {
         assert!(x.iter().all(|v| v.is_finite() && *v >= 0.0));
         let s: f32 = x.iter().sum();
         assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    // ------------------------------------------------- KvDtype + wide
+
+    #[test]
+    fn kv_dtype_parse_roundtrip() {
+        for d in KvDtype::all() {
+            assert_eq!(KvDtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(KvDtype::parse("fp16"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("bfloat16"), Some(KvDtype::Bf16));
+        assert_eq!(KvDtype::parse("half"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("double"), None);
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+        assert_eq!(KvDtype::F32.elems(6), 6);
+        assert_eq!(KvDtype::Bf16.elems(6), 3);
+        assert_eq!(KvDtype::F16.bytes(), 2);
+    }
+
+    /// Exhaustive over all 2^16 half patterns: widening is exact and
+    /// re-quantizing the widened value returns the identical bits (the
+    /// losslessness both the packed round-trip tests and the CoW fork
+    /// property in halfkv.rs rely on). NaN payloads may canonicalize,
+    /// so NaN checks only that NaN-ness survives.
+    #[test]
+    fn half_widen_then_requantize_is_identity() {
+        for bits16 in 0..=u16::MAX {
+            let wb = bf16_to_f32(bits16);
+            if wb.is_nan() {
+                assert!(f32::from_bits((bits16 as u32) << 16).is_nan());
+            } else {
+                assert_eq!(f32_to_bf16(wb), bits16, "bf16 {bits16:#06x}");
+            }
+            let wf = f16_to_f32(bits16);
+            if wf.is_nan() {
+                let q = f32_to_f16(wf);
+                assert!((q & 0x7C00) == 0x7C00 && (q & 0x03FF) != 0);
+            } else {
+                assert_eq!(f32_to_f16(wf), bits16, "f16 {bits16:#06x}");
+            }
+        }
+    }
+
+    /// Quantization rounds to nearest: the chosen half value is at
+    /// least as close to the input as both of its neighbours.
+    #[test]
+    fn half_quantize_rounds_to_nearest() {
+        check(60, |rng: &mut Rng| {
+            let x = rng.normal() * 10.0f32.powi(rng.below(7) as i32 - 3);
+            for d in [KvDtype::Bf16, KvDtype::F16] {
+                let q = match d {
+                    KvDtype::Bf16 => f32_to_bf16(x),
+                    _ => f32_to_f16(x),
+                };
+                let got = widen1(d, q);
+                let err = (got as f64 - x as f64).abs();
+                for delta in [-1i32, 1] {
+                    let nb = (q as i32 + delta) as u16;
+                    let nv = widen1(d, nb);
+                    if nv.is_finite() && nv.is_sign_positive() == got.is_sign_positive() {
+                        let nerr = (nv as f64 - x as f64).abs();
+                        prop_assert(err <= nerr, "not nearest")?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Relative quantization error bounds for normal-range values: bf16
+    /// keeps 8 significand bits (rel err <= 2^-9 + slack), f16 keeps 11
+    /// (rel err <= 2^-12 + slack). These are the bounds PERFORMANCE.md
+    /// documents and halfkv.rs budgets its logit tolerances from.
+    #[test]
+    fn half_quantization_relative_error_bounded() {
+        check(60, |rng: &mut Rng| {
+            let x = rng.normal();
+            if x.abs() < 1e-3 {
+                return Ok(());
+            }
+            let x64 = x as f64;
+            let eb = (widen1(KvDtype::Bf16, f32_to_bf16(x)) as f64 - x64).abs() / x64.abs();
+            prop_assert(eb <= 1.0 / 256.0, "bf16 rel err")?;
+            let ef = (widen1(KvDtype::F16, f32_to_f16(x)) as f64 - x64).abs() / x64.abs();
+            prop_assert(ef <= 1.0 / 2048.0, "f16 rel err")
+        });
+    }
+
+    #[test]
+    fn f16_edge_cases() {
+        assert_eq!(f16_to_f32(f32_to_f16(0.0)).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_to_f32(f32_to_f16(-0.0)).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // overflow saturates to infinity, tiny values flush to signed zero
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e-10)).to_bits(), (-0.0f32).to_bits());
+        // largest normal and a subnormal survive the round trip
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0);
+        assert_eq!(f16_to_f32(0x0001), 5.960_464_5e-8);
+        // NaN poison survives packing an f32 NaN into either half slot
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    /// pack_row / widen_row round-trip: packing a row of values already
+    /// representable in the target dtype and widening it back is
+    /// bitwise lossless, and pack_extend matches pack_row.
+    #[test]
+    fn pack_widen_round_trip_lossless() {
+        check(40, |rng: &mut Rng| {
+            let dh = 2 * (1 + rng.below(40));
+            for d in [KvDtype::Bf16, KvDtype::F16] {
+                // snap to representable values first
+                let row: Vec<f32> = (0..dh)
+                    .map(|_| {
+                        widen1(
+                            d,
+                            match d {
+                                KvDtype::Bf16 => f32_to_bf16(rng.normal()),
+                                _ => f32_to_f16(rng.normal()),
+                            },
+                        )
+                    })
+                    .collect();
+                let mut packed = vec![0.0f32; d.elems(dh)];
+                pack_row(d, &row, &mut packed);
+                let mut back = vec![0.0f32; dh];
+                widen_row(d, &packed, &mut back);
+                prop_assert(bits(&row) == bits(&back), "pack/widen round trip")?;
+
+                let mut ext = Vec::new();
+                pack_extend(d, &row, &mut ext);
+                prop_assert(bits(&ext) == bits(&packed), "pack_extend == pack_row")?;
+                let mut wide = Vec::new();
+                widen_extend(d, &ext, &mut wide);
+                prop_assert(bits(&wide) == bits(&row), "widen_extend round trip")?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Wide-kernel tentpole invariant: `Simd` is bitwise equal to the
+    /// scalar reference for every dtype, across tail lengths and random
+    /// data — same contract as the f32 kernels.
+    #[test]
+    fn wide_simd_bit_identical_to_reference() {
+        check(40, |rng: &mut Rng| {
+            // half rows need even lengths; n % 16 still sweeps the tails
+            let n = 2 * (1 + rng.below(100));
+            let m = 2 * (1 + rng.below(35));
+            let a = rng.normal_vec(n);
+            for d in KvDtype::all() {
+                let kv = rng.normal_vec(n);
+                let mut packed = vec![0.0f32; d.elems(n)];
+                if d == KvDtype::F32 {
+                    packed.copy_from_slice(&kv);
+                } else {
+                    pack_row(d, &kv, &mut packed);
+                }
+                let r = dot_wide(KernelMode::Reference, d, &a, &packed);
+                let s = dot_wide(KernelMode::Simd, d, &a, &packed);
+                prop_assert(r.to_bits() == s.to_bits(), "dot_wide bits")?;
+
+                let alpha = rng.normal();
+                let mut y_ref = rng.normal_vec(n);
+                let mut y_simd = y_ref.clone();
+                axpy_wide(KernelMode::Reference, d, alpha, &packed, &mut y_ref);
+                axpy_wide(KernelMode::Simd, d, alpha, &packed, &mut y_simd);
+                prop_assert(bits(&y_ref) == bits(&y_simd), "axpy_wide bits")?;
+
+                let w = rng.normal_vec(n * m);
+                let mut wp = vec![0.0f32; d.elems(n * m)];
+                if d == KvDtype::F32 {
+                    wp.copy_from_slice(&w);
+                } else {
+                    pack_row(d, &w, &mut wp);
+                }
+                let mut v_ref = vec![0.0f32; m];
+                let mut v_simd = vec![0.0f32; m];
+                vecmat_wide(KernelMode::Reference, d, &a, &wp, m, &mut v_ref);
+                vecmat_wide(KernelMode::Simd, d, &a, &wp, m, &mut v_simd);
+                prop_assert(bits(&v_ref) == bits(&v_simd), "vecmat_wide bits")?;
+            }
+            Ok(())
+        });
+    }
+
+    /// F32 delegation: `dot_wide`/`axpy_wide`/`vecmat_wide` over
+    /// `KvDtype::F32` are exactly the f32 kernels.
+    #[test]
+    fn wide_f32_delegates_to_f32_kernels() {
+        let mut rng = Rng::new(13);
+        let (n, m) = (77, 18);
+        let a = rng.normal_vec(n);
+        let b = rng.normal_vec(n);
+        for mode in KernelMode::all() {
+            assert_eq!(
+                dot_wide(mode, KvDtype::F32, &a, &b).to_bits(),
+                dot(mode, &a, &b).to_bits()
+            );
+        }
+        let w = rng.normal_vec(n * m);
+        let mut y1 = vec![0.0f32; m];
+        let mut y2 = vec![0.0f32; m];
+        vecmat_wide(KernelMode::Simd, KvDtype::F32, &a, &w, m, &mut y1);
+        vecmat(KernelMode::Simd, &a, &w, m, &mut y2);
+        assert_eq!(bits(&y1), bits(&y2));
+    }
+
+    /// SimdFma wide reductions stay within the same forward-error bound
+    /// as the f32 FMA dot, measured against f64 accumulation of the
+    /// *widened* values (quantization error is excluded by design —
+    /// it's bounded separately above).
+    #[test]
+    fn fma_wide_dot_bounded_vs_f64() {
+        check(30, |rng: &mut Rng| {
+            let n = 2 * (1 + rng.below(300));
+            let a = rng.normal_vec(n);
+            let kv = rng.normal_vec(n);
+            for d in [KvDtype::Bf16, KvDtype::F16] {
+                let mut packed = vec![0.0f32; d.elems(n)];
+                pack_row(d, &kv, &mut packed);
+                let mut wide = vec![0.0f32; n];
+                widen_row(d, &packed, &mut wide);
+                let want = f64_dot(&a, &wide);
+                let got = dot_wide(KernelMode::SimdFma, d, &a, &packed) as f64;
+                let mag: f64 =
+                    a.iter().zip(&wide).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+                let bound = (f32::EPSILON as f64) * mag * (8.0 + (n as f64) / 2.0);
+                prop_assert((got - want).abs() <= bound, "fma wide dot bound")?;
+            }
+            Ok(())
+        });
     }
 }

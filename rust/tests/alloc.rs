@@ -151,6 +151,7 @@ fn steady_state_allocs(method: Method, threads: usize, graph_cache: bool, paged:
         model.cfg.head_dim,
         model.cfg.rbit / 64,
         BT,
+        serve.kv_dtype,
     ));
     let mut caches: Vec<SeqKvCache> = prompts
         .iter()

@@ -1,0 +1,415 @@
+//! Differential gate for `--kv-dtype` (half-precision KV storage).
+//!
+//! The contract under test (docs/PERFORMANCE.md §--kv-dtype):
+//!
+//! 1. **f32 is the historical layout**: an explicit `--kv-dtype f32` run
+//!    is bit-identical across the thread / layout / kernel axes the
+//!    parallel and paged harnesses pin down.
+//! 2. **Selection parity**: hash codes and every selector side structure
+//!    are computed from the *pre-quantization* f32 keys, so feeding the
+//!    same rows into caches of every dtype yields exactly the same codes
+//!    and exactly the same top-k selection for the code/summary-driven
+//!    selectors (Hata, Quest, Loki, MagicPIG, StreamingLLM).
+//! 3. **Bounded value error, invariant layout**: model logits under
+//!    bf16/f16 stay within a documented relative bound of the f32 run
+//!    for every method in the zoo and every kernel tier, while paged and
+//!    contiguous runs at the *same* half dtype remain bit-identical
+//!    (quantize-once on append + exact widening on read). The offload
+//!    engine at bf16 is bitwise the resident paged bf16 engine, so the
+//!    paged bound transitively covers the tier.
+//! 4. **Traffic halves**: with a dtype-independent access pattern
+//!    (Dense), the offload ledger's evict/fetch byte counts for bf16 are
+//!    exactly half the f32 run's, at identical eviction/fetch counts.
+//! 5. **CoW is lossless**: forking a half-precision paged sequence and
+//!    decoding on the child never perturbs a parent bit, and the shared
+//!    prefix round-trips into the child unchanged.
+
+use std::sync::Arc;
+
+use hata::attention::{AttnInputs, MethodState, Scratch, Selector};
+use hata::config::{preset, Method, ServeConfig};
+use hata::coordinator::engine::Engine;
+use hata::coordinator::request::Request;
+use hata::kvcache::pool::KvPool;
+use hata::kvcache::tier::OffloadStats;
+use hata::kvcache::{BlockStore, MethodAux, SeqKvCache};
+use hata::model::{make_selector, sel_ref, weights::Weights, DecodeScratch, Model, SeqState};
+use hata::tensor::simd::{KernelMode, KvDtype};
+use hata::util::rng::Rng;
+
+const METHODS: [Method; 9] = [
+    Method::Dense,
+    Method::ExactTopK,
+    Method::Hata,
+    Method::Loki,
+    Method::Quest,
+    Method::MagicPig,
+    Method::StreamingLlm,
+    Method::H2o,
+    Method::SnapKv,
+];
+
+/// Replay a fixed 5-request workload through one engine build and return
+/// the per-request token streams plus the tier ledger (offload runs).
+fn run_engine(
+    method: Method,
+    dtype: KvDtype,
+    threads: usize,
+    paged: bool,
+    offload: bool,
+    kernels: KernelMode,
+) -> (Vec<(u64, Vec<u32>)>, Option<OffloadStats>) {
+    let cfg = preset("hata-gqa").unwrap();
+    let serve = ServeConfig {
+        method,
+        budget: 16,
+        max_batch: 4,
+        prefill_chunk: 48,
+        prefill_tile: 16,
+        threads,
+        kernels,
+        kv_dtype: dtype,
+        kv_block: 4,
+        paged,
+        offload,
+        offload_budget: 0,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(42);
+    let weights = Weights::random(&cfg, &mut rng);
+    let aux = MethodAux::build(&cfg, &serve, None, 1);
+    let mut model = Model::new(cfg, weights, aux);
+    model.kernels = serve.kernels;
+    let mut engine = Engine::new(Arc::new(model), serve);
+    for id in 0..5u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..(24 + id as usize * 9)).map(|i| 32 + (i as u32 % 64)).collect(),
+            max_new_tokens: 4,
+            stop_token: None,
+            arrival: 0.0,
+        });
+    }
+    let mut out: Vec<(u64, Vec<u32>)> =
+        engine.run_to_completion().into_iter().map(|r| (r.id, r.tokens)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    assert_eq!(out.len(), 5, "all requests must complete ({method:?}, {dtype:?})");
+    (out, engine.metrics.offload)
+}
+
+/// An explicit `--kv-dtype f32` engine must be bit-identical to itself
+/// across the thread / layout / offload / kernel axes — the seed-era
+/// parallel.rs matrix, replayed with the dtype threaded through.
+#[test]
+fn f32_dtype_bit_identical_across_parallel_matrix() {
+    for method in [Method::Dense, Method::Hata, Method::Quest] {
+        let base = run_engine(method, KvDtype::F32, 1, false, false, KernelMode::Simd).0;
+        for threads in [2usize, 4] {
+            let r = run_engine(method, KvDtype::F32, threads, false, false, KernelMode::Simd).0;
+            assert_eq!(base, r, "{method:?}: threads={threads} diverged");
+        }
+        let paged = run_engine(method, KvDtype::F32, 2, true, false, KernelMode::Simd).0;
+        assert_eq!(base, paged, "{method:?}: paged diverged");
+        let tiered = run_engine(method, KvDtype::F32, 2, true, true, KernelMode::Simd).0;
+        assert_eq!(base, tiered, "{method:?}: offload diverged");
+        let refk = run_engine(method, KvDtype::F32, 1, false, false, KernelMode::Reference).0;
+        assert_eq!(base, refk, "{method:?}: reference kernels diverged");
+    }
+}
+
+/// Append the same f32 K/V rows into caches of every storage dtype: the
+/// hash codes must be exactly equal (they hash the pre-quantization
+/// rows) and every code/summary-driven selector must pick exactly the
+/// f32 run's top-k indices.
+#[test]
+fn half_cache_selection_identical_to_f32() {
+    let cfg = preset("hata-gqa").unwrap();
+    let dh = cfg.head_dim;
+    let rbit = cfg.rbit;
+    let methods =
+        [Method::Hata, Method::Quest, Method::Loki, Method::MagicPig, Method::StreamingLlm];
+    for method in methods {
+        let serve32 = ServeConfig { method, budget: 8, ..Default::default() };
+        let aux = MethodAux::build(&cfg, &serve32, None, 1);
+        let mut rng = Rng::new(3);
+        let hash_w: Vec<f32> = (0..dh * rbit).map(|_| rng.normal()).collect();
+        let rows = 37usize;
+        let krows: Vec<Vec<f32>> =
+            (0..rows).map(|_| (0..dh).map(|_| rng.normal()).collect()).collect();
+        let vrows: Vec<Vec<f32>> =
+            (0..rows).map(|_| (0..dh).map(|_| rng.normal()).collect()).collect();
+        let q: Vec<f32> = (0..cfg.group() * dh).map(|_| rng.normal()).collect();
+        let selector = make_selector(&serve32).expect("sparse method has a selector");
+        let mut base: Option<(Vec<u64>, Vec<u32>)> = None;
+        for dtype in KvDtype::all() {
+            let serve = ServeConfig { kv_dtype: dtype, ..serve32.clone() };
+            let mut cache = SeqKvCache::new(&cfg, &serve);
+            for (krow, vrow) in krows.iter().zip(&vrows) {
+                cache.head_mut(0, 0).append(krow, vrow, &hash_w, rbit, &aux);
+                cache.advance_len();
+            }
+            let rd = cache.read_view(0, 0);
+            let inp = AttnInputs {
+                q: &q,
+                group: cfg.group(),
+                dh,
+                k: rd.k,
+                v: rd.v,
+                codes: rd.codes,
+                words: rbit / 64,
+                rbit,
+                s: cache.len(),
+                pos: cache.len() - 1,
+                bt: rd.bt,
+                block_tokens: rd.block_tokens,
+                kv_dtype: rd.kv_dtype,
+                kernels: KernelMode::Simd,
+                side: cache.side(0, 0, &hash_w, &aux),
+            };
+            let mut st = MethodState::default();
+            let mut sc = Scratch::default();
+            selector.select(&inp, &mut st, 8, &mut sc);
+            let codes = cache.codes_logical(0, 0);
+            match &base {
+                None => base = Some((codes, sc.indices.clone())),
+                Some((c32, i32sel)) => {
+                    assert_eq!(&codes, c32, "{method:?} {dtype:?}: hash codes diverged");
+                    assert_eq!(&sc.indices, i32sel, "{method:?} {dtype:?}: selection diverged");
+                }
+            }
+        }
+    }
+}
+
+/// Prefill + 4 decode steps with a fixed (logit-independent) token feed;
+/// returns the final-step logits.
+fn decode_logits(model: &Model, serve: &ServeConfig, paged: bool) -> Vec<f32> {
+    let bt = serve.kv_block;
+    let prompt: Vec<u32> = (0..44u32).map(|i| 32 + (i * 7 % 64)).collect();
+    let steps = 4usize;
+    let selector = make_selector(serve);
+    let sel = sel_ref(&selector);
+    let mut state = SeqState::new(&model.cfg);
+    let mut sc = DecodeScratch::new(&model.cfg);
+    let planes = model.cfg.n_layers * model.cfg.n_kv_heads;
+    let mut pool = KvPool::with_block(512 * bt, bt);
+    let store = Arc::new(BlockStore::new(
+        planes,
+        model.cfg.head_dim,
+        model.cfg.rbit / 64,
+        bt,
+        serve.kv_dtype,
+    ));
+    let mut cache = if paged {
+        let mut c = SeqKvCache::new_paged(&model.cfg, serve, Arc::clone(&store));
+        c.reserve(prompt.len() + steps + 1);
+        pool.grow(1, prompt.len()).unwrap();
+        // SAFETY: single-threaded test, no live views of the store
+        unsafe { store.ensure_blocks(pool.minted_pages()) };
+        c.sync_table(pool.seq_blocks(1));
+        c
+    } else {
+        SeqKvCache::new(&model.cfg, serve)
+    };
+    model.prefill(&prompt, &mut cache, &mut state, serve, &mut sc);
+    for step in 0..steps {
+        let pos = prompt.len() + step;
+        if paged {
+            pool.grow(1, 1).unwrap();
+            // SAFETY: single-threaded test, no live views of the store
+            unsafe { store.ensure_blocks(pool.minted_pages()) };
+            cache.sync_table(pool.seq_blocks(1));
+        }
+        let tok = 32 + (step as u32 * 11) % 64;
+        model.decode_step(tok, pos, &mut cache, &mut state, serve, sel, &mut sc);
+    }
+    sc.logits.clone()
+}
+
+/// Documented logit bound vs the same-mode f32 run. For selectors whose
+/// ranking is computed from pre-quantization keys (plus Dense), the
+/// selection is provably identical, so only attention-value rounding
+/// compounds across layers — the tight bound applies. ExactTopK, H2O
+/// and SnapKV rank by *quantized* values (stored keys or attention
+/// mass), so a near-tie may legitimately select a different token; the
+/// loose bound only rules out NaN/garbage-level divergence for those.
+fn rel_bound(dtype: KvDtype, method: Method) -> f32 {
+    if matches!(method, Method::ExactTopK | Method::H2o | Method::SnapKv) {
+        return 1.5;
+    }
+    match dtype {
+        KvDtype::F32 => 0.0,
+        KvDtype::Bf16 => 0.25,
+        KvDtype::F16 => 0.06,
+    }
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let scale = b.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1e-3);
+    a.iter().zip(b).fold(0.0f32, |m, (x, y)| m.max((x - y).abs())) / scale
+}
+
+/// Every method x kernel tier: half-precision logits stay within the
+/// documented bound of the same-tier f32 run, and the paged half run is
+/// bit-identical to the contiguous half run (layout never adds error).
+#[test]
+fn half_logits_bounded_and_layout_invariant_all_methods() {
+    for method in METHODS {
+        for kernels in KernelMode::all() {
+            let serve32 = ServeConfig {
+                method,
+                budget: 16,
+                kernels,
+                kv_block: 4,
+                ..Default::default()
+            };
+            let cfg = preset("hata-gqa").unwrap();
+            let mut rng = Rng::new(7);
+            let weights = Weights::random(&cfg, &mut rng);
+            let aux = MethodAux::build(&cfg, &serve32, None, 1);
+            let mut model = Model::new(cfg, weights, aux);
+            model.kernels = kernels;
+            let l32 = decode_logits(&model, &serve32, false);
+            for dtype in [KvDtype::Bf16, KvDtype::F16] {
+                let serve = ServeConfig { kv_dtype: dtype, ..serve32.clone() };
+                let flat = decode_logits(&model, &serve, false);
+                let paged = decode_logits(&model, &serve, true);
+                assert!(
+                    flat.iter().zip(&paged).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{method:?} {kernels:?} {dtype:?}: paged diverged from contiguous"
+                );
+                assert!(flat.iter().all(|x| x.is_finite()), "{method:?} {dtype:?}: non-finite");
+                let err = max_rel_err(&flat, &l32);
+                assert!(
+                    err <= rel_bound(dtype, method),
+                    "{method:?} {kernels:?} {dtype:?}: logit error {err} over bound"
+                );
+            }
+        }
+    }
+}
+
+/// The offload engine at bf16 must be bitwise the resident paged bf16
+/// engine (NaN poison makes a bypassed fetch fail loudly), and — with
+/// Dense's dtype-independent block access pattern — the tier ledger's
+/// evict/fetch bytes must be exactly half the f32 run's at identical
+/// eviction and fetch counts.
+#[test]
+fn offload_bf16_bitwise_and_ledger_bytes_halved() {
+    let (s32, o32) = run_engine(Method::Dense, KvDtype::F32, 2, true, true, KernelMode::Simd);
+    let (s16, o16) = run_engine(Method::Dense, KvDtype::Bf16, 2, true, true, KernelMode::Simd);
+    let o32 = o32.expect("f32 offload run reports tier stats");
+    let o16 = o16.expect("bf16 offload run reports tier stats");
+    assert!(o16.evictions > 0, "budget 0 must evict: {o16:?}");
+    assert_eq!(o32.evictions, o16.evictions, "eviction counts must match across dtypes");
+    assert_eq!(
+        o32.demand_fetches + o32.prefetch_fetches,
+        o16.demand_fetches + o16.prefetch_fetches,
+        "fetch counts must match across dtypes"
+    );
+    assert_eq!(o16.evict.bytes * 2, o32.evict.bytes, "bf16 evict bytes must be exactly half");
+    assert_eq!(o16.fetch.bytes * 2, o32.fetch.bytes, "bf16 fetch bytes must be exactly half");
+    let resident = run_engine(Method::Dense, KvDtype::Bf16, 2, true, false, KernelMode::Simd).0;
+    assert_eq!(resident, s16, "bf16 offload streams diverged from resident paged");
+    assert!(!s32.is_empty(), "f32 offload run produced no streams");
+}
+
+/// Property: forking a half-precision paged sequence and decoding on the
+/// child is lossless — every parent packed row, code word and summary
+/// survives bit for bit, and the child's shared prefix matches exactly.
+/// Several geometries, always ending mid-block to force a CoW copy.
+#[test]
+fn half_cow_fork_round_trip_lossless() {
+    let bt = 4usize;
+    for dtype in [KvDtype::Bf16, KvDtype::F16] {
+        for seed in [1u64, 2, 3] {
+            let serve = ServeConfig {
+                method: Method::Hata,
+                budget: 16,
+                kv_block: bt,
+                kv_dtype: dtype,
+                ..Default::default()
+            };
+            let cfg = preset("hata-gqa").unwrap();
+            let mut rng = Rng::new(seed);
+            let weights = Weights::random(&cfg, &mut rng);
+            let aux = MethodAux::build(&cfg, &serve, None, 1);
+            let model = Model::new(cfg, weights, aux);
+            let selector = make_selector(&serve);
+            let sel = sel_ref(&selector);
+            let plen = 2 * bt + 1 + (seed as usize % (bt - 1));
+            let prompt: Vec<u32> = (0..plen as u32).map(|i| 32 + (i * 5 % 64)).collect();
+
+            let mut pool = KvPool::with_block(256 * bt, bt);
+            let planes = model.cfg.n_layers * model.cfg.n_kv_heads;
+            let store = Arc::new(BlockStore::new(
+                planes,
+                model.cfg.head_dim,
+                model.cfg.rbit / 64,
+                bt,
+                dtype,
+            ));
+            let mut parent = SeqKvCache::new_paged(&model.cfg, &serve, Arc::clone(&store));
+            parent.reserve(prompt.len() + 4);
+            let mut ps = SeqState::new(&model.cfg);
+            let mut psc = DecodeScratch::new(&model.cfg);
+            pool.grow(1, prompt.len()).unwrap();
+            // SAFETY: single-threaded test, no live views of the store
+            unsafe { store.ensure_blocks(pool.minted_pages()) };
+            parent.sync_table(pool.seq_blocks(1));
+            model.prefill(&prompt, &mut parent, &mut ps, &serve, &mut psc);
+
+            let mut snap: Vec<(Vec<f32>, Vec<f32>, Vec<u64>)> = Vec::new();
+            for li in 0..model.cfg.n_layers {
+                for kv in 0..model.cfg.n_kv_heads {
+                    snap.push((
+                        parent.k_logical(li, kv),
+                        parent.v_logical(li, kv),
+                        parent.codes_logical(li, kv),
+                    ));
+                }
+            }
+
+            let mut child = parent.fork_paged(&mut pool, 1, 2).unwrap();
+            // unshare the partial tail block the child appends into
+            let copied = child.make_writable(&mut pool, 2, plen / bt).unwrap();
+            assert!(copied, "the shared tail block must be copied, not written in place");
+
+            let mut cs = SeqState::new(&model.cfg);
+            let mut csc = DecodeScratch::new(&model.cfg);
+            child.reserve(prompt.len() + 4);
+            for step in 0..2 {
+                pool.grow(2, 1).unwrap();
+                // SAFETY: single-threaded test, no live views of the store
+                unsafe { store.ensure_blocks(pool.minted_pages()) };
+                child.sync_table(pool.seq_blocks(2));
+                let tok = 32 + (step as u32 * 13) % 64;
+                model.decode_step(tok, plen + step, &mut child, &mut cs, &serve, sel, &mut csc);
+            }
+
+            for li in 0..model.cfg.n_layers {
+                for kv in 0..model.cfg.n_kv_heads {
+                    let (k, v, codes) = &snap[li * model.cfg.n_kv_heads + kv];
+                    let ctx = format!("{dtype:?} seed {seed} l{li} kv{kv}");
+                    assert_eq!(&parent.k_logical(li, kv), k, "parent K mutated {ctx}");
+                    assert_eq!(&parent.v_logical(li, kv), v, "parent V mutated {ctx}");
+                    assert_eq!(&parent.codes_logical(li, kv), codes, "parent codes mutated {ctx}");
+                    assert_eq!(
+                        child.k_logical(li, kv)[..k.len()],
+                        k[..],
+                        "child K prefix diverged {ctx}"
+                    );
+                    assert_eq!(
+                        child.v_logical(li, kv)[..v.len()],
+                        v[..],
+                        "child V prefix diverged {ctx}"
+                    );
+                }
+            }
+            assert_eq!(child.len(), parent.len() + 2);
+            pool.release(1).unwrap();
+            pool.release(2).unwrap();
+            assert_eq!(pool.free_pages(), pool.capacity_pages(), "leak after release");
+        }
+    }
+}

@@ -341,7 +341,13 @@ fn paged_model_bitwise_state_for_every_method() {
 
         let mut pool = KvPool::with_block(1024 * bt, bt);
         let planes = model.cfg.n_layers * model.cfg.n_kv_heads;
-        let store = Arc::new(BlockStore::new(planes, model.cfg.head_dim, model.cfg.rbit / 64, bt));
+        let store = Arc::new(BlockStore::new(
+            planes,
+            model.cfg.head_dim,
+            model.cfg.rbit / 64,
+            bt,
+            serve.kv_dtype,
+        ));
         let mut c2 = SeqKvCache::new_paged(&model.cfg, &serve, Arc::clone(&store));
         c2.reserve(prompt.len() + decode_steps + 1);
         let mut s2 = SeqState::new(&model.cfg);
@@ -417,7 +423,13 @@ fn cow_fork_never_mutates_parent_blocks() {
 
     let mut pool = KvPool::with_block(256 * bt, bt);
     let planes = model.cfg.n_layers * model.cfg.n_kv_heads;
-    let store = Arc::new(BlockStore::new(planes, model.cfg.head_dim, model.cfg.rbit / 64, bt));
+    let store = Arc::new(BlockStore::new(
+        planes,
+        model.cfg.head_dim,
+        model.cfg.rbit / 64,
+        bt,
+        serve.kv_dtype,
+    ));
     let mut parent = SeqKvCache::new_paged(&model.cfg, &serve, Arc::clone(&store));
     parent.reserve(prompt.len() + 4);
     let mut ps = SeqState::new(&model.cfg);
